@@ -1,0 +1,79 @@
+//! Pseudospectral Poisson solver — the convolution/differentiation class
+//! of applications §3.2 says the forward→backward design is made for.
+//!
+//! Solves ∇²u = f on [0, 2π)³ with f chosen so the exact solution is
+//! u* = sin(x)·sin(y)·sin(z): transform f, divide by -|k|², transform
+//! back, compare to u*. Exercises the full R2C → spectral algebra on
+//! Z-pencils → C2R path, including the wavenumber bookkeeping of the
+//! packed (Nx/2+1) layout.
+//!
+//! Run: `cargo run --release --example poisson`
+
+use p3dfft::coordinator::{run_on_threads, PlanSpec};
+use p3dfft::grid::ProcGrid;
+
+/// Signed wavenumber for index `i` of an axis of length `n`.
+fn wavenumber(i: usize, n: usize) -> f64 {
+    if i <= n / 2 {
+        i as f64
+    } else {
+        i as f64 - n as f64
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = 48usize;
+    let spec = PlanSpec::new([n, n, n], ProcGrid::new(2, 2))?;
+    println!("poisson: -∇²u = -f, {n}^3 grid on 2x2 ranks (pseudospectral)");
+
+    let report = run_on_threads(&spec, move |ctx| {
+        let two_pi = 2.0 * std::f64::consts::PI;
+        let hx = two_pi / n as f64;
+        // f = ∇²u* = -3 sin(x) sin(y) sin(z).
+        let f = ctx.make_real_input(|x, y, z| {
+            -3.0 * (x as f64 * hx).sin() * (y as f64 * hx).sin() * (z as f64 * hx).sin()
+        });
+        let mut fhat = ctx.alloc_output();
+        ctx.forward(&f, &mut fhat)?;
+
+        // û(k) = f̂(k) / -(kx² + ky² + kz²);  û(0) = 0 (gauge).
+        let zp = ctx.plan.decomp.z_pencil(ctx.rank());
+        for xl in 0..zp.dims[0] {
+            let kx = wavenumber(xl + zp.offsets[0], n); // packed axis: kx >= 0
+            for yl in 0..zp.dims[1] {
+                let ky = wavenumber(yl + zp.offsets[1], n);
+                for z in 0..zp.dims[2] {
+                    let kz = wavenumber(z, n);
+                    let k2 = kx * kx + ky * ky + kz * kz;
+                    let idx = (xl * zp.dims[1] + yl) * zp.dims[2] + z;
+                    if k2 == 0.0 {
+                        fhat[idx] = p3dfft::Complex::zero();
+                    } else {
+                        fhat[idx] = fhat[idx].scale(-1.0 / k2);
+                    }
+                }
+            }
+        }
+
+        let mut u = ctx.alloc_input();
+        ctx.backward(&fhat, &mut u)?;
+        let norm = ctx.plan.normalization();
+
+        // Compare to the exact solution.
+        let exact = ctx.make_real_input(|x, y, z| {
+            (x as f64 * hx).sin() * (y as f64 * hx).sin() * (z as f64 * hx).sin()
+        });
+        let mut max_err = 0.0f64;
+        for (g, e) in u.iter().zip(&exact) {
+            max_err = max_err.max((g / norm - e).abs());
+        }
+        Ok(ctx.max_over_ranks(max_err))
+    })?;
+
+    let err = report.per_rank[0];
+    println!("max |u - u*| = {err:.3e}");
+    println!("stage totals: {}", report.stage_summary());
+    anyhow::ensure!(err < 1e-10, "Poisson solve inaccurate");
+    println!("poisson OK — spectral solve matches the analytic solution");
+    Ok(())
+}

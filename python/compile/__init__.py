@@ -1,0 +1,5 @@
+"""Build-time compile package: L2 JAX model + L1 Pallas kernels + AOT emitter.
+
+Nothing in this package is imported at runtime; ``make artifacts`` runs
+``python -m compile.aot`` once and the Rust binary is self-contained after.
+"""

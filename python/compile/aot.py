@@ -1,0 +1,142 @@
+"""AOT emitter: lower every L2 stage the Rust plan needs to HLO *text*.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (behind
+the Rust ``xla`` crate) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts \
+    [--grid 32,32,32 --pgrid 2,2] [--dtypes f32,f64]
+
+Emits one ``<stage>_b<batch>_n<n>_<dtype>.hlo.txt`` per distinct
+(stage, batch, n, dtype) that the given grid/procgrid decomposition
+produces, plus ``manifest.txt`` that the Rust runtime reads.  The
+decomposition arithmetic here intentionally mirrors ``rust/src/grid`` —
+the integration test checks they agree.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def block_sizes(length: int, parts: int):
+    """Split ``length`` into ``parts`` contiguous blocks, remainder to the
+    lowest ranks — the same convention as rust/src/grid/decompose.rs."""
+    base, extra = divmod(length, parts)
+    return [base + 1 if i < extra else base for i in range(parts)]
+
+
+def stage_set(nx: int, ny: int, nz: int, m1: int, m2: int):
+    """All (stage, batch, n) combos the distributed plan will execute.
+
+    Pencil shapes follow Table 1 (STRIDE1 defined, transform axis
+    innermost): X-pencil (nz/m2, ny/m1, nx); Y-pencil (nz/m2, h/m1, ny);
+    Z-pencil (h/m1, ny/m2, nz), h = nx/2+1.
+    """
+    h = nx // 2 + 1
+    ny1 = block_sizes(ny, m1)
+    nz2 = block_sizes(nz, m2)
+    h1 = block_sizes(h, m1)
+    ny2 = block_sizes(ny, m2)
+    combos = set()
+    for a in ny1:
+        for b in nz2:
+            combos.add(("x_r2c", a * b, nx))
+            combos.add(("x_c2r", a * b, nx))
+    for a in h1:
+        for b in nz2:
+            combos.add(("c2c_fwd", a * b, ny))
+            combos.add(("c2c_bwd", a * b, ny))
+    for a in h1:
+        for b in ny2:
+            combos.add(("c2c_fwd", a * b, nz))
+            combos.add(("c2c_bwd", a * b, nz))
+            combos.add(("cheby", a * b, nz))
+    return sorted(combos)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: the default printer elides large array constants as
+    # "{...}", which the consumer's HLO text parser silently reads as
+    # ZEROS — the DFT/twiddle matrices are baked-in constants, so the
+    # default text would compute all-zero spectra. Print them in full.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # The consumer's (older) parser rejects modern metadata attributes
+    # (source_end_line etc.); strip metadata entirely.
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+_DTYPES = {"f32": jnp.float32, "f64": jnp.float64}
+
+
+def lower_stage(stage: str, batch: int, n: int, dtype_name: str) -> str:
+    fn = model.make_stage_fn(stage)
+    args = model.stage_example_args(stage, batch, n, dtype=_DTYPES[dtype_name])
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def stage_io_arity(stage: str):
+    ins = {"x_r2c": 1, "c2c_fwd": 2, "c2c_bwd": 2, "x_c2r": 2, "cheby": 1,
+           "fft3d_r2c": 1}
+    outs = {"x_r2c": 2, "c2c_fwd": 2, "c2c_bwd": 2, "x_c2r": 1, "cheby": 1,
+            "fft3d_r2c": 2}
+    return ins[stage], outs[stage]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--grid", default="32,32,32",
+                    help="Nx,Ny,Nz of the e2e artifact set")
+    ap.add_argument("--pgrid", default="2,2", help="M1,M2 processor grid")
+    ap.add_argument("--dtypes", default="f32,f64")
+    ap.add_argument("--fused-cube", type=int, default=16,
+                    help="also emit a fused whole-3D R2C artifact for an "
+                         "N^3 cube (runtime smoke test); 0 disables")
+    args = ap.parse_args()
+
+    nx, ny, nz = (int(v) for v in args.grid.split(","))
+    m1, m2 = (int(v) for v in args.pgrid.split(","))
+    dtypes = [d for d in args.dtypes.split(",") if d]
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = ["# p3dfft artifact manifest v1",
+                "# file\tstage\tbatch\tn\tdtype\tn_inputs\tn_outputs"]
+    combos = stage_set(nx, ny, nz, m1, m2)
+    if args.fused_cube:
+        combos.append(("fft3d_r2c", args.fused_cube * args.fused_cube,
+                       args.fused_cube))
+    total = 0
+    for stage, batch, n in combos:
+        for dt in dtypes:
+            name = f"{stage}_b{batch}_n{n}_{dt}.hlo.txt"
+            path = os.path.join(args.out_dir, name)
+            text = lower_stage(stage, batch, n, dt)
+            with open(path, "w") as f:
+                f.write(text)
+            n_in, n_out = stage_io_arity(stage)
+            manifest.append(f"{name}\t{stage}\t{batch}\t{n}\t{dt}\t{n_in}\t{n_out}")
+            total += 1
+            print(f"  wrote {name} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"emitted {total} artifacts + manifest to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

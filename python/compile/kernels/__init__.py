@@ -1,0 +1,28 @@
+"""L1 Pallas kernels for the P3DFFT reproduction.
+
+All kernels run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls; see DESIGN.md §Hardware-Adaptation).  Complex data is carried
+as separate real/imaginary planes so every matmul is a *real* matmul and
+MXU-eligible on real hardware.
+"""
+
+from .dft import (
+    dft_matrices,
+    pallas_dft_c2c,
+    pallas_dft_r2c,
+    pallas_dft_c2r,
+    pallas_dft_four_step,
+)
+from .transpose import pallas_transpose_2d
+from .cheby import pallas_dct1, cheby_matrix
+
+__all__ = [
+    "dft_matrices",
+    "pallas_dft_c2c",
+    "pallas_dft_r2c",
+    "pallas_dft_c2r",
+    "pallas_dft_four_step",
+    "pallas_transpose_2d",
+    "pallas_dct1",
+    "cheby_matrix",
+]

@@ -1,0 +1,61 @@
+"""Chebyshev (cosine) transform as a Pallas matmul kernel.
+
+P3DFFT offers a Chebyshev transform for the third dimension of wall-bounded
+problems (two periodic directions + Chebyshev in the rigid-wall direction).
+The Chebyshev transform of samples on the Gauss-Lobatto grid is a DCT-I; as
+with the DFT we express it as a matmul so the MXU does the work.
+
+Convention (matches scipy.fft.dct(type=1) unnormalised, and the Rust
+``fft::dct`` module):
+
+    Y_k = x_0 + (-1)^k x_{N-1} + 2 * sum_{j=1..N-2} x_j cos(pi j k / (N-1))
+
+DCT-I is its own inverse up to the factor 2(N-1).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def cheby_matrix(n: int, dtype=jnp.float32):
+    """Dense DCT-I matrix C with Y = X @ C for X of shape (B, n)."""
+    j = np.arange(n)[:, None]
+    k = np.arange(n)[None, :]
+    c = 2.0 * np.cos(np.pi * j * k / (n - 1))
+    c[0, :] = 1.0
+    c[n - 1, :] = (-1.0) ** np.arange(n)
+    return jnp.asarray(c, dtype=dtype)
+
+
+def _dct_kernel(x_ref, c_ref, o_ref):
+    o_ref[...] = x_ref[...] @ c_ref[...]
+
+
+def pallas_dct1(x, *, block_b: int | None = None):
+    """Batched DCT-I over the last axis of a (B, N) array via one matmul."""
+    b, n = x.shape
+    blk = block_b or min(b, 256)
+    while b % blk != 0:
+        blk -= 1
+    c = cheby_matrix(n, dtype=x.dtype)
+    if blk >= b:
+        # Single block: no grid loop (grid-free lowering is what the AOT
+        # consumer's older XLA executes correctly; see kernels/dft.py).
+        return pl.pallas_call(
+            _dct_kernel,
+            out_shape=jax.ShapeDtypeStruct((b, n), x.dtype),
+            interpret=True,
+        )(x, c)
+    return pl.pallas_call(
+        _dct_kernel,
+        grid=(b // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n), x.dtype),
+        interpret=True,
+    )(x, c)

@@ -1,0 +1,218 @@
+"""Batched 1D DFT as Pallas matmul kernels (the TPU adaptation of FFTW).
+
+The paper's per-task hot spot is "1D FFT over many grid lines".  On a CPU
+cluster that is a strided FFTW call; on a TPU the idiomatic formulation is a
+*matrix multiply with the DFT matrix*, which feeds the MXU systolic array:
+
+    Y[B, N] = X[B, N] @ F_N,      (F_N)_{jk} = exp(-2*pi*i*j*k/N)
+
+Complex data is carried as separate (re, im) planes, so the complex matmul
+is four real matmuls — every flop is MXU-eligible.  For larger N the
+four-step factorisation N = N1*N2 keeps the operands small enough for VMEM
+while staying matmul-shaped (see ``pallas_dft_four_step``).
+
+Batch tiling: the batch dimension is cut into blocks of ``block_b`` lines;
+each Pallas grid step stages one (block_b, N) tile plus the (N, N) DFT
+matrix in VMEM, multiplies on the MXU, and writes the tile back.  This is
+the HBM<->VMEM analogue of the paper's cache loop-blocking.
+
+VMEM footprint per grid step (f32): block_b*N*2 (in re+im) + N*N*2 (matrix)
++ block_b*N*2 (out) floats.  For N=1024, block_b=256: ~10.5 MiB — under the
+16 MiB VMEM budget documented in DESIGN.md §Perf.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def dft_matrices(n: int, *, inverse: bool = False, dtype=jnp.float32):
+    """Real and imaginary parts of the NxN DFT matrix.
+
+    Forward:  F_{jk} = cos(2 pi j k / n) - i sin(2 pi j k / n)
+    Inverse uses +i and is NOT normalised (caller divides by n), matching
+    both numpy's ``ifft * n`` and the Rust engine's convention.
+    """
+    j = np.arange(n)[:, None]
+    k = np.arange(n)[None, :]
+    ang = 2.0 * np.pi * j * k / n
+    sign = 1.0 if inverse else -1.0
+    fr = np.cos(ang)
+    fi = sign * np.sin(ang)
+    return jnp.asarray(fr, dtype=dtype), jnp.asarray(fi, dtype=dtype)
+
+
+def _pick_block_b(batch: int, n: int) -> int:
+    """Largest batch tile that keeps the working set under ~8 MiB of VMEM."""
+    budget = 8 * 1024 * 1024 // 4  # f32 words
+    mat = 2 * n * n
+    per_line = 4 * n  # in re+im and out re+im
+    if mat >= budget:
+        return 1
+    blk = max(1, (budget - mat) // max(per_line, 1))
+    blk = min(blk, batch, 512)
+    # Round down to a divisor of batch so the grid tiles exactly.
+    while batch % blk != 0:
+        blk -= 1
+    return max(blk, 1)
+
+
+def _cmatmul_kernel(xr_ref, xi_ref, fr_ref, fi_ref, or_ref, oi_ref):
+    """One batch tile of the complex matmul (four real MXU matmuls)."""
+    xr = xr_ref[...]
+    xi = xi_ref[...]
+    fr = fr_ref[...]
+    fi = fi_ref[...]
+    or_ref[...] = xr @ fr - xi @ fi
+    oi_ref[...] = xr @ fi + xi @ fr
+
+
+def _batched_cmatmul(xr, xi, fr, fi, *, block_b=None):
+    """(B,N) complex times (N,M) complex -> (B,M) complex, Pallas-tiled.
+
+    When one batch block covers the whole array the kernel is lowered
+    WITHOUT a grid: interpret-mode grids become HLO `while` loops, which
+    the AOT consumer (xla_extension 0.5.1 behind the Rust `xla` crate)
+    executes incorrectly — and every AOT stage shape fits one block anyway
+    (DESIGN.md §Hardware-Adaptation documents the VMEM budget math).
+    """
+    b, n = xr.shape
+    m = fr.shape[1]
+    blk = block_b or _pick_block_b(b, max(n, m))
+    out_shape = (
+        jax.ShapeDtypeStruct((b, m), xr.dtype),
+        jax.ShapeDtypeStruct((b, m), xr.dtype),
+    )
+    if blk >= b:
+        # Single block: whole operands staged at once, no grid loop.
+        return pl.pallas_call(
+            _cmatmul_kernel,
+            out_shape=out_shape,
+            interpret=True,
+        )(xr, xi, fr, fi)
+    grid = (b // blk,)
+    spec_x = pl.BlockSpec((blk, n), lambda i: (i, 0))
+    spec_f = pl.BlockSpec((n, m), lambda i: (0, 0))
+    spec_o = pl.BlockSpec((blk, m), lambda i: (i, 0))
+    return pl.pallas_call(
+        _cmatmul_kernel,
+        grid=grid,
+        in_specs=[spec_x, spec_x, spec_f, spec_f],
+        out_specs=(spec_o, spec_o),
+        out_shape=out_shape,
+        interpret=True,
+    )(xr, xi, fr, fi)
+
+
+def pallas_dft_c2c(xr, xi, *, inverse: bool = False, block_b=None):
+    """Batched complex-to-complex DFT over the last axis of (B, N) planes.
+
+    Inverse is unnormalised (multiply by 1/N yourself), matching the Rust
+    ``fft::`` engine so artifacts and native paths agree bit-for-bit in
+    convention.
+    """
+    n = xr.shape[-1]
+    fr, fi = dft_matrices(n, inverse=inverse, dtype=xr.dtype)
+    return _batched_cmatmul(xr, xi, fr, fi, block_b=block_b)
+
+
+def pallas_dft_r2c(x, *, block_b=None):
+    """Batched real-to-complex DFT: (B, N) real -> (B, N//2+1) complex.
+
+    Exploits conjugate symmetry by multiplying with only the first N//2+1
+    columns of the DFT matrix — output matches ``np.fft.rfft``.  The packed
+    width (N+2)/2 is exactly Table 1's R2C output dimension.
+    """
+    b, n = x.shape
+    h = n // 2 + 1
+    fr, fi = dft_matrices(n, inverse=False, dtype=x.dtype)
+    fr = fr[:, :h]
+    fi = fi[:, :h]
+    zeros = jnp.zeros_like(x)
+    return _batched_cmatmul(x, zeros, fr, fi, block_b=block_b)
+
+
+def pallas_dft_c2r(yr, yi, *, block_b=None):
+    """Batched complex-to-real inverse: (B, N//2+1) -> (B, N) real, unnormalised.
+
+    Reconstructs the full spectrum from the half-complex packing using
+    conjugate symmetry, then applies the inverse DFT matrix; only the real
+    output plane is returned.  Matches ``np.fft.irfft(y) * N``.
+    """
+    b, h = yr.shape
+    n = 2 * (h - 1)
+    # Unpack half-complex -> full spectrum (conjugate symmetry).
+    mid_r = yr[:, 1:-1]
+    mid_i = yi[:, 1:-1]
+    full_r = jnp.concatenate([yr, mid_r[:, ::-1]], axis=1)
+    full_i = jnp.concatenate([yi, -mid_i[:, ::-1]], axis=1)
+    fr, fi = dft_matrices(n, inverse=True, dtype=yr.dtype)
+    out_r, _ = _batched_cmatmul(full_r, full_i, fr, fi, block_b=block_b)
+    return out_r
+
+
+# ---------------------------------------------------------------------------
+# Four-step factorisation: N = N1 * N2, all arithmetic stays matmul-shaped.
+# ---------------------------------------------------------------------------
+
+
+def _factor_pair(n: int):
+    """Split n = n1 * n2 with n1 <= n2 as square as possible."""
+    n1 = int(math.isqrt(n))
+    while n % n1 != 0:
+        n1 -= 1
+    return n1, n // n1
+
+
+@functools.partial(jax.jit, static_argnames=("inverse",))
+def pallas_dft_four_step(xr, xi, *, inverse: bool = False):
+    """Batched C2C DFT via the four-step algorithm, Pallas matmuls throughout.
+
+    For X[b, n] with n = n1*n2 viewed as X[b, n1, n2] (row-major, so the
+    original index is j = j1*n2 + j2), the Cooley-Tukey split with output
+    index k = k1 + n1*k2 is:
+
+      1. DFT of length n1 along the j1 axis       (matmul with F_{n1})
+      2. twiddle multiply by exp(-+ 2 pi i j2 k1 / n)
+      3. DFT of length n2 along the j2 axis       (matmul with F_{n2})
+      4. permute (k1, k2) -> row-major k2-major layout = k1 + n1*k2
+
+    Keeps every operand O(n^{1/2}) wide so the DFT matrices fit VMEM even
+    for n where the direct NxN matrix would not.
+    """
+    b, n = xr.shape
+    n1, n2 = _factor_pair(n)
+    dtype = xr.dtype
+    sign = 1.0 if inverse else -1.0
+
+    # Step 1: DFT_{n1} along j1. Bring j1 innermost for the matmul.
+    xr3 = xr.reshape(b, n1, n2).transpose(0, 2, 1).reshape(b * n2, n1)
+    xi3 = xi.reshape(b, n1, n2).transpose(0, 2, 1).reshape(b * n2, n1)
+    s1r, s1i = pallas_dft_c2c(xr3, xi3, inverse=inverse)
+    s1r = s1r.reshape(b, n2, n1)  # axes (b, j2, k1)
+    s1i = s1i.reshape(b, n2, n1)
+
+    # Step 2: twiddle by exp(sign * 2 pi i * j2 * k1 / n).
+    j2 = np.arange(n2)[:, None]
+    k1 = np.arange(n1)[None, :]
+    ang = 2.0 * np.pi * j2 * k1 / n
+    twr = jnp.asarray(np.cos(ang), dtype=dtype)[None, :, :]
+    twi = jnp.asarray(sign * np.sin(ang), dtype=dtype)[None, :, :]
+    tr = s1r * twr - s1i * twi
+    ti = s1r * twi + s1i * twr
+
+    # Step 3: DFT_{n2} along j2. Bring j2 innermost: (b, k1, j2).
+    tr = tr.transpose(0, 2, 1).reshape(b * n1, n2)
+    ti = ti.transpose(0, 2, 1).reshape(b * n1, n2)
+    s3r, s3i = pallas_dft_c2c(tr, ti, inverse=inverse)
+    s3r = s3r.reshape(b, n1, n2)  # axes (b, k1, k2)
+    s3i = s3i.reshape(b, n1, n2)
+
+    # Step 4: k = k1 + n1*k2 -> row-major layout must be (b, k2, k1).
+    out_r = s3r.transpose(0, 2, 1).reshape(b, n)
+    out_i = s3i.transpose(0, 2, 1).reshape(b, n)
+    return out_r, out_i

@@ -1,0 +1,52 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Every Pallas kernel has a reference here built only from ``jnp.fft`` /
+dense numpy math.  pytest asserts allclose(kernel, ref) across shapes and
+dtypes (hypothesis sweeps in python/tests/).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def ref_dft_c2c(xr, xi, *, inverse: bool = False):
+    """Unnormalised batched DFT over the last axis, as (re, im) planes."""
+    x = xr.astype(jnp.complex128) + 1j * xi.astype(jnp.complex128)
+    y = jnp.fft.ifft(x, axis=-1) * x.shape[-1] if inverse else jnp.fft.fft(x, axis=-1)
+    return jnp.real(y), jnp.imag(y)
+
+
+def ref_dft_r2c(x):
+    """np.fft.rfft equivalent returning (re, im)."""
+    y = jnp.fft.rfft(x.astype(jnp.float64), axis=-1)
+    return jnp.real(y), jnp.imag(y)
+
+
+def ref_dft_c2r(yr, yi):
+    """Unnormalised inverse of rfft: irfft(y) * N."""
+    y = yr.astype(jnp.complex128) + 1j * yi.astype(jnp.complex128)
+    n = 2 * (y.shape[-1] - 1)
+    return jnp.fft.irfft(y, n=n, axis=-1) * n
+
+
+def ref_dct1(x):
+    """DCT-I, scipy type-1 unnormalised convention (see kernels/cheby.py)."""
+    x64 = np.asarray(x, dtype=np.float64)
+    n = x64.shape[-1]
+    j = np.arange(n)[:, None]
+    k = np.arange(n)[None, :]
+    c = 2.0 * np.cos(np.pi * j * k / (n - 1))
+    c[0, :] = 1.0
+    c[n - 1, :] = (-1.0) ** np.arange(n)
+    return x64 @ c
+
+
+def ref_transpose(x):
+    return jnp.transpose(x)
+
+
+def ref_fft3d_r2c(x):
+    """Full 3D R2C transform with the X axis *last* (stride-1) — the oracle
+    for the composed per-stage pipeline (rust integration uses the same
+    axis convention: transform axis is always innermost)."""
+    return jnp.fft.rfftn(x.astype(jnp.float64), axes=(0, 1, 2))

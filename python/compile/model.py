@@ -1,0 +1,130 @@
+"""L2: the per-task compute stages of the parallel 3D FFT, in JAX.
+
+The distributed algorithm (L3, Rust) owns the two parallel transposes; what
+each rank computes between them is a *batched 1D transform over the
+innermost (stride-1) axis* of its local pencil.  Each stage below is a pure
+function over 2D (batch, n) planes — the Rust side flattens the two
+non-transform pencil dimensions into ``batch``.  All stages call the L1
+Pallas kernels, so the lowered HLO contains the MXU-shaped matmul DFTs.
+
+Stage inventory (mirrors the paper's Fig. 2 pipeline):
+
+  stage_x_r2c : real X-pencil lines    (B, Nx)      -> (re, im) (B, Nx/2+1)
+  stage_c2c_fwd / stage_c2c_bwd : complex Y-/Z-pencil lines (B, N) -> (B, N)
+  stage_x_c2r : half-complex X lines   (B, Nx/2+1)  -> real (B, Nx), unnormalised
+  stage_cheby : Chebyshev (DCT-I) third-dimension transform (B, Nz) -> (B, Nz)
+
+The inverse stages are unnormalised; L3 applies the single 1/(Nx*Ny*Nz)
+factor once at the end of a backward transform, exactly like FFTW/P3DFFT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    pallas_dft_c2c,
+    pallas_dft_r2c,
+    pallas_dft_c2r,
+    pallas_dct1,
+)
+
+# Above this transform length the four-step factorisation is used instead of
+# the direct DFT matmul (VMEM footprint math in DESIGN.md §Perf).
+FOUR_STEP_THRESHOLD = 1024
+
+
+def stage_x_r2c(x):
+    """Forward stage 1: real-to-complex DFT over X lines."""
+    return pallas_dft_r2c(x)
+
+
+def stage_c2c_fwd(xr, xi):
+    """Forward stages 2-3: complex-to-complex DFT over Y or Z lines."""
+    return pallas_dft_c2c(xr, xi, inverse=False)
+
+
+def stage_c2c_bwd(xr, xi):
+    """Backward stages 1-2: unnormalised inverse C2C DFT."""
+    return pallas_dft_c2c(xr, xi, inverse=True)
+
+
+def stage_x_c2r(yr, yi):
+    """Backward stage 3: half-complex to real, unnormalised."""
+    return pallas_dft_c2r(yr, yi)
+
+
+def stage_cheby(x):
+    """Chebyshev (DCT-I) transform for the wall-bounded third dimension."""
+    return pallas_dct1(x)
+
+
+def local_fft3d_r2c(x):
+    """Whole 3D R2C on one task's data (the P=1 degenerate case).
+
+    Used by the e2e driver to validate the composed per-stage pipeline
+    against a single fused HLO, and as the single-rank reference path.
+    Input (Nz, Ny, Nx) real, output (re, im) of shape (Nz, Ny, Nx/2+1):
+    transform axes innermost-first, matching the distributed pipeline.
+    """
+    nz, ny, nx = x.shape
+    h = nx // 2 + 1
+    # X transform (innermost).
+    xr, xi = pallas_dft_r2c(x.reshape(nz * ny, nx))
+    xr = xr.reshape(nz, ny, h)
+    xi = xi.reshape(nz, ny, h)
+    # Y transform: bring Y innermost.
+    xr = jnp.transpose(xr, (0, 2, 1)).reshape(nz * h, ny)
+    xi = jnp.transpose(xi, (0, 2, 1)).reshape(nz * h, ny)
+    yr, yi = pallas_dft_c2c(xr, xi, inverse=False)
+    yr = yr.reshape(nz, h, ny)
+    yi = yi.reshape(nz, h, ny)
+    # Z transform: bring Z innermost.
+    yr = jnp.transpose(yr, (1, 2, 0)).reshape(h * ny, nz)
+    yi = jnp.transpose(yi, (1, 2, 0)).reshape(h * ny, nz)
+    zr, zi = pallas_dft_c2c(yr, yi, inverse=False)
+    # Output layout (h, ny, nz) -> transpose back to (nz, ny, h).
+    zr = jnp.transpose(zr.reshape(h, ny, nz), (2, 1, 0))
+    zi = jnp.transpose(zi.reshape(h, ny, nz), (2, 1, 0))
+    return zr, zi
+
+
+# ---------------------------------------------------------------------------
+# AOT stage registry: name -> (builder of jittable fn, example-args builder).
+# Shapes are static per artifact; aot.py instantiates one HLO per
+# (stage, batch, n) the Rust plan will request.
+# ---------------------------------------------------------------------------
+
+
+def make_stage_fn(stage: str):
+    """Return a jittable function-of-arrays for the named stage."""
+    if stage == "x_r2c":
+        return lambda x: stage_x_r2c(x)
+    if stage == "c2c_fwd":
+        return lambda xr, xi: stage_c2c_fwd(xr, xi)
+    if stage == "c2c_bwd":
+        return lambda xr, xi: stage_c2c_bwd(xr, xi)
+    if stage == "x_c2r":
+        return lambda yr, yi: (stage_x_c2r(yr, yi),)
+    if stage == "cheby":
+        return lambda x: (stage_cheby(x),)
+    if stage == "fft3d_r2c":
+        return lambda x: local_fft3d_r2c(x)
+    raise ValueError(f"unknown stage {stage!r}")
+
+
+def stage_example_args(stage: str, batch: int, n: int, dtype=jnp.float32):
+    """ShapeDtypeStructs for lowering the named stage."""
+    f = jax.ShapeDtypeStruct
+    h = n // 2 + 1
+    if stage == "x_r2c":
+        return (f((batch, n), dtype),)
+    if stage in ("c2c_fwd", "c2c_bwd"):
+        return (f((batch, n), dtype), f((batch, n), dtype))
+    if stage == "x_c2r":
+        return (f((batch, h), dtype), f((batch, h), dtype))
+    if stage == "cheby":
+        return (f((batch, n), dtype),)
+    if stage == "fft3d_r2c":
+        # batch is (nz, ny) here; n is nx. Cube grids only for this artifact.
+        return (f((n, n, n), dtype),)
+    raise ValueError(f"unknown stage {stage!r}")

@@ -1,0 +1,4 @@
+import jax
+
+# f64 artifacts and f64 oracles need x64 mode; set it before any test runs.
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,66 @@
+"""AOT emitter: decomposition math, HLO text emission, manifest format."""
+
+import os
+
+import pytest
+
+from compile import aot
+
+
+def test_block_sizes_even():
+    assert aot.block_sizes(32, 4) == [8, 8, 8, 8]
+
+
+def test_block_sizes_uneven_remainder_to_low_ranks():
+    assert aot.block_sizes(17, 4) == [5, 4, 4, 4]
+    assert aot.block_sizes(7, 3) == [3, 2, 2]
+    assert sum(aot.block_sizes(256, 24)) == 256  # paper's 256^3-on-24 example
+
+
+def test_stage_set_covers_all_stages():
+    combos = aot.stage_set(32, 32, 32, 2, 2)
+    stages = {s for s, _, _ in combos}
+    assert stages == {"x_r2c", "x_c2r", "c2c_fwd", "c2c_bwd", "cheby"}
+
+
+def test_stage_set_even_grid_batches():
+    combos = dict()
+    for s, b, n in aot.stage_set(32, 32, 32, 2, 2):
+        combos.setdefault(s, set()).add((b, n))
+    # X-pencil: (ny/2)*(nz/2) = 256 lines of length 32.
+    assert combos["x_r2c"] == {(256, 32)}
+    # Y-pencil: h=17 splits 9+8 over M1=2 -> batches 9*16 and 8*16.
+    assert combos["c2c_fwd"] >= {(144, 32), (128, 32)}
+
+
+def test_stage_set_uneven_matches_rust_convention():
+    combos = aot.stage_set(20, 20, 20, 3, 2)
+    # ny=20 over m1=3 -> [7,7,6]; nz=20 over m2=2 -> [10,10].
+    xbatches = {b for s, b, n in combos if s == "x_r2c"}
+    assert xbatches == {70, 60}
+
+
+@pytest.mark.parametrize("stage", ["x_r2c", "c2c_fwd", "x_c2r", "cheby"])
+def test_lower_stage_emits_hlo_text(stage):
+    text = aot.lower_stage(stage, 4, 8, "f32")
+    assert "ENTRY" in text
+    assert "HloModule" in text
+
+
+def test_lower_stage_f64(tmp_path):
+    text = aot.lower_stage("c2c_fwd", 2, 4, "f64")
+    assert "f64" in text
+
+
+def test_manifest_written(tmp_path, monkeypatch):
+    import sys
+    monkeypatch.setattr(sys, "argv", [
+        "aot", "--out-dir", str(tmp_path), "--grid", "8,8,8",
+        "--pgrid", "1,1", "--dtypes", "f32", "--fused-cube", "0"])
+    aot.main()
+    manifest = (tmp_path / "manifest.txt").read_text().strip().splitlines()
+    rows = [l.split("\t") for l in manifest if not l.startswith("#")]
+    assert rows, "manifest should list artifacts"
+    for row in rows:
+        assert len(row) == 7
+        assert os.path.exists(tmp_path / row[0])

@@ -1,0 +1,176 @@
+"""L1 DFT kernels vs the pure-jnp oracle (the core correctness signal)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import (
+    pallas_dft_c2c,
+    pallas_dft_r2c,
+    pallas_dft_c2r,
+    pallas_dft_four_step,
+)
+from compile.kernels.ref import ref_dft_c2c, ref_dft_r2c, ref_dft_c2r
+
+RNG = np.random.default_rng(12345)
+
+
+def _rand(b, n, dtype=np.float64):
+    return (RNG.standard_normal((b, n)).astype(dtype),
+            RNG.standard_normal((b, n)).astype(dtype))
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16, 17, 32, 48, 64, 100, 128])
+@pytest.mark.parametrize("b", [1, 3, 8])
+def test_c2c_forward_matches_fft(b, n):
+    xr, xi = _rand(b, n)
+    got_r, got_i = pallas_dft_c2c(jnp.asarray(xr), jnp.asarray(xi))
+    exp_r, exp_i = ref_dft_c2c(xr, xi)
+    assert_allclose(got_r, exp_r, rtol=1e-9, atol=1e-9 * n)
+    assert_allclose(got_i, exp_i, rtol=1e-9, atol=1e-9 * n)
+
+
+@pytest.mark.parametrize("n", [4, 16, 48, 64])
+def test_c2c_inverse_matches_unnormalised_ifft(n):
+    xr, xi = _rand(5, n)
+    got_r, got_i = pallas_dft_c2c(jnp.asarray(xr), jnp.asarray(xi), inverse=True)
+    exp_r, exp_i = ref_dft_c2c(xr, xi, inverse=True)
+    assert_allclose(got_r, exp_r, rtol=1e-9, atol=1e-9 * n)
+    assert_allclose(got_i, exp_i, rtol=1e-9, atol=1e-9 * n)
+
+
+@pytest.mark.parametrize("n", [4, 16, 48, 64])
+def test_c2c_roundtrip_is_identity_times_n(n):
+    xr, xi = _rand(4, n)
+    fr, fi = pallas_dft_c2c(jnp.asarray(xr), jnp.asarray(xi))
+    br, bi = pallas_dft_c2c(fr, fi, inverse=True)
+    assert_allclose(np.asarray(br) / n, xr, rtol=1e-9, atol=1e-9 * n)
+    assert_allclose(np.asarray(bi) / n, xi, rtol=1e-9, atol=1e-9 * n)
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16, 32, 48, 64, 100])
+def test_r2c_matches_rfft(n):
+    x, _ = _rand(6, n)
+    got_r, got_i = pallas_dft_r2c(jnp.asarray(x))
+    exp_r, exp_i = ref_dft_r2c(x)
+    assert got_r.shape == (6, n // 2 + 1)
+    assert_allclose(got_r, exp_r, rtol=1e-9, atol=1e-9 * n)
+    assert_allclose(got_i, exp_i, rtol=1e-9, atol=1e-9 * n)
+
+
+def test_r2c_dc_and_nyquist_are_real():
+    x, _ = _rand(3, 16)
+    got_r, got_i = pallas_dft_r2c(jnp.asarray(x))
+    assert_allclose(np.asarray(got_i)[:, 0], 0.0, atol=1e-9)
+    assert_allclose(np.asarray(got_i)[:, -1], 0.0, atol=1e-9)
+
+
+@pytest.mark.parametrize("n", [4, 8, 16, 32, 64])
+def test_c2r_matches_unnormalised_irfft(n):
+    x, _ = _rand(4, n)
+    yr, yi = ref_dft_r2c(x)
+    got = pallas_dft_c2r(jnp.asarray(np.asarray(yr)), jnp.asarray(np.asarray(yi)))
+    exp = ref_dft_c2r(yr, yi)
+    assert_allclose(got, exp, rtol=1e-9, atol=1e-9 * n)
+
+
+@pytest.mark.parametrize("n", [4, 8, 16, 32, 64, 100])
+def test_r2c_c2r_roundtrip(n):
+    x, _ = _rand(4, n)
+    yr, yi = pallas_dft_r2c(jnp.asarray(x))
+    back = pallas_dft_c2r(yr, yi)
+    assert_allclose(np.asarray(back) / n, x, rtol=1e-9, atol=1e-9 * n)
+
+
+@pytest.mark.parametrize("n", [16, 36, 64, 144, 256])
+def test_four_step_matches_direct(n):
+    xr, xi = _rand(3, n)
+    got_r, got_i = pallas_dft_four_step(jnp.asarray(xr), jnp.asarray(xi))
+    exp_r, exp_i = ref_dft_c2c(xr, xi)
+    assert_allclose(got_r, exp_r, rtol=1e-8, atol=1e-8 * n)
+    assert_allclose(got_i, exp_i, rtol=1e-8, atol=1e-8 * n)
+
+
+@pytest.mark.parametrize("n", [16, 64, 144])
+def test_four_step_inverse(n):
+    xr, xi = _rand(2, n)
+    got_r, got_i = pallas_dft_four_step(
+        jnp.asarray(xr), jnp.asarray(xi), inverse=True)
+    exp_r, exp_i = ref_dft_c2c(xr, xi, inverse=True)
+    assert_allclose(got_r, exp_r, rtol=1e-8, atol=1e-8 * n)
+    assert_allclose(got_i, exp_i, rtol=1e-8, atol=1e-8 * n)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: shapes, dtypes, linearity/shift invariants.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.integers(1, 12), n=st.integers(2, 96),
+       dtype=st.sampled_from([np.float32, np.float64]))
+def test_hyp_c2c_any_shape_dtype(b, n, dtype):
+    xr = RNG.standard_normal((b, n)).astype(dtype)
+    xi = RNG.standard_normal((b, n)).astype(dtype)
+    got_r, got_i = pallas_dft_c2c(jnp.asarray(xr), jnp.asarray(xi))
+    exp_r, exp_i = ref_dft_c2c(xr, xi)
+    tol = 1e-3 * n if dtype == np.float32 else 1e-9 * n
+    assert got_r.dtype == dtype
+    assert_allclose(got_r, exp_r, rtol=0, atol=tol)
+    assert_allclose(got_i, exp_i, rtol=0, atol=tol)
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.integers(1, 8), n=st.sampled_from([2, 4, 6, 8, 12, 16, 20, 32, 64]),
+       dtype=st.sampled_from([np.float32, np.float64]))
+def test_hyp_r2c_any_shape_dtype(b, n, dtype):
+    x = RNG.standard_normal((b, n)).astype(dtype)
+    got_r, got_i = pallas_dft_r2c(jnp.asarray(x))
+    exp_r, exp_i = ref_dft_r2c(x)
+    tol = 1e-3 * n if dtype == np.float32 else 1e-9 * n
+    assert_allclose(got_r, exp_r, rtol=0, atol=tol)
+    assert_allclose(got_i, exp_i, rtol=0, atol=tol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([4, 8, 16, 32]))
+def test_hyp_dft_linearity(n):
+    xr, xi = _rand(2, n)
+    yr, yi = _rand(2, n)
+    a, b = 0.7, -1.3
+    gr1, gi1 = pallas_dft_c2c(jnp.asarray(a * xr + b * yr),
+                              jnp.asarray(a * xi + b * yi))
+    xr1, xi1 = pallas_dft_c2c(jnp.asarray(xr), jnp.asarray(xi))
+    yr1, yi1 = pallas_dft_c2c(jnp.asarray(yr), jnp.asarray(yi))
+    assert_allclose(gr1, a * np.asarray(xr1) + b * np.asarray(yr1),
+                    rtol=1e-9, atol=1e-9 * n)
+    assert_allclose(gi1, a * np.asarray(xi1) + b * np.asarray(yi1),
+                    rtol=1e-9, atol=1e-9 * n)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([8, 16, 32]), s=st.integers(1, 7))
+def test_hyp_dft_shift_theorem(n, s):
+    """DFT(roll(x, s))_k = DFT(x)_k * exp(-2 pi i s k / n)."""
+    xr, xi = _rand(1, n)
+    fr, fi = pallas_dft_c2c(jnp.asarray(xr), jnp.asarray(xi))
+    sr, si = pallas_dft_c2c(jnp.asarray(np.roll(xr, s, axis=1)),
+                            jnp.asarray(np.roll(xi, s, axis=1)))
+    k = np.arange(n)
+    pr, pi = np.cos(2 * np.pi * s * k / n), -np.sin(2 * np.pi * s * k / n)
+    exp_r = np.asarray(fr) * pr - np.asarray(fi) * pi
+    exp_i = np.asarray(fr) * pi + np.asarray(fi) * pr
+    assert_allclose(sr, exp_r, rtol=1e-9, atol=1e-9 * n)
+    assert_allclose(si, exp_i, rtol=1e-9, atol=1e-9 * n)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([8, 16, 32]))
+def test_hyp_parseval(n):
+    xr, xi = _rand(1, n)
+    fr, fi = pallas_dft_c2c(jnp.asarray(xr), jnp.asarray(xi))
+    e_time = np.sum(xr**2 + xi**2)
+    e_freq = np.sum(np.asarray(fr) ** 2 + np.asarray(fi) ** 2) / n
+    assert_allclose(e_freq, e_time, rtol=1e-9)

@@ -1,0 +1,64 @@
+"""L2 stage graph: composed pipeline vs jnp.fft oracles, shape contracts."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels.ref import ref_fft3d_r2c
+
+RNG = np.random.default_rng(777)
+
+
+@pytest.mark.parametrize("n", [4, 8, 16])
+def test_local_fft3d_matches_rfftn(n):
+    x = RNG.standard_normal((n, n, n))
+    got_r, got_i = model.local_fft3d_r2c(jnp.asarray(x))
+    exp = np.asarray(ref_fft3d_r2c(x))
+    assert got_r.shape == (n, n, n // 2 + 1)
+    assert_allclose(got_r, exp.real, rtol=1e-8, atol=1e-8 * n**3)
+    assert_allclose(got_i, exp.imag, rtol=1e-8, atol=1e-8 * n**3)
+
+
+def test_local_fft3d_noncube_batch_axes():
+    nz, ny, nx = 4, 8, 16
+    x = RNG.standard_normal((nz, ny, nx))
+    got_r, got_i = model.local_fft3d_r2c(jnp.asarray(x))
+    exp = np.asarray(ref_fft3d_r2c(x))
+    assert_allclose(got_r, exp.real, rtol=1e-8, atol=1e-6)
+    assert_allclose(got_i, exp.imag, rtol=1e-8, atol=1e-6)
+
+
+def test_forward_backward_pipeline_roundtrip():
+    """stage_x_r2c -> c2c -> c2c -> inverse chain recovers input * Nx*Ny*Nz
+    (the P3DFFT normalisation convention)."""
+    n = 8
+    h = n // 2 + 1
+    x = RNG.standard_normal((n * n, n))
+    yr, yi = model.stage_x_r2c(jnp.asarray(x))
+    # The complex stages here act on the packed axis of length h.
+    fr, fi = model.stage_c2c_fwd(yr, yi)
+    br, bi = model.stage_c2c_bwd(fr, fi)
+    back = model.stage_x_c2r(br / h, bi / h)
+    assert_allclose(np.asarray(back) / n, x, rtol=1e-8, atol=1e-8)
+
+
+@pytest.mark.parametrize("stage,n_in,n_out", [
+    ("x_r2c", 1, 2), ("c2c_fwd", 2, 2), ("c2c_bwd", 2, 2),
+    ("x_c2r", 2, 1), ("cheby", 1, 1),
+])
+def test_stage_registry_arity(stage, n_in, n_out):
+    fn = model.make_stage_fn(stage)
+    args = model.stage_example_args(stage, 4, 8, dtype=jnp.float64)
+    assert len(args) == n_in
+    concrete = [jnp.zeros(a.shape, a.dtype) for a in args]
+    out = fn(*concrete)
+    assert len(out) == n_out
+
+
+def test_stage_example_args_r2c_packing():
+    (a,) = model.stage_example_args("x_r2c", 10, 32)
+    assert a.shape == (10, 32)
+    yr, yi = model.stage_example_args("x_c2r", 10, 32)
+    assert yr.shape == (10, 17)  # (N+2)/2 packed width per Table 1

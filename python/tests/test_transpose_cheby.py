@@ -1,0 +1,86 @@
+"""Pallas blocked transpose + Chebyshev/DCT-I kernels vs oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import pallas_transpose_2d, pallas_dct1, cheby_matrix
+from compile.kernels.ref import ref_dct1
+
+RNG = np.random.default_rng(999)
+
+
+@pytest.mark.parametrize("r,c", [(1, 1), (4, 4), (8, 3), (3, 8), (128, 128),
+                                 (256, 64), (100, 30), (17, 129)])
+def test_transpose_exact(r, c):
+    x = RNG.standard_normal((r, c))
+    got = pallas_transpose_2d(jnp.asarray(x))
+    assert got.shape == (c, r)
+    assert np.array_equal(np.asarray(got), x.T)
+
+
+@settings(max_examples=30, deadline=None)
+@given(r=st.integers(1, 200), c=st.integers(1, 200),
+       block=st.sampled_from([8, 32, 128]),
+       dtype=st.sampled_from([np.float32, np.float64]))
+def test_hyp_transpose_any_shape(r, c, block, dtype):
+    x = RNG.standard_normal((r, c)).astype(dtype)
+    got = pallas_transpose_2d(jnp.asarray(x), block=block)
+    assert got.dtype == dtype
+    assert np.array_equal(np.asarray(got), x.T)
+
+
+def test_transpose_involution():
+    x = RNG.standard_normal((48, 96))
+    assert np.array_equal(
+        np.asarray(pallas_transpose_2d(pallas_transpose_2d(jnp.asarray(x)))), x)
+
+
+@pytest.mark.parametrize("n", [3, 4, 5, 9, 17, 33, 65])
+@pytest.mark.parametrize("b", [1, 4])
+def test_dct1_matches_ref(b, n):
+    x = RNG.standard_normal((b, n))
+    got = pallas_dct1(jnp.asarray(x))
+    assert_allclose(got, ref_dct1(x), rtol=1e-9, atol=1e-9 * n)
+
+
+@pytest.mark.parametrize("n", [5, 9, 17, 33])
+def test_dct1_involution(n):
+    """DCT-I composed with itself is 2(N-1) * identity."""
+    x = RNG.standard_normal((3, n))
+    twice = pallas_dct1(pallas_dct1(jnp.asarray(x)))
+    assert_allclose(np.asarray(twice) / (2 * (n - 1)), x,
+                    rtol=1e-9, atol=1e-9 * n)
+
+
+def test_cheby_matrix_symmetric_rows():
+    """Row 0 weight 1, last row alternating signs — the DCT-I endpoints."""
+    c = np.asarray(cheby_matrix(9, dtype=jnp.float64))
+    assert_allclose(c[0], np.ones(9))
+    assert_allclose(c[8], (-1.0) ** np.arange(9))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(3, 64), b=st.integers(1, 6))
+def test_hyp_dct1_recovers_chebyshev_coeffs(n, b):
+    """A signal built from known Chebyshev polynomials on the Gauss-Lobatto
+    grid must transform to exactly those coefficients."""
+    ks = RNG.integers(0, n, size=3)
+    amps = RNG.standard_normal(3)
+    j = np.arange(n)
+    xgrid = np.cos(np.pi * j / (n - 1))  # Gauss-Lobatto points
+    sig = np.zeros(n)
+    for k, a in zip(ks, amps):
+        sig += a * np.cos(k * np.arccos(np.clip(xgrid, -1, 1)))
+    x = np.tile(sig, (b, 1))
+    y = np.asarray(pallas_dct1(jnp.asarray(x)))
+    # Invert analytically: coefficient c_k = y_k / (N-1), halved at endpoints.
+    coef = y[0] / (n - 1)
+    coef[0] /= 2.0
+    coef[-1] /= 2.0
+    expect = np.zeros(n)
+    for k, a in zip(ks, amps):
+        expect[k] += a
+    assert_allclose(coef, expect, atol=1e-8)

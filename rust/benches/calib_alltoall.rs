@@ -1,0 +1,45 @@
+//! Calibration bench: `alltoall` vs `alltoallv` on the thread fabric,
+//! across rank counts and message sizes — the measured side of the
+//! USEEVEN story (§3.4). On this shared-memory fabric the two should be
+//! close (no Cray pathology); the *model* injects the documented XT
+//! penalty for the paper-scale rows of Fig. 4.
+
+use p3dfft::bench::{measure, FigureRow, MeasureOpts, Table};
+use p3dfft::mpi::Universe;
+
+fn main() {
+    let mut table = Table::new("calib: alltoall vs alltoallv (thread fabric)");
+    for &p in &[2usize, 4, 8] {
+        for &block in &[1024usize, 16384, 131072] {
+            for use_v in [false, true] {
+                let s = measure(MeasureOpts { warmup: 1, iterations: 5 }, || {
+                    let u = Universe::new(p);
+                    u.run(move |c| {
+                        let send: Vec<f64> = vec![c.rank() as f64; block * p];
+                        let mut recv = vec![0.0f64; block * p];
+                        if use_v {
+                            let counts = vec![block; p];
+                            let displs: Vec<usize> =
+                                (0..p).map(|j| j * block).collect();
+                            c.alltoallv(&send, &counts, &displs, &mut recv, &counts, &displs);
+                        } else {
+                            c.alltoall(&send, &mut recv, block);
+                        }
+                        Ok(())
+                    })
+                    .unwrap();
+                });
+                let bytes = (p * (p - 1) * block * 8) as f64;
+                table.push(
+                    FigureRow::new(
+                        if use_v { "alltoallv" } else { "alltoall" },
+                        format!("P={p} blk={block}"),
+                    )
+                    .col("median_s", s.median)
+                    .col("gbs", bytes / s.median / 1e9),
+                );
+            }
+        }
+    }
+    print!("{}", table.render());
+}

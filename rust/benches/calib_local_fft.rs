@@ -1,0 +1,61 @@
+//! Calibration bench: serial 1D FFT throughput of the native engine
+//! (the paper's F parameter) across algorithm classes and sizes.
+//!
+//! Feeds `netmodel::calibrate` and the §Perf log in EXPERIMENTS.md.
+
+use p3dfft::bench::{measure, FigureRow, MeasureOpts, Table};
+use p3dfft::fft::{C2cPlan, Complex, Direction, R2cPlan};
+use p3dfft::util::SplitMix64;
+
+fn main() {
+    let mut table = Table::new("calib: serial FFT throughput (native engine)");
+    let batch_elems = 1 << 20; // ~1M complex elements per run
+
+    for &n in &[64usize, 128, 256, 512, 1024, 2048, 4096, 48, 360, 1000, 97, 1009] {
+        let batch = (batch_elems / n).max(1);
+        let plan = C2cPlan::<f64>::new(n, Direction::Forward);
+        let algo = if n.is_power_of_two() {
+            "pow2"
+        } else if p3dfft::fft::factor::is_smooth(n) {
+            "mixed"
+        } else {
+            "bluestein"
+        };
+        let mut rng = SplitMix64::new(n as u64);
+        let mut data: Vec<Complex<f64>> = (0..batch * n)
+            .map(|_| Complex::new(rng.next_normal(), rng.next_normal()))
+            .collect();
+        let mut scratch = vec![Complex::zero(); plan.scratch_len()];
+        let s = measure(MeasureOpts { warmup: 1, iterations: 5 }, || {
+            plan.execute_batch(&mut data, &mut scratch);
+        });
+        let flops = batch as f64 * 5.0 * n as f64 * (n as f64).log2();
+        table.push(
+            FigureRow::new(algo, format!("{n}"))
+                .col("batch", batch as f64)
+                .col("median_s", s.median)
+                .col("gflops", flops / s.median / 1e9),
+        );
+    }
+
+    // R2C at the pencil-relevant sizes (half the work of C2C).
+    for &n in &[512usize, 1024, 2048] {
+        let batch = (batch_elems / n).max(1);
+        let plan = R2cPlan::<f64>::new(n);
+        let mut rng = SplitMix64::new(n as u64);
+        let input: Vec<f64> = (0..batch * n).map(|_| rng.next_normal()).collect();
+        let mut out = vec![Complex::zero(); batch * plan.out_len()];
+        let mut scratch = vec![Complex::zero(); plan.scratch_len()];
+        let s = measure(MeasureOpts { warmup: 1, iterations: 5 }, || {
+            plan.execute_batch(&input, &mut out, &mut scratch);
+        });
+        let flops = batch as f64 * 2.5 * n as f64 * (n as f64).log2();
+        table.push(
+            FigureRow::new("r2c", format!("{n}"))
+                .col("batch", batch as f64)
+                .col("median_s", s.median)
+                .col("gflops", flops / s.median / 1e9),
+        );
+    }
+    print!("{}", table.render());
+}

@@ -1,0 +1,69 @@
+//! Calibration bench: pack/unpack streaming bandwidth (σ_mem and the b
+//! parameter of Eq. 3), for both the STRIDE1 transpose-embedding kernels
+//! and the non-STRIDE1 contiguous slab kernels.
+
+use p3dfft::bench::{measure, FigureRow, MeasureOpts, Table};
+use p3dfft::fft::Complex;
+use p3dfft::transpose::pack::{
+    pack_x_to_y, pack_x_to_y_xyz, pack_y_to_z, unpack_x_to_y, unpack_x_to_y_xyz,
+};
+use p3dfft::util::SplitMix64;
+
+fn main() {
+    let mut table = Table::new("calib: pack/unpack bandwidth");
+    for &n in &[64usize, 128, 256] {
+        let (nz, ny, h) = (n / 2, n, n / 2 + 1);
+        let vol_bytes = (nz * ny * h * std::mem::size_of::<Complex<f64>>()) as f64;
+        let mut rng = SplitMix64::new(7);
+        let input: Vec<Complex<f64>> =
+            (0..nz * ny * h).map(|_| Complex::new(rng.next_normal(), 0.1)).collect();
+        let mut buf = vec![Complex::<f64>::zero(); nz * ny * h];
+        let mut out = vec![Complex::<f64>::zero(); nz * h * ny];
+
+        let s = measure(MeasureOpts { warmup: 1, iterations: 7 }, || {
+            pack_x_to_y(&input, nz, ny, h, 0, h, &mut buf);
+        });
+        table.push(
+            FigureRow::new("pack_x_to_y (stride1 transpose)", format!("{n}"))
+                .col("median_s", s.median)
+                .col("gbs", 2.0 * vol_bytes / s.median / 1e9),
+        );
+
+        let s = measure(MeasureOpts { warmup: 1, iterations: 7 }, || {
+            unpack_x_to_y(&buf, nz, h, ny, 0, ny, &mut out);
+        });
+        table.push(
+            FigureRow::new("unpack_x_to_y (runs)", format!("{n}"))
+                .col("median_s", s.median)
+                .col("gbs", 2.0 * vol_bytes / s.median / 1e9),
+        );
+
+        let s = measure(MeasureOpts { warmup: 1, iterations: 7 }, || {
+            pack_y_to_z(&input, nz, h, ny, 0, ny, &mut buf);
+        });
+        table.push(
+            FigureRow::new("pack_y_to_z (stride1 large-stride)", format!("{n}"))
+                .col("median_s", s.median)
+                .col("gbs", 2.0 * vol_bytes / s.median / 1e9),
+        );
+
+        let s = measure(MeasureOpts { warmup: 1, iterations: 7 }, || {
+            pack_x_to_y_xyz(&input, nz, ny, h, 0, h, &mut buf);
+        });
+        table.push(
+            FigureRow::new("pack_x_to_y_xyz (slab memcpy)", format!("{n}"))
+                .col("median_s", s.median)
+                .col("gbs", 2.0 * vol_bytes / s.median / 1e9),
+        );
+
+        let s = measure(MeasureOpts { warmup: 1, iterations: 7 }, || {
+            unpack_x_to_y_xyz(&buf, nz, h, ny, 0, ny, &mut out);
+        });
+        table.push(
+            FigureRow::new("unpack_x_to_y_xyz (memcpy)", format!("{n}"))
+                .col("median_s", s.median)
+                .col("gbs", 2.0 * vol_bytes / s.median / 1e9),
+        );
+    }
+    print!("{}", table.render());
+}

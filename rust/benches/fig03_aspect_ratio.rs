@@ -1,0 +1,71 @@
+//! Figure 3: performance vs processor-grid aspect ratio M1 x M2.
+//!
+//! Paper protocol: 2048³ on 1024 cores, Cray XT5 (Kraken, 12 cores/node)
+//! and Sun/AMD (Ranger, 16 cores/node); time-to-solution per M1 x M2 bar.
+//! Expected shape: time rises once M1 crosses the cores-per-node
+//! threshold; the square grid 32x32 is NOT optimal.
+//!
+//! Emits (a) model rows at the paper's exact scale on both machines and
+//! (b) measured rows from a thread-rank sweep at host scale.
+
+use p3dfft::bench::paper::measured_strong_rows;
+use p3dfft::bench::{FigureRow, Table};
+use p3dfft::grid::ProcGrid;
+use p3dfft::netmodel::{predict, Machine, ModelInput};
+
+fn main() {
+    for machine in [Machine::cray_xt5(), Machine::ranger()] {
+        let n = 2048;
+        let p = 1024;
+        let mut table = Table::new(format!(
+            "Fig. 3 (model): 2048^3 on 1024 cores, {} ({} cores/node)",
+            machine.name, machine.cores_per_node
+        ));
+        for pg in ProcGrid::factorizations(p) {
+            if pg.m1 > n / 2 + 1 || pg.m2 > n {
+                continue;
+            }
+            let mut input = ModelInput::cubic(n, pg.m1, pg.m2, machine.clone());
+            input.use_even = machine.name.contains("Cray");
+            let c = predict(&input);
+            table.push(
+                FigureRow::new("model", format!("{}x{}", pg.m1, pg.m2))
+                    .col("pair_s", 2.0 * c.total())
+                    .col("row_s", 2.0 * c.row_exchange)
+                    .col("col_s", 2.0 * c.col_exchange)
+                    .col("on_node_row", f64::from(pg.m1 <= machine.cores_per_node)),
+            );
+        }
+        print!("{}", table.render());
+
+        // The paper's headline check: best non-square beats the square grid.
+        let square = 2.0
+            * predict(&ModelInput::cubic(n, 32, 32, machine.clone())).total();
+        let best = ProcGrid::factorizations(p)
+            .into_iter()
+            .filter(|pg| pg.m1 <= n / 2 + 1 && pg.m2 <= n)
+            .map(|pg| {
+                (pg, 2.0 * predict(&ModelInput::cubic(n, pg.m1, pg.m2, machine.clone())).total())
+            })
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        println!(
+            "best geometry {}x{} = {:.4}s vs square 32x32 = {:.4}s ({}x better)\n",
+            best.0.m1,
+            best.0.m2,
+            best.1,
+            square,
+            square / best.1
+        );
+    }
+
+    // Measured mini-sweep: 64^3 at P = 8 thread ranks, all factorizations.
+    println!("measured sweep on this host (64^3, P = 8 thread ranks):");
+    let mut table = Table::new("Fig. 3 (measured, host scale)");
+    let pgrids: Vec<(usize, usize)> =
+        ProcGrid::factorizations(8).into_iter().map(|g| (g.m1, g.m2)).collect();
+    for row in measured_strong_rows(64, &pgrids, 3).unwrap() {
+        table.push(row);
+    }
+    print!("{}", table.render());
+}

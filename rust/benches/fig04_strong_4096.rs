@@ -1,0 +1,46 @@
+//! Figures 4 & 5: strong scaling of the 4096³ double-precision transform
+//! on Cray XT5 — Alltoall (USEEVEN) vs Alltoallv series, the
+//! communication-time series, the `a/P + d/P^(2/3)` fit (same data on
+//! log-log and linear axes in the paper; one table here), and the §4.3
+//! effective-bisection-bandwidth estimate (paper: 212 GB/s at 65,536
+//! cores, ~6% of the 3,686 GB/s peak).
+
+use p3dfft::bench::paper::{measured_strong_rows, strong_scaling_fit, strong_scaling_table};
+use p3dfft::bench::Table;
+use p3dfft::netmodel::Machine;
+
+fn main() {
+    let machine = Machine::cray_xt5();
+    let n = 4096;
+    let ps = [1024usize, 2048, 4096, 8192, 16384, 32768, 65536];
+    let table = strong_scaling_table(
+        "Fig. 4/5 (model): 4096^3 strong scaling on Cray XT5",
+        n,
+        &ps,
+        &machine,
+    );
+    print!("{}", table.render());
+
+    let fit = strong_scaling_fit(n, &ps, &machine);
+    println!(
+        "\nEq. 4 fit: T(P) = {:.4e}/P + {:.4e}/P^(2/3), R^2 = {:.6}",
+        fit.a, fit.d, fit.r2
+    );
+    let ntot = (n as f64).powi(3);
+    let bw = fit.effective_bisection_bw(ntot, 16.0, 4.0, 65536.0);
+    let peak = 16.0 * 24.0 * 9.6e9; // the paper's 15x16x24 partition estimate
+    println!(
+        "effective bisection bandwidth at 65536 cores: {:.0} GB/s ({:.1}% of the \
+         paper's 3686 GB/s peak estimate; paper measured 212 GB/s ≈ 6%)",
+        bw / 1e9,
+        100.0 * bw / peak
+    );
+
+    // Measured strong scaling at host scale (shape check only).
+    println!("\nmeasured (host scale, 64^3):");
+    let mut t = Table::new("Fig. 4 measured mini-series");
+    for row in measured_strong_rows(64, &[(1, 1), (1, 2), (2, 2), (2, 4)], 3).unwrap() {
+        t.push(row);
+    }
+    print!("{}", t.render());
+}

@@ -1,0 +1,23 @@
+//! Figure 6: strong scaling of the 2048³ transform on Cray XT5 (time and
+//! TFLOPS, the paper shows linear + log-log of the same series).
+
+use p3dfft::bench::paper::{measured_strong_rows, strong_scaling_table};
+use p3dfft::bench::Table;
+use p3dfft::netmodel::Machine;
+
+fn main() {
+    let table = strong_scaling_table(
+        "Fig. 6 (model): 2048^3 strong scaling on Cray XT5",
+        2048,
+        &[256, 512, 1024, 2048, 4096, 8192, 16384],
+        &Machine::cray_xt5(),
+    );
+    print!("{}", table.render());
+
+    println!("\nmeasured (host scale, 48^3):");
+    let mut t = Table::new("Fig. 6 measured mini-series");
+    for row in measured_strong_rows(48, &[(1, 1), (1, 2), (2, 2), (2, 4)], 3).unwrap() {
+        t.push(row);
+    }
+    print!("{}", t.render());
+}

@@ -1,0 +1,14 @@
+//! Figure 7: strong scaling of the 1024³ transform on Cray XT5.
+
+use p3dfft::bench::paper::strong_scaling_table;
+use p3dfft::netmodel::Machine;
+
+fn main() {
+    let table = strong_scaling_table(
+        "Fig. 7 (model): 1024^3 strong scaling on Cray XT5",
+        1024,
+        &[64, 128, 256, 512, 1024, 2048, 4096],
+        &Machine::cray_xt5(),
+    );
+    print!("{}", table.render());
+}

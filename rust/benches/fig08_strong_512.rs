@@ -1,0 +1,33 @@
+//! Figure 8: strong scaling of the 512³ transform on Cray XT5 — the
+//! smallest grid the paper reports; latency and per-node effects matter
+//! most here, so the model rows include the per-message term explicitly.
+
+use p3dfft::bench::paper::strong_scaling_table;
+use p3dfft::bench::{FigureRow, Table};
+use p3dfft::netmodel::{predict, Machine, ModelInput};
+
+fn main() {
+    let machine = Machine::cray_xt5();
+    let table = strong_scaling_table(
+        "Fig. 8 (model): 512^3 strong scaling on Cray XT5",
+        512,
+        &[16, 32, 64, 128, 256, 512, 1024],
+        &machine,
+    );
+    print!("{}", table.render());
+
+    // Cost decomposition at the extremes (where Fig. 8 flattens out).
+    let mut t = Table::new("Fig. 8: cost decomposition (model, best geometry 12xM2)");
+    for &p in &[16usize, 256, 1024] {
+        let m1 = 12.min(p);
+        let c = predict(&ModelInput::cubic(512, m1, p / m1, machine.clone()));
+        t.push(
+            FigureRow::new("model", format!("{p}"))
+                .col("compute_s", 2.0 * c.compute)
+                .col("memory_s", 2.0 * c.memory)
+                .col("network_s", 2.0 * (c.row_exchange + c.col_exchange))
+                .col("latency_s", 2.0 * c.latency),
+        );
+    }
+    print!("{}", t.render());
+}

@@ -1,0 +1,68 @@
+//! Figure 10: 1D (slab) vs 2D (pencil) decomposition, 2048³ on Cray XT5.
+//!
+//! Expected shape: 1D (one transpose) wins at moderate P; the gap narrows
+//! toward P = N; past P = N the 1D line *ends* (only N slabs exist) while
+//! 2D keeps scaling — the central scalability argument of the paper.
+
+use p3dfft::bench::paper::best_pgrid_2d;
+use p3dfft::bench::workload::sine_field;
+use p3dfft::bench::{FigureRow, Table};
+use p3dfft::coordinator::{run_on_threads, PlanSpec};
+use p3dfft::grid::ProcGrid;
+use p3dfft::netmodel::{predict, Machine, ModelInput};
+
+fn main() {
+    let machine = Machine::cray_xt5();
+    let n = 2048usize;
+    let mut table = Table::new("Fig. 10 (model): 1D vs 2D, 2048^3 on Cray XT5");
+    let mut crossover_reported = false;
+    for &p in &[256usize, 512, 1024, 2048, 4096, 8192] {
+        let two_d = best_pgrid_2d(n, p, &machine, false);
+        table.push(
+            FigureRow::new("2d", format!("{p}"))
+                .col("pair_s", two_d.2)
+                .col("m1", two_d.0 as f64)
+                .col("m2", two_d.1 as f64),
+        );
+        if p <= n {
+            // 1D: 1 x P slabs (no ROW exchange at all).
+            let one_d = 2.0 * predict(&ModelInput::cubic(n, 1, p, machine.clone())).total();
+            table.push(FigureRow::new("1d", format!("{p}")).col("pair_s", one_d));
+            if one_d > two_d.2 && !crossover_reported {
+                println!("note: 2D overtakes 1D already at P = {p}");
+                crossover_reported = true;
+            }
+        } else {
+            table.push(FigureRow::new("1d", format!("{p}")).col("pair_s", f64::NAN));
+        }
+    }
+    print!("{}", table.render());
+    println!("\n(1d rows are NaN past P = N = {n}: no slabs left — the 2D version keeps scaling)");
+
+    // Measured comparison at host scale: 32^3 on 1x4 vs 2x2 thread ranks.
+    println!("\nmeasured (host scale, 32^3, P = 4):");
+    let mut t = Table::new("Fig. 10 measured");
+    for (label, m1, m2) in [("1d (1x4)", 1usize, 4usize), ("2d (2x2)", 2, 2)] {
+        let spec = PlanSpec::new([32, 32, 32], ProcGrid::new(m1, m2)).unwrap();
+        let report = run_on_threads(&spec, move |ctx| {
+            let input = ctx.make_real_input(sine_field::<f64>(32, 32, 32));
+            let mut out = ctx.alloc_output();
+            let mut back = ctx.alloc_input();
+            ctx.forward(&input, &mut out)?;
+            ctx.backward(&out, &mut back)?;
+            let t0 = std::time::Instant::now();
+            for _ in 0..5 {
+                ctx.forward(&input, &mut out)?;
+                ctx.backward(&out, &mut back)?;
+            }
+            Ok(ctx.max_over_ranks(t0.elapsed().as_secs_f64() / 5.0))
+        })
+        .unwrap();
+        t.push(
+            FigureRow::new(label, "4")
+                .col("pair_s", report.per_rank[0])
+                .col("comm_s", report.comm()),
+        );
+    }
+    print!("{}", t.render());
+}

@@ -1,0 +1,127 @@
+//! Figure-row emitters: the benches print the same rows/series the paper's
+//! figures plot, in aligned text tables (one table per figure).
+
+/// One data point of a figure series.
+#[derive(Debug, Clone)]
+pub struct FigureRow {
+    /// Series label ("alltoall", "alltoallv", "comm", "fit", "measured"...).
+    pub series: String,
+    /// X value (core count, grid size, aspect ratio label...).
+    pub x: String,
+    /// Named columns (time_s, tflops, ...), printed in insertion order.
+    pub cols: Vec<(String, f64)>,
+}
+
+impl FigureRow {
+    pub fn new(series: impl Into<String>, x: impl Into<String>) -> Self {
+        FigureRow { series: series.into(), x: x.into(), cols: Vec::new() }
+    }
+
+    pub fn col(mut self, name: impl Into<String>, v: f64) -> Self {
+        self.cols.push((name.into(), v));
+        self
+    }
+}
+
+/// Text table builder for figure output.
+#[derive(Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub rows: Vec<FigureRow>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>) -> Self {
+        Table { title: title.into(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: FigureRow) {
+        self.rows.push(row);
+    }
+
+    /// Render with aligned columns. Column set is the union over rows.
+    pub fn render(&self) -> String {
+        let mut col_names: Vec<String> = Vec::new();
+        for r in &self.rows {
+            for (name, _) in &r.cols {
+                if !col_names.iter().any(|c| c == name) {
+                    col_names.push(name.clone());
+                }
+            }
+        }
+        let mut header = vec!["series".to_string(), "x".to_string()];
+        header.extend(col_names.iter().cloned());
+        let mut body: Vec<Vec<String>> = Vec::new();
+        for r in &self.rows {
+            let mut line = vec![r.series.clone(), r.x.clone()];
+            for name in &col_names {
+                let v = r.cols.iter().find(|(n, _)| n == name).map(|(_, v)| *v);
+                line.push(match v {
+                    Some(v) if v.abs() >= 1e4 || (v != 0.0 && v.abs() < 1e-3) => {
+                        format!("{v:.4e}")
+                    }
+                    Some(v) => format!("{v:.6}"),
+                    None => "-".to_string(),
+                });
+            }
+            body.push(line);
+        }
+        let ncols = header.len();
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in header.iter().enumerate() {
+            widths[i] = h.len();
+        }
+        for line in &body {
+            for (i, cell) in line.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let fmt_line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        out.push_str(&fmt_line(&header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+        out.push('\n');
+        for line in &body {
+            out.push_str(&fmt_line(line));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_table_with_union_columns() {
+        let mut t = Table::new("Fig X");
+        t.push(FigureRow::new("a2a", "1024").col("time_s", 1.5).col("tflops", 0.2));
+        t.push(FigureRow::new("a2av", "1024").col("time_s", 2.5));
+        let s = t.render();
+        assert!(s.contains("== Fig X =="));
+        assert!(s.contains("time_s"));
+        assert!(s.contains("tflops"));
+        assert!(s.contains("1.500000"));
+        // Missing cell rendered as '-'.
+        assert!(s.lines().last().unwrap().contains('-'));
+    }
+
+    #[test]
+    fn scientific_notation_for_extremes() {
+        let mut t = Table::new("t");
+        t.push(FigureRow::new("s", "x").col("big", 123456.0).col("small", 0.00001));
+        let s = t.render();
+        assert!(s.contains("1.2346e5") || s.contains("1.2346e+05") || s.contains("1.2346e+5"),
+            "{s}");
+    }
+}

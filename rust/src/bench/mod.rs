@@ -1,0 +1,12 @@
+//! Benchmark harness (criterion is unavailable offline): robust timing,
+//! the paper's `test_sine` workload, and the figure-row emitters shared by
+//! the `rust/benches/fig*.rs` targets.
+
+pub mod figures;
+pub mod paper;
+pub mod timing;
+pub mod workload;
+
+pub use figures::{FigureRow, Table};
+pub use timing::{measure, MeasureOpts};
+pub use workload::{sine_field, verify_roundtrip};

@@ -1,0 +1,202 @@
+//! Shared generators for the paper's figures (used by `rust/benches/fig*`).
+//!
+//! Every figure bench combines (a) *measured* rows from real multi-rank
+//! runs at host scale and (b) *model* rows at paper scale from the
+//! Eq. 3 machine model. This module holds the common protocol code.
+
+use crate::bench::figures::{FigureRow, Table};
+use crate::bench::workload::sine_field;
+use crate::coordinator::{run_on_threads, PlanSpec};
+use crate::grid::ProcGrid;
+use crate::netmodel::model::{tflops_pair, weak_efficiency};
+use crate::netmodel::{fit_strong_scaling, predict, FitResult, Machine, ModelInput};
+use crate::util::error::Result;
+
+/// Best (lowest-total-time) processor grid for `p` cores on `machine`
+/// under the model — the paper's "only the best M1 x M2 combination is
+/// taken as data point for each core count".
+pub fn best_pgrid(n: usize, p: usize, machine: &Machine, use_even: bool) -> (usize, usize, f64) {
+    let mut best = (1, p, f64::INFINITY);
+    for pg in ProcGrid::factorizations(p) {
+        // Eq. 2 feasibility.
+        let h = n / 2 + 1;
+        if pg.m1 > n.min(h) || pg.m2 > n {
+            continue;
+        }
+        let mut input = ModelInput::cubic(n, pg.m1, pg.m2, machine.clone());
+        input.use_even = use_even;
+        let t = 2.0 * predict(&input).total();
+        if t < best.2 {
+            best = (pg.m1, pg.m2, t);
+        }
+    }
+    best
+}
+
+/// Best geometry restricted to *true* 2D pencils (both factors >= 2, so
+/// neither exchange degenerates) — the "2d" series of Fig. 10, where
+/// comparing against 1 x P slabs is the point.
+pub fn best_pgrid_2d(n: usize, p: usize, machine: &Machine, use_even: bool) -> (usize, usize, f64) {
+    let mut best = (0, 0, f64::INFINITY);
+    for pg in ProcGrid::factorizations(p) {
+        let h = n / 2 + 1;
+        if pg.m1 < 2 || pg.m2 < 2 || pg.m1 > n.min(h) || pg.m2 > n {
+            continue;
+        }
+        let mut input = ModelInput::cubic(n, pg.m1, pg.m2, machine.clone());
+        input.use_even = use_even;
+        let t = 2.0 * predict(&input).total();
+        if t < best.2 {
+            best = (pg.m1, pg.m2, t);
+        }
+    }
+    best
+}
+
+/// One strong-scaling series at paper scale: per core count, the best
+/// geometry under both exchange options, plus comm time and TFLOPS —
+/// the full content of Figs. 4-8.
+pub fn strong_scaling_table(title: &str, n: usize, ps: &[usize], machine: &Machine) -> Table {
+    let mut table = Table::new(title);
+    let mut fit_ps = Vec::new();
+    let mut fit_ts = Vec::new();
+    for &p in ps {
+        let (m1v, m2v, t_v) = best_pgrid(n, p, machine, false);
+        let (m1e, m2e, t_e) = best_pgrid(n, p, machine, true);
+        let mut inp = ModelInput::cubic(n, m1v, m2v, machine.clone());
+        let comm = 2.0 * predict(&inp).comm();
+        inp.use_even = true;
+        table.push(
+            FigureRow::new("alltoallv", format!("{p}"))
+                .col("pair_s", t_v)
+                .col("tflops", tflops_pair(&inp, t_v))
+                .col("m1", m1v as f64)
+                .col("m2", m2v as f64),
+        );
+        table.push(
+            FigureRow::new("alltoall(useeven)", format!("{p}"))
+                .col("pair_s", t_e)
+                .col("tflops", tflops_pair(&inp, t_e))
+                .col("m1", m1e as f64)
+                .col("m2", m2e as f64),
+        );
+        table.push(FigureRow::new("comm(alltoallv)", format!("{p}")).col("pair_s", comm));
+        fit_ps.push(p as f64);
+        fit_ts.push(t_v);
+    }
+    // The paper's Eq. 4 fit to the alltoallv series.
+    let fit = fit_strong_scaling(&fit_ps, &fit_ts, machine.interconnect.exponent());
+    for (&p, _) in fit_ps.iter().zip(&fit_ts) {
+        table.push(FigureRow::new("fit a/P+d/P^e", format!("{p}")).col("pair_s", fit.predict(p)));
+    }
+    table
+}
+
+/// The Eq. 4 fit for a strong-scaling series (exposed for benches that
+/// also report the effective bisection bandwidth, §4.3).
+pub fn strong_scaling_fit(n: usize, ps: &[usize], machine: &Machine) -> FitResult {
+    let ts: Vec<f64> =
+        ps.iter().map(|&p| best_pgrid(n, p, machine, false).2).collect();
+    let psf: Vec<f64> = ps.iter().map(|&p| p as f64).collect();
+    fit_strong_scaling(&psf, &ts, machine.interconnect.exponent())
+}
+
+/// Measured strong-scaling rows on this host (thread ranks).
+pub fn measured_strong_rows(
+    n: usize,
+    pgrids: &[(usize, usize)],
+    iterations: usize,
+) -> Result<Vec<FigureRow>> {
+    let mut rows = Vec::new();
+    for &(m1, m2) in pgrids {
+        let spec = match PlanSpec::new([n, n, n], ProcGrid::new(m1, m2)) {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let iters = iterations.max(1);
+        let report = run_on_threads(&spec, move |ctx| {
+            let input = ctx.make_real_input(sine_field::<f64>(n, n, n));
+            let mut out = ctx.alloc_output();
+            let mut back = ctx.alloc_input();
+            ctx.forward(&input, &mut out)?; // warmup
+            ctx.backward(&out, &mut back)?;
+            let t0 = std::time::Instant::now();
+            for _ in 0..iters {
+                ctx.forward(&input, &mut out)?;
+                ctx.backward(&out, &mut back)?;
+            }
+            Ok(ctx.max_over_ranks(t0.elapsed().as_secs_f64() / iters as f64))
+        })?;
+        rows.push(
+            FigureRow::new("measured", format!("{} ({m1}x{m2})", m1 * m2))
+                .col("pair_s", report.per_rank[0])
+                .col("comm_s", report.comm())
+                .col("compute_s", report.compute()),
+        );
+    }
+    Ok(rows)
+}
+
+/// The paper's weak-scaling series (Fig. 9) under a machine model.
+/// Returns the table and the 128→65536 efficiency (paper: 45%).
+pub fn weak_scaling_table(machine: &Machine) -> (Table, f64) {
+    let series: [(usize, usize); 5] =
+        [(512, 16), (1024, 128), (2048, 1024), (4096, 8192), (8192, 65536)];
+    let mut table = Table::new(format!("Fig. 9 weak scaling on {} (model)", machine.name));
+    let mut pts = Vec::new();
+    for &(n, p) in &series {
+        let (m1, m2, pair) = best_pgrid(n, p, machine, true);
+        table.push(
+            FigureRow::new("model", format!("{n}^3@{p}"))
+                .col("pair_s", pair)
+                .col("m1", m1 as f64)
+                .col("m2", m2 as f64),
+        );
+        pts.push((n, p, pair));
+    }
+    let (n1, p1, t1) = pts[1];
+    let (n2, p2, t2) = pts[4];
+    (table, weak_efficiency(n1, p1, t1, n2, p2, t2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_pgrid_respects_eq2() {
+        let m = Machine::cray_xt5();
+        let (m1, m2, t) = best_pgrid(2048, 1024, &m, false);
+        assert_eq!(m1 * m2, 1024);
+        assert!(m1 <= 1025 && m2 <= 2048);
+        assert!(t.is_finite());
+    }
+
+    #[test]
+    fn strong_scaling_table_has_all_series() {
+        let m = Machine::cray_xt5();
+        let t = strong_scaling_table("test", 1024, &[256, 1024, 4096], &m);
+        let series: std::collections::HashSet<&str> =
+            t.rows.iter().map(|r| r.series.as_str()).collect();
+        assert!(series.contains("alltoallv"));
+        assert!(series.contains("alltoall(useeven)"));
+        assert!(series.contains("comm(alltoallv)"));
+        assert!(series.contains("fit a/P+d/P^e"));
+    }
+
+    #[test]
+    fn weak_scaling_efficiency_in_papers_band() {
+        let (_, eff) = weak_scaling_table(&Machine::cray_xt5());
+        assert!(eff > 0.25 && eff < 0.75, "efficiency {eff}");
+    }
+
+    #[test]
+    fn useeven_never_loses_on_cray_model() {
+        let m = Machine::cray_xt5();
+        for p in [1024usize, 8192] {
+            let (_, _, tv) = best_pgrid(4096, p, &m, false);
+            let (_, _, te) = best_pgrid(4096, p, &m, true);
+            assert!(te <= tv * 1.0001, "p={p}: useeven {te} vs alltoallv {tv}");
+        }
+    }
+}

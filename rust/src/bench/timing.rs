@@ -1,0 +1,53 @@
+//! Timing loops with warmup and robust statistics.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Options for a measurement loop.
+#[derive(Debug, Clone, Copy)]
+pub struct MeasureOpts {
+    pub warmup: usize,
+    pub iterations: usize,
+}
+
+impl Default for MeasureOpts {
+    fn default() -> Self {
+        MeasureOpts { warmup: 1, iterations: 5 }
+    }
+}
+
+/// Time `f` (seconds per call) with warmup discards; returns robust stats.
+pub fn measure(opts: MeasureOpts, mut f: impl FnMut()) -> Summary {
+    for _ in 0..opts.warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(opts.iterations.max(1));
+    for _ in 0..opts.iterations.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Summary::from_samples(&samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_sleep_duration() {
+        let s = measure(MeasureOpts { warmup: 0, iterations: 3 }, || {
+            std::thread::sleep(std::time::Duration::from_millis(3));
+        });
+        assert!(s.median >= 0.002, "median {}", s.median);
+        assert_eq!(s.n, 3);
+    }
+
+    #[test]
+    fn warmup_calls_happen() {
+        let mut calls = 0;
+        let _ = measure(MeasureOpts { warmup: 2, iterations: 1 }, || calls += 1);
+        assert_eq!(calls, 3);
+    }
+}

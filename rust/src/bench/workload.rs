@@ -1,0 +1,59 @@
+//! The paper's benchmark workload (`test_sine`, §4.1): initialise a 3D
+//! sine field, run forward+backward, verify the result equals the input
+//! up to the known scale factor, report loop-averaged timings.
+
+use crate::fft::Real;
+
+/// The `test_sine` initial condition at global coordinates — a product of
+/// sines, smooth and with a known sparse spectrum.
+pub fn sine_field<T: Real>(nx: usize, ny: usize, nz: usize) -> impl Fn(usize, usize, usize) -> T {
+    move |x, y, z| {
+        let fx = T::from_usize(x).unwrap() / T::from_usize(nx).unwrap();
+        let fy = T::from_usize(y).unwrap() / T::from_usize(ny).unwrap();
+        let fz = T::from_usize(z).unwrap() / T::from_usize(nz).unwrap();
+        let two_pi = T::PI() + T::PI();
+        (two_pi * fx).sin() * (two_pi * fy).sin() * (two_pi * fz).sin()
+    }
+}
+
+/// Max-abs error between the roundtripped field (already divided by the
+/// normalisation) and the original input. The paper's sample "checks to
+/// make sure the data is the same (apart from a scale factor)".
+pub fn verify_roundtrip<T: Real>(original: &[T], roundtripped: &[T], norm: T) -> f64 {
+    assert_eq!(original.len(), roundtripped.len());
+    let mut max_err = 0.0f64;
+    for (o, r) in original.iter().zip(roundtripped) {
+        let err = (*r / norm - *o).to_f64().unwrap().abs();
+        if err > max_err {
+            max_err = err;
+        }
+    }
+    max_err
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sine_field_is_zero_on_planes() {
+        let f = sine_field::<f64>(8, 8, 8);
+        assert!(f(0, 3, 5).abs() < 1e-12);
+        assert!(f(3, 0, 5).abs() < 1e-12);
+        assert!(f(3, 5, 4).abs() < 1e-12); // sin(pi) = 0 at z = nz/2
+    }
+
+    #[test]
+    fn sine_field_nontrivial_in_interior() {
+        let f = sine_field::<f64>(8, 8, 8);
+        assert!(f(2, 2, 2).abs() > 0.1);
+    }
+
+    #[test]
+    fn verify_roundtrip_scales() {
+        let orig = vec![1.0f64, -2.0, 0.5];
+        let rt: Vec<f64> = orig.iter().map(|v| v * 8.0).collect();
+        assert!(verify_roundtrip(&orig, &rt, 8.0) < 1e-15);
+        assert!(verify_roundtrip(&orig, &rt, 4.0) > 0.4);
+    }
+}

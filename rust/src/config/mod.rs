@@ -1,0 +1,12 @@
+//! Run configuration: a TOML-subset parser (offline build — no serde) and
+//! the typed `RunConfig` the CLI and benches consume.
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string
+//! (`"..."`), integer, float, boolean, and `[a, b, c]` integer-array
+//! values, `#` comments. That covers every knob the launcher needs.
+
+pub mod parser;
+pub mod run;
+
+pub use parser::{ParsedConfig, Value};
+pub use run::RunConfig;

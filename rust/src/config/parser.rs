@@ -1,0 +1,235 @@
+//! Minimal TOML-subset parser (see module docs in `config/mod.rs`).
+
+use std::collections::HashMap;
+
+use crate::util::error::{Error, Result};
+
+/// A parsed configuration value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    IntArray(Vec<i64>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_int_array(&self) -> Option<&[i64]> {
+        match self {
+            Value::IntArray(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed file: `section.key` → value (top-level keys use section "").
+#[derive(Debug, Clone, Default)]
+pub struct ParsedConfig {
+    pub values: HashMap<String, Value>,
+}
+
+impl ParsedConfig {
+    /// Parse configuration text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = HashMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(Error::Parse {
+                        line: lineno + 1,
+                        msg: "unterminated section header".into(),
+                    });
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                if section.is_empty() {
+                    return Err(Error::Parse { line: lineno + 1, msg: "empty section name".into() });
+                }
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| Error::Parse {
+                line: lineno + 1,
+                msg: format!("expected key = value, got {line:?}"),
+            })?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(Error::Parse { line: lineno + 1, msg: "empty key".into() });
+            }
+            let val = parse_value(line[eq + 1..].trim(), lineno + 1)?;
+            let full_key =
+                if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            values.insert(full_key, val);
+        }
+        Ok(ParsedConfig { values })
+    }
+
+    /// Load and parse a file.
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    /// Typed getters with defaults.
+    pub fn get_int(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_int).unwrap_or(default)
+    }
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(Value::as_str).unwrap_or(default).to_string()
+    }
+    pub fn get_float(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_float).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside a string starts a comment.
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value> {
+    if s.is_empty() {
+        return Err(Error::Parse { line, msg: "missing value".into() });
+    }
+    if s.starts_with('"') {
+        if s.len() < 2 || !s.ends_with('"') {
+            return Err(Error::Parse { line, msg: "unterminated string".into() });
+        }
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            return Err(Error::Parse { line, msg: "unterminated array".into() });
+        }
+        let inner = &s[1..s.len() - 1];
+        let mut out = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            out.push(part.parse::<i64>().map_err(|_| Error::Parse {
+                line,
+                msg: format!("bad array element {part:?} (integers only)"),
+            })?);
+        }
+        return Ok(Value::IntArray(out));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(Error::Parse { line, msg: format!("unrecognised value {s:?}") })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# top-level
+title = "quick run"
+iterations = 5
+
+[grid]
+dims = [64, 64, 64]
+pgrid = [2, 2]
+
+[options]
+use_even = true
+stride1 = false
+scale = 1.5
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = ParsedConfig::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_str("title", ""), "quick run");
+        assert_eq!(c.get_int("iterations", 0), 5);
+        assert_eq!(c.get("grid.dims").unwrap().as_int_array().unwrap(), &[64, 64, 64]);
+        assert!(c.get_bool("options.use_even", false));
+        assert!(!c.get_bool("options.stride1", true));
+        assert_eq!(c.get_float("options.scale", 0.0), 1.5);
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let c = ParsedConfig::parse("a = 1 # trailing\n\n# full line\nb = 2\n").unwrap();
+        assert_eq!(c.get_int("a", 0), 1);
+        assert_eq!(c.get_int("b", 0), 2);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let c = ParsedConfig::parse(r##"name = "a#b""##).unwrap();
+        assert_eq!(c.get_str("name", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = ParsedConfig::parse("ok = 1\nbroken line\n").unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+        let err = ParsedConfig::parse("x = [1, 2\n").unwrap_err();
+        assert!(err.to_string().contains("line 1"));
+        let err = ParsedConfig::parse("[sec\nx = 1\n").unwrap_err();
+        assert!(err.to_string().contains("line 1"));
+    }
+
+    #[test]
+    fn defaults_apply_when_missing() {
+        let c = ParsedConfig::parse("").unwrap();
+        assert_eq!(c.get_int("nope", 42), 42);
+        assert_eq!(c.get_str("nope", "d"), "d");
+    }
+}

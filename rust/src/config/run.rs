@@ -1,0 +1,188 @@
+//! Typed run configuration consumed by the CLI launcher and benches.
+
+use std::path::PathBuf;
+
+use crate::coordinator::{EngineKind, PlanSpec, TransformKind};
+use crate::grid::ProcGrid;
+use crate::util::error::{Error, Result};
+
+use super::parser::ParsedConfig;
+
+/// A fully-specified run: what `test_sine` (the paper's sample program)
+/// takes from its command line, plus our engine selection.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub dims: [usize; 3],
+    pub m1: usize,
+    pub m2: usize,
+    pub iterations: usize,
+    pub use_even: bool,
+    pub stride1: bool,
+    pub third: TransformKind,
+    pub engine: String,
+    pub artifacts_dir: PathBuf,
+    pub precision: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dims: [32, 32, 32],
+            m1: 2,
+            m2: 2,
+            iterations: 3,
+            use_even: false,
+            stride1: true,
+            third: TransformKind::Fft,
+            engine: "native".into(),
+            artifacts_dir: "artifacts".into(),
+            precision: "f64".into(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Build from a parsed config file (all keys optional).
+    pub fn from_parsed(c: &ParsedConfig) -> Result<Self> {
+        let mut rc = RunConfig::default();
+        if let Some(v) = c.get("grid.dims").and_then(|v| v.as_int_array()) {
+            if v.len() != 3 || v.iter().any(|&d| d < 1) {
+                return Err(Error::InvalidConfig("grid.dims must be 3 positive ints".into()));
+            }
+            rc.dims = [v[0] as usize, v[1] as usize, v[2] as usize];
+        }
+        if let Some(v) = c.get("grid.pgrid").and_then(|v| v.as_int_array()) {
+            if v.len() != 2 || v.iter().any(|&d| d < 1) {
+                return Err(Error::InvalidConfig("grid.pgrid must be 2 positive ints".into()));
+            }
+            rc.m1 = v[0] as usize;
+            rc.m2 = v[1] as usize;
+        }
+        rc.iterations = c.get_int("iterations", rc.iterations as i64).max(1) as usize;
+        rc.use_even = c.get_bool("options.use_even", rc.use_even);
+        rc.stride1 = c.get_bool("options.stride1", rc.stride1);
+        rc.third = match c.get_str("options.third", "fft").as_str() {
+            "fft" => TransformKind::Fft,
+            "cheby" => TransformKind::Cheby,
+            "sine" => TransformKind::Sine,
+            "empty" => TransformKind::Empty,
+            other => {
+                return Err(Error::InvalidConfig(format!(
+                    "options.third must be fft|cheby|sine|empty, got {other:?}"
+                )))
+            }
+        };
+        rc.engine = c.get_str("options.engine", &rc.engine);
+        rc.artifacts_dir = PathBuf::from(c.get_str("options.artifacts_dir", "artifacts"));
+        rc.precision = c.get_str("options.precision", &rc.precision);
+        if rc.precision != "f64" && rc.precision != "f32" {
+            return Err(Error::InvalidConfig("options.precision must be f32 or f64".into()));
+        }
+        Ok(rc)
+    }
+
+    /// Apply `key=value` CLI overrides (dotted keys as in the file).
+    pub fn apply_override(&mut self, key: &str, value: &str) -> Result<()> {
+        let text = format!("{key} = {value}");
+        let parsed = ParsedConfig::parse(&text)?;
+        // Re-route through from_parsed semantics by merging one key.
+        let mut merged = ParsedConfig::default();
+        merged.values.insert(key.to_string(), parsed.values[key].clone());
+        let tmp = RunConfig::from_parsed(&merged)?;
+        match key {
+            "grid.dims" => self.dims = tmp.dims,
+            "grid.pgrid" => {
+                self.m1 = tmp.m1;
+                self.m2 = tmp.m2;
+            }
+            "iterations" => self.iterations = tmp.iterations,
+            "options.use_even" => self.use_even = tmp.use_even,
+            "options.stride1" => self.stride1 = tmp.stride1,
+            "options.third" => self.third = tmp.third,
+            "options.engine" => self.engine = tmp.engine,
+            "options.artifacts_dir" => self.artifacts_dir = tmp.artifacts_dir,
+            "options.precision" => self.precision = tmp.precision,
+            other => {
+                return Err(Error::InvalidConfig(format!("unknown config key {other:?}")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Convert to a validated [`PlanSpec`].
+    pub fn to_spec(&self) -> Result<PlanSpec> {
+        let engine = match self.engine.as_str() {
+            "native" => EngineKind::Native,
+            "pjrt" => EngineKind::Pjrt { artifacts_dir: self.artifacts_dir.clone() },
+            other => {
+                return Err(Error::InvalidConfig(format!(
+                    "engine must be native|pjrt, got {other:?}"
+                )))
+            }
+        };
+        Ok(PlanSpec::new(self.dims, ProcGrid::new(self.m1, self.m2))?
+            .with_third(self.third)
+            .with_use_even(self.use_even)
+            .with_stride1(self.stride1)
+            .with_engine(engine))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_produce_valid_spec() {
+        let rc = RunConfig::default();
+        let spec = rc.to_spec().unwrap();
+        assert_eq!(spec.p(), 4);
+    }
+
+    #[test]
+    fn from_parsed_full_file() {
+        let c = ParsedConfig::parse(
+            r#"
+iterations = 7
+[grid]
+dims = [16, 8, 12]
+pgrid = [2, 3]
+[options]
+use_even = true
+third = "cheby"
+engine = "native"
+precision = "f32"
+"#,
+        )
+        .unwrap();
+        let rc = RunConfig::from_parsed(&c).unwrap();
+        assert_eq!(rc.dims, [16, 8, 12]);
+        assert_eq!((rc.m1, rc.m2), (2, 3));
+        assert_eq!(rc.iterations, 7);
+        assert!(rc.use_even);
+        assert_eq!(rc.third, TransformKind::Cheby);
+        assert_eq!(rc.precision, "f32");
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let c = ParsedConfig::parse("[grid]\ndims = [1, 2]\n").unwrap();
+        assert!(RunConfig::from_parsed(&c).is_err());
+        let c = ParsedConfig::parse("[options]\nthird = \"nope\"\n").unwrap();
+        assert!(RunConfig::from_parsed(&c).is_err());
+        let c = ParsedConfig::parse("[options]\nprecision = \"f16\"\n").unwrap();
+        assert!(RunConfig::from_parsed(&c).is_err());
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut rc = RunConfig::default();
+        rc.apply_override("grid.dims", "[8, 8, 8]").unwrap();
+        rc.apply_override("options.use_even", "true").unwrap();
+        rc.apply_override("iterations", "11").unwrap();
+        assert_eq!(rc.dims, [8, 8, 8]);
+        assert!(rc.use_even);
+        assert_eq!(rc.iterations, 11);
+        assert!(rc.apply_override("bogus.key", "1").is_err());
+    }
+}

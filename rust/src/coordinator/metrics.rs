@@ -1,0 +1,59 @@
+//! Cross-rank reductions of per-stage timing — the numbers the paper's
+//! figures plot (total time, communication time, TFLOPS).
+
+use crate::util::timer::{Stage, StageTimer, ALL_STAGES};
+
+/// Result of a distributed run: per-rank payloads plus reduced timing.
+#[derive(Debug, Clone)]
+pub struct RunReport<R> {
+    /// Whatever each rank's closure returned, in rank order.
+    pub per_rank: Vec<R>,
+    /// Stage timers max-reduced over ranks (MPI convention: the slowest
+    /// rank defines the stage time).
+    pub timer: StageTimer,
+    /// Wall-clock of the whole parallel section (spawn to join).
+    pub wall: f64,
+    /// Total bytes pushed through the fabric.
+    pub bytes: u64,
+}
+
+impl<R> RunReport<R> {
+    /// Communication time (pack + exchange + unpack), reduced.
+    pub fn comm(&self) -> f64 {
+        self.timer.comm()
+    }
+
+    /// Compute time, reduced.
+    pub fn compute(&self) -> f64 {
+        self.timer.get(Stage::Compute)
+    }
+
+    /// One-line per-stage summary.
+    pub fn stage_summary(&self) -> String {
+        let mut parts = Vec::new();
+        for s in ALL_STAGES {
+            let v = self.timer.get(s);
+            if v > 0.0 {
+                parts.push(format!("{}={:.4}s", s.name(), v));
+            }
+        }
+        parts.join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_reductions() {
+        let mut t = StageTimer::new();
+        t.add(Stage::Compute, 2.0);
+        t.add(Stage::Exchange, 1.0);
+        let r = RunReport { per_rank: vec![(), ()], timer: t, wall: 3.5, bytes: 100 };
+        assert_eq!(r.compute(), 2.0);
+        assert_eq!(r.comm(), 1.0);
+        assert!(r.stage_summary().contains("compute=2.0000s"));
+        assert!(r.stage_summary().contains("exchange=1.0000s"));
+    }
+}

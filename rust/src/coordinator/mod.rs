@@ -1,0 +1,30 @@
+//! The P3DFFT coordinator — the paper's library, as a Rust API.
+//!
+//! * [`spec`] — [`PlanSpec`]: grid + processor grid + the user options of
+//!   §3 (STRIDE1, USEEVEN, third-dimension transform kind, engine choice);
+//! * [`plan`] — [`RankPlan`]: one rank's compiled pipeline: serial FFT
+//!   plans, the two transpose plans, buffer arena, stage timers, and the
+//!   forward/backward drivers (Fig. 2's three compute + two transpose
+//!   stages);
+//! * [`executor`] — [`run_on_threads`]: `mpirun` in miniature — spawns one
+//!   thread per rank, wires ROW/COLUMN communicators, hands each rank a
+//!   [`RankContext`], and reduces timing into a [`metrics::RunReport`];
+//! * [`metrics`] — cross-rank reductions of the per-stage timings (the
+//!   numbers the paper's figures plot).
+//!
+//! Input/output conventions follow §3.2 exactly: R2C takes X-pencils
+//! (real) and leaves Z-pencils (complex, packed width `(Nx+2)/2`); C2R is
+//! the reverse. No transpose back — "significant resources are saved by
+//! avoiding transpose back to the original distribution shape". Both
+//! directions are unnormalised; `RankPlan::normalization()` reports the
+//! roundtrip factor.
+
+pub mod executor;
+pub mod metrics;
+pub mod plan;
+pub mod spec;
+
+pub use executor::{run_on_threads, run_on_threads_with, RankContext};
+pub use metrics::RunReport;
+pub use plan::{Engine, RankPlan};
+pub use spec::{EngineKind, Options, PlanSpec, TransformKind};

@@ -1,0 +1,782 @@
+//! One rank's compiled transform pipeline (the library core of the paper).
+//!
+//! Forward R2C (Fig. 2): X-pencil real input → batched R2C over X →
+//! ROW transpose → batched C2C over Y → COLUMN transpose → third-dimension
+//! transform over Z → Z-pencil complex output. Backward is the mirror.
+//!
+//! Two layout modes (§3.3):
+//! * STRIDE1 (default): packing embeds local transposes so every FFT runs
+//!   unit-stride (Table 1 upper half — Y-pencil YXZ, Z-pencil ZYX);
+//! * non-STRIDE1: all arrays stay XYZ order; packs become contiguous slab
+//!   copies and the Y/Z FFTs run strided ("let the FFT library handle the
+//!   strides").
+//!
+//! Two engines: the native serial-FFT substrate, or the PJRT stage library
+//! executing the AOT-lowered JAX/Pallas artifacts (STRIDE1 only — the
+//! artifacts are dense (batch, n) kernels).
+
+use std::sync::Arc;
+
+use crate::fft::{C2cPlan, C2rPlan, Complex, Dct1Plan, Direction, Dst1Plan, R2cPlan, Real};
+use crate::grid::Decomp;
+use crate::mpi::Comm;
+use crate::runtime::StageLibrary;
+use crate::transpose::{ExchangeOptions, TransposeXY, TransposeYZ};
+use crate::util::error::{Error, Result};
+use crate::util::timer::{Stage, StageTimer};
+
+use super::spec::{EngineKind, PlanSpec, TransformKind};
+
+/// Compute-stage engine (shared library handle for the PJRT case).
+#[derive(Clone)]
+pub enum Engine {
+    Native,
+    Pjrt(Arc<StageLibrary>),
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Engine::Native => write!(f, "Native"),
+            Engine::Pjrt(lib) => write!(f, "Pjrt({lib:?})"),
+        }
+    }
+}
+
+impl Engine {
+    /// Build the engine a spec asks for (opens the artifact dir once; the
+    /// caller shares the resulting `Engine` across ranks).
+    pub fn from_spec(spec: &PlanSpec) -> Result<Engine> {
+        match &spec.opts.engine {
+            EngineKind::Native => Ok(Engine::Native),
+            EngineKind::Pjrt { artifacts_dir } => {
+                if !spec.opts.stride1 {
+                    return Err(Error::InvalidConfig(
+                        "the PJRT engine requires STRIDE1 layout (artifacts are dense \
+                         (batch, n) kernels)"
+                            .into(),
+                    ));
+                }
+                Ok(Engine::Pjrt(Arc::new(StageLibrary::open(artifacts_dir)?)))
+            }
+        }
+    }
+}
+
+/// Dispatch of the per-stage compute to PJRT artifacts, per precision.
+pub trait PjrtExec: Real {
+    fn rt_r2c(lib: &StageLibrary, batch: usize, n: usize, input: &[Self])
+        -> Result<(Vec<Self>, Vec<Self>)>;
+    #[allow(clippy::too_many_arguments)]
+    fn rt_c2c(
+        lib: &StageLibrary,
+        inverse: bool,
+        batch: usize,
+        n: usize,
+        re: &[Self],
+        im: &[Self],
+    ) -> Result<(Vec<Self>, Vec<Self>)>;
+    fn rt_c2r(lib: &StageLibrary, batch: usize, n: usize, re: &[Self], im: &[Self])
+        -> Result<Vec<Self>>;
+    fn rt_cheby(lib: &StageLibrary, batch: usize, n: usize, x: &[Self]) -> Result<Vec<Self>>;
+}
+
+impl PjrtExec for f64 {
+    fn rt_r2c(lib: &StageLibrary, batch: usize, n: usize, input: &[f64])
+        -> Result<(Vec<f64>, Vec<f64>)> {
+        lib.x_r2c_f64(batch, n, input)
+    }
+    fn rt_c2c(
+        lib: &StageLibrary,
+        inverse: bool,
+        batch: usize,
+        n: usize,
+        re: &[f64],
+        im: &[f64],
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        lib.c2c_f64(inverse, batch, n, re, im)
+    }
+    fn rt_c2r(lib: &StageLibrary, batch: usize, n: usize, re: &[f64], im: &[f64])
+        -> Result<Vec<f64>> {
+        lib.x_c2r_f64(batch, n, re, im)
+    }
+    fn rt_cheby(lib: &StageLibrary, batch: usize, n: usize, x: &[f64]) -> Result<Vec<f64>> {
+        lib.cheby_f64(batch, n, x)
+    }
+}
+
+impl PjrtExec for f32 {
+    fn rt_r2c(lib: &StageLibrary, batch: usize, n: usize, input: &[f32])
+        -> Result<(Vec<f32>, Vec<f32>)> {
+        use crate::runtime::{StageId, StageKind};
+        let id = StageId { kind: StageKind::XR2c, batch, n, dtype: "f32" };
+        let dims = [batch as i64, n as i64];
+        let mut out = lib.run_f32(&id, &[(input, &dims)])?;
+        let im = out.pop().ok_or_else(|| Error::Runtime("missing im".into()))?;
+        let re = out.pop().ok_or_else(|| Error::Runtime("missing re".into()))?;
+        Ok((re, im))
+    }
+    fn rt_c2c(
+        lib: &StageLibrary,
+        inverse: bool,
+        batch: usize,
+        n: usize,
+        re: &[f32],
+        im: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        use crate::runtime::{StageId, StageKind};
+        let kind = if inverse { StageKind::C2cBwd } else { StageKind::C2cFwd };
+        let id = StageId { kind, batch, n, dtype: "f32" };
+        let dims = [batch as i64, n as i64];
+        let mut out = lib.run_f32(&id, &[(re, &dims), (im, &dims)])?;
+        let oim = out.pop().ok_or_else(|| Error::Runtime("missing im".into()))?;
+        let ore = out.pop().ok_or_else(|| Error::Runtime("missing re".into()))?;
+        Ok((ore, oim))
+    }
+    fn rt_c2r(lib: &StageLibrary, batch: usize, n: usize, re: &[f32], im: &[f32])
+        -> Result<Vec<f32>> {
+        use crate::runtime::{StageId, StageKind};
+        let id = StageId { kind: StageKind::XC2r, batch, n, dtype: "f32" };
+        let dims = [batch as i64, (n / 2 + 1) as i64];
+        let mut out = lib.run_f32(&id, &[(re, &dims), (im, &dims)])?;
+        out.pop().ok_or_else(|| Error::Runtime("missing output".into()))
+    }
+    fn rt_cheby(lib: &StageLibrary, batch: usize, n: usize, x: &[f32]) -> Result<Vec<f32>> {
+        use crate::runtime::{StageId, StageKind};
+        let id = StageId { kind: StageKind::Cheby, batch, n, dtype: "f32" };
+        let dims = [batch as i64, n as i64];
+        let mut out = lib.run_f32(&id, &[(x, &dims)])?;
+        out.pop().ok_or_else(|| Error::Runtime("missing output".into()))
+    }
+}
+
+/// One rank's plan: geometry, FFT plans, transpose plans, buffer arena.
+pub struct RankPlan<T: Real> {
+    pub spec: PlanSpec,
+    pub rank: usize,
+    pub decomp: Decomp,
+    txy: TransposeXY,
+    tyz: TransposeYZ,
+    r2c: R2cPlan<T>,
+    c2r: C2rPlan<T>,
+    fy_f: C2cPlan<T>,
+    fy_b: C2cPlan<T>,
+    fz_f: C2cPlan<T>,
+    fz_b: C2cPlan<T>,
+    dct: Option<Dct1Plan<T>>,
+    dst: Option<Dst1Plan<T>>,
+    engine: Engine,
+    xopts: ExchangeOptions,
+    // Buffer arena (no allocation inside forward/backward).
+    xspec: Vec<Complex<T>>,
+    ybuf: Vec<Complex<T>>,
+    sendbuf: Vec<Complex<T>>,
+    recvbuf: Vec<Complex<T>>,
+    scratch: Vec<Complex<T>>,
+    real_scratch: Vec<T>,
+    // Plane buffers for the PJRT engine (split/merge of interleaved data).
+    plane_re: Vec<T>,
+    plane_im: Vec<T>,
+    /// Per-stage wall-clock accounting for this rank.
+    pub timer: StageTimer,
+}
+
+impl<T: Real + PjrtExec> RankPlan<T> {
+    /// Compile a plan for `rank`. `engine` comes from [`Engine::from_spec`]
+    /// (shared across ranks when PJRT).
+    pub fn new(spec: &PlanSpec, rank: usize, engine: Engine) -> Result<Self> {
+        let decomp = spec.decomp()?;
+        if rank >= decomp.p() {
+            return Err(Error::InvalidConfig(format!(
+                "rank {rank} out of range for P = {}",
+                decomp.p()
+            )));
+        }
+        let txy = TransposeXY::new(&decomp, rank);
+        let tyz = TransposeYZ::new(&decomp, rank);
+        let xopts = ExchangeOptions { use_even: spec.opts.use_even };
+
+        let r2c = R2cPlan::new(spec.nx);
+        let c2r = C2rPlan::new(spec.nx);
+        let fy_f = C2cPlan::new(spec.ny, Direction::Forward);
+        let fy_b = C2cPlan::new(spec.ny, Direction::Inverse);
+        let fz_f = C2cPlan::new(spec.nz, Direction::Forward);
+        let fz_b = C2cPlan::new(spec.nz, Direction::Inverse);
+        let dct = match spec.third {
+            TransformKind::Cheby => Some(Dct1Plan::new(spec.nz)),
+            _ => None,
+        };
+        let dst = match spec.third {
+            TransformKind::Sine => Some(Dst1Plan::new(spec.nz)),
+            _ => None,
+        };
+
+        let xp = decomp.x_pencil_spec(rank);
+        let yp = decomp.y_pencil(rank);
+        let buf_len = txy.buf_len(xopts).max(tyz.buf_len(xopts));
+        let scratch_len = r2c
+            .scratch_len()
+            .max(c2r.scratch_len())
+            .max(fy_f.scratch_len() + spec.ny)
+            .max(fy_b.scratch_len() + spec.ny)
+            .max(fz_f.scratch_len() + spec.nz)
+            .max(fz_b.scratch_len() + spec.nz)
+            .max(dct.as_ref().map_or(0, |d| d.scratch_len()))
+            .max(dst.as_ref().map_or(0, |d| d.scratch_len()));
+
+        Ok(RankPlan {
+            spec: spec.clone(),
+            rank,
+            decomp,
+            txy,
+            tyz,
+            r2c,
+            c2r,
+            fy_f,
+            fy_b,
+            fz_f,
+            fz_b,
+            dct,
+            dst,
+            engine,
+            xopts,
+            xspec: vec![Complex::zero(); xp.len()],
+            ybuf: vec![Complex::zero(); yp.len()],
+            sendbuf: vec![Complex::zero(); buf_len],
+            recvbuf: vec![Complex::zero(); buf_len],
+            scratch: vec![Complex::zero(); scratch_len],
+            real_scratch: vec![T::zero(); spec.nz.max(spec.nx)],
+            plane_re: Vec::new(),
+            plane_im: Vec::new(),
+            timer: StageTimer::new(),
+        })
+    }
+
+    /// Length of this rank's real input (X-pencil).
+    pub fn input_len(&self) -> usize {
+        self.decomp.x_pencil(self.rank).len()
+    }
+
+    /// Length of this rank's complex output (Z-pencil).
+    pub fn output_len(&self) -> usize {
+        self.decomp.z_pencil(self.rank).len()
+    }
+
+    /// Roundtrip scale: `backward(forward(x)) == normalization() * x`.
+    pub fn normalization(&self) -> T {
+        let fxy = T::from_usize(self.spec.nx * self.spec.ny).unwrap();
+        match self.spec.third {
+            TransformKind::Fft => fxy * T::from_usize(self.spec.nz).unwrap(),
+            TransformKind::Cheby => {
+                fxy * T::from_usize(2 * (self.spec.nz - 1)).unwrap()
+            }
+            TransformKind::Sine => fxy * T::from_usize(2 * (self.spec.nz + 1)).unwrap(),
+            TransformKind::Empty => fxy,
+        }
+    }
+
+    /// Forward R2C transform: `input` X-pencil (real, len `input_len`) →
+    /// `output` Z-pencil (complex, len `output_len`).
+    pub fn forward(
+        &mut self,
+        row: &Comm,
+        col: &Comm,
+        input: &[T],
+        output: &mut [Complex<T>],
+    ) -> Result<()> {
+        if input.len() != self.input_len() {
+            return Err(Error::BadShape {
+                expected: self.input_len(),
+                got: input.len(),
+                what: "forward input (X-pencil)",
+            });
+        }
+        if output.len() != self.output_len() {
+            return Err(Error::BadShape {
+                expected: self.output_len(),
+                got: output.len(),
+                what: "forward output (Z-pencil)",
+            });
+        }
+
+        // Stage 1: R2C over X lines (stride-1 in all layout modes).
+        self.stage_r2c(input)?;
+
+        // Transpose 1 + Stage 2 + Transpose 2 + Stage 3.
+        if self.spec.opts.stride1 {
+            self.forward_stride1(row, col, output)
+        } else {
+            self.forward_xyz(row, col, output)
+        }
+    }
+
+    /// Backward C2R transform: `input` Z-pencil → `output` X-pencil (real).
+    /// Unnormalised; divide by [`Self::normalization`] to invert exactly.
+    pub fn backward(
+        &mut self,
+        row: &Comm,
+        col: &Comm,
+        input: &[Complex<T>],
+        output: &mut [T],
+    ) -> Result<()> {
+        if input.len() != self.output_len() {
+            return Err(Error::BadShape {
+                expected: self.output_len(),
+                got: input.len(),
+                what: "backward input (Z-pencil)",
+            });
+        }
+        if output.len() != self.input_len() {
+            return Err(Error::BadShape {
+                expected: self.input_len(),
+                got: output.len(),
+                what: "backward output (X-pencil)",
+            });
+        }
+        if self.spec.opts.stride1 {
+            self.backward_stride1(row, col, input)?;
+        } else {
+            self.backward_xyz(row, col, input)?;
+        }
+
+        // Final stage: C2R over X lines from the spectral X-pencil.
+        self.stage_c2r(output)
+    }
+
+    // --- shared stages ----------------------------------------------------
+
+    fn stage_r2c(&mut self, input: &[T]) -> Result<()> {
+        let xp = self.decomp.x_pencil(self.rank);
+        let batch = xp.batch();
+        let n = self.spec.nx;
+        match &self.engine {
+            Engine::Native => {
+                let r2c = &self.r2c;
+                let xspec = &mut self.xspec;
+                let scratch = &mut self.scratch;
+                self.timer.time(Stage::Compute, || {
+                    r2c.execute_batch(input, xspec, scratch);
+                });
+                Ok(())
+            }
+            Engine::Pjrt(lib) => {
+                let lib = lib.clone();
+                let (re, im) = self
+                    .timer
+                    .time(Stage::Compute, || T::rt_r2c(&lib, batch, n, input))?;
+                merge_planes(&re, &im, &mut self.xspec);
+                Ok(())
+            }
+        }
+    }
+
+    fn stage_c2r(&mut self, output: &mut [T]) -> Result<()> {
+        let xp = self.decomp.x_pencil(self.rank);
+        let batch = xp.batch();
+        let n = self.spec.nx;
+        match &self.engine {
+            Engine::Native => {
+                let c2r = &self.c2r;
+                let xspec = &self.xspec;
+                let scratch = &mut self.scratch;
+                self.timer.time(Stage::Compute, || {
+                    c2r.execute_batch(xspec, output, scratch);
+                });
+                Ok(())
+            }
+            Engine::Pjrt(lib) => {
+                let lib = lib.clone();
+                split_planes(&self.xspec, &mut self.plane_re, &mut self.plane_im);
+                let out = self.timer.time(Stage::Compute, || {
+                    T::rt_c2r(&lib, batch, n, &self.plane_re, &self.plane_im)
+                })?;
+                output.copy_from_slice(&out);
+                Ok(())
+            }
+        }
+    }
+
+    /// Batched stride-1 C2C on `data` via the chosen engine.
+    fn stage_c2c(
+        &mut self,
+        which: Axis,
+        inverse: bool,
+        data_is_ybuf: bool,
+        ext: Option<&mut [Complex<T>]>,
+    ) -> Result<()> {
+        let n = match which {
+            Axis::Y => self.spec.ny,
+            Axis::Z => self.spec.nz,
+        };
+        // Select the buffer: ybuf internally, or the caller's output slice.
+        match &self.engine {
+            Engine::Native => {
+                let plan = match (which, inverse) {
+                    (Axis::Y, false) => &self.fy_f,
+                    (Axis::Y, true) => &self.fy_b,
+                    (Axis::Z, false) => &self.fz_f,
+                    (Axis::Z, true) => &self.fz_b,
+                };
+                let scratch = &mut self.scratch;
+                let timer = &mut self.timer;
+                if data_is_ybuf {
+                    let data = &mut self.ybuf;
+                    timer.time(Stage::Compute, || plan.execute_batch(data, scratch));
+                } else {
+                    let data = ext.expect("external buffer required");
+                    timer.time(Stage::Compute, || plan.execute_batch(data, scratch));
+                }
+                Ok(())
+            }
+            Engine::Pjrt(lib) => {
+                let lib = lib.clone();
+                let data: &mut [Complex<T>] = if data_is_ybuf {
+                    &mut self.ybuf
+                } else {
+                    ext.expect("external buffer required")
+                };
+                let batch = data.len() / n;
+                split_planes(data, &mut self.plane_re, &mut self.plane_im);
+                let (re, im) = self.timer.time(Stage::Compute, || {
+                    T::rt_c2c(&lib, inverse, batch, n, &self.plane_re, &self.plane_im)
+                })?;
+                merge_planes(&re, &im, data);
+                Ok(())
+            }
+        }
+    }
+
+    /// Third-dimension transform on the Z-pencil (`output`), per spec.
+    fn stage_third(&mut self, output: &mut [Complex<T>], inverse: bool) -> Result<()> {
+        match self.spec.third {
+            TransformKind::Fft => self.stage_c2c(Axis::Z, inverse, false, Some(output)),
+            TransformKind::Cheby => {
+                // DCT-I is its own (unnormalised) inverse.
+                match &self.engine {
+                    Engine::Native => {
+                        let dct = self.dct.as_ref().expect("dct plan");
+                        let rs = &mut self.real_scratch;
+                        let scratch = &mut self.scratch;
+                        self.timer.time(Stage::Compute, || {
+                            dct.execute_complex_batch(output, rs, scratch);
+                        });
+                        Ok(())
+                    }
+                    Engine::Pjrt(lib) => {
+                        let lib = lib.clone();
+                        let n = self.spec.nz;
+                        let batch = output.len() / n;
+                        split_planes(output, &mut self.plane_re, &mut self.plane_im);
+                        let (re, im) = self.timer.time(Stage::Compute, || -> Result<_> {
+                            let re = T::rt_cheby(&lib, batch, n, &self.plane_re)?;
+                            let im = T::rt_cheby(&lib, batch, n, &self.plane_im)?;
+                            Ok((re, im))
+                        })?;
+                        merge_planes(&re, &im, output);
+                        Ok(())
+                    }
+                }
+            }
+            TransformKind::Sine => match &self.engine {
+                Engine::Native => {
+                    let dst = self.dst.as_ref().expect("dst plan");
+                    let rs = &mut self.real_scratch;
+                    let scratch = &mut self.scratch;
+                    self.timer.time(Stage::Compute, || {
+                        dst.execute_complex_batch(output, rs, scratch);
+                    });
+                    Ok(())
+                }
+                Engine::Pjrt(_) => Err(Error::InvalidConfig(
+                    "the AOT artifact set does not include a DST stage; use the \
+                     native engine for TransformKind::Sine"
+                        .into(),
+                )),
+            },
+            TransformKind::Empty => Ok(()),
+        }
+    }
+
+    // --- STRIDE1 pipeline ---------------------------------------------------
+
+    fn forward_stride1(
+        &mut self,
+        row: &Comm,
+        col: &Comm,
+        output: &mut [Complex<T>],
+    ) -> Result<()> {
+        // Transpose 1: X-pencil (spectral) -> Y-pencil.
+        let txy = self.txy.clone();
+        txy.forward(
+            row,
+            &self.xspec,
+            &mut self.ybuf,
+            &mut self.sendbuf,
+            &mut self.recvbuf,
+            self.xopts,
+            &mut self.timer,
+        );
+        // Stage 2: C2C over Y lines.
+        self.stage_c2c(Axis::Y, false, true, None)?;
+        // Transpose 2: Y-pencil -> Z-pencil.
+        let tyz = self.tyz.clone();
+        tyz.forward(
+            col,
+            &self.ybuf,
+            output,
+            &mut self.sendbuf,
+            &mut self.recvbuf,
+            self.xopts,
+            &mut self.timer,
+        );
+        // Stage 3: third-dimension transform.
+        self.stage_third(output, false)
+    }
+
+    fn backward_stride1(
+        &mut self,
+        row: &Comm,
+        col: &Comm,
+        input: &[Complex<T>],
+    ) -> Result<()> {
+        // Work on a copy of the caller's spectral data (in-place semantics
+        // for the user's buffer are preserved).
+        let mut zbuf = input.to_vec();
+        self.stage_third(&mut zbuf, true)?;
+        let tyz = self.tyz.clone();
+        tyz.backward(
+            col,
+            &zbuf,
+            &mut self.ybuf,
+            &mut self.sendbuf,
+            &mut self.recvbuf,
+            self.xopts,
+            &mut self.timer,
+        );
+        self.stage_c2c(Axis::Y, true, true, None)?;
+        let txy = self.txy.clone();
+        let mut xspec = std::mem::take(&mut self.xspec);
+        txy.backward(
+            row,
+            &self.ybuf,
+            &mut xspec,
+            &mut self.sendbuf,
+            &mut self.recvbuf,
+            self.xopts,
+            &mut self.timer,
+        );
+        self.xspec = xspec;
+        Ok(())
+    }
+
+    // --- non-STRIDE1 (XYZ-order) pipeline ------------------------------------
+
+    fn forward_xyz(&mut self, row: &Comm, col: &Comm, output: &mut [Complex<T>]) -> Result<()> {
+        if matches!(self.engine, Engine::Pjrt(_)) {
+            return Err(Error::InvalidConfig("PJRT engine requires STRIDE1".into()));
+        }
+        let txy = self.txy.clone();
+        txy.forward_xyz(
+            row,
+            &self.xspec,
+            &mut self.ybuf,
+            &mut self.sendbuf,
+            &mut self.recvbuf,
+            self.xopts,
+            &mut self.timer,
+        );
+        // Y FFT, strided: within each z-plane of the [z][y][x_loc] array,
+        // line x has base x and stride h_loc.
+        let h_loc = self.txy.h_loc();
+        let ny = self.spec.ny;
+        {
+            let plan = &self.fy_f;
+            let scratch = &mut self.scratch;
+            let ybuf = &mut self.ybuf;
+            self.timer.time(Stage::Compute, || {
+                for zplane in ybuf.chunks_exact_mut(ny * h_loc) {
+                    plan.execute_strided(zplane, h_loc, h_loc, scratch);
+                }
+            });
+        }
+        let tyz = self.tyz.clone();
+        tyz.forward_xyz(
+            col,
+            &self.ybuf,
+            output,
+            &mut self.sendbuf,
+            &mut self.recvbuf,
+            self.xopts,
+            &mut self.timer,
+        );
+        // Z transform, strided over the whole [z][y2][x_loc] array.
+        let ny2 = self.tyz.ny2_loc();
+        match self.spec.third {
+            TransformKind::Fft => {
+                let plan = &self.fz_f;
+                let scratch = &mut self.scratch;
+                self.timer.time(Stage::Compute, || {
+                    plan.execute_strided(output, ny2 * h_loc, ny2 * h_loc, scratch);
+                });
+                Ok(())
+            }
+            TransformKind::Cheby | TransformKind::Sine => Err(Error::InvalidConfig(
+                "Chebyshev/sine third transforms require STRIDE1 (ZYX) layout".into(),
+            )),
+            TransformKind::Empty => Ok(()),
+        }
+    }
+
+    fn backward_xyz(&mut self, row: &Comm, col: &Comm, input: &[Complex<T>]) -> Result<()> {
+        if matches!(self.engine, Engine::Pjrt(_)) {
+            return Err(Error::InvalidConfig("PJRT engine requires STRIDE1".into()));
+        }
+        let h_loc = self.txy.h_loc();
+        let ny2 = self.tyz.ny2_loc();
+        let mut zbuf = input.to_vec();
+        match self.spec.third {
+            TransformKind::Fft => {
+                let plan = &self.fz_b;
+                let scratch = &mut self.scratch;
+                self.timer.time(Stage::Compute, || {
+                    plan.execute_strided(&mut zbuf, ny2 * h_loc, ny2 * h_loc, scratch);
+                });
+            }
+            TransformKind::Cheby | TransformKind::Sine => {
+                return Err(Error::InvalidConfig(
+                    "Chebyshev/sine third transforms require STRIDE1 (ZYX) layout".into(),
+                ))
+            }
+            TransformKind::Empty => {}
+        }
+        let tyz = self.tyz.clone();
+        tyz.backward_xyz(
+            col,
+            &zbuf,
+            &mut self.ybuf,
+            &mut self.sendbuf,
+            &mut self.recvbuf,
+            self.xopts,
+            &mut self.timer,
+        );
+        let ny = self.spec.ny;
+        {
+            let plan = &self.fy_b;
+            let scratch = &mut self.scratch;
+            let ybuf = &mut self.ybuf;
+            self.timer.time(Stage::Compute, || {
+                for zplane in ybuf.chunks_exact_mut(ny * h_loc) {
+                    plan.execute_strided(zplane, h_loc, h_loc, scratch);
+                }
+            });
+        }
+        let txy = self.txy.clone();
+        let mut xspec = std::mem::take(&mut self.xspec);
+        txy.backward_xyz(
+            row,
+            &self.ybuf,
+            &mut xspec,
+            &mut self.sendbuf,
+            &mut self.recvbuf,
+            self.xopts,
+            &mut self.timer,
+        );
+        self.xspec = xspec;
+        Ok(())
+    }
+}
+
+#[derive(Clone, Copy)]
+enum Axis {
+    Y,
+    Z,
+}
+
+/// Split interleaved complex data into (re, im) planes (PJRT marshalling).
+pub fn split_planes<T: Real>(data: &[Complex<T>], re: &mut Vec<T>, im: &mut Vec<T>) {
+    re.clear();
+    im.clear();
+    re.reserve(data.len());
+    im.reserve(data.len());
+    for c in data {
+        re.push(c.re);
+        im.push(c.im);
+    }
+}
+
+/// Merge (re, im) planes back into interleaved complex data.
+pub fn merge_planes<T: Real>(re: &[T], im: &[T], out: &mut [Complex<T>]) {
+    debug_assert_eq!(re.len(), im.len());
+    debug_assert_eq!(re.len(), out.len());
+    for ((o, &r), &i) in out.iter_mut().zip(re).zip(im) {
+        *o = Complex::new(r, i);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_merge_roundtrip() {
+        let data: Vec<Complex<f64>> =
+            (0..10).map(|i| Complex::new(i as f64, -(i as f64))).collect();
+        let (mut re, mut im) = (Vec::new(), Vec::new());
+        split_planes(&data, &mut re, &mut im);
+        assert_eq!(re[3], 3.0);
+        assert_eq!(im[3], -3.0);
+        let mut back = vec![Complex::zero(); 10];
+        merge_planes(&re, &im, &mut back);
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn engine_from_spec_native() {
+        use crate::grid::ProcGrid;
+        let spec = PlanSpec::new([8, 8, 8], ProcGrid::new(1, 1)).unwrap();
+        assert!(matches!(Engine::from_spec(&spec).unwrap(), Engine::Native));
+    }
+
+    #[test]
+    fn pjrt_rejects_non_stride1() {
+        use crate::coordinator::spec::EngineKind;
+        use crate::grid::ProcGrid;
+        let spec = PlanSpec::new([8, 8, 8], ProcGrid::new(1, 1))
+            .unwrap()
+            .with_stride1(false)
+            .with_engine(EngineKind::Pjrt { artifacts_dir: "/tmp".into() });
+        assert!(Engine::from_spec(&spec).is_err());
+    }
+
+    #[test]
+    fn normalization_per_transform_kind() {
+        use crate::grid::ProcGrid;
+        let mk = |third| {
+            let spec =
+                PlanSpec::new([8, 4, 6], ProcGrid::new(1, 1)).unwrap().with_third(third);
+            RankPlan::<f64>::new(&spec, 0, Engine::Native).unwrap().normalization()
+        };
+        assert_eq!(mk(TransformKind::Fft), (8 * 4 * 6) as f64);
+        assert_eq!(mk(TransformKind::Cheby), (8 * 4 * 10) as f64);
+        assert_eq!(mk(TransformKind::Sine), (8 * 4 * 14) as f64);
+        assert_eq!(mk(TransformKind::Empty), (8 * 4) as f64);
+    }
+
+    #[test]
+    fn shape_validation_errors() {
+        use crate::grid::ProcGrid;
+        use crate::mpi::Universe;
+        let spec = PlanSpec::new([8, 8, 8], ProcGrid::new(1, 1)).unwrap();
+        let u = Universe::new(1);
+        let spec2 = spec.clone();
+        let r = u.run(move |c| {
+            let (row, col) = c.cart_2d(spec2.pgrid)?;
+            let mut plan = RankPlan::<f64>::new(&spec2, 0, Engine::Native)?;
+            let bad_in = vec![0.0f64; 3];
+            let mut out = vec![Complex::zero(); plan.output_len()];
+            let e = plan.forward(&row, &col, &bad_in, &mut out).unwrap_err();
+            Ok(matches!(e, Error::BadShape { .. }))
+        });
+        assert!(r.unwrap()[0]);
+    }
+}

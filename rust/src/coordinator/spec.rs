@@ -1,0 +1,144 @@
+//! Plan specification: what to transform, on what virtual processor grid,
+//! with which of the paper's options.
+
+use std::path::PathBuf;
+
+use crate::grid::{Decomp, ProcGrid};
+use crate::util::error::Result;
+
+/// Third-dimension transform selection (§3.1: "sine/cosine (Chebyshev)
+/// transforms, as well as an empty transform which allows the user to
+/// substitute a custom transform of their own choice").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransformKind {
+    /// Standard Fourier transform in Z.
+    Fft,
+    /// Chebyshev (DCT-I) in Z — wall-bounded problems.
+    Cheby,
+    /// Sine (DST-I) in Z — homogeneous Dirichlet walls.
+    Sine,
+    /// No Z transform; the caller applies its own on the Z-pencils.
+    Empty,
+}
+
+/// Compute-stage engine.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EngineKind {
+    /// The crate's own serial FFT library (any size, fastest).
+    Native,
+    /// AOT-compiled JAX/Pallas artifacts via PJRT (proves the three-layer
+    /// stack; requires `make artifacts` shapes to match the plan).
+    Pjrt { artifacts_dir: PathBuf },
+}
+
+/// The paper's user-tunable options (§3.3, §3.4, §4.2).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Options {
+    /// STRIDE1: perform explicit local transposes during packing so every
+    /// 1D FFT runs on unit-stride lines (default, and the layout Table 1's
+    /// upper half describes). `false` keeps XYZ storage order everywhere
+    /// and runs the Y/Z FFTs strided.
+    pub stride1: bool,
+    /// USEEVEN: padded `alltoall` instead of `alltoallv`.
+    pub use_even: bool,
+    pub engine: EngineKind,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Options { stride1: true, use_even: false, engine: EngineKind::Native }
+    }
+}
+
+/// Full specification of a distributed 3D transform.
+#[derive(Debug, Clone)]
+pub struct PlanSpec {
+    pub nx: usize,
+    pub ny: usize,
+    pub nz: usize,
+    pub pgrid: ProcGrid,
+    pub third: TransformKind,
+    pub opts: Options,
+}
+
+impl PlanSpec {
+    /// Validate and build a spec with default options (checks the Eq. 2
+    /// constraints via [`Decomp::new`]).
+    pub fn new(dims: [usize; 3], pgrid: ProcGrid) -> Result<Self> {
+        Decomp::new(dims[0], dims[1], dims[2], pgrid)?;
+        Ok(PlanSpec {
+            nx: dims[0],
+            ny: dims[1],
+            nz: dims[2],
+            pgrid,
+            third: TransformKind::Fft,
+            opts: Options::default(),
+        })
+    }
+
+    /// Builder: third-dimension transform.
+    pub fn with_third(mut self, third: TransformKind) -> Self {
+        self.third = third;
+        self
+    }
+
+    /// Builder: USEEVEN.
+    pub fn with_use_even(mut self, use_even: bool) -> Self {
+        self.opts.use_even = use_even;
+        self
+    }
+
+    /// Builder: STRIDE1.
+    pub fn with_stride1(mut self, stride1: bool) -> Self {
+        self.opts.stride1 = stride1;
+        self
+    }
+
+    /// Builder: engine.
+    pub fn with_engine(mut self, engine: EngineKind) -> Self {
+        self.opts.engine = engine;
+        self
+    }
+
+    /// The decomposition object (revalidates).
+    pub fn decomp(&self) -> Result<Decomp> {
+        Decomp::new(self.nx, self.ny, self.nz, self.pgrid)
+    }
+
+    /// Total task count.
+    pub fn p(&self) -> usize {
+        self.pgrid.p()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_eq2() {
+        assert!(PlanSpec::new([8, 64, 64], ProcGrid::new(6, 1)).is_err());
+        assert!(PlanSpec::new([64, 64, 64], ProcGrid::new(4, 4)).is_ok());
+    }
+
+    #[test]
+    fn builders_compose() {
+        let s = PlanSpec::new([32, 32, 32], ProcGrid::new(2, 2))
+            .unwrap()
+            .with_third(TransformKind::Cheby)
+            .with_use_even(true)
+            .with_stride1(false);
+        assert_eq!(s.third, TransformKind::Cheby);
+        assert!(s.opts.use_even);
+        assert!(!s.opts.stride1);
+        assert_eq!(s.p(), 4);
+    }
+
+    #[test]
+    fn default_options_match_paper_defaults() {
+        let o = Options::default();
+        assert!(o.stride1, "STRIDE1 is our engine default");
+        assert!(!o.use_even, "Alltoallv is the paper's default");
+        assert_eq!(o.engine, EngineKind::Native);
+    }
+}

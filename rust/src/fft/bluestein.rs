@@ -1,0 +1,163 @@
+//! Bluestein (chirp-z) FFT: O(n log n) for *any* length, including large
+//! primes. Used when a grid dimension has a prime factor > 13, completing
+//! the "any grid dimensions" support of the paper's library.
+//!
+//! The DFT is rewritten as a convolution: with chirp `c_j = exp(-iπ j²/n)`
+//! (sign flipped for the inverse),
+//!
+//!   X_k = c_k · Σ_j (x_j c_j) · conj(c_{k-j})
+//!
+//! and the convolution is evaluated with a zero-padded power-of-two FFT of
+//! size M >= 2n-1, whose transform of the chirp sequence is precomputed at
+//! plan time.
+
+use super::complex::{Complex, Real};
+use super::factor::next_pow2;
+use super::stockham::{stockham_radix2, twiddle_table};
+
+/// Precomputed Bluestein machinery for one (n, direction).
+#[derive(Debug, Clone)]
+pub struct BluesteinPlan<T: Real> {
+    pub n: usize,
+    m: usize,
+    /// c_j for j < n (chirp with direction sign).
+    chirp: Vec<Complex<T>>,
+    /// Forward FFT of the cyclically-extended conjugate chirp, length m.
+    b_hat: Vec<Complex<T>>,
+    /// Twiddles for the inner pow-2 FFTs (forward + inverse).
+    tw_fwd: Vec<Complex<T>>,
+    tw_inv: Vec<Complex<T>>,
+}
+
+impl<T: Real> BluesteinPlan<T> {
+    pub fn new(n: usize, inverse: bool) -> Self {
+        assert!(n >= 1);
+        let m = next_pow2(2 * n - 1);
+        let sign = if inverse { T::one() } else { -T::one() };
+        // c_j = exp(sign * iπ j² / n); reduce j² mod 2n to keep the angle
+        // argument small (exactness of the table for large n).
+        let chirp: Vec<Complex<T>> = (0..n)
+            .map(|j| {
+                let jj = (j * j) % (2 * n);
+                let ang = sign * T::PI() * T::from_usize(jj).unwrap() / T::from_usize(n).unwrap();
+                Complex::cis(ang)
+            })
+            .collect();
+        let tw_fwd = twiddle_table(m, false);
+        let tw_inv = twiddle_table(m, true);
+        // b_j = conj(c_j) placed at 0..n and mirrored at m-j (cyclic kernel).
+        let mut b = vec![Complex::<T>::zero(); m];
+        for j in 0..n {
+            let v = chirp[j].conj();
+            b[j] = v;
+            if j != 0 {
+                b[m - j] = v;
+            }
+        }
+        let mut scratch = vec![Complex::<T>::zero(); m];
+        stockham_radix2(&mut b, &mut scratch, &tw_fwd);
+        BluesteinPlan { n, m, chirp, b_hat: b, tw_fwd, tw_inv }
+    }
+
+    /// Scratch requirement for [`Self::execute`]: 2·m complex elements.
+    pub fn scratch_len(&self) -> usize {
+        2 * self.m
+    }
+
+    /// Transform `data` (length n) in place. Unnormalised in both
+    /// directions, like the rest of the crate.
+    pub fn execute(&self, data: &mut [Complex<T>], scratch: &mut [Complex<T>]) {
+        let n = self.n;
+        let m = self.m;
+        debug_assert_eq!(data.len(), n);
+        debug_assert!(scratch.len() >= 2 * m);
+        let (a, rest) = scratch.split_at_mut(m);
+        let fft_scratch = &mut rest[..m];
+
+        // a = x .* chirp, zero-padded to m.
+        for j in 0..n {
+            a[j] = data[j] * self.chirp[j];
+        }
+        for v in a[n..].iter_mut() {
+            *v = Complex::zero();
+        }
+        stockham_radix2(a, fft_scratch, &self.tw_fwd);
+        // Pointwise multiply with the precomputed kernel spectrum.
+        for (av, bv) in a.iter_mut().zip(&self.b_hat) {
+            *av = *av * *bv;
+        }
+        stockham_radix2(a, fft_scratch, &self.tw_inv);
+        // Scale by 1/m (inner inverse FFT) and apply the output chirp.
+        let inv_m = T::one() / T::from_usize(m).unwrap();
+        for k in 0..n {
+            data[k] = a[k].scale(inv_m) * self.chirp[k];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::naive_dft;
+
+    fn run(n: usize, inverse: bool) {
+        let mut rng = crate::util::SplitMix64::new(n as u64 * 7 + 1);
+        let x: Vec<Complex<f64>> = (0..n)
+            .map(|_| Complex::new(rng.next_normal(), rng.next_normal()))
+            .collect();
+        let expect = naive_dft(&x, inverse);
+        let plan = BluesteinPlan::new(n, inverse);
+        let mut data = x.clone();
+        let mut scratch = vec![Complex::zero(); plan.scratch_len()];
+        plan.execute(&mut data, &mut scratch);
+        for (i, (g, e)) in data.iter().zip(&expect).enumerate() {
+            assert!(
+                (g.re - e.re).abs() < 1e-8 * n as f64 && (g.im - e.im).abs() < 1e-8 * n as f64,
+                "n={n} inv={inverse} idx={i}: got {g}, expect {e}"
+            );
+        }
+    }
+
+    #[test]
+    fn primes_match_naive() {
+        for n in [2, 3, 5, 17, 19, 23, 97, 101, 127, 251] {
+            run(n, false);
+            run(n, true);
+        }
+    }
+
+    #[test]
+    fn composite_nonsmooth_sizes() {
+        for n in [2 * 97, 3 * 101, 34] {
+            run(n, false);
+        }
+    }
+
+    #[test]
+    fn n_equals_one_is_identity() {
+        let plan = BluesteinPlan::new(1, false);
+        let mut d = vec![Complex::new(4.2f64, -1.0)];
+        let mut s = vec![Complex::zero(); plan.scratch_len()];
+        plan.execute(&mut d, &mut s);
+        assert!((d[0].re - 4.2).abs() < 1e-12 && (d[0].im + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn forward_inverse_roundtrip_prime() {
+        let n = 97;
+        let mut rng = crate::util::SplitMix64::new(42);
+        let x: Vec<Complex<f64>> = (0..n)
+            .map(|_| Complex::new(rng.next_normal(), rng.next_normal()))
+            .collect();
+        let fp = BluesteinPlan::new(n, false);
+        let ip = BluesteinPlan::new(n, true);
+        let mut d = x.clone();
+        let mut s = vec![Complex::zero(); fp.scratch_len()];
+        fp.execute(&mut d, &mut s);
+        ip.execute(&mut d, &mut s);
+        for (g, e) in d.iter().zip(&x) {
+            assert!((g.re / n as f64 - e.re).abs() < 1e-10);
+            assert!((g.im / n as f64 - e.im).abs() < 1e-10);
+        }
+    }
+}

@@ -1,0 +1,246 @@
+//! Complex arithmetic over `f32`/`f64` (no `num-complex` offline; the type
+//! is trivial and owning it lets us keep the layout `#[repr(C)]` for
+//! zero-copy hand-off to PJRT literals and MPI pack buffers).
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// Floating-point scalar usable throughout the library (f32 or f64) —
+/// the paper's "single and double precision" feature.
+pub trait Real:
+    num_traits::Float
+    + num_traits::FloatConst
+    + num_traits::FromPrimitive
+    + num_traits::NumAssign
+    + Send
+    + Sync
+    + fmt::Debug
+    + fmt::Display
+    + Default
+    + 'static
+{
+    /// Short dtype tag matching the artifact manifest ("f32"/"f64").
+    const DTYPE: &'static str;
+}
+
+impl Real for f32 {
+    const DTYPE: &'static str = "f32";
+}
+impl Real for f64 {
+    const DTYPE: &'static str = "f64";
+}
+
+/// A complex number. `#[repr(C)]` guarantees (re, im) adjacency so a
+/// `&[Complex<T>]` can be reinterpreted as interleaved scalars for packing.
+#[repr(C)]
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Complex<T> {
+    pub re: T,
+    pub im: T,
+}
+
+impl<T: Real> Complex<T> {
+    #[inline(always)]
+    pub fn new(re: T, im: T) -> Self {
+        Self { re, im }
+    }
+
+    #[inline(always)]
+    pub fn zero() -> Self {
+        Self { re: T::zero(), im: T::zero() }
+    }
+
+    #[inline(always)]
+    pub fn one() -> Self {
+        Self { re: T::one(), im: T::zero() }
+    }
+
+    /// `exp(i * theta)`.
+    #[inline]
+    pub fn cis(theta: T) -> Self {
+        Self { re: theta.cos(), im: theta.sin() }
+    }
+
+    #[inline(always)]
+    pub fn conj(self) -> Self {
+        Self { re: self.re, im: -self.im }
+    }
+
+    #[inline(always)]
+    pub fn norm_sqr(self) -> T {
+        self.re * self.re + self.im * self.im
+    }
+
+    #[inline]
+    pub fn abs(self) -> T {
+        self.norm_sqr().sqrt()
+    }
+
+    /// Multiply by `i` (cheaper than a full complex multiply).
+    #[inline(always)]
+    pub fn mul_i(self) -> Self {
+        Self { re: -self.im, im: self.re }
+    }
+
+    /// Scale by a real factor.
+    #[inline(always)]
+    pub fn scale(self, s: T) -> Self {
+        Self { re: self.re * s, im: self.im * s }
+    }
+
+    /// Convert precision (used by tests comparing f32 path to f64 oracle).
+    pub fn cast<U: Real>(self) -> Complex<U> {
+        Complex {
+            re: U::from_f64(self.re.to_f64().unwrap()).unwrap(),
+            im: U::from_f64(self.im.to_f64().unwrap()).unwrap(),
+        }
+    }
+}
+
+impl<T: Real> Add for Complex<T> {
+    type Output = Self;
+    #[inline(always)]
+    fn add(self, rhs: Self) -> Self {
+        Self { re: self.re + rhs.re, im: self.im + rhs.im }
+    }
+}
+
+impl<T: Real> Sub for Complex<T> {
+    type Output = Self;
+    #[inline(always)]
+    fn sub(self, rhs: Self) -> Self {
+        Self { re: self.re - rhs.re, im: self.im - rhs.im }
+    }
+}
+
+impl<T: Real> Mul for Complex<T> {
+    type Output = Self;
+    #[inline(always)]
+    fn mul(self, rhs: Self) -> Self {
+        Self {
+            re: self.re * rhs.re - self.im * rhs.im,
+            im: self.re * rhs.im + self.im * rhs.re,
+        }
+    }
+}
+
+impl<T: Real> Div for Complex<T> {
+    type Output = Self;
+    #[inline]
+    fn div(self, rhs: Self) -> Self {
+        let d = rhs.norm_sqr();
+        Self {
+            re: (self.re * rhs.re + self.im * rhs.im) / d,
+            im: (self.im * rhs.re - self.re * rhs.im) / d,
+        }
+    }
+}
+
+impl<T: Real> Neg for Complex<T> {
+    type Output = Self;
+    #[inline(always)]
+    fn neg(self) -> Self {
+        Self { re: -self.re, im: -self.im }
+    }
+}
+
+impl<T: Real> AddAssign for Complex<T> {
+    #[inline(always)]
+    fn add_assign(&mut self, rhs: Self) {
+        self.re += rhs.re;
+        self.im += rhs.im;
+    }
+}
+
+impl<T: Real> SubAssign for Complex<T> {
+    #[inline(always)]
+    fn sub_assign(&mut self, rhs: Self) {
+        self.re -= rhs.re;
+        self.im -= rhs.im;
+    }
+}
+
+impl<T: Real> MulAssign for Complex<T> {
+    #[inline(always)]
+    fn mul_assign(&mut self, rhs: Self) {
+        *self = *self * rhs;
+    }
+}
+
+impl<T: Real> fmt::Display for Complex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "({}{:+}i)", self.re, self.im)
+    }
+}
+
+/// View a complex slice as interleaved real scalars (re0, im0, re1, ...).
+/// Safe because `Complex<T>` is `#[repr(C)]` with exactly two `T` fields.
+pub fn as_scalars<T: Real>(data: &[Complex<T>]) -> &[T] {
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const T, data.len() * 2) }
+}
+
+/// Mutable variant of [`as_scalars`].
+pub fn as_scalars_mut<T: Real>(data: &mut [Complex<T>]) -> &mut [T] {
+    unsafe { std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut T, data.len() * 2) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn field_axioms_spot_checks() {
+        let a = Complex::new(1.0f64, 2.0);
+        let b = Complex::new(-3.0, 0.5);
+        assert_eq!(a + b, Complex::new(-2.0, 2.5));
+        assert_eq!(a - b, Complex::new(4.0, 1.5));
+        let p = a * b;
+        assert!((p.re - (1.0 * -3.0 - 2.0 * 0.5)).abs() < 1e-15);
+        assert!((p.im - (1.0 * 0.5 + 2.0 * -3.0)).abs() < 1e-15);
+        let q = p / b;
+        assert!((q.re - a.re).abs() < 1e-12 && (q.im - a.im).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cis_lies_on_unit_circle() {
+        for k in 0..16 {
+            let th = k as f64 * 0.7;
+            let c = Complex::cis(th);
+            assert!((c.norm_sqr() - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn mul_i_rotates_quarter_turn() {
+        let a = Complex::new(3.0f64, 4.0);
+        assert_eq!(a.mul_i(), Complex::new(-4.0, 3.0));
+        assert_eq!(a.mul_i().mul_i(), -a);
+    }
+
+    #[test]
+    fn conj_and_abs() {
+        let a = Complex::new(3.0f64, -4.0);
+        assert_eq!(a.conj(), Complex::new(3.0, 4.0));
+        assert!((a.abs() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scalar_view_is_interleaved() {
+        let v = vec![Complex::new(1.0f64, 2.0), Complex::new(3.0, 4.0)];
+        assert_eq!(as_scalars(&v), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn scalar_view_mut_roundtrips() {
+        let mut v = vec![Complex::new(0.0f32, 0.0); 2];
+        as_scalars_mut(&mut v).copy_from_slice(&[5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(v[1], Complex::new(7.0, 8.0));
+    }
+
+    #[test]
+    fn cast_between_precisions() {
+        let a = Complex::new(1.5f64, -2.5);
+        let b: Complex<f32> = a.cast();
+        assert_eq!(b, Complex::new(1.5f32, -2.5));
+    }
+}

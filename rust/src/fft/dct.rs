@@ -1,0 +1,199 @@
+//! DCT-I (Chebyshev) transform — P3DFFT's third-dimension option for
+//! wall-bounded problems (two periodic directions + Chebyshev in the
+//! rigid-wall direction).
+//!
+//! Convention (scipy `dct(type=1)` unnormalised; identical to the L1
+//! Pallas kernel `cheby.py`):
+//!
+//!   Y_k = x_0 + (-1)^k x_{N-1} + 2·Σ_{j=1..N-2} x_j cos(π j k/(N-1))
+//!
+//! Implemented via the even extension of length L = 2(N-1): the real part
+//! of FFT_L(extension) equals Y, so the cost is O(N log N) through the C2C
+//! machinery rather than the O(N²) dense matrix. DCT-I is its own inverse
+//! up to the factor 2(N-1).
+
+use super::complex::{Complex, Real};
+use super::plan::{C2cPlan, Direction};
+
+/// Plan for a batched DCT-I of length n (n >= 2).
+#[derive(Debug, Clone)]
+pub struct Dct1Plan<T: Real> {
+    n: usize,
+    ext: usize,
+    inner: C2cPlan<T>,
+}
+
+impl<T: Real> Dct1Plan<T> {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 2, "dct-i length must be >= 2");
+        let ext = 2 * (n - 1).max(1);
+        Dct1Plan { n, ext, inner: C2cPlan::new(ext, Direction::Forward) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Scratch requirement in `Complex<T>` elements.
+    pub fn scratch_len(&self) -> usize {
+        self.ext + self.inner.scratch_len()
+    }
+
+    /// Transform one line in place (`data.len() == n`).
+    pub fn execute(&self, data: &mut [T], scratch: &mut [Complex<T>]) {
+        let n = self.n;
+        debug_assert_eq!(data.len(), n);
+        if n == 2 {
+            // Degenerate: L = 2; Y0 = x0 + x1, Y1 = x0 - x1.
+            let (a, b) = (data[0], data[1]);
+            data[0] = a + b;
+            data[1] = a - b;
+            return;
+        }
+        let (line, rest) = scratch.split_at_mut(self.ext);
+        // Even extension: [x_0, ..., x_{n-1}, x_{n-2}, ..., x_1].
+        for j in 0..n {
+            line[j] = Complex::new(data[j], T::zero());
+        }
+        for j in 1..n - 1 {
+            line[self.ext - j] = Complex::new(data[j], T::zero());
+        }
+        self.inner.execute(line, rest);
+        for k in 0..n {
+            data[k] = line[k].re;
+        }
+    }
+
+    /// Batched execute over back-to-back lines.
+    pub fn execute_batch(&self, data: &mut [T], scratch: &mut [Complex<T>]) {
+        debug_assert_eq!(data.len() % self.n, 0);
+        for line in data.chunks_exact_mut(self.n) {
+            self.execute(line, scratch);
+        }
+    }
+
+    /// Batched DCT-I over *complex* lines: the transform is applied to the
+    /// real and imaginary planes independently (DCT is a real-linear map),
+    /// which is how P3DFFT's Chebyshev third-dimension option acts on the
+    /// already-complex Fourier coefficients. `real_scratch.len() >= n`.
+    pub fn execute_complex_batch(
+        &self,
+        data: &mut [Complex<T>],
+        real_scratch: &mut [T],
+        scratch: &mut [Complex<T>],
+    ) {
+        debug_assert_eq!(data.len() % self.n, 0);
+        debug_assert!(real_scratch.len() >= self.n);
+        let tmp = &mut real_scratch[..self.n];
+        for line in data.chunks_exact_mut(self.n) {
+            for (t, c) in tmp.iter_mut().zip(line.iter()) {
+                *t = c.re;
+            }
+            self.execute(tmp, scratch);
+            for (c, t) in line.iter_mut().zip(tmp.iter()) {
+                c.re = *t;
+            }
+            for (t, c) in tmp.iter_mut().zip(line.iter()) {
+                *t = c.im;
+            }
+            self.execute(tmp, scratch);
+            for (c, t) in line.iter_mut().zip(tmp.iter()) {
+                c.im = *t;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    fn naive_dct1(x: &[f64]) -> Vec<f64> {
+        let n = x.len();
+        (0..n)
+            .map(|k| {
+                let mut acc = x[0] + if k % 2 == 0 { x[n - 1] } else { -x[n - 1] };
+                for j in 1..n - 1 {
+                    acc += 2.0 * x[j] * (std::f64::consts::PI * (j * k) as f64 / (n - 1) as f64).cos();
+                }
+                acc
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_naive_various_lengths() {
+        for n in [3usize, 4, 5, 9, 17, 33, 65, 100] {
+            let mut rng = SplitMix64::new(n as u64);
+            let x: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+            let plan = Dct1Plan::<f64>::new(n);
+            let mut data = x.clone();
+            let mut scratch = vec![Complex::zero(); plan.scratch_len()];
+            plan.execute(&mut data, &mut scratch);
+            let expect = naive_dct1(&x);
+            for (g, e) in data.iter().zip(&expect) {
+                assert!((g - e).abs() < 1e-9 * n as f64, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn involution_up_to_2n_minus_2() {
+        let n = 17;
+        let mut rng = SplitMix64::new(2);
+        let x: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+        let plan = Dct1Plan::<f64>::new(n);
+        let mut data = x.clone();
+        let mut scratch = vec![Complex::zero(); plan.scratch_len()];
+        plan.execute(&mut data, &mut scratch);
+        plan.execute(&mut data, &mut scratch);
+        let norm = 2.0 * (n as f64 - 1.0);
+        for (g, e) in data.iter().zip(&x) {
+            assert!((g / norm - e).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn n2_degenerate_case() {
+        let plan = Dct1Plan::<f64>::new(2);
+        let mut data = vec![3.0, 1.0];
+        let mut scratch = vec![Complex::zero(); plan.scratch_len()];
+        plan.execute(&mut data, &mut scratch);
+        assert_eq!(data, vec![4.0, 2.0]);
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let n = 9;
+        let batch = 3;
+        let mut rng = SplitMix64::new(8);
+        let flat: Vec<f64> = (0..batch * n).map(|_| rng.next_normal()).collect();
+        let plan = Dct1Plan::<f64>::new(n);
+        let mut b = flat.clone();
+        let mut scratch = vec![Complex::zero(); plan.scratch_len()];
+        plan.execute_batch(&mut b, &mut scratch);
+        for i in 0..batch {
+            let mut single = flat[i * n..(i + 1) * n].to_vec();
+            plan.execute(&mut single, &mut scratch);
+            assert_eq!(&b[i * n..(i + 1) * n], &single[..]);
+        }
+    }
+
+    #[test]
+    fn constant_input_concentrates_in_k0() {
+        let n = 9;
+        let plan = Dct1Plan::<f64>::new(n);
+        let mut data = vec![1.0; n];
+        let mut scratch = vec![Complex::zero(); plan.scratch_len()];
+        plan.execute(&mut data, &mut scratch);
+        assert!((data[0] - 2.0 * (n as f64 - 1.0)).abs() < 1e-10);
+        for v in &data[1..] {
+            assert!(v.abs() < 1e-10);
+        }
+    }
+}

@@ -1,0 +1,192 @@
+//! DST-I (sine transform) — the other half of the paper's "sine/cosine
+//! (Chebyshev) transforms" third-dimension option, natural for homogeneous
+//! Dirichlet walls (field vanishes at both boundaries).
+//!
+//! Convention (scipy `dst(type=1)` unnormalised):
+//!
+//!   Y_k = 2 · Σ_{j=0..N-1} x_j sin(π (j+1)(k+1) / (N+1))
+//!
+//! Implemented via the odd extension of length L = 2(N+1): place x at
+//! indices 1..N and -x reversed at N+2..2N+1; then Y_k = -Im FFT_L(e)_{k+1}.
+//! DST-I is its own inverse up to the factor 2(N+1).
+
+use super::complex::{Complex, Real};
+use super::plan::{C2cPlan, Direction};
+
+/// Plan for a batched DST-I of length n (n >= 1).
+#[derive(Debug, Clone)]
+pub struct Dst1Plan<T: Real> {
+    n: usize,
+    ext: usize,
+    inner: C2cPlan<T>,
+}
+
+impl<T: Real> Dst1Plan<T> {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "dst-i length must be >= 1");
+        let ext = 2 * (n + 1);
+        Dst1Plan { n, ext, inner: C2cPlan::new(ext, Direction::Forward) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Scratch requirement in `Complex<T>` elements.
+    pub fn scratch_len(&self) -> usize {
+        self.ext + self.inner.scratch_len()
+    }
+
+    /// Transform one line in place (`data.len() == n`).
+    pub fn execute(&self, data: &mut [T], scratch: &mut [Complex<T>]) {
+        let n = self.n;
+        debug_assert_eq!(data.len(), n);
+        let (line, rest) = scratch.split_at_mut(self.ext);
+        // Odd extension: [0, x_0..x_{n-1}, 0, -x_{n-1}..-x_0].
+        line[0] = Complex::zero();
+        for j in 0..n {
+            line[j + 1] = Complex::new(data[j], T::zero());
+        }
+        line[n + 1] = Complex::zero();
+        for j in 0..n {
+            line[self.ext - 1 - j] = Complex::new(-data[j], T::zero());
+        }
+        self.inner.execute(line, rest);
+        for k in 0..n {
+            data[k] = -line[k + 1].im;
+        }
+    }
+
+    /// Batched execute over back-to-back lines.
+    pub fn execute_batch(&self, data: &mut [T], scratch: &mut [Complex<T>]) {
+        debug_assert_eq!(data.len() % self.n, 0);
+        for line in data.chunks_exact_mut(self.n) {
+            self.execute(line, scratch);
+        }
+    }
+
+    /// Batched DST-I over *complex* lines (re and im independently) — the
+    /// shape used on Z-pencil Fourier coefficients.
+    pub fn execute_complex_batch(
+        &self,
+        data: &mut [Complex<T>],
+        real_scratch: &mut [T],
+        scratch: &mut [Complex<T>],
+    ) {
+        debug_assert_eq!(data.len() % self.n, 0);
+        debug_assert!(real_scratch.len() >= self.n);
+        let tmp = &mut real_scratch[..self.n];
+        for line in data.chunks_exact_mut(self.n) {
+            for (t, c) in tmp.iter_mut().zip(line.iter()) {
+                *t = c.re;
+            }
+            self.execute(tmp, scratch);
+            for (c, t) in line.iter_mut().zip(tmp.iter()) {
+                c.re = *t;
+            }
+            for (t, c) in tmp.iter_mut().zip(line.iter()) {
+                *t = c.im;
+            }
+            self.execute(tmp, scratch);
+            for (c, t) in line.iter_mut().zip(tmp.iter()) {
+                c.im = *t;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    fn naive_dst1(x: &[f64]) -> Vec<f64> {
+        let n = x.len();
+        (0..n)
+            .map(|k| {
+                let mut acc = 0.0;
+                for (j, &v) in x.iter().enumerate() {
+                    acc += 2.0
+                        * v
+                        * (std::f64::consts::PI * ((j + 1) * (k + 1)) as f64 / (n + 1) as f64)
+                            .sin();
+                }
+                acc
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_naive_various_lengths() {
+        for n in [1usize, 2, 3, 4, 7, 8, 15, 16, 31, 33, 64, 100] {
+            let mut rng = SplitMix64::new(n as u64 + 3);
+            let x: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+            let plan = Dst1Plan::<f64>::new(n);
+            let mut data = x.clone();
+            let mut scratch = vec![Complex::zero(); plan.scratch_len()];
+            plan.execute(&mut data, &mut scratch);
+            let expect = naive_dst1(&x);
+            for (g, e) in data.iter().zip(&expect) {
+                assert!((g - e).abs() < 1e-9 * (n as f64 + 1.0), "n={n}: {g} vs {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn involution_up_to_2n_plus_2() {
+        let n = 23;
+        let mut rng = SplitMix64::new(17);
+        let x: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+        let plan = Dst1Plan::<f64>::new(n);
+        let mut data = x.clone();
+        let mut scratch = vec![Complex::zero(); plan.scratch_len()];
+        plan.execute(&mut data, &mut scratch);
+        plan.execute(&mut data, &mut scratch);
+        let norm = 2.0 * (n as f64 + 1.0);
+        for (g, e) in data.iter().zip(&x) {
+            assert!((g / norm - e).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn single_sine_mode_is_sparse() {
+        // x_j = sin(pi (j+1) m / (N+1)) transforms to a delta at k = m-1.
+        let n = 15;
+        let m = 4;
+        let x: Vec<f64> = (0..n)
+            .map(|j| (std::f64::consts::PI * ((j + 1) * m) as f64 / (n + 1) as f64).sin())
+            .collect();
+        let plan = Dst1Plan::<f64>::new(n);
+        let mut data = x;
+        let mut scratch = vec![Complex::zero(); plan.scratch_len()];
+        plan.execute(&mut data, &mut scratch);
+        for (k, v) in data.iter().enumerate() {
+            let expect = if k == m - 1 { (n + 1) as f64 } else { 0.0 };
+            assert!((v - expect).abs() < 1e-9, "k={k}: {v}");
+        }
+    }
+
+    #[test]
+    fn complex_batch_transforms_planes_independently() {
+        let n = 9;
+        let mut rng = SplitMix64::new(5);
+        let re: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+        let im: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+        let mut line: Vec<Complex<f64>> =
+            re.iter().zip(&im).map(|(&r, &i)| Complex::new(r, i)).collect();
+        let plan = Dst1Plan::<f64>::new(n);
+        let mut rs = vec![0.0; n];
+        let mut scratch = vec![Complex::zero(); plan.scratch_len()];
+        plan.execute_complex_batch(&mut line, &mut rs, &mut scratch);
+        let er = naive_dst1(&re);
+        let ei = naive_dst1(&im);
+        for k in 0..n {
+            assert!((line[k].re - er[k]).abs() < 1e-9);
+            assert!((line[k].im - ei[k]).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! Integer factorisation helpers used to pick the FFT algorithm per size.
+
+/// True if `n` is a power of two (n >= 1).
+#[inline]
+pub fn is_pow2(n: usize) -> bool {
+    n >= 1 && n & (n - 1) == 0
+}
+
+/// Prime factorisation in ascending order, e.g. 360 -> [2,2,2,3,3,5].
+pub fn factorize(mut n: usize) -> Vec<usize> {
+    assert!(n >= 1);
+    let mut out = Vec::new();
+    for p in [2usize, 3, 5, 7] {
+        while n % p == 0 {
+            out.push(p);
+            n /= p;
+        }
+    }
+    let mut p = 11;
+    while p * p <= n {
+        while n % p == 0 {
+            out.push(p);
+            n /= p;
+        }
+        p += 2;
+    }
+    if n > 1 {
+        out.push(n);
+    }
+    out
+}
+
+/// Largest prime factor of n (1 for n == 1).
+pub fn largest_prime_factor(n: usize) -> usize {
+    factorize(n).last().copied().unwrap_or(1)
+}
+
+/// "Smooth enough" for direct mixed-radix: all prime factors <= 13.
+/// Larger primes go through Bluestein, mirroring FFTW's strategy boundary.
+pub fn is_smooth(n: usize) -> bool {
+    largest_prime_factor(n) <= 13
+}
+
+/// Next power of two >= n.
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2_detection() {
+        assert!(is_pow2(1) && is_pow2(2) && is_pow2(1024));
+        assert!(!is_pow2(0) && !is_pow2(3) && !is_pow2(1000));
+    }
+
+    #[test]
+    fn factorize_known_values() {
+        assert_eq!(factorize(1), Vec::<usize>::new());
+        assert_eq!(factorize(2), vec![2]);
+        assert_eq!(factorize(360), vec![2, 2, 2, 3, 3, 5]);
+        assert_eq!(factorize(97), vec![97]); // prime
+        assert_eq!(factorize(121), vec![11, 11]);
+    }
+
+    #[test]
+    fn factorize_product_reconstructs() {
+        for n in 1..=2000usize {
+            let p: usize = factorize(n).iter().product();
+            assert_eq!(p.max(1), n, "n={n}");
+        }
+    }
+
+    #[test]
+    fn smoothness_boundary() {
+        assert!(is_smooth(1024));
+        assert!(is_smooth(360));
+        assert!(is_smooth(13 * 13));
+        assert!(!is_smooth(97));
+        assert!(!is_smooth(2 * 101));
+    }
+
+    #[test]
+    fn next_pow2_values() {
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(17), 32);
+        assert_eq!(next_pow2(64), 64);
+    }
+}

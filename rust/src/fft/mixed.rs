@@ -1,0 +1,184 @@
+//! Recursive mixed-radix Cooley-Tukey for smooth (small-prime-factor)
+//! sizes — the path behind the paper's "any grid dimensions (i.e. not
+//! power of two)" feature. Sizes with a prime factor > 13 fall through to
+//! Bluestein instead (see `plan.rs`).
+//!
+//! Decimation in time over the factor list: for n = r·m, do `r` sub-FFTs
+//! of size `m` on stride-`r` slices, then combine with an `r`-point DFT
+//! across the blocks, twiddled by `w_n^{jk}`. Radix-2/3/4 butterflies are
+//! specialised; other radixes use the generic loop (r <= 13 keeps the
+//! per-point temp on the stack).
+
+use super::complex::{Complex, Real};
+
+/// Maximum radix the generic butterfly supports (stack temp size).
+pub const MAX_RADIX: usize = 13;
+
+/// Full twiddle table for the top-level size: `w[k] = exp(sign·2πi·k/n)`,
+/// k < n. Sub-levels index it with stride `n / sub_n`.
+pub fn full_twiddle_table<T: Real>(n: usize, inverse: bool) -> Vec<Complex<T>> {
+    let sign = if inverse { T::one() } else { -T::one() };
+    let two_pi = T::PI() + T::PI();
+    let nf = T::from_usize(n).unwrap();
+    (0..n)
+        .map(|k| Complex::cis(sign * two_pi * T::from_usize(k).unwrap() / nf))
+        .collect()
+}
+
+/// Mixed-radix FFT: transforms `src` (stride-1, length n) into `dst`.
+/// `factors` is the ascending prime factorisation of n; `tw` the table
+/// from [`full_twiddle_table`] for this n and direction.
+pub fn mixed_radix_fft<T: Real>(
+    src: &[Complex<T>],
+    dst: &mut [Complex<T>],
+    factors: &[usize],
+    tw: &[Complex<T>],
+) {
+    let n = src.len();
+    debug_assert_eq!(dst.len(), n);
+    debug_assert_eq!(factors.iter().product::<usize>().max(1), n);
+    rec(src, 1, dst, n, factors, tw, tw.len());
+}
+
+/// Recursive worker: FFT of `n` elements read from `src` at `stride`,
+/// written contiguously to `dst[..n]`. `top_n` is the size the twiddle
+/// table was built for.
+fn rec<T: Real>(
+    src: &[Complex<T>],
+    stride: usize,
+    dst: &mut [Complex<T>],
+    n: usize,
+    factors: &[usize],
+    tw: &[Complex<T>],
+    top_n: usize,
+) {
+    if n == 1 {
+        dst[0] = src[0];
+        return;
+    }
+    let r = factors[0];
+    let m = n / r;
+
+    // Sub-FFTs: block j transforms elements src[(j + i*r) * stride].
+    for j in 0..r {
+        rec(&src[j * stride..], stride * r, &mut dst[j * m..(j + 1) * m], m, &factors[1..], tw, top_n);
+    }
+
+    // Combine across blocks with an r-point DFT, twiddled.
+    let tsub = top_n / n; // w_n^x == tw[x * tsub]
+    let tr = top_n / r; // w_r^x == tw[x * tr]
+    let mut t = [Complex::<T>::zero(); MAX_RADIX];
+    match r {
+        2 => {
+            for k in 0..m {
+                let a = dst[k];
+                let b = dst[m + k] * tw[k * tsub];
+                dst[k] = a + b;
+                dst[m + k] = a - b;
+            }
+        }
+        3 => {
+            // w_3 and w_3^2 from the table keep direction handling uniform.
+            let w3 = tw[tr];
+            let w3sq = tw[2 * tr];
+            for k in 0..m {
+                let a = dst[k];
+                let b = dst[m + k] * tw[k * tsub];
+                let c = dst[2 * m + k] * tw[2 * k * tsub];
+                dst[k] = a + b + c;
+                dst[m + k] = a + b * w3 + c * w3sq;
+                dst[2 * m + k] = a + b * w3sq + c * w3;
+            }
+        }
+        4 => {
+            // w_4 = ±i depending on direction; read it from the table.
+            let w4 = tw[tr]; // exp(sign·2πi/4) = (0, ±1)
+            for k in 0..m {
+                let a = dst[k];
+                let b = dst[m + k] * tw[k * tsub];
+                let c = dst[2 * m + k] * tw[2 * k * tsub];
+                let d = dst[3 * m + k] * tw[3 * k * tsub];
+                let apc = a + c;
+                let amc = a - c;
+                let bpd = b + d;
+                let bmd = (b - d) * w4;
+                dst[k] = apc + bpd;
+                dst[m + k] = amc + bmd;
+                dst[2 * m + k] = apc - bpd;
+                dst[3 * m + k] = amc - bmd;
+            }
+        }
+        _ => {
+            debug_assert!(r <= MAX_RADIX);
+            for k in 0..m {
+                for j in 0..r {
+                    t[j] = dst[j * m + k] * tw[(j * k) * tsub];
+                }
+                for q in 0..r {
+                    let mut acc = t[0];
+                    for j in 1..r {
+                        acc += t[j] * tw[(j * q % r) * tr];
+                    }
+                    dst[q * m + k] = acc;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::{factorize, naive_dft};
+
+    fn run(n: usize, inverse: bool) {
+        let mut rng = crate::util::SplitMix64::new(n as u64 + 1);
+        let x: Vec<Complex<f64>> = (0..n)
+            .map(|_| Complex::new(rng.next_normal(), rng.next_normal()))
+            .collect();
+        let expect = naive_dft(&x, inverse);
+        let mut dst = vec![Complex::zero(); n];
+        let tw = full_twiddle_table(n, inverse);
+        mixed_radix_fft(&x, &mut dst, &factorize(n), &tw);
+        for (i, (g, e)) in dst.iter().zip(&expect).enumerate() {
+            assert!(
+                (g.re - e.re).abs() < 1e-8 * n as f64 && (g.im - e.im).abs() < 1e-8 * n as f64,
+                "n={n} inv={inverse} idx={i}: got {g}, expect {e}"
+            );
+        }
+    }
+
+    #[test]
+    fn matches_naive_smooth_sizes() {
+        for n in [1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 12, 15, 20, 24, 30, 36, 48, 60, 72, 100, 120, 144, 180, 210] {
+            run(n, false);
+            run(n, true);
+        }
+    }
+
+    #[test]
+    fn matches_naive_radix_11_13() {
+        for n in [11, 13, 22, 26, 11 * 13, 121] {
+            run(n, false);
+            run(n, true);
+        }
+    }
+
+    #[test]
+    fn pow2_agreement_with_stockham() {
+        use crate::fft::stockham::{stockham_radix2, twiddle_table};
+        let n = 128;
+        let mut rng = crate::util::SplitMix64::new(5);
+        let x: Vec<Complex<f64>> = (0..n)
+            .map(|_| Complex::new(rng.next_normal(), rng.next_normal()))
+            .collect();
+        let mut a = x.clone();
+        let mut scratch = vec![Complex::zero(); n];
+        stockham_radix2(&mut a, &mut scratch, &twiddle_table(n, false));
+        let mut b = vec![Complex::zero(); n];
+        mixed_radix_fft(&x, &mut b, &factorize(n), &full_twiddle_table(n, false));
+        for (u, v) in a.iter().zip(&b) {
+            assert!((u.re - v.re).abs() < 1e-9 && (u.im - v.im).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! Serial FFT substrate — the stand-in for FFTW/ESSL.
+//!
+//! The paper treats the per-task 1D FFT as a black box provided by "an
+//! established FFT library of user's choice (currently FFTW or ESSL)"; we
+//! build that box ourselves:
+//!
+//! * [`stockham`] — iterative Stockham autosort radix-2 (no bit-reversal
+//!   pass), the fast path for power-of-two sizes;
+//! * [`mixed`] — recursive mixed-radix Cooley-Tukey for sizes whose factors
+//!   are small (2, 3, 4, 5, 7, ...), covering the paper's "any grid
+//!   dimensions" claim;
+//! * [`bluestein`] — chirp-z fallback so *every* length, prime or not, is
+//!   supported in O(n log n);
+//! * [`r2c`] — real-to-complex / complex-to-real transforms with the
+//!   half-complex packing of Table 1 (`(Nx+2)/2` complex outputs);
+//! * [`dct`] — DCT-I (Chebyshev) for the wall-bounded third dimension;
+//! * [`plan`] — FFTW-style plan objects (precomputed twiddles, scratch
+//!   sizing, batch execution over stride-1 lines, plus a strided execute
+//!   for the non-STRIDE1 path) and a process-wide plan cache.
+//!
+//! Conventions match the L1 Pallas kernels bit-for-bit: forward DFT uses
+//! `exp(-2πi jk/n)`, inverse is **unnormalised** (the coordinator applies
+//! the single `1/(Nx·Ny·Nz)` factor at the end of a backward transform).
+
+pub mod bluestein;
+pub mod complex;
+pub mod dct;
+pub mod dst;
+pub mod factor;
+pub mod mixed;
+pub mod plan;
+pub mod r2c;
+pub mod stockham;
+
+pub use complex::{Complex, Real};
+pub use dct::Dct1Plan;
+pub use dst::Dst1Plan;
+pub use factor::{factorize, is_pow2};
+pub use plan::{C2cPlan, Direction, PlanCache};
+pub use r2c::{C2rPlan, R2cPlan};
+
+/// Naive O(n^2) DFT — the in-crate oracle every fast path is tested against.
+pub fn naive_dft<T: Real>(input: &[Complex<T>], inverse: bool) -> Vec<Complex<T>> {
+    let n = input.len();
+    let sign = if inverse { T::one() } else { -T::one() };
+    let two_pi = T::PI() + T::PI();
+    let nf = T::from_usize(n).unwrap();
+    (0..n)
+        .map(|k| {
+            let mut acc = Complex::zero();
+            for (j, &x) in input.iter().enumerate() {
+                let ang = sign * two_pi * T::from_usize(j * k % n).unwrap() / nf;
+                acc = acc + x * Complex::new(ang.cos(), ang.sin());
+            }
+            acc
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn naive_dft_of_impulse_is_flat() {
+        let mut x = vec![Complex::<f64>::zero(); 8];
+        x[0] = Complex::new(1.0, 0.0);
+        let y = naive_dft(&x, false);
+        for v in y {
+            assert!((v.re - 1.0).abs() < 1e-12 && v.im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn naive_dft_matches_analytic_single_mode() {
+        // x_j = exp(2 pi i * 3 j / 8) -> delta at k=3 with amplitude 8.
+        let n = 8;
+        let x: Vec<Complex<f64>> = (0..n)
+            .map(|j| {
+                let ang = 2.0 * std::f64::consts::PI * 3.0 * j as f64 / n as f64;
+                Complex::new(ang.cos(), ang.sin())
+            })
+            .collect();
+        let y = naive_dft(&x, false);
+        for (k, v) in y.iter().enumerate() {
+            let expect = if k == 3 { 8.0 } else { 0.0 };
+            assert!((v.re - expect).abs() < 1e-10, "k={k} re={}", v.re);
+            assert!(v.im.abs() < 1e-10);
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! FFTW-style plan objects: algorithm selection, precomputed twiddles,
+//! scratch sizing, batched and strided execution, and a process-wide cache
+//! so repeated transforms of the same (n, direction) share tables — the
+//! same role FFTW's `fftw_plan` + wisdom plays in the original P3DFFT.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::bluestein::BluesteinPlan;
+use super::complex::{Complex, Real};
+use super::factor::{factorize, is_pow2, is_smooth};
+use super::mixed::{full_twiddle_table, mixed_radix_fft};
+use super::stockham::{stockham_radix2, twiddle_table};
+
+/// Transform direction. Both directions are unnormalised.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Direction {
+    Forward,
+    Inverse,
+}
+
+impl Direction {
+    pub fn is_inverse(self) -> bool {
+        matches!(self, Direction::Inverse)
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Algo<T: Real> {
+    /// Stockham radix-2; twiddle table of n/2.
+    Pow2 { tw: Vec<Complex<T>> },
+    /// Recursive mixed radix; full table of n.
+    Mixed { factors: Vec<usize>, tw: Vec<Complex<T>> },
+    /// Chirp-z for sizes with large prime factors.
+    Bluestein(Box<BluesteinPlan<T>>),
+}
+
+/// A 1D complex-to-complex FFT plan for a fixed (n, direction).
+///
+/// Plans are immutable and `Sync`; execution takes caller-owned scratch so
+/// one plan can serve many rank threads concurrently (the coordinator owns
+/// one scratch arena per rank).
+#[derive(Debug, Clone)]
+pub struct C2cPlan<T: Real> {
+    n: usize,
+    dir: Direction,
+    algo: Algo<T>,
+}
+
+impl<T: Real> C2cPlan<T> {
+    pub fn new(n: usize, dir: Direction) -> Self {
+        assert!(n >= 1, "transform length must be >= 1");
+        let inverse = dir.is_inverse();
+        let algo = if is_pow2(n) {
+            Algo::Pow2 { tw: twiddle_table(n, inverse) }
+        } else if is_smooth(n) {
+            Algo::Mixed { factors: factorize(n), tw: full_twiddle_table(n, inverse) }
+        } else {
+            Algo::Bluestein(Box::new(BluesteinPlan::new(n, inverse)))
+        };
+        C2cPlan { n, dir, algo }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    pub fn direction(&self) -> Direction {
+        self.dir
+    }
+
+    /// Scratch (in `Complex<T>` elements) required by [`Self::execute`].
+    pub fn scratch_len(&self) -> usize {
+        match &self.algo {
+            Algo::Pow2 { .. } => self.n,
+            Algo::Mixed { .. } => self.n,
+            Algo::Bluestein(b) => b.scratch_len(),
+        }
+    }
+
+    /// Transform one stride-1 line of length n in place.
+    pub fn execute(&self, data: &mut [Complex<T>], scratch: &mut [Complex<T>]) {
+        debug_assert_eq!(data.len(), self.n);
+        match &self.algo {
+            Algo::Pow2 { tw } => stockham_radix2(data, scratch, tw),
+            Algo::Mixed { factors, tw } => {
+                let dst = &mut scratch[..self.n];
+                mixed_radix_fft(data, dst, factors, tw);
+                data.copy_from_slice(dst);
+            }
+            Algo::Bluestein(b) => b.execute(data, scratch),
+        }
+    }
+
+    /// Transform `batch` contiguous stride-1 lines laid out back to back
+    /// (`data.len() == batch * n`) — the shape every pencil stage uses.
+    pub fn execute_batch(&self, data: &mut [Complex<T>], scratch: &mut [Complex<T>]) {
+        debug_assert_eq!(data.len() % self.n, 0);
+        for line in data.chunks_exact_mut(self.n) {
+            self.execute(line, scratch);
+        }
+    }
+
+    /// Transform lines that are *not* unit stride: line `b` occupies
+    /// elements `base + b + k*stride` for `k < n` (column-major lines).
+    /// This is the "let the FFT library handle the strides" alternative the
+    /// paper contrasts with STRIDE1; we gather into scratch, transform, and
+    /// scatter back. `scratch.len() >= n + self.scratch_len()`.
+    pub fn execute_strided(
+        &self,
+        data: &mut [Complex<T>],
+        count: usize,
+        stride: usize,
+        scratch: &mut [Complex<T>],
+    ) {
+        debug_assert!(scratch.len() >= self.n + self.scratch_len());
+        let (line, rest) = scratch.split_at_mut(self.n);
+        for b in 0..count {
+            for k in 0..self.n {
+                line[k] = data[b + k * stride];
+            }
+            self.execute(line, rest);
+            for k in 0..self.n {
+                data[b + k * stride] = line[k];
+            }
+        }
+    }
+}
+
+/// Key for the process-wide plan cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct PlanKey {
+    n: usize,
+    dir: Direction,
+}
+
+/// Process-wide cache of C2C plans, keyed by (n, direction) — FFTW
+/// "wisdom" in miniature. Separate caches per precision.
+pub struct PlanCache<T: Real> {
+    map: Mutex<HashMap<PlanKey, Arc<C2cPlan<T>>>>,
+}
+
+impl<T: Real> PlanCache<T> {
+    fn new() -> Self {
+        PlanCache { map: Mutex::new(HashMap::new()) }
+    }
+
+    /// Get or create the plan for (n, dir).
+    pub fn get(&self, n: usize, dir: Direction) -> Arc<C2cPlan<T>> {
+        let key = PlanKey { n, dir };
+        let mut map = self.map.lock().expect("plan cache poisoned");
+        map.entry(key).or_insert_with(|| Arc::new(C2cPlan::new(n, dir))).clone()
+    }
+
+    /// Number of cached plans (test/diagnostic hook).
+    pub fn len(&self) -> usize {
+        self.map.lock().expect("plan cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+static CACHE_F64: OnceLock<PlanCache<f64>> = OnceLock::new();
+static CACHE_F32: OnceLock<PlanCache<f32>> = OnceLock::new();
+
+/// The global f64 plan cache.
+pub fn cache_f64() -> &'static PlanCache<f64> {
+    CACHE_F64.get_or_init(PlanCache::new)
+}
+
+/// The global f32 plan cache.
+pub fn cache_f32() -> &'static PlanCache<f32> {
+    CACHE_F32.get_or_init(PlanCache::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::naive_dft;
+    use crate::util::SplitMix64;
+
+    fn rand_line(n: usize, seed: u64) -> Vec<Complex<f64>> {
+        let mut rng = SplitMix64::new(seed);
+        (0..n).map(|_| Complex::new(rng.next_normal(), rng.next_normal())).collect()
+    }
+
+    #[test]
+    fn plan_picks_matching_algo_and_is_correct() {
+        // pow2, smooth, bluestein sizes all through the same entry point.
+        for n in [8usize, 12, 97, 60, 128, 34, 250] {
+            let x = rand_line(n, n as u64);
+            let plan = C2cPlan::new(n, Direction::Forward);
+            let mut data = x.clone();
+            let mut scratch = vec![Complex::zero(); plan.scratch_len()];
+            plan.execute(&mut data, &mut scratch);
+            let expect = naive_dft(&x, false);
+            for (g, e) in data.iter().zip(&expect) {
+                assert!((g.re - e.re).abs() < 1e-8 * n as f64, "n={n}");
+                assert!((g.im - e.im).abs() < 1e-8 * n as f64, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_execute_transforms_each_line() {
+        let n = 16;
+        let batch = 5;
+        let plan = C2cPlan::new(n, Direction::Forward);
+        let mut rng = SplitMix64::new(77);
+        let lines: Vec<Vec<Complex<f64>>> =
+            (0..batch).map(|i| rand_line(n, 77 + i as u64)).collect();
+        let mut data: Vec<Complex<f64>> = lines.iter().flatten().copied().collect();
+        let _ = rng.next_u64();
+        let mut scratch = vec![Complex::zero(); plan.scratch_len()];
+        plan.execute_batch(&mut data, &mut scratch);
+        for (i, line) in lines.iter().enumerate() {
+            let expect = naive_dft(line, false);
+            for (k, e) in expect.iter().enumerate() {
+                let g = data[i * n + k];
+                assert!((g.re - e.re).abs() < 1e-9 * n as f64);
+                assert!((g.im - e.im).abs() < 1e-9 * n as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn strided_execute_matches_contiguous() {
+        let n = 8;
+        let count = 3; // 3 interleaved lines: element (b, k) at b + k*count
+        let plan = C2cPlan::new(n, Direction::Forward);
+        let lines: Vec<Vec<Complex<f64>>> = (0..count).map(|i| rand_line(n, i as u64)).collect();
+        let mut data = vec![Complex::zero(); n * count];
+        for (b, line) in lines.iter().enumerate() {
+            for (k, &v) in line.iter().enumerate() {
+                data[b + k * count] = v;
+            }
+        }
+        let mut scratch = vec![Complex::zero(); n + plan.scratch_len()];
+        plan.execute_strided(&mut data, count, count, &mut scratch);
+        for (b, line) in lines.iter().enumerate() {
+            let expect = naive_dft(line, false);
+            for (k, e) in expect.iter().enumerate() {
+                let g = data[b + k * count];
+                assert!((g.re - e.re).abs() < 1e-9 * n as f64);
+                assert!((g.im - e.im).abs() < 1e-9 * n as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn cache_shares_plans() {
+        let cache = PlanCache::<f64>::new();
+        let a = cache.get(64, Direction::Forward);
+        let b = cache.get(64, Direction::Forward);
+        assert!(Arc::ptr_eq(&a, &b));
+        let c = cache.get(64, Direction::Inverse);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn global_caches_exist_per_precision() {
+        let p = cache_f64().get(32, Direction::Forward);
+        assert_eq!(p.len(), 32);
+        let q = cache_f32().get(32, Direction::Forward);
+        assert_eq!(q.len(), 32);
+    }
+}

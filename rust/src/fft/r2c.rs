@@ -1,0 +1,312 @@
+//! Real-to-complex and complex-to-real transforms with the half-complex
+//! packing the paper's Table 1 fixes: an R2C of length `n` produces
+//! `n/2 + 1` complex outputs (`(Nx+2)/2` in the paper's Fortran count);
+//! modes 0 (mean) and n/2 (Nyquist) have zero imaginary part.
+//!
+//! For even `n` the classic half-length trick is used: pack the real line
+//! into a complex line of length n/2, one complex FFT, then an O(n)
+//! untangling pass — this is the reason R2C costs roughly half of a full
+//! C2C, an accounting the paper's FLOP numbers rely on. Odd `n` falls back
+//! to the full complex transform.
+
+use super::complex::{Complex, Real};
+use super::plan::{C2cPlan, Direction};
+
+/// Plan for a batched real-to-complex forward transform of length n.
+#[derive(Debug, Clone)]
+pub struct R2cPlan<T: Real> {
+    n: usize,
+    /// Half-length complex plan (even n) or full-length plan (odd n).
+    inner: C2cPlan<T>,
+    /// Untangling twiddles w_n^k for k <= n/2 (even n only).
+    tw: Vec<Complex<T>>,
+}
+
+impl<T: Real> R2cPlan<T> {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 2, "r2c length must be >= 2");
+        if n % 2 == 0 {
+            let tw = (0..=n / 2)
+                .map(|k| {
+                    let ang = -(T::PI() + T::PI()) * T::from_usize(k).unwrap()
+                        / T::from_usize(n).unwrap();
+                    Complex::cis(ang)
+                })
+                .collect();
+            R2cPlan { n, inner: C2cPlan::new(n / 2, Direction::Forward), tw }
+        } else {
+            R2cPlan { n, inner: C2cPlan::new(n, Direction::Forward), tw: Vec::new() }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Number of packed complex outputs: n/2 + 1.
+    pub fn out_len(&self) -> usize {
+        self.n / 2 + 1
+    }
+
+    /// Scratch requirement in `Complex<T>` elements.
+    pub fn scratch_len(&self) -> usize {
+        // Working line + inner plan scratch.
+        self.n.max(self.inner.len()) + self.inner.scratch_len()
+    }
+
+    /// Transform one real line into `out` (length n/2+1).
+    pub fn execute(&self, input: &[T], out: &mut [Complex<T>], scratch: &mut [Complex<T>]) {
+        let n = self.n;
+        debug_assert_eq!(input.len(), n);
+        debug_assert_eq!(out.len(), self.out_len());
+        if n % 2 == 0 {
+            let half = n / 2;
+            let (z, rest) = scratch.split_at_mut(half.max(1));
+            // Pack pairs into a half-length complex line.
+            for j in 0..half {
+                z[j] = Complex::new(input[2 * j], input[2 * j + 1]);
+            }
+            self.inner.execute(z, rest);
+            // Untangle: E_k even-part spectrum, O_k odd-part spectrum.
+            let halfc = T::from_f64(0.5).unwrap();
+            out[0] = Complex::new(z[0].re + z[0].im, T::zero());
+            out[half] = Complex::new(z[0].re - z[0].im, T::zero());
+            for k in 1..half {
+                let zk = z[k];
+                let zc = z[half - k].conj();
+                let e = (zk + zc).scale(halfc);
+                // O_k = (zk - zc) / (2i) = -i * (zk - zc) / 2.
+                let d = (zk - zc).scale(halfc);
+                let o = Complex::new(d.im, -d.re);
+                out[k] = e + o * self.tw[k];
+            }
+        } else {
+            let (line, rest) = scratch.split_at_mut(n);
+            for j in 0..n {
+                line[j] = Complex::new(input[j], T::zero());
+            }
+            self.inner.execute(line, rest);
+            out.copy_from_slice(&line[..self.out_len()]);
+        }
+    }
+
+    /// Batched execute over `batch` back-to-back real lines.
+    pub fn execute_batch(
+        &self,
+        input: &[T],
+        out: &mut [Complex<T>],
+        scratch: &mut [Complex<T>],
+    ) {
+        let h = self.out_len();
+        debug_assert_eq!(input.len() % self.n, 0);
+        let batch = input.len() / self.n;
+        debug_assert_eq!(out.len(), batch * h);
+        for b in 0..batch {
+            self.execute(&input[b * self.n..(b + 1) * self.n], &mut out[b * h..(b + 1) * h], scratch);
+        }
+    }
+}
+
+/// Plan for the batched complex-to-real inverse (unnormalised: the output
+/// equals `n ·` the mathematical inverse, matching `irfft(y) * n`).
+#[derive(Debug, Clone)]
+pub struct C2rPlan<T: Real> {
+    n: usize,
+    inner: C2cPlan<T>,
+    tw: Vec<Complex<T>>,
+}
+
+impl<T: Real> C2rPlan<T> {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 2, "c2r length must be >= 2");
+        if n % 2 == 0 {
+            let tw = (0..=n / 2)
+                .map(|k| {
+                    let ang = (T::PI() + T::PI()) * T::from_usize(k).unwrap()
+                        / T::from_usize(n).unwrap();
+                    Complex::cis(ang)
+                })
+                .collect();
+            C2rPlan { n, inner: C2cPlan::new(n / 2, Direction::Inverse), tw }
+        } else {
+            C2rPlan { n, inner: C2cPlan::new(n, Direction::Inverse), tw: Vec::new() }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Number of packed complex inputs: n/2 + 1.
+    pub fn in_len(&self) -> usize {
+        self.n / 2 + 1
+    }
+
+    pub fn scratch_len(&self) -> usize {
+        self.n.max(self.inner.len()) + self.inner.scratch_len()
+    }
+
+    /// Transform one half-complex line (length n/2+1) into `out` (length n).
+    pub fn execute(&self, input: &[Complex<T>], out: &mut [T], scratch: &mut [Complex<T>]) {
+        let n = self.n;
+        debug_assert_eq!(input.len(), self.in_len());
+        debug_assert_eq!(out.len(), n);
+        if n % 2 == 0 {
+            let half = n / 2;
+            let (z, rest) = scratch.split_at_mut(half.max(1));
+            // Re-tangle the half spectrum into the packed complex line.
+            // Z_k = E_k + i*O_k with E_k=(X_k+conj(X_{h-k}))/2,
+            // O_k=(X_k-conj(X_{h-k})) * w^{-k} / 2 (w^{-k} comes from tw).
+            let halfc = T::from_f64(0.5).unwrap();
+            for k in 0..half {
+                let xk = input[k];
+                let xc = input[half - k].conj();
+                let e = (xk + xc).scale(halfc);
+                let o = (xk - xc).scale(halfc) * self.tw[k];
+                z[k] = e + o.mul_i();
+            }
+            self.inner.execute(z, rest);
+            // Unpack: x_{2j} = 2*Re z_j, x_{2j+1} = 2*Im z_j (factor 2 makes
+            // the whole transform exactly n * inverse, see module docs).
+            let two = T::from_f64(2.0).unwrap();
+            for j in 0..half {
+                out[2 * j] = two * z[j].re;
+                out[2 * j + 1] = two * z[j].im;
+            }
+        } else {
+            let (line, rest) = scratch.split_at_mut(n);
+            let h = self.in_len();
+            line[..h].copy_from_slice(input);
+            for k in h..n {
+                line[k] = input[n - k].conj();
+            }
+            self.inner.execute(line, rest);
+            for j in 0..n {
+                out[j] = line[j].re;
+            }
+        }
+    }
+
+    /// Batched execute over back-to-back lines.
+    pub fn execute_batch(
+        &self,
+        input: &[Complex<T>],
+        out: &mut [T],
+        scratch: &mut [Complex<T>],
+    ) {
+        let h = self.in_len();
+        debug_assert_eq!(input.len() % h, 0);
+        let batch = input.len() / h;
+        debug_assert_eq!(out.len(), batch * self.n);
+        for b in 0..batch {
+            self.execute(&input[b * h..(b + 1) * h], &mut out[b * self.n..(b + 1) * self.n], scratch);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::naive_dft;
+    use crate::util::SplitMix64;
+
+    fn rand_real(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = SplitMix64::new(seed);
+        (0..n).map(|_| rng.next_normal()).collect()
+    }
+
+    fn naive_rfft(x: &[f64]) -> Vec<Complex<f64>> {
+        let cx: Vec<Complex<f64>> = x.iter().map(|&v| Complex::new(v, 0.0)).collect();
+        let full = naive_dft(&cx, false);
+        full[..x.len() / 2 + 1].to_vec()
+    }
+
+    #[test]
+    fn r2c_matches_naive_even_and_odd() {
+        for n in [2usize, 4, 6, 8, 16, 17, 32, 33, 48, 100, 101] {
+            let x = rand_real(n, n as u64);
+            let plan = R2cPlan::<f64>::new(n);
+            let mut out = vec![Complex::zero(); plan.out_len()];
+            let mut scratch = vec![Complex::zero(); plan.scratch_len()];
+            plan.execute(&x, &mut out, &mut scratch);
+            let expect = naive_rfft(&x);
+            for (k, (g, e)) in out.iter().zip(&expect).enumerate() {
+                assert!(
+                    (g.re - e.re).abs() < 1e-9 * n as f64 && (g.im - e.im).abs() < 1e-9 * n as f64,
+                    "n={n} k={k}: got {g} expect {e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn r2c_dc_and_nyquist_have_zero_imag() {
+        let n = 32;
+        let x = rand_real(n, 5);
+        let plan = R2cPlan::<f64>::new(n);
+        let mut out = vec![Complex::zero(); plan.out_len()];
+        let mut scratch = vec![Complex::zero(); plan.scratch_len()];
+        plan.execute(&x, &mut out, &mut scratch);
+        assert!(out[0].im.abs() < 1e-12);
+        assert!(out[n / 2].im.abs() < 1e-12);
+    }
+
+    #[test]
+    fn c2r_inverts_r2c_times_n() {
+        for n in [2usize, 4, 8, 16, 17, 32, 48, 100, 101] {
+            let x = rand_real(n, 1000 + n as u64);
+            let fwd = R2cPlan::<f64>::new(n);
+            let bwd = C2rPlan::<f64>::new(n);
+            let mut spec = vec![Complex::zero(); fwd.out_len()];
+            let mut s1 = vec![Complex::zero(); fwd.scratch_len()];
+            fwd.execute(&x, &mut spec, &mut s1);
+            let mut back = vec![0.0; n];
+            let mut s2 = vec![Complex::zero(); bwd.scratch_len()];
+            bwd.execute(&spec, &mut back, &mut s2);
+            for (g, e) in back.iter().zip(&x) {
+                assert!((g / n as f64 - e).abs() < 1e-10, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_paths_match_single() {
+        let n = 24;
+        let batch = 4;
+        let flat: Vec<f64> = (0..batch).flat_map(|b| rand_real(n, b as u64)).collect();
+        let plan = R2cPlan::<f64>::new(n);
+        let h = plan.out_len();
+        let mut out = vec![Complex::zero(); batch * h];
+        let mut scratch = vec![Complex::zero(); plan.scratch_len()];
+        plan.execute_batch(&flat, &mut out, &mut scratch);
+        for b in 0..batch {
+            let mut single = vec![Complex::zero(); h];
+            plan.execute(&flat[b * n..(b + 1) * n], &mut single, &mut scratch);
+            assert_eq!(&out[b * h..(b + 1) * h], &single[..]);
+        }
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let n = 64;
+        let x: Vec<f32> = rand_real(n, 3).iter().map(|&v| v as f32).collect();
+        let fwd = R2cPlan::<f32>::new(n);
+        let bwd = C2rPlan::<f32>::new(n);
+        let mut spec = vec![Complex::zero(); fwd.out_len()];
+        let mut s = vec![Complex::zero(); fwd.scratch_len().max(bwd.scratch_len())];
+        fwd.execute(&x, &mut spec, &mut s);
+        let mut back = vec![0.0f32; n];
+        bwd.execute(&spec, &mut back, &mut s);
+        for (g, e) in back.iter().zip(&x) {
+            assert!((g / n as f32 - e).abs() < 1e-4);
+        }
+    }
+}

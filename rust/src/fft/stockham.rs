@@ -1,0 +1,191 @@
+//! Iterative Stockham autosort FFT (radix-2, DIF) — the power-of-two fast
+//! path. Stockham avoids the separate bit-reversal permutation pass by
+//! ping-ponging between the data buffer and a scratch buffer, writing each
+//! stage's outputs already in sorted order; that halves the number of
+//! passes over memory versus Cooley-Tukey + bitrev, which matters because
+//! the 1D FFT is memory-bound at the line lengths the pencils produce.
+
+use super::complex::{Complex, Real};
+
+/// Build the twiddle table `w[j] = exp(sign * 2πi * j / n)` for `j < n/2`.
+pub fn twiddle_table<T: Real>(n: usize, inverse: bool) -> Vec<Complex<T>> {
+    let half = (n / 2).max(1);
+    let sign = if inverse { T::one() } else { -T::one() };
+    let two_pi = T::PI() + T::PI();
+    let nf = T::from_usize(n).unwrap();
+    (0..half)
+        .map(|j| Complex::cis(sign * two_pi * T::from_usize(j).unwrap() / nf))
+        .collect()
+}
+
+/// In-place (via scratch) Stockham FFT of length `n = data.len()`,
+/// using radix-4 stages wherever the remaining sub-length divides by 4
+/// and a single radix-2 stage otherwise (so every power of two works).
+///
+/// Radix-4 halves the number of passes over memory versus pure radix-2
+/// (log₄ vs log₂ stages) — the §Perf optimisation of the serial-FFT hot
+/// path; see EXPERIMENTS.md §Perf for the measured before/after.
+///
+/// `tw` must be the table from [`twiddle_table`] for the same `n` and
+/// direction. `scratch.len() >= n`. The transform is unnormalised in both
+/// directions.
+pub fn stockham_radix2<T: Real>(
+    data: &mut [Complex<T>],
+    scratch: &mut [Complex<T>],
+    tw: &[Complex<T>],
+) {
+    let n = data.len();
+    debug_assert!(n.is_power_of_two());
+    debug_assert!(scratch.len() >= n);
+    debug_assert!(tw.len() >= n / 2);
+    if n <= 1 {
+        return;
+    }
+    // Direction is encoded in the table: w[n/4] = ∓i. n >= 4 has that
+    // entry; n == 2 is a single radix-2 stage and never rotates.
+    let rot = if n >= 4 { tw[n / 4] } else { Complex::zero() };
+    let forward = rot.im <= T::zero();
+
+    let scratch = &mut scratch[..n];
+    let mut len = n; // remaining sub-problem length
+    let mut m = 1; // contiguous run length
+    let mut from_data = true;
+
+    while len > 1 {
+        let (a, b): (&[Complex<T>], &mut [Complex<T>]) = if from_data {
+            (&*data, &mut *scratch)
+        } else {
+            (&*scratch, &mut *data)
+        };
+        if len % 4 == 0 {
+            let l = len / 4;
+            // w_len^j = tw[j * (n / len)], j < l  (exponent < n/4).
+            let tstride = n / len;
+            for j in 0..l {
+                let t1 = tw[j * tstride];
+                let t2 = t1 * t1;
+                let t3 = t1 * t2;
+                let base0 = m * j;
+                let base1 = m * (j + l);
+                let base2 = m * (j + 2 * l);
+                let base3 = m * (j + 3 * l);
+                let out = 4 * m * j;
+                for k in 0..m {
+                    let c0 = a[base0 + k];
+                    let c1 = a[base1 + k];
+                    let c2 = a[base2 + k];
+                    let c3 = a[base3 + k];
+                    let d0 = c0 + c2;
+                    let d1 = c0 - c2;
+                    let d2 = c1 + c3;
+                    let e3 = c1 - c3;
+                    // ∓i rotation per direction.
+                    let d3 = if forward {
+                        Complex::new(e3.im, -e3.re)
+                    } else {
+                        Complex::new(-e3.im, e3.re)
+                    };
+                    b[out + k] = d0 + d2;
+                    b[out + m + k] = (d1 + d3) * t1;
+                    b[out + 2 * m + k] = (d0 - d2) * t2;
+                    b[out + 3 * m + k] = (d1 - d3) * t3;
+                }
+            }
+            len = l;
+            m *= 4;
+        } else {
+            let l = len / 2;
+            let tstride = n / len;
+            for j in 0..l {
+                let w = tw[j * tstride];
+                let base0 = m * j;
+                let base1 = m * (j + l);
+                let out0 = 2 * m * j;
+                for k in 0..m {
+                    let c0 = a[base0 + k];
+                    let c1 = a[base1 + k];
+                    b[out0 + k] = c0 + c1;
+                    b[out0 + m + k] = (c0 - c1) * w;
+                }
+            }
+            len = l;
+            m *= 2;
+        }
+        from_data = !from_data;
+    }
+
+    if !from_data {
+        // Result landed in scratch; copy back.
+        data.copy_from_slice(scratch);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::naive_dft;
+
+    fn run(n: usize, inverse: bool) {
+        let mut rng = crate::util::SplitMix64::new(n as u64);
+        let x: Vec<Complex<f64>> = (0..n)
+            .map(|_| Complex::new(rng.next_normal(), rng.next_normal()))
+            .collect();
+        let expect = naive_dft(&x, inverse);
+        let mut data = x.clone();
+        let mut scratch = vec![Complex::zero(); n];
+        let tw = twiddle_table(n, inverse);
+        stockham_radix2(&mut data, &mut scratch, &tw);
+        for (i, (g, e)) in data.iter().zip(&expect).enumerate() {
+            assert!(
+                (g.re - e.re).abs() < 1e-9 * n as f64 && (g.im - e.im).abs() < 1e-9 * n as f64,
+                "n={n} inv={inverse} idx={i}: got {g}, expect {e}"
+            );
+        }
+    }
+
+    #[test]
+    fn matches_naive_all_pow2_up_to_1024() {
+        for log in 0..=10 {
+            run(1 << log, false);
+            run(1 << log, true);
+        }
+    }
+
+    #[test]
+    fn forward_then_inverse_is_n_times_identity() {
+        let n = 256;
+        let mut rng = crate::util::SplitMix64::new(9);
+        let x: Vec<Complex<f64>> = (0..n)
+            .map(|_| Complex::new(rng.next_normal(), rng.next_normal()))
+            .collect();
+        let mut data = x.clone();
+        let mut scratch = vec![Complex::zero(); n];
+        let twf = twiddle_table(n, false);
+        let twi = twiddle_table(n, true);
+        stockham_radix2(&mut data, &mut scratch, &twf);
+        stockham_radix2(&mut data, &mut scratch, &twi);
+        for (g, e) in data.iter().zip(&x) {
+            assert!((g.re / n as f64 - e.re).abs() < 1e-10);
+            assert!((g.im / n as f64 - e.im).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn f32_precision_path() {
+        let n = 64;
+        let mut rng = crate::util::SplitMix64::new(3);
+        let x: Vec<Complex<f32>> = (0..n)
+            .map(|_| Complex::new(rng.next_normal() as f32, rng.next_normal() as f32))
+            .collect();
+        let x64: Vec<Complex<f64>> = x.iter().map(|c| c.cast()).collect();
+        let expect = naive_dft(&x64, false);
+        let mut data = x;
+        let mut scratch = vec![Complex::zero(); n];
+        let tw = twiddle_table::<f32>(n, false);
+        stockham_radix2(&mut data, &mut scratch, &tw);
+        for (g, e) in data.iter().zip(&expect) {
+            assert!((g.re as f64 - e.re).abs() < 1e-3);
+            assert!((g.im as f64 - e.im).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Contiguous block decomposition of one axis over a set of parts.
+//!
+//! Convention (shared with `python/compile/aot.py::block_sizes`, checked by
+//! an integration test): remainder elements go to the lowest-indexed
+//! parts, so part `i` of `length` over `parts` has size `base + 1` when
+//! `i < length % parts`, else `base`.
+
+use std::ops::Range;
+
+/// Sizes of every block.
+pub fn block_sizes(length: usize, parts: usize) -> Vec<usize> {
+    assert!(parts >= 1, "parts must be >= 1");
+    let base = length / parts;
+    let extra = length % parts;
+    (0..parts).map(|i| if i < extra { base + 1 } else { base }).collect()
+}
+
+/// Size of block `i`.
+pub fn block_size(length: usize, parts: usize, i: usize) -> usize {
+    assert!(i < parts);
+    let base = length / parts;
+    let extra = length % parts;
+    if i < extra {
+        base + 1
+    } else {
+        base
+    }
+}
+
+/// Starting global index of block `i`.
+pub fn block_offset(length: usize, parts: usize, i: usize) -> usize {
+    assert!(i < parts);
+    let base = length / parts;
+    let extra = length % parts;
+    if i < extra {
+        i * (base + 1)
+    } else {
+        extra * (base + 1) + (i - extra) * base
+    }
+}
+
+/// Global index range of block `i`.
+pub fn block_range(length: usize, parts: usize, i: usize) -> Range<usize> {
+    let off = block_offset(length, parts, i);
+    off..off + block_size(length, parts, i)
+}
+
+/// Which block owns global index `g`.
+pub fn owner_of(length: usize, parts: usize, g: usize) -> usize {
+    assert!(g < length);
+    let base = length / parts;
+    let extra = length % parts;
+    let cut = extra * (base + 1);
+    if g < cut {
+        g / (base + 1)
+    } else if base == 0 {
+        // All elements live in the first `extra` blocks.
+        unreachable!("g < cut must hold when base == 0")
+    } else {
+        extra + (g - cut) / base
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_split() {
+        assert_eq!(block_sizes(32, 4), vec![8, 8, 8, 8]);
+        assert_eq!(block_range(32, 4, 2), 16..24);
+    }
+
+    #[test]
+    fn uneven_split_remainder_to_low_ranks() {
+        assert_eq!(block_sizes(17, 4), vec![5, 4, 4, 4]);
+        assert_eq!(block_offset(17, 4, 0), 0);
+        assert_eq!(block_offset(17, 4, 1), 5);
+        assert_eq!(block_offset(17, 4, 3), 13);
+    }
+
+    #[test]
+    fn papers_256_on_24_example() {
+        // "P3DFFT is capable of handling problems with uneven decomposition
+        // among processors, for example 256^3 grid on 24 MPI tasks."
+        let sizes = block_sizes(256, 24);
+        assert_eq!(sizes.iter().sum::<usize>(), 256);
+        assert_eq!(sizes[0], 11);
+        assert_eq!(sizes[23], 10);
+    }
+
+    #[test]
+    fn blocks_partition_the_axis() {
+        for (len, parts) in [(10, 3), (7, 7), (100, 6), (17, 4), (5, 8)] {
+            let mut covered = vec![false; len];
+            for i in 0..parts {
+                for g in block_range(len, parts, i) {
+                    assert!(!covered[g], "overlap at {g}");
+                    covered[g] = true;
+                }
+            }
+            assert!(covered.iter().all(|&c| c), "gap in ({len},{parts})");
+        }
+    }
+
+    #[test]
+    fn owner_inverts_ranges() {
+        for (len, parts) in [(10, 3), (17, 4), (100, 6), (5, 8), (256, 24)] {
+            for i in 0..parts {
+                for g in block_range(len, parts, i) {
+                    assert_eq!(owner_of(len, parts, g), i, "len={len} parts={parts} g={g}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn more_parts_than_elements_gives_empty_tails() {
+        let sizes = block_sizes(3, 5);
+        assert_eq!(sizes, vec![1, 1, 1, 0, 0]);
+    }
+}

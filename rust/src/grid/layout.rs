@@ -1,0 +1,146 @@
+//! Table 1 of the paper, verbatim: local array dimensions (L1, L2, L3)
+//! and logical storage order for each pencil orientation, with and without
+//! STRIDE1. L1 is the fastest-varying (Fortran-first) dimension.
+//!
+//! This module exists to pin the public contract (`get_dims` in original
+//! P3DFFT); the engine's internal layout in [`super::pencil`] is the
+//! STRIDE1 row with the axis order reversed (C convention).
+
+use super::pencil::ProcGrid;
+use crate::grid::decompose::block_size;
+
+/// Logical storage order, Fortran convention (first index fastest).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StorageOrder {
+    Xyz,
+    Yxz,
+    Zyx,
+}
+
+impl StorageOrder {
+    pub fn name(self) -> &'static str {
+        match self {
+            StorageOrder::Xyz => "XYZ",
+            StorageOrder::Yxz => "YXZ",
+            StorageOrder::Zyx => "ZYX",
+        }
+    }
+}
+
+/// Which pencil row of Table 1 to evaluate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Table1Row {
+    XPencil,
+    YPencil,
+    ZPencil,
+}
+
+/// Local dimensions `(L1, L2, L3)` and storage order for rank coordinates
+/// `(r1, r2)` on processor grid `pg`, global grid `(nx, ny, nz)`.
+///
+/// Exactly reproduces Table 1 with uneven divisions resolved by the block
+/// convention of [`crate::grid::decompose`] (the paper's `N/M` entries are
+/// the even case of `block_size`).
+pub fn local_dims_table1(
+    row: Table1Row,
+    stride1: bool,
+    nx: usize,
+    ny: usize,
+    nz: usize,
+    pg: ProcGrid,
+    r1: usize,
+    r2: usize,
+) -> ([usize; 3], StorageOrder) {
+    let h = nx / 2 + 1; // (Nx+2)/2 for even Nx
+    let ny_m1 = block_size(ny, pg.m1, r1);
+    let nz_m2 = block_size(nz, pg.m2, r2);
+    let h_m1 = block_size(h, pg.m1, r1);
+    let ny_m2 = block_size(ny, pg.m2, r2);
+    match (row, stride1) {
+        (Table1Row::XPencil, _) => ([nx, ny_m1, nz_m2], StorageOrder::Xyz),
+        (Table1Row::YPencil, true) => ([ny, h_m1, nz_m2], StorageOrder::Yxz),
+        (Table1Row::ZPencil, true) => ([nz, ny_m2, h_m1], StorageOrder::Zyx),
+        (Table1Row::YPencil, false) => ([h_m1, ny, nz_m2], StorageOrder::Xyz),
+        (Table1Row::ZPencil, false) => ([h_m1, ny_m2, nz], StorageOrder::Xyz),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const NX: usize = 2048;
+    const NY: usize = 2048;
+    const NZ: usize = 2048;
+
+    #[test]
+    fn table1_stride1_even_grid() {
+        // 2048^3 on 32x32: the even case printed in the paper's table.
+        let pg = ProcGrid::new(32, 32);
+        let (d, o) = local_dims_table1(Table1Row::XPencil, true, NX, NY, NZ, pg, 0, 0);
+        assert_eq!(d, [2048, 64, 64]);
+        assert_eq!(o, StorageOrder::Xyz);
+
+        let (d, o) = local_dims_table1(Table1Row::YPencil, true, NX, NY, NZ, pg, 0, 0);
+        // (Nx+2)/(2*M1) = 2050/64 -> block 0 of h=1025 over 32 = 33.
+        assert_eq!(d, [2048, 33, 64]);
+        assert_eq!(o, StorageOrder::Yxz);
+
+        let (d, o) = local_dims_table1(Table1Row::ZPencil, true, NX, NY, NZ, pg, 0, 0);
+        assert_eq!(d, [2048, 64, 33]);
+        assert_eq!(o, StorageOrder::Zyx);
+    }
+
+    #[test]
+    fn table1_nostride1_keeps_xyz_order() {
+        let pg = ProcGrid::new(32, 32);
+        for row in [Table1Row::XPencil, Table1Row::YPencil, Table1Row::ZPencil] {
+            let (_, o) = local_dims_table1(row, false, NX, NY, NZ, pg, 0, 0);
+            assert_eq!(o, StorageOrder::Xyz);
+        }
+        let (d, _) = local_dims_table1(Table1Row::YPencil, false, NX, NY, NZ, pg, 0, 0);
+        assert_eq!(d, [33, 2048, 64]);
+        let (d, _) = local_dims_table1(Table1Row::ZPencil, false, NX, NY, NZ, pg, 0, 0);
+        assert_eq!(d, [33, 64, 2048]);
+    }
+
+    #[test]
+    fn table1_volume_is_conserved_per_orientation() {
+        // For every rank, L1*L2*L3 sums to Nx*Ny*Nz (X) or h*Ny*Nz (Y/Z).
+        let pg = ProcGrid::new(3, 5);
+        let (nx, ny, nz) = (20, 12, 30);
+        let h = nx / 2 + 1;
+        for (row, want) in [
+            (Table1Row::XPencil, nx * ny * nz),
+            (Table1Row::YPencil, h * ny * nz),
+            (Table1Row::ZPencil, h * ny * nz),
+        ] {
+            for stride1 in [true, false] {
+                let mut sum = 0;
+                for r2 in 0..pg.m2 {
+                    for r1 in 0..pg.m1 {
+                        let (d, _) = local_dims_table1(row, stride1, nx, ny, nz, pg, r1, r2);
+                        sum += d[0] * d[1] * d[2];
+                    }
+                }
+                assert_eq!(sum, want, "{row:?} stride1={stride1}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_engine_pencils_reversed() {
+        // Engine dims (outer->inner) are the STRIDE1 Table-1 row reversed.
+        use crate::grid::pencil::Decomp;
+        let d = Decomp::new(32, 48, 64, ProcGrid::new(2, 4)).unwrap();
+        for rank in 0..d.p() {
+            let (r1, r2) = d.pgrid.coords(rank);
+            let (t, _) = local_dims_table1(Table1Row::XPencil, true, 32, 48, 64, d.pgrid, r1, r2);
+            assert_eq!(d.x_pencil(rank).dims, [t[2], t[1], t[0]]);
+            let (t, _) = local_dims_table1(Table1Row::YPencil, true, 32, 48, 64, d.pgrid, r1, r2);
+            assert_eq!(d.y_pencil(rank).dims, [t[2], t[1], t[0]]);
+            let (t, _) = local_dims_table1(Table1Row::ZPencil, true, 32, 48, 64, d.pgrid, r1, r2);
+            assert_eq!(d.z_pencil(rank).dims, [t[2], t[1], t[0]]);
+        }
+    }
+}

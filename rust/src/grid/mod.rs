@@ -1,0 +1,13 @@
+//! Pencil-decomposition geometry — the exact content of the paper's
+//! Table 1: which slab of the global (Nx, Ny, Nz) grid each rank holds in
+//! X-, Y- and Z-pencil orientation, with which local storage order, for
+//! both the STRIDE1 and non-STRIDE1 layouts, including uneven divisions
+//! (e.g. a 256³ grid on 24 tasks).
+
+pub mod decompose;
+pub mod layout;
+pub mod pencil;
+
+pub use decompose::{block_offset, block_range, block_size, block_sizes};
+pub use layout::{StorageOrder, local_dims_table1};
+pub use pencil::{Decomp, Pencil, PencilKind, ProcGrid};

@@ -1,0 +1,309 @@
+//! Pencils and the full decomposition object.
+//!
+//! Rank layout follows the paper's default contiguous placement: the
+//! rank's position within its ROW varies fastest, `rank = r1 + M1 * r2`,
+//! so a ROW sub-communicator (`M1` ranks sharing `r2`) is a contiguous
+//! rank block — the block that lands on one node when `M1 <=` cores/node,
+//! which is exactly the placement argument of §4.2-3 of the paper.
+
+use super::decompose::{block_offset, block_size};
+use crate::util::error::{Error, Result};
+
+/// The virtual 2D processor grid `M1 x M2` (`M1 * M2 = P`).
+/// `1 x P` degenerates to the paper's 1D (slab) decomposition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProcGrid {
+    pub m1: usize,
+    pub m2: usize,
+}
+
+impl ProcGrid {
+    pub fn new(m1: usize, m2: usize) -> Self {
+        assert!(m1 >= 1 && m2 >= 1);
+        ProcGrid { m1, m2 }
+    }
+
+    /// Total task count P.
+    pub fn p(&self) -> usize {
+        self.m1 * self.m2
+    }
+
+    /// (r1, r2) coordinates of a rank; r1 indexes within the ROW.
+    pub fn coords(&self, rank: usize) -> (usize, usize) {
+        assert!(rank < self.p());
+        (rank % self.m1, rank / self.m1)
+    }
+
+    /// Rank at coordinates (r1, r2).
+    pub fn rank(&self, r1: usize, r2: usize) -> usize {
+        assert!(r1 < self.m1 && r2 < self.m2);
+        r1 + self.m1 * r2
+    }
+
+    /// Ranks of the ROW sub-communicator containing `rank` (same r2).
+    pub fn row_ranks(&self, rank: usize) -> Vec<usize> {
+        let (_, r2) = self.coords(rank);
+        (0..self.m1).map(|r1| self.rank(r1, r2)).collect()
+    }
+
+    /// Ranks of the COLUMN sub-communicator containing `rank` (same r1).
+    pub fn col_ranks(&self, rank: usize) -> Vec<usize> {
+        let (r1, _) = self.coords(rank);
+        (0..self.m2).map(|r2| self.rank(r1, r2)).collect()
+    }
+
+    /// All factorisations `m1 * m2 = p` (the aspect-ratio sweep of Fig. 3).
+    pub fn factorizations(p: usize) -> Vec<ProcGrid> {
+        let mut out = Vec::new();
+        for m1 in 1..=p {
+            if p % m1 == 0 {
+                out.push(ProcGrid::new(m1, p / m1));
+            }
+        }
+        out
+    }
+}
+
+/// Pencil orientation: which global axis is local (the transform axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PencilKind {
+    /// X local; Y split by M1, Z split by M2. Real-space input of R2C.
+    X,
+    /// Y local; X(packed) split by M1, Z split by M2.
+    Y,
+    /// Z local; X(packed) split by M1, Y split by M2. Fourier-space output.
+    Z,
+}
+
+/// One rank's local block in a given pencil orientation.
+///
+/// `dims = [d2, d1, d0]` are the local extents ordered outer→inner in
+/// memory (so `d0` is the stride-1 transform axis in STRIDE1 layout), and
+/// `offsets` are the corresponding global starting indices, in the same
+/// axis order as `dims`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Pencil {
+    pub kind: PencilKind,
+    /// Local extents, outer→inner; inner is the transform axis.
+    pub dims: [usize; 3],
+    /// Global offset of this block along each of the `dims` axes.
+    pub offsets: [usize; 3],
+}
+
+impl Pencil {
+    /// Total number of local elements.
+    pub fn len(&self) -> usize {
+        self.dims[0] * self.dims[1] * self.dims[2]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Number of stride-1 lines (batch for the 1D transform stage).
+    pub fn batch(&self) -> usize {
+        self.dims[0] * self.dims[1]
+    }
+
+    /// Length of the stride-1 transform axis.
+    pub fn line_len(&self) -> usize {
+        self.dims[2]
+    }
+}
+
+/// A full decomposition: global grid + processor grid.
+///
+/// `h = nx/2 + 1` is the packed spectral width of the R2C output
+/// (`(Nx+2)/2` in the paper's Fortran-count — identical for even Nx).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Decomp {
+    pub nx: usize,
+    pub ny: usize,
+    pub nz: usize,
+    pub pgrid: ProcGrid,
+}
+
+impl Decomp {
+    /// Validate the paper's Eq. 2 constraints:
+    /// `M1 <= min(Nx/2, Ny)`, `M2 <= min(Ny, Nz)` (so no rank is empty in
+    /// any orientation), plus basic sanity.
+    pub fn new(nx: usize, ny: usize, nz: usize, pgrid: ProcGrid) -> Result<Self> {
+        if nx < 2 || ny < 1 || nz < 1 {
+            return Err(Error::InvalidConfig(format!(
+                "grid {nx}x{ny}x{nz} too small (need nx >= 2, ny/nz >= 1)"
+            )));
+        }
+        let h = nx / 2 + 1;
+        if pgrid.m1 > ny.min(h) {
+            return Err(Error::InvalidConfig(format!(
+                "M1={} exceeds min(Ny={}, (Nx+2)/2={}) — Eq. 2 violated",
+                pgrid.m1, ny, h
+            )));
+        }
+        if pgrid.m2 > ny.min(nz) {
+            return Err(Error::InvalidConfig(format!(
+                "M2={} exceeds min(Ny={}, Nz={}) — Eq. 2 violated",
+                pgrid.m2, ny, nz
+            )));
+        }
+        Ok(Decomp { nx, ny, nz, pgrid })
+    }
+
+    /// Packed spectral width of the X axis after R2C.
+    pub fn h(&self) -> usize {
+        self.nx / 2 + 1
+    }
+
+    /// Total task count.
+    pub fn p(&self) -> usize {
+        self.pgrid.p()
+    }
+
+    /// X-pencil of `rank`: local array [nz/m2][ny/m1][nx], X stride-1.
+    pub fn x_pencil(&self, rank: usize) -> Pencil {
+        let (r1, r2) = self.pgrid.coords(rank);
+        Pencil {
+            kind: PencilKind::X,
+            dims: [
+                block_size(self.nz, self.pgrid.m2, r2),
+                block_size(self.ny, self.pgrid.m1, r1),
+                self.nx,
+            ],
+            offsets: [
+                block_offset(self.nz, self.pgrid.m2, r2),
+                block_offset(self.ny, self.pgrid.m1, r1),
+                0,
+            ],
+        }
+    }
+
+    /// Spectral X-pencil (after the R2C stage): [nz/m2][ny/m1][h].
+    pub fn x_pencil_spec(&self, rank: usize) -> Pencil {
+        let mut p = self.x_pencil(rank);
+        p.dims[2] = self.h();
+        p
+    }
+
+    /// Y-pencil of `rank`: local array [nz/m2][h/m1][ny], Y stride-1.
+    pub fn y_pencil(&self, rank: usize) -> Pencil {
+        let (r1, r2) = self.pgrid.coords(rank);
+        Pencil {
+            kind: PencilKind::Y,
+            dims: [
+                block_size(self.nz, self.pgrid.m2, r2),
+                block_size(self.h(), self.pgrid.m1, r1),
+                self.ny,
+            ],
+            offsets: [
+                block_offset(self.nz, self.pgrid.m2, r2),
+                block_offset(self.h(), self.pgrid.m1, r1),
+                0,
+            ],
+        }
+    }
+
+    /// Z-pencil of `rank`: local array [h/m1][ny/m2][nz], Z stride-1.
+    pub fn z_pencil(&self, rank: usize) -> Pencil {
+        let (r1, r2) = self.pgrid.coords(rank);
+        Pencil {
+            kind: PencilKind::Z,
+            dims: [
+                block_size(self.h(), self.pgrid.m1, r1),
+                block_size(self.ny, self.pgrid.m2, r2),
+                self.nz,
+            ],
+            offsets: [
+                block_offset(self.h(), self.pgrid.m1, r1),
+                block_offset(self.ny, self.pgrid.m2, r2),
+                0,
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn procgrid_coords_roundtrip() {
+        let g = ProcGrid::new(4, 3);
+        for rank in 0..12 {
+            let (r1, r2) = g.coords(rank);
+            assert_eq!(g.rank(r1, r2), rank);
+        }
+    }
+
+    #[test]
+    fn row_ranks_are_contiguous_col_ranks_strided() {
+        let g = ProcGrid::new(4, 3);
+        assert_eq!(g.row_ranks(5), vec![4, 5, 6, 7]);
+        assert_eq!(g.col_ranks(5), vec![1, 5, 9]);
+    }
+
+    #[test]
+    fn factorizations_cover_all_divisors() {
+        let fs = ProcGrid::factorizations(12);
+        assert_eq!(fs.len(), 6); // 1x12, 2x6, 3x4, 4x3, 6x2, 12x1
+        assert!(fs.iter().all(|g| g.p() == 12));
+    }
+
+    #[test]
+    fn one_d_decomposition_is_1_by_p() {
+        let g = ProcGrid::new(1, 8);
+        assert_eq!(g.p(), 8);
+        assert_eq!(g.row_ranks(3), vec![3]); // ROW is trivial: no exchange
+        assert_eq!(g.col_ranks(3), (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn eq2_constraints_enforced() {
+        // M1 > (Nx+2)/2 must fail.
+        assert!(Decomp::new(8, 64, 64, ProcGrid::new(6, 1)).is_err());
+        // M2 > Nz must fail.
+        assert!(Decomp::new(64, 64, 4, ProcGrid::new(1, 8)).is_err());
+        // A legal grid passes.
+        assert!(Decomp::new(64, 64, 64, ProcGrid::new(4, 4)).is_ok());
+    }
+
+    #[test]
+    fn table1_even_dims() {
+        // 32^3 on 2x2: X-pencil [16][16][32], Y-pencil [16][h/2][32] with
+        // h=17 -> rank r1=0 gets 9, r1=1 gets 8; Z-pencil [h/2][16][32].
+        let d = Decomp::new(32, 32, 32, ProcGrid::new(2, 2)).unwrap();
+        let x0 = d.x_pencil(0);
+        assert_eq!(x0.dims, [16, 16, 32]);
+        assert_eq!(x0.batch(), 256);
+        let y0 = d.y_pencil(0);
+        assert_eq!(y0.dims, [16, 9, 32]);
+        let y1 = d.y_pencil(1);
+        assert_eq!(y1.dims, [16, 8, 32]);
+        let z3 = d.z_pencil(3);
+        assert_eq!(z3.dims, [8, 16, 32]);
+    }
+
+    #[test]
+    fn pencil_volumes_cover_global_grid() {
+        // Sum of local X-pencil volumes == Nx*Ny*Nz; spectral orientations
+        // cover h*Ny*Nz. Holds also for uneven decompositions.
+        for (nx, ny, nz, m1, m2) in
+            [(32, 32, 32, 2, 2), (20, 12, 28, 3, 2), (16, 10, 6, 5, 3), (256, 8, 24, 4, 6)]
+        {
+            let d = Decomp::new(nx, ny, nz, ProcGrid::new(m1, m2)).unwrap();
+            let h = d.h();
+            let xs: usize = (0..d.p()).map(|r| d.x_pencil(r).len()).sum();
+            assert_eq!(xs, nx * ny * nz);
+            let ys: usize = (0..d.p()).map(|r| d.y_pencil(r).len()).sum();
+            assert_eq!(ys, h * ny * nz);
+            let zs: usize = (0..d.p()).map(|r| d.z_pencil(r).len()).sum();
+            assert_eq!(zs, h * ny * nz);
+        }
+    }
+
+    #[test]
+    fn offsets_match_block_layout() {
+        let d = Decomp::new(32, 32, 32, ProcGrid::new(2, 2)).unwrap();
+        let y3 = d.y_pencil(3); // r1=1, r2=1
+        assert_eq!(y3.offsets, [16, 9, 0]); // z starts 16, h starts 9 (9+8 split)
+    }
+}

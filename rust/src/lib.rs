@@ -1,0 +1,56 @@
+//! # p3dfft — parallel 3D FFT with 2D pencil decomposition
+//!
+//! A reproduction of *P3DFFT: a framework for parallel computations of
+//! Fourier transforms in three dimensions* (D. Pekurovsky, cs.DC 2019) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's system: pencil decomposition
+//!   ([`grid`]), the two parallel transposes over ROW/COLUMN
+//!   sub-communicators ([`transpose`], [`mpi`]), and the library API
+//!   ([`coordinator`]): R2C/C2R 3D FFT, Chebyshev and empty third-dimension
+//!   transforms, STRIDE1/USEEVEN options, 1D decomposition as the `1×P`
+//!   special case.
+//! * **L2/L1 (python/, build-time only)** — the per-task compute stages as
+//!   JAX functions calling Pallas matmul-DFT kernels, AOT-lowered to HLO
+//!   text in `artifacts/`, loaded and executed from Rust by [`runtime`].
+//! * **Substrates** — a serial FFT library ([`fft`], the FFTW/ESSL
+//!   stand-in), a thread-backed message-passing runtime ([`mpi`], the MPI
+//!   stand-in), and a calibrated machine model ([`netmodel`], the Cray
+//!   XT5 / Ranger stand-in) that prices the same communication schedule at
+//!   paper scale (Eq. 1/3/4 of the paper).
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every table/figure of the paper to a module and bench target.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use p3dfft::coordinator::{PlanSpec, run_on_threads};
+//! use p3dfft::grid::ProcGrid;
+//!
+//! // 64^3 grid on 4 ranks arranged 2x2, double precision.
+//! let spec = PlanSpec::new([64, 64, 64], ProcGrid::new(2, 2)).unwrap();
+//! let report = run_on_threads(&spec, |ctx| {
+//!     let mut x = ctx.make_real_input(|_, _, _| 1.0);
+//!     let mut y = ctx.alloc_output();
+//!     ctx.forward(&mut x, &mut y).unwrap();
+//!     Ok(())
+//! }).unwrap();
+//! # let _ = report;
+//! ```
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod fft;
+pub mod grid;
+pub mod mpi;
+pub mod netmodel;
+pub mod runtime;
+pub mod transpose;
+pub mod util;
+
+pub use coordinator::{PlanSpec, TransformKind};
+pub use fft::Complex;
+pub use grid::ProcGrid;
+pub use util::error::{Error, Result};

@@ -1,0 +1,320 @@
+//! p3dfft launcher — the `test_sine` driver of the paper plus model tools.
+//!
+//! Subcommands:
+//!   run           forward+backward loop with verification and timing
+//!                 (options from --config file and -o key=value overrides)
+//!   sweep         aspect-ratio sweep at fixed P (Fig. 3 protocol)
+//!   model         price a scenario on a preset machine (Eq. 3)
+//!   fit           fit T = a/P + d/P^(2/3) to "P:t" pairs
+//!   artifacts     check the AOT artifact manifest
+//!   info          print plan geometry (Table 1 dims) for a config
+
+use std::process::ExitCode;
+
+use p3dfft::bench::{sine_field, verify_roundtrip, FigureRow, Table};
+use p3dfft::config::{ParsedConfig, RunConfig};
+use p3dfft::coordinator::{run_on_threads, EngineKind, PlanSpec};
+use p3dfft::grid::layout::Table1Row;
+use p3dfft::grid::{local_dims_table1, ProcGrid};
+use p3dfft::netmodel::{fit_strong_scaling, predict, Machine, ModelInput};
+use p3dfft::runtime::StageLibrary;
+use p3dfft::util::timer::Stage;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = if args.is_empty() { &args[..] } else { &args[1..] };
+    let result = match cmd {
+        "run" => cmd_run(rest),
+        "sweep" => cmd_sweep(rest),
+        "model" => cmd_model(rest),
+        "fit" => cmd_fit(rest),
+        "artifacts" => cmd_artifacts(rest),
+        "info" => cmd_info(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n");
+            print_help();
+            Err(anyhow::anyhow!("unknown command"))
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "p3dfft — parallel 3D FFT with 2D pencil decomposition (paper reproduction)\n\
+         \n\
+         USAGE: p3dfft <command> [args]\n\
+         \n\
+         COMMANDS:\n\
+           run   [--config FILE] [-o key=value ...]   forward+backward loop + verify\n\
+           sweep [--config FILE] [--p P]              aspect-ratio sweep (Fig. 3)\n\
+           model [--machine cray_xt5|ranger] [--n N] [--m1 M1] [--m2 M2] [--useeven]\n\
+           fit   P:t [P:t ...]                        fit a/P + d/P^(2/3)\n\
+           artifacts [--dir DIR]                      list/check AOT artifacts\n\
+           info  [--config FILE]                      print Table-1 dims for the plan\n\
+         \n\
+         CONFIG KEYS (file or -o): grid.dims=[nx,ny,nz] grid.pgrid=[m1,m2]\n\
+           iterations=N options.use_even=bool options.stride1=bool\n\
+           options.third=\"fft|cheby|empty\" options.engine=\"native|pjrt\"\n\
+           options.artifacts_dir=\"artifacts\" options.precision=\"f32|f64\""
+    );
+}
+
+/// Parse `--config FILE` and `-o key=value`; `extra_flags` (taking one
+/// value each) are collected instead of rejected.
+fn load_config(
+    args: &[String],
+    extra_flags: &[&str],
+) -> anyhow::Result<(RunConfig, std::collections::HashMap<String, String>)> {
+    let mut rc = RunConfig::default();
+    let mut extras = std::collections::HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = args[i].as_str();
+        if a == "--config" {
+            let path = args.get(i + 1).ok_or_else(|| anyhow::anyhow!("--config needs a path"))?;
+            let parsed = ParsedConfig::load(std::path::Path::new(path))?;
+            rc = RunConfig::from_parsed(&parsed)?;
+            i += 2;
+        } else if a == "-o" {
+            let kv = args.get(i + 1).ok_or_else(|| anyhow::anyhow!("-o needs key=value"))?;
+            let (k, v) =
+                kv.split_once('=').ok_or_else(|| anyhow::anyhow!("-o argument must be key=value"))?;
+            rc.apply_override(k, v)?;
+            i += 2;
+        } else if extra_flags.contains(&a) {
+            let v = args.get(i + 1).ok_or_else(|| anyhow::anyhow!("{a} needs a value"))?;
+            extras.insert(a.to_string(), v.clone());
+            i += 2;
+        } else {
+            return Err(anyhow::anyhow!("unexpected argument {a:?}"));
+        }
+    }
+    Ok((rc, extras))
+}
+
+fn cmd_run(args: &[String]) -> anyhow::Result<()> {
+    let (rc, _) = load_config(args, &[])?;
+    let spec = rc.to_spec()?;
+    println!(
+        "p3dfft run: grid {}x{}x{} on {}x{} = {} ranks, engine={}, third={:?}, \
+         useeven={}, stride1={}, iterations={}",
+        spec.nx,
+        spec.ny,
+        spec.nz,
+        spec.pgrid.m1,
+        spec.pgrid.m2,
+        spec.p(),
+        rc.engine,
+        spec.third,
+        spec.opts.use_even,
+        spec.opts.stride1,
+        rc.iterations
+    );
+    let iterations = rc.iterations;
+    let (nx, ny, nz) = (spec.nx, spec.ny, spec.nz);
+    let report = run_on_threads(&spec, move |ctx| {
+        let input = ctx.make_real_input(sine_field::<f64>(nx, ny, nz));
+        let mut spec_out = ctx.alloc_output();
+        let mut back = ctx.alloc_input();
+        let mut worst = 0.0f64;
+        let t0 = std::time::Instant::now();
+        for _ in 0..iterations {
+            ctx.forward(&input, &mut spec_out)?;
+            ctx.backward(&spec_out, &mut back)?;
+            let norm = ctx.plan.normalization();
+            let err = verify_roundtrip(&input, &back, norm);
+            if err > worst {
+                worst = err;
+            }
+        }
+        let elapsed = t0.elapsed().as_secs_f64() / iterations as f64;
+        let max_t = ctx.max_over_ranks(elapsed);
+        let max_err = ctx.max_over_ranks(worst);
+        Ok((max_t, max_err))
+    })?;
+    let (pair_time, err) = report.per_rank[0];
+    println!("fwd+bwd pair: {pair_time:.6} s (avg over {iterations} iters)");
+    println!("max roundtrip error: {err:.3e}");
+    println!("stage breakdown (max over ranks, total across iters): {}", report.stage_summary());
+    println!(
+        "fabric traffic: {:.2} MiB; exchange share: {:.1}%",
+        report.bytes as f64 / (1024.0 * 1024.0),
+        100.0 * report.timer.get(Stage::Exchange) / report.timer.total().max(1e-12)
+    );
+    if err > 1e-6 {
+        return Err(anyhow::anyhow!("roundtrip verification FAILED (err = {err:.3e})"));
+    }
+    println!("verification OK");
+    Ok(())
+}
+
+fn cmd_sweep(args: &[String]) -> anyhow::Result<()> {
+    let (rc, extras) = load_config(args, &["--p"])?;
+    let p = extras.get("--p").map(|v| v.parse::<usize>()).transpose()?.unwrap_or(4);
+    let mut table = Table::new(format!(
+        "aspect-ratio sweep: {}x{}x{} on P={p} (Fig. 3 protocol, measured)",
+        rc.dims[0], rc.dims[1], rc.dims[2]
+    ));
+    for pg in ProcGrid::factorizations(p) {
+        let spec = match PlanSpec::new(rc.dims, pg) {
+            Ok(s) => s.with_use_even(rc.use_even),
+            Err(_) => continue, // Eq. 2 infeasible geometry
+        };
+        let (nx, ny, nz) = (spec.nx, spec.ny, spec.nz);
+        let report = run_on_threads(&spec, move |ctx| {
+            let input = ctx.make_real_input(sine_field::<f64>(nx, ny, nz));
+            let mut out = ctx.alloc_output();
+            let mut back = ctx.alloc_input();
+            let t0 = std::time::Instant::now();
+            ctx.forward(&input, &mut out)?;
+            ctx.backward(&out, &mut back)?;
+            Ok(ctx.max_over_ranks(t0.elapsed().as_secs_f64()))
+        })?;
+        table.push(
+            FigureRow::new("measured", format!("{}x{}", pg.m1, pg.m2))
+                .col("pair_s", report.per_rank[0])
+                .col("comm_s", report.comm()),
+        );
+    }
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_model(args: &[String]) -> anyhow::Result<()> {
+    let use_even = args.iter().any(|a| a == "--useeven");
+    let args: Vec<String> = args.iter().filter(|a| *a != "--useeven").cloned().collect();
+    let (_, extras) = load_config(&args, &["--machine", "--n", "--m1", "--m2"])?;
+    let machine = match extras.get("--machine").map(String::as_str).unwrap_or("cray_xt5") {
+        "cray_xt5" => Machine::cray_xt5(),
+        "ranger" => Machine::ranger(),
+        other => return Err(anyhow::anyhow!("unknown machine {other:?}")),
+    };
+    let n = extras.get("--n").map(|v| v.parse::<usize>()).transpose()?.unwrap_or(2048);
+    let m1 = extras.get("--m1").map(|v| v.parse::<usize>()).transpose()?.unwrap_or(12);
+    let m2 = extras.get("--m2").map(|v| v.parse::<usize>()).transpose()?.unwrap_or(86);
+    let mut input = ModelInput::cubic(n, m1, m2, machine);
+    input.use_even = use_even;
+    let c = predict(&input);
+    println!(
+        "model[{}]: {}^3 on {}x{} = {} cores, useeven={}",
+        input.machine.name,
+        n,
+        m1,
+        m2,
+        input.p(),
+        use_even
+    );
+    println!(
+        "  compute={:.4}s memory={:.4}s row={:.4}s col={:.4}s latency={:.4}s",
+        c.compute, c.memory, c.row_exchange, c.col_exchange, c.latency
+    );
+    println!(
+        "  one transform: {:.4}s; fwd+bwd pair: {:.4}s; comm share {:.1}%",
+        c.total(),
+        2.0 * c.total(),
+        100.0 * c.comm() / c.total()
+    );
+    Ok(())
+}
+
+fn cmd_fit(args: &[String]) -> anyhow::Result<()> {
+    let mut ps = Vec::new();
+    let mut ts = Vec::new();
+    for a in args {
+        let (p, t) = a
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("fit arguments are P:t pairs, got {a:?}"))?;
+        ps.push(p.trim().parse::<f64>()?);
+        ts.push(t.trim().parse::<f64>()?);
+    }
+    if ps.len() < 2 {
+        return Err(anyhow::anyhow!("need at least two P:t pairs"));
+    }
+    let fit = fit_strong_scaling(&ps, &ts, 2.0 / 3.0);
+    println!("T(P) = {:.6e}/P + {:.6e}/P^(2/3)   (R^2 = {:.6})", fit.a, fit.d, fit.r2);
+    for (&p, &t) in ps.iter().zip(&ts) {
+        println!("  P={p:>8}: measured {t:.6}s  fit {:.6}s", fit.predict(p));
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &[String]) -> anyhow::Result<()> {
+    let (_, extras) = load_config(args, &["--dir"])?;
+    let default_dir = "artifacts".to_string();
+    let dir = extras.get("--dir").unwrap_or(&default_dir);
+    let lib = StageLibrary::open(dir)?;
+    println!("artifacts dir: {dir} (platform: {})", lib.platform());
+    let m = lib.manifest();
+    println!("{} artifacts in manifest:", m.len());
+    use p3dfft::runtime::StageKind;
+    for kind in [
+        StageKind::XR2c,
+        StageKind::C2cFwd,
+        StageKind::C2cBwd,
+        StageKind::XC2r,
+        StageKind::Cheby,
+        StageKind::Fft3dR2c,
+    ] {
+        for id in m.ids_of(kind) {
+            println!("  {} batch={} n={} dtype={}", kind.name(), id.batch, id.n, id.dtype);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &[String]) -> anyhow::Result<()> {
+    let (rc, _) = load_config(args, &[])?;
+    let spec = rc.to_spec()?;
+    println!(
+        "plan: grid {}x{}x{}, pgrid {}x{} (P={}), stride1={}",
+        spec.nx,
+        spec.ny,
+        spec.nz,
+        spec.pgrid.m1,
+        spec.pgrid.m2,
+        spec.p(),
+        spec.opts.stride1
+    );
+    println!("Table 1 local dims (L1 fastest) for rank 0 and last rank:");
+    for rank in [0, spec.p() - 1] {
+        let (r1, r2) = spec.pgrid.coords(rank);
+        for (row, label) in [
+            (Table1Row::XPencil, "X-pencil"),
+            (Table1Row::YPencil, "Y-pencil"),
+            (Table1Row::ZPencil, "Z-pencil"),
+        ] {
+            let (dims, order) = local_dims_table1(
+                row,
+                spec.opts.stride1,
+                spec.nx,
+                spec.ny,
+                spec.nz,
+                spec.pgrid,
+                r1,
+                r2,
+            );
+            println!(
+                "  rank {rank} (r1={r1}, r2={r2}) {label}: {}x{}x{} order {}",
+                dims[0], dims[1], dims[2], order.name()
+            );
+        }
+    }
+    let engine = match spec.opts.engine {
+        EngineKind::Native => "native".to_string(),
+        EngineKind::Pjrt { ref artifacts_dir } => format!("pjrt ({})", artifacts_dir.display()),
+    };
+    println!("engine: {engine}");
+    Ok(())
+}

@@ -1,0 +1,440 @@
+//! Blocking collectives over [`Comm`]: `alltoall`, `alltoallv` (the two
+//! primitives behind the paper's transposes and its USEEVEN option),
+//! plus `allreduce`/`gather`/`bcast` used for metrics and verification.
+//!
+//! The implementation is send-all-then-receive-all with buffered sends, so
+//! it cannot deadlock; the self-block is a straight memcpy, as in any sane
+//! MPI. Receive order is by source rank, which makes results deterministic.
+
+use super::communicator::Comm;
+use super::fabric::Pod;
+
+/// Which all-to-all schedule to run. The paper uses the system
+/// `MPI_Alltoall(v)` (our [`AlltoallAlgo::Buffered`] — post everything,
+/// then drain); `Pairwise` is the classic sendrecv-ring schedule that
+/// point-to-point/overlap implementations build on (§3.3's "equivalent
+/// collection of point-to-point send/receive calls"), kept as a measured
+/// ablation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AlltoallAlgo {
+    #[default]
+    Buffered,
+    Pairwise,
+}
+
+/// Tag namespace for collective operations (point-to-point user tags live
+/// below 2^32; collectives use a counter above it so a collective can
+/// never match a stray user message).
+const COLL_TAG_BASE: u64 = 1 << 40;
+
+impl Comm {
+    /// `MPI_Alltoall`: equal blocks of `block` elements. `send.len()` and
+    /// `recv.len()` must equal `block * size`. Block `j` of `send` goes to
+    /// rank `j`; block `i` of `recv` comes from rank `i`.
+    pub fn alltoall<T: Pod>(&self, send: &[T], recv: &mut [T], block: usize) {
+        self.alltoall_with(send, recv, block, AlltoallAlgo::Buffered)
+    }
+
+    /// [`Self::alltoall`] with an explicit schedule.
+    pub fn alltoall_with<T: Pod>(
+        &self,
+        send: &[T],
+        recv: &mut [T],
+        block: usize,
+        algo: AlltoallAlgo,
+    ) {
+        if algo == AlltoallAlgo::Pairwise {
+            return self.alltoall_pairwise(send, recv, block);
+        }
+        let p = self.size();
+        assert_eq!(send.len(), block * p, "alltoall send size");
+        assert_eq!(recv.len(), block * p, "alltoall recv size");
+        let me = self.rank();
+        let tag = COLL_TAG_BASE + 1;
+        // Self block first (pure memcpy, no fabric traffic).
+        recv[me * block..(me + 1) * block].copy_from_slice(&send[me * block..(me + 1) * block]);
+        for j in 0..p {
+            if j != me {
+                self.send(j, tag, &send[j * block..(j + 1) * block]);
+            }
+        }
+        for i in 0..p {
+            if i != me {
+                self.recv_into(i, tag, &mut recv[i * block..(i + 1) * block]);
+            }
+        }
+        self.barrier();
+    }
+
+    /// `MPI_Alltoallv`: per-peer counts and displacements, in elements.
+    pub fn alltoallv<T: Pod>(
+        &self,
+        send: &[T],
+        scounts: &[usize],
+        sdispls: &[usize],
+        recv: &mut [T],
+        rcounts: &[usize],
+        rdispls: &[usize],
+    ) {
+        let p = self.size();
+        assert!(scounts.len() == p && sdispls.len() == p, "alltoallv send meta");
+        assert!(rcounts.len() == p && rdispls.len() == p, "alltoallv recv meta");
+        let me = self.rank();
+        let tag = COLL_TAG_BASE + 2;
+        debug_assert_eq!(scounts[me], rcounts[me], "self block must be symmetric");
+        recv[rdispls[me]..rdispls[me] + rcounts[me]]
+            .copy_from_slice(&send[sdispls[me]..sdispls[me] + scounts[me]]);
+        for j in 0..p {
+            if j != me {
+                self.send(j, tag, &send[sdispls[j]..sdispls[j] + scounts[j]]);
+            }
+        }
+        for i in 0..p {
+            if i != me {
+                self.recv_into(i, tag, &mut recv[rdispls[i]..rdispls[i] + rcounts[i]]);
+            }
+        }
+        self.barrier();
+    }
+
+    /// Pairwise-exchange schedule: at step s each rank exchanges exactly
+    /// one message with partner `(rank + s) mod p` (send) and
+    /// `(rank - s) mod p` (receive), so at most one message per rank is in
+    /// flight — the bounded-injection pattern overlap implementations use.
+    fn alltoall_pairwise<T: Pod>(&self, send: &[T], recv: &mut [T], block: usize) {
+        let p = self.size();
+        assert_eq!(send.len(), block * p, "alltoall send size");
+        assert_eq!(recv.len(), block * p, "alltoall recv size");
+        let me = self.rank();
+        let tag = COLL_TAG_BASE + 7;
+        recv[me * block..(me + 1) * block].copy_from_slice(&send[me * block..(me + 1) * block]);
+        for s in 1..p {
+            let to = (me + s) % p;
+            let from = (me + p - s) % p;
+            self.send(to, tag + s as u64, &send[to * block..(to + 1) * block]);
+            self.recv_into(from, tag + s as u64, &mut recv[from * block..(from + 1) * block]);
+        }
+        self.barrier();
+    }
+
+    /// Pairwise variant of [`Self::alltoallv`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn alltoallv_with<T: Pod>(
+        &self,
+        send: &[T],
+        scounts: &[usize],
+        sdispls: &[usize],
+        recv: &mut [T],
+        rcounts: &[usize],
+        rdispls: &[usize],
+        algo: AlltoallAlgo,
+    ) {
+        if algo == AlltoallAlgo::Buffered {
+            return self.alltoallv(send, scounts, sdispls, recv, rcounts, rdispls);
+        }
+        let p = self.size();
+        let me = self.rank();
+        let tag = COLL_TAG_BASE + 8;
+        recv[rdispls[me]..rdispls[me] + rcounts[me]]
+            .copy_from_slice(&send[sdispls[me]..sdispls[me] + scounts[me]]);
+        for s in 1..p {
+            let to = (me + s) % p;
+            let from = (me + p - s) % p;
+            self.send(to, tag + s as u64, &send[sdispls[to]..sdispls[to] + scounts[to]]);
+            self.recv_into(
+                from,
+                tag + s as u64,
+                &mut recv[rdispls[from]..rdispls[from] + rcounts[from]],
+            );
+        }
+        self.barrier();
+    }
+
+    /// Sum-allreduce of one f64.
+    pub fn allreduce_sum(&self, x: f64) -> f64 {
+        self.allreduce_with(x, |a, b| a + b)
+    }
+
+    /// Max-allreduce of one f64 (the paper's per-stage timing reduction).
+    pub fn allreduce_max(&self, x: f64) -> f64 {
+        self.allreduce_with(x, f64::max)
+    }
+
+    fn allreduce_with(&self, x: f64, op: impl Fn(f64, f64) -> f64) -> f64 {
+        let p = self.size();
+        let me = self.rank();
+        let tag = COLL_TAG_BASE + 3;
+        if p == 1 {
+            return x;
+        }
+        if me == 0 {
+            let mut acc = x;
+            for i in 1..p {
+                let mut buf = [0.0f64];
+                self.recv_into(i, tag, &mut buf);
+                acc = op(acc, buf[0]);
+            }
+            for i in 1..p {
+                self.send(i, tag + 1, &[acc]);
+            }
+            acc
+        } else {
+            self.send(0, tag, &[x]);
+            let mut buf = [0.0f64];
+            self.recv_into(0, tag + 1, &mut buf);
+            buf[0]
+        }
+    }
+
+    /// Gather equal-size contributions to `root`; returns `Some(all)` at
+    /// root (rank-ordered concatenation), `None` elsewhere.
+    pub fn gather<T: Pod>(&self, contrib: &[T], root: usize) -> Option<Vec<T>> {
+        let p = self.size();
+        let me = self.rank();
+        let tag = COLL_TAG_BASE + 4;
+        if me == root {
+            let mut all = Vec::with_capacity(contrib.len() * p);
+            for i in 0..p {
+                if i == me {
+                    all.extend_from_slice(contrib);
+                } else {
+                    let part: Vec<T> = self.recv_vec(i, tag);
+                    assert_eq!(part.len(), contrib.len(), "gather: ragged contribution");
+                    all.extend_from_slice(&part);
+                }
+            }
+            Some(all)
+        } else {
+            self.send(root, tag, contrib);
+            None
+        }
+    }
+
+    /// Variable-size gather to root (rank-ordered).
+    pub fn gatherv<T: Pod>(&self, contrib: &[T], root: usize) -> Option<Vec<Vec<T>>> {
+        let p = self.size();
+        let me = self.rank();
+        let tag = COLL_TAG_BASE + 5;
+        if me == root {
+            let mut all = Vec::with_capacity(p);
+            for i in 0..p {
+                if i == me {
+                    all.push(contrib.to_vec());
+                } else {
+                    all.push(self.recv_vec(i, tag));
+                }
+            }
+            Some(all)
+        } else {
+            self.send(root, tag, contrib);
+            None
+        }
+    }
+
+    /// Broadcast `data` from root to all ranks (in place).
+    pub fn bcast<T: Pod>(&self, data: &mut [T], root: usize) {
+        let p = self.size();
+        let me = self.rank();
+        let tag = COLL_TAG_BASE + 6;
+        if me == root {
+            for i in 0..p {
+                if i != me {
+                    self.send(i, tag, data);
+                }
+            }
+        } else {
+            self.recv_into(root, tag, data);
+        }
+        self.barrier();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::communicator::Universe;
+
+    #[test]
+    fn alltoall_permutes_blocks() {
+        let u = Universe::new(4);
+        let got = u
+            .run(|c| {
+                let p = c.size();
+                let me = c.rank();
+                // send[j] = 10*me + j  (one element per peer)
+                let send: Vec<u64> = (0..p).map(|j| (10 * me + j) as u64).collect();
+                let mut recv = vec![0u64; p];
+                c.alltoall(&send, &mut recv, 1);
+                Ok(recv)
+            })
+            .unwrap();
+        // recv[i] at rank me must be 10*i + me.
+        for me in 0..4 {
+            for i in 0..4 {
+                assert_eq!(got[me][i], (10 * i + me) as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn alltoall_multielement_blocks() {
+        let u = Universe::new(3);
+        let got = u
+            .run(|c| {
+                let p = c.size();
+                let me = c.rank();
+                let block = 5;
+                let send: Vec<f64> =
+                    (0..p * block).map(|k| (me * 1000 + k) as f64).collect();
+                let mut recv = vec![0.0f64; p * block];
+                c.alltoall(&send, &mut recv, block);
+                Ok(recv)
+            })
+            .unwrap();
+        for me in 0..3 {
+            for i in 0..3 {
+                for k in 0..5 {
+                    assert_eq!(got[me][i * 5 + k], (i * 1000 + me * 5 + k) as f64);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn alltoallv_uneven_counts() {
+        let u = Universe::new(3);
+        let got = u
+            .run(|c| {
+                let me = c.rank();
+                // Rank r sends r+1 copies of its rank id to each peer.
+                let scounts = vec![me + 1; 3];
+                let sdispls: Vec<usize> = (0..3).map(|j| j * (me + 1)).collect();
+                let send = vec![me as f64; 3 * (me + 1)];
+                // Receives i+1 elements from rank i.
+                let rcounts: Vec<usize> = (0..3).map(|i| i + 1).collect();
+                let rdispls: Vec<usize> = vec![0, 1, 3];
+                let mut recv = vec![-1.0f64; 6];
+                c.alltoallv(&send, &scounts, &sdispls, &mut recv, &rcounts, &rdispls);
+                Ok(recv)
+            })
+            .unwrap();
+        for me in 0..3 {
+            assert_eq!(got[me], vec![0.0, 1.0, 1.0, 2.0, 2.0, 2.0], "rank {me}");
+        }
+    }
+
+    #[test]
+    fn allreduce_sum_and_max() {
+        let u = Universe::new(5);
+        let got = u
+            .run(|c| {
+                let s = c.allreduce_sum(c.rank() as f64);
+                let m = c.allreduce_max(c.rank() as f64);
+                Ok((s, m))
+            })
+            .unwrap();
+        for &(s, m) in &got {
+            assert_eq!(s, 10.0);
+            assert_eq!(m, 4.0);
+        }
+    }
+
+    #[test]
+    fn gather_and_bcast() {
+        let u = Universe::new(4);
+        let got = u
+            .run(|c| {
+                let g = c.gather(&[c.rank() as u64], 2);
+                let mut b = [0u64];
+                if c.rank() == 2 {
+                    b[0] = 99;
+                }
+                c.bcast(&mut b, 2);
+                Ok((g, b[0]))
+            })
+            .unwrap();
+        assert_eq!(got[2].0.as_deref(), Some(&[0u64, 1, 2, 3][..]));
+        assert!(got.iter().enumerate().all(|(i, (g, _))| (i == 2) == g.is_some()));
+        assert!(got.iter().all(|&(_, b)| b == 99));
+    }
+
+    #[test]
+    fn gatherv_ragged() {
+        let u = Universe::new(3);
+        let got = u
+            .run(|c| Ok(c.gatherv(&vec![c.rank() as u64; c.rank() + 1], 0)))
+            .unwrap();
+        let at_root = got[0].as_ref().unwrap();
+        assert_eq!(at_root[0], vec![0]);
+        assert_eq!(at_root[1], vec![1, 1]);
+        assert_eq!(at_root[2], vec![2, 2, 2]);
+    }
+
+    #[test]
+    fn pairwise_matches_buffered() {
+        use super::AlltoallAlgo;
+        let u = Universe::new(4);
+        let got = u
+            .run(|c| {
+                let p = c.size();
+                let me = c.rank();
+                let block = 3;
+                let send: Vec<u64> =
+                    (0..p * block).map(|k| (me * 1000 + k) as u64).collect();
+                let mut a = vec![0u64; p * block];
+                let mut b = vec![0u64; p * block];
+                c.alltoall_with(&send, &mut a, block, AlltoallAlgo::Buffered);
+                c.alltoall_with(&send, &mut b, block, AlltoallAlgo::Pairwise);
+                Ok(a == b)
+            })
+            .unwrap();
+        assert!(got.into_iter().all(|x| x));
+    }
+
+    #[test]
+    fn pairwise_alltoallv_matches_buffered() {
+        use super::AlltoallAlgo;
+        let u = Universe::new(3);
+        let got = u
+            .run(|c| {
+                let me = c.rank();
+                let scounts = vec![me + 1; 3];
+                let sdispls: Vec<usize> = (0..3).map(|j| j * (me + 1)).collect();
+                let send = vec![me as f64; 3 * (me + 1)];
+                let rcounts: Vec<usize> = (0..3).map(|i| i + 1).collect();
+                let rdispls: Vec<usize> = vec![0, 1, 3];
+                let mut a = vec![-1.0f64; 6];
+                let mut b = vec![-1.0f64; 6];
+                c.alltoallv(&send, &scounts, &sdispls, &mut a, &rcounts, &rdispls);
+                c.alltoallv_with(
+                    &send, &scounts, &sdispls, &mut b, &rcounts, &rdispls,
+                    AlltoallAlgo::Pairwise,
+                );
+                Ok(a == b)
+            })
+            .unwrap();
+        assert!(got.into_iter().all(|x| x));
+    }
+
+    #[test]
+    fn alltoall_on_split_subcommunicators() {
+        // The transposes run on ROW/COLUMN comms; verify collectives work
+        // there too.
+        use crate::grid::ProcGrid;
+        let u = Universe::new(6);
+        let got = u
+            .run(|c| {
+                let (row, _col) = c.cart_2d(ProcGrid::new(2, 3))?;
+                let send: Vec<u64> = (0..row.size()).map(|j| (row.rank() * 10 + j) as u64).collect();
+                let mut recv = vec![0u64; row.size()];
+                row.alltoall(&send, &mut recv, 1);
+                Ok(recv)
+            })
+            .unwrap();
+        for world in 0..6 {
+            let me = world % 2; // r1 == row rank
+            for i in 0..2 {
+                assert_eq!(got[world][i], (i * 10 + me) as u64);
+            }
+        }
+    }
+}

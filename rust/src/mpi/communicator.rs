@@ -1,0 +1,322 @@
+//! `Universe` (the process set) and `Comm` (MPI_Comm equivalent) with
+//! point-to-point transfers, `split`, and cartesian ROW/COLUMN helpers.
+
+use std::sync::Arc;
+
+use super::fabric::{as_bytes, bytes_into, Barrier, Fabric, Pod};
+use crate::grid::ProcGrid;
+use crate::util::error::{Error, Result};
+
+/// A set of `p` ranks backed by one shared [`Fabric`]. `Universe::run`
+/// spawns one thread per rank and joins them, propagating panics as
+/// errors — the moral equivalent of `mpirun -np P`.
+pub struct Universe {
+    size: usize,
+    fabric: Arc<Fabric>,
+}
+
+impl Universe {
+    pub fn new(size: usize) -> Self {
+        Universe { size, fabric: Fabric::new(size) }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn fabric(&self) -> &Arc<Fabric> {
+        &self.fabric
+    }
+
+    /// Run `f(world_comm)` on every rank in its own thread; returns the
+    /// per-rank results in rank order, or the first rank's error/panic.
+    pub fn run<R, F>(&self, f: F) -> Result<Vec<R>>
+    where
+        R: Send + 'static,
+        F: Fn(Comm) -> Result<R> + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let mut handles = Vec::with_capacity(self.size);
+        for rank in 0..self.size {
+            let fabric = self.fabric.clone();
+            let f = f.clone();
+            let size = self.size;
+            let builder = std::thread::Builder::new()
+                .name(format!("rank{rank}"))
+                // Pencil stages recurse (mixed-radix FFT) and hold decent
+                // local arrays on the stack of library users; 8 MiB default
+                // is fine but be explicit.
+                .stack_size(8 * 1024 * 1024);
+            handles.push(
+                builder
+                    .spawn(move || {
+                        let comm = Comm::world(fabric.clone(), size, rank);
+                        // A rank that exits abnormally (Err or panic) tears
+                        // the fabric down so peers blocked in collectives
+                        // abort instead of hanging forever.
+                        let result = std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(|| f(comm)),
+                        );
+                        match result {
+                            Ok(Ok(r)) => Ok(r),
+                            Ok(Err(e)) => {
+                                fabric.mark_failed();
+                                Err(e)
+                            }
+                            Err(p) => {
+                                fabric.mark_failed();
+                                std::panic::resume_unwind(p)
+                            }
+                        }
+                    })
+                    .expect("spawn rank thread"),
+            );
+        }
+        let mut out = Vec::with_capacity(self.size);
+        let mut errors: Vec<Error> = Vec::new();
+        for (rank, h) in handles.into_iter().enumerate() {
+            match h.join() {
+                Ok(Ok(r)) => out.push(r),
+                Ok(Err(e)) => errors.push(e),
+                Err(p) => {
+                    let msg = p
+                        .downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                        .unwrap_or_else(|| "opaque panic".into());
+                    errors.push(Error::Mpi(format!("rank {rank} panicked: {msg}")));
+                }
+            }
+        }
+        if errors.is_empty() {
+            return Ok(out);
+        }
+        // Prefer the root cause over secondary "fabric torn down" aborts.
+        let pos = errors
+            .iter()
+            .position(|e| !e.to_string().contains("fabric torn down"))
+            .unwrap_or(0);
+        Err(errors.swap_remove(pos))
+    }
+}
+
+/// A communicator: an ordered group of world ranks this rank belongs to.
+#[derive(Clone)]
+pub struct Comm {
+    fabric: Arc<Fabric>,
+    /// Communicator id (world = 0); tags are namespaced by it.
+    id: u64,
+    /// Ordered world ranks of the group; `ranks[local_rank] == my world rank`.
+    ranks: Arc<Vec<usize>>,
+    local_rank: usize,
+    barrier: Arc<Barrier>,
+}
+
+impl Comm {
+    pub(crate) fn world(fabric: Arc<Fabric>, size: usize, world_rank: usize) -> Self {
+        let barrier =
+            fabric.barriers.lock().expect("barriers poisoned").get(&0).expect("world barrier").clone();
+        Comm {
+            fabric,
+            id: 0,
+            ranks: Arc::new((0..size).collect()),
+            local_rank: world_rank,
+            barrier,
+        }
+    }
+
+    /// Rank within this communicator.
+    pub fn rank(&self) -> usize {
+        self.local_rank
+    }
+
+    /// Number of ranks in this communicator.
+    pub fn size(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// World rank of local rank `r` in this communicator.
+    pub fn world_rank_of(&self, r: usize) -> usize {
+        self.ranks[r]
+    }
+
+    /// This rank's world rank.
+    pub fn world_rank(&self) -> usize {
+        self.ranks[self.local_rank]
+    }
+
+    /// The fabric (for byte accounting in benches).
+    pub fn fabric(&self) -> &Arc<Fabric> {
+        &self.fabric
+    }
+
+    #[inline]
+    fn tag(&self, user_tag: u64) -> u64 {
+        // Namespace user tags by communicator id (16 bits of comm id are
+        // plenty for the library's usage).
+        (self.id << 48) | (user_tag & 0xFFFF_FFFF_FFFF)
+    }
+
+    /// Non-blocking-ish send (buffered copy; never deadlocks).
+    pub fn send<T: Pod>(&self, dst: usize, user_tag: u64, data: &[T]) {
+        let bytes = as_bytes(data).to_vec();
+        self.fabric.send(self.world_rank(), self.ranks[dst], self.tag(user_tag), bytes);
+    }
+
+    /// Blocking receive into `out` (length must match exactly).
+    pub fn recv_into<T: Pod>(&self, src: usize, user_tag: u64, out: &mut [T]) {
+        let bytes = self.fabric.recv(self.ranks[src], self.world_rank(), self.tag(user_tag));
+        bytes_into(&bytes, out);
+    }
+
+    /// Blocking receive of a length-unknown message.
+    pub fn recv_vec<T: Pod>(&self, src: usize, user_tag: u64) -> Vec<T> {
+        let bytes = self.fabric.recv(self.ranks[src], self.world_rank(), self.tag(user_tag));
+        assert_eq!(bytes.len() % std::mem::size_of::<T>(), 0);
+        let n = bytes.len() / std::mem::size_of::<T>();
+        let mut out = vec![unsafe { std::mem::zeroed() }; n];
+        bytes_into(&bytes, &mut out);
+        out
+    }
+
+    /// Synchronise all ranks of this communicator.
+    pub fn barrier(&self) {
+        self.barrier.wait();
+    }
+
+    /// MPI_Comm_split: ranks calling with the same `color` end up in the
+    /// same new communicator, ordered by `(key, world rank)`.
+    ///
+    /// `expected` is the number of ranks that will call with this color —
+    /// known statically for cartesian splits; this avoids a full gather.
+    pub fn split(&self, color: usize, key: usize, expected: usize) -> Comm {
+        let (ranks, id, barrier) = self.fabric.split_rendezvous(
+            self.id,
+            color,
+            expected,
+            self.world_rank(),
+            key,
+        );
+        let local_rank = ranks
+            .iter()
+            .position(|&w| w == self.world_rank())
+            .expect("member of own split group");
+        Comm { fabric: self.fabric.clone(), id, ranks, local_rank, barrier }
+    }
+
+    /// Cartesian 2D helper: returns (row_comm, col_comm) for `pgrid`,
+    /// mirroring P3DFFT's ROW/COLUMN sub-communicators. Must be called by
+    /// every rank of a communicator whose size equals `pgrid.p()`.
+    pub fn cart_2d(&self, pgrid: ProcGrid) -> Result<(Comm, Comm)> {
+        if self.size() != pgrid.p() {
+            return Err(Error::InvalidConfig(format!(
+                "cart_2d: communicator size {} != M1*M2 = {}",
+                self.size(),
+                pgrid.p()
+            )));
+        }
+        let (r1, r2) = pgrid.coords(self.rank());
+        // ROW: same r2; ordered by r1. Colors must be unique per sub-comm
+        // and disjoint between the two split generations: the fabric keys
+        // splits by (parent_comm, color), and both generations run on the
+        // parent, so offset the column colors by M2.
+        let row = self.split(r2, r1, pgrid.m1);
+        let col = self.split(pgrid.m2 + r1, r2, pgrid.m2);
+        Ok((row, col))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_ranks_and_size() {
+        let u = Universe::new(4);
+        let got = u
+            .run(|c| Ok((c.rank(), c.size())))
+            .unwrap();
+        assert_eq!(got, vec![(0, 4), (1, 4), (2, 4), (3, 4)]);
+    }
+
+    #[test]
+    fn point_to_point_ring() {
+        let u = Universe::new(4);
+        let got = u
+            .run(|c| {
+                let next = (c.rank() + 1) % c.size();
+                let prev = (c.rank() + c.size() - 1) % c.size();
+                c.send(next, 1, &[c.rank() as u64]);
+                let mut buf = [0u64];
+                c.recv_into(prev, 1, &mut buf);
+                Ok(buf[0])
+            })
+            .unwrap();
+        assert_eq!(got, vec![3, 0, 1, 2]);
+    }
+
+    #[test]
+    fn panic_in_one_rank_reported_not_hung() {
+        let u = Universe::new(2);
+        let r: Result<Vec<()>> = u.run(|c| {
+            if c.rank() == 1 {
+                panic!("boom");
+            }
+            Ok(())
+        });
+        let e = r.unwrap_err();
+        assert!(e.to_string().contains("rank 1 panicked"), "{e}");
+    }
+
+    #[test]
+    fn split_groups_by_color_and_orders_by_key() {
+        let u = Universe::new(6);
+        let got = u
+            .run(|c| {
+                // Two colors: even/odd world rank. Key reverses order.
+                let color = c.rank() % 2;
+                let key = 100 - c.rank();
+                let sub = c.split(color, key, 3);
+                Ok((sub.size(), sub.rank(), sub.world_rank()))
+            })
+            .unwrap();
+        // Even group {0,2,4} ordered by key desc-rank: keys 100,98,96 ->
+        // order 4,2,0.
+        assert_eq!(got[4].1, 0); // world 4 is local 0 in its group
+        assert_eq!(got[0].1, 2);
+        assert!(got.iter().all(|&(s, _, _)| s == 3));
+    }
+
+    #[test]
+    fn cart_2d_row_and_col_membership() {
+        let u = Universe::new(6);
+        let got = u
+            .run(|c| {
+                let pg = ProcGrid::new(2, 3);
+                let (row, col) = c.cart_2d(pg)?;
+                Ok((row.size(), row.rank(), col.size(), col.rank()))
+            })
+            .unwrap();
+        let pg = ProcGrid::new(2, 3);
+        for world in 0..6 {
+            let (r1, r2) = pg.coords(world);
+            assert_eq!(got[world], (2, r1, 3, r2), "world={world}");
+        }
+    }
+
+    #[test]
+    fn recv_vec_arbitrary_length() {
+        let u = Universe::new(2);
+        let got = u
+            .run(|c| {
+                if c.rank() == 0 {
+                    c.send(1, 5, &[1.0f64, 2.0, 3.0]);
+                    Ok(vec![])
+                } else {
+                    Ok(c.recv_vec::<f64>(0, 5))
+                }
+            })
+            .unwrap();
+        assert_eq!(got[1], vec![1.0, 2.0, 3.0]);
+    }
+}

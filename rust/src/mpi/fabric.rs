@@ -1,0 +1,344 @@
+//! The shared-memory message fabric: a P×P matrix of tagged FIFO
+//! mailboxes plus the registries that back communicator split and
+//! barriers. All transfers are actual byte copies — the cost structure
+//! (pack, copy, unpack) mirrors an intra-node MPI implementation.
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Marker for plain-old-data element types that can be sent as raw bytes.
+///
+/// # Safety
+/// Implementors must be `Copy` with no padding-dependent invariants and no
+/// pointers; the fabric will reinterpret them as byte slices.
+pub unsafe trait Pod: Copy + Send + 'static {}
+
+unsafe impl Pod for u8 {}
+unsafe impl Pod for u32 {}
+unsafe impl Pod for u64 {}
+unsafe impl Pod for usize {}
+unsafe impl Pod for i64 {}
+unsafe impl Pod for f32 {}
+unsafe impl Pod for f64 {}
+unsafe impl<T: crate::fft::Real> Pod for crate::fft::Complex<T> {}
+
+pub(crate) fn as_bytes<T: Pod>(data: &[T]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    }
+}
+
+pub(crate) fn bytes_into<T: Pod>(bytes: &[u8], out: &mut [T]) {
+    assert_eq!(bytes.len(), std::mem::size_of_val(out), "message length mismatch");
+    unsafe {
+        std::ptr::copy_nonoverlapping(bytes.as_ptr(), out.as_mut_ptr() as *mut u8, bytes.len());
+    }
+}
+
+/// One directional mailbox (src → dst): tagged FIFO with blocking receive.
+#[derive(Default)]
+struct Mailbox {
+    queue: Mutex<VecDeque<(u64, Vec<u8>)>>,
+    ready: Condvar,
+}
+
+impl Mailbox {
+    fn push(&self, tag: u64, data: Vec<u8>) {
+        self.queue.lock().expect("mailbox poisoned").push_back((tag, data));
+        self.ready.notify_all();
+    }
+
+    fn pop(&self, tag: u64, abort: &AtomicUsize) -> Vec<u8> {
+        let mut q = self.queue.lock().expect("mailbox poisoned");
+        loop {
+            if let Some(pos) = q.iter().position(|(t, _)| *t == tag) {
+                return q.remove(pos).expect("position just found").1;
+            }
+            if abort.load(Ordering::Relaxed) != 0 {
+                panic!("fabric torn down: a peer rank failed");
+            }
+            let (guard, _timeout) = self
+                .ready
+                .wait_timeout(q, std::time::Duration::from_millis(50))
+                .expect("mailbox poisoned");
+            q = guard;
+        }
+    }
+}
+
+/// Sense-reversing barrier for a fixed participant count. Aborts (panics)
+/// when the shared failure flag is raised, so a dead peer cannot park the
+/// rest of the universe forever.
+pub(crate) struct Barrier {
+    n: usize,
+    state: Mutex<(usize, bool)>, // (arrived, sense)
+    cv: Condvar,
+    abort: Arc<AtomicUsize>,
+}
+
+impl Barrier {
+    pub(crate) fn new(n: usize, abort: Arc<AtomicUsize>) -> Self {
+        Barrier { n, state: Mutex::new((0, false)), cv: Condvar::new(), abort }
+    }
+
+    pub(crate) fn wait(&self) {
+        let mut st = self.state.lock().expect("barrier poisoned");
+        let sense = st.1;
+        st.0 += 1;
+        if st.0 == self.n {
+            st.0 = 0;
+            st.1 = !sense;
+            self.cv.notify_all();
+        } else {
+            while st.1 == sense {
+                if self.abort.load(Ordering::Relaxed) != 0 {
+                    panic!("fabric torn down: a peer rank failed");
+                }
+                let (guard, _timeout) = self
+                    .cv
+                    .wait_timeout(st, std::time::Duration::from_millis(50))
+                    .expect("barrier poisoned");
+                st = guard;
+            }
+        }
+    }
+}
+
+/// Registry entry created lazily when ranks call `split`.
+pub(crate) struct SplitGroup {
+    /// (global_rank, key) pairs of members that arrived so far.
+    pub members: Mutex<Vec<(usize, usize)>>,
+    pub done: Condvar,
+    /// Set once the group is sealed: ordered global ranks + comm id.
+    pub sealed: Mutex<Option<(Arc<Vec<usize>>, u64, Arc<Barrier>)>>,
+}
+
+/// The process-wide fabric shared by all ranks of a [`super::Universe`].
+pub struct Fabric {
+    pub(crate) world_size: usize,
+    boxes: Vec<Mailbox>,
+    /// Bytes pushed through the fabric, per world rank (send side).
+    bytes_sent: Vec<AtomicU64>,
+    /// Monotonic communicator-id source (world = 0).
+    next_comm_id: AtomicU64,
+    /// split registry: (parent_comm, color) -> group being assembled.
+    splits: Mutex<HashMap<(u64, usize), Arc<SplitGroup>>>,
+    /// Barriers per communicator id.
+    pub(crate) barriers: Mutex<HashMap<u64, Arc<Barrier>>>,
+    /// Failure flag: raised when any rank exits abnormally so the others
+    /// abort their blocking waits instead of hanging forever.
+    failed: Arc<AtomicUsize>,
+}
+
+impl Fabric {
+    pub fn new(world_size: usize) -> Arc<Self> {
+        assert!(world_size >= 1);
+        let mut boxes = Vec::with_capacity(world_size * world_size);
+        for _ in 0..world_size * world_size {
+            boxes.push(Mailbox::default());
+        }
+        let failed = Arc::new(AtomicUsize::new(0));
+        let f = Fabric {
+            world_size,
+            boxes,
+            bytes_sent: (0..world_size).map(|_| AtomicU64::new(0)).collect(),
+            next_comm_id: AtomicU64::new(1),
+            splits: Mutex::new(HashMap::new()),
+            barriers: Mutex::new(HashMap::new()),
+            failed: failed.clone(),
+        };
+        f.barriers
+            .lock()
+            .expect("fresh mutex")
+            .insert(0, Arc::new(Barrier::new(world_size, failed)));
+        Arc::new(f)
+    }
+
+    #[inline]
+    fn mbox(&self, src: usize, dst: usize) -> &Mailbox {
+        &self.boxes[src * self.world_size + dst]
+    }
+
+    /// Deliver a message (copy) from src to dst.
+    pub(crate) fn send(&self, src: usize, dst: usize, tag: u64, data: Vec<u8>) {
+        self.bytes_sent[src].fetch_add(data.len() as u64, Ordering::Relaxed);
+        self.mbox(src, dst).push(tag, data);
+    }
+
+    /// Blocking receive of the message (src → dst) with `tag`. Panics if
+    /// the fabric has been torn down by a failing peer.
+    pub(crate) fn recv(&self, src: usize, dst: usize, tag: u64) -> Vec<u8> {
+        self.mbox(src, dst).pop(tag, &self.failed)
+    }
+
+    /// Raise the failure flag: every blocked receive/barrier aborts within
+    /// one poll interval instead of waiting forever.
+    pub fn mark_failed(&self) {
+        self.failed.store(1, Ordering::Relaxed);
+    }
+
+    /// Whether the fabric has been torn down.
+    pub fn is_failed(&self) -> bool {
+        self.failed.load(Ordering::Relaxed) != 0
+    }
+
+    /// Total bytes sent by `world_rank` so far.
+    pub fn bytes_sent_by(&self, world_rank: usize) -> u64 {
+        self.bytes_sent[world_rank].load(Ordering::Relaxed)
+    }
+
+    /// Total bytes pushed through the whole fabric.
+    pub fn bytes_total(&self) -> u64 {
+        self.bytes_sent.iter().map(|a| a.load(Ordering::Relaxed)).sum()
+    }
+
+    pub(crate) fn fresh_comm_id(&self) -> u64 {
+        self.next_comm_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Rendezvous for `split`: the `expected`-th arriver seals the group.
+    pub(crate) fn split_rendezvous(
+        &self,
+        parent_comm: u64,
+        color: usize,
+        expected: usize,
+        global_rank: usize,
+        key: usize,
+    ) -> (Arc<Vec<usize>>, u64, Arc<Barrier>) {
+        let group = {
+            let mut reg = self.splits.lock().expect("split registry poisoned");
+            reg.entry((parent_comm, color))
+                .or_insert_with(|| {
+                    Arc::new(SplitGroup {
+                        members: Mutex::new(Vec::new()),
+                        done: Condvar::new(),
+                        sealed: Mutex::new(None),
+                    })
+                })
+                .clone()
+        };
+        {
+            let mut members = group.members.lock().expect("split members poisoned");
+            members.push((global_rank, key));
+            if members.len() == expected {
+                // Seal: order by (key, global_rank), allocate comm id.
+                let mut m = members.clone();
+                m.sort_by_key(|&(g, k)| (k, g));
+                let ranks: Vec<usize> = m.into_iter().map(|(g, _)| g).collect();
+                let id = self.fresh_comm_id();
+                let bar = Arc::new(Barrier::new(ranks.len(), self.failed.clone()));
+                self.barriers.lock().expect("barriers poisoned").insert(id, bar.clone());
+                *group.sealed.lock().expect("sealed poisoned") =
+                    Some((Arc::new(ranks), id, bar));
+                group.done.notify_all();
+                // Remove from registry so the same (comm, color) can be
+                // split again later.
+                self.splits.lock().expect("split registry poisoned").remove(&(parent_comm, color));
+            }
+        }
+        let mut sealed = group.sealed.lock().expect("sealed poisoned");
+        loop {
+            if let Some(s) = sealed.clone() {
+                return s;
+            }
+            sealed = group.done.wait(sealed).expect("sealed poisoned");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn mailbox_fifo_and_tag_matching() {
+        let f = Fabric::new(2);
+        f.send(0, 1, 7, vec![1, 2, 3]);
+        f.send(0, 1, 9, vec![4]);
+        // Tag 9 can be received before tag 7.
+        assert_eq!(f.recv(0, 1, 9), vec![4]);
+        assert_eq!(f.recv(0, 1, 7), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn recv_blocks_until_send() {
+        let f = Fabric::new(2);
+        let f2 = f.clone();
+        let h = thread::spawn(move || f2.recv(0, 1, 1));
+        thread::sleep(std::time::Duration::from_millis(20));
+        f.send(0, 1, 1, vec![9]);
+        assert_eq!(h.join().unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let f = Fabric::new(2);
+        f.send(0, 1, 0, vec![0; 100]);
+        f.send(1, 0, 0, vec![0; 50]);
+        assert_eq!(f.bytes_sent_by(0), 100);
+        assert_eq!(f.bytes_total(), 150);
+    }
+
+    #[test]
+    fn barrier_releases_all() {
+        let b = Arc::new(Barrier::new(4, Arc::new(AtomicUsize::new(0))));
+        let counter = Arc::new(AtomicUsize::new(0));
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let b = b.clone();
+                let c = counter.clone();
+                thread::spawn(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                    b.wait();
+                    c.load(Ordering::SeqCst)
+                })
+            })
+            .collect();
+        for h in hs {
+            // Every thread must observe all 4 increments after the barrier.
+            assert_eq!(h.join().unwrap(), 4);
+        }
+    }
+
+    #[test]
+    fn barrier_reusable_across_phases() {
+        let b = Arc::new(Barrier::new(2, Arc::new(AtomicUsize::new(0))));
+        let b2 = b.clone();
+        let h = thread::spawn(move || {
+            for _ in 0..100 {
+                b2.wait();
+            }
+        });
+        for _ in 0..100 {
+            b.wait();
+        }
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn mark_failed_aborts_blocked_recv() {
+        let f = Fabric::new(2);
+        let f2 = f.clone();
+        let h = thread::spawn(move || {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                f2.recv(0, 1, 1);
+            }));
+            r.is_err()
+        });
+        thread::sleep(std::time::Duration::from_millis(30));
+        f.mark_failed();
+        assert!(h.join().unwrap(), "blocked recv must abort after teardown");
+    }
+
+    #[test]
+    fn pod_roundtrip_preserves_bits() {
+        let xs = [1.5f64, -2.25, 1e-300];
+        let bytes = as_bytes(&xs).to_vec();
+        let mut out = [0.0f64; 3];
+        bytes_into(&bytes, &mut out);
+        assert_eq!(xs, out);
+    }
+}

@@ -1,0 +1,23 @@
+//! Thread-backed message-passing runtime — the MPI stand-in.
+//!
+//! The paper's algorithm is expressed against MPI: cartesian ROW/COLUMN
+//! sub-communicators and blocking `MPI_Alltoall(v)` collectives. This
+//! module provides those semantics over OS threads in one process: each
+//! *rank* is a thread, and messages are real buffer copies through a
+//! shared-memory [`fabric::Fabric`] (P3DFFT's pack → exchange → unpack
+//! data movement executes for real, byte for byte).
+//!
+//! What is *not* simulated here is wire time at scale — that is
+//! [`crate::netmodel`]'s job. The fabric counts bytes per communicator so
+//! measured exchanges can be cross-checked against the model's volume
+//! accounting (`m·N³` per transpose, §4.2-3 of the paper).
+
+pub mod collectives;
+pub mod communicator;
+pub mod fabric;
+pub mod topology;
+
+pub use collectives::AlltoallAlgo;
+pub use communicator::{Comm, Universe};
+pub use fabric::Pod;
+pub use topology::{NodeMap, PlacementPolicy};

@@ -1,0 +1,133 @@
+//! Node topology: which physical node each rank lives on. The paper's
+//! placement discussion (§4.2-3) hinges on this: with contiguous default
+//! placement and `M1 <=` cores-per-node, the whole ROW exchange stays
+//! inside one node (memory bandwidth), while COLUMN exchanges always cross
+//! the network. `netmodel` prices messages using exactly this map.
+
+/// How ranks map to nodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Cores on a node are populated with contiguous task ids — the
+    /// paper's default, found optimal for cubic grids.
+    Contiguous,
+    /// Ranks dealt round-robin across nodes (the ablation alternative).
+    RoundRobin,
+}
+
+/// Rank → node map for `p` ranks on nodes of `cores_per_node`.
+#[derive(Debug, Clone)]
+pub struct NodeMap {
+    pub p: usize,
+    pub cores_per_node: usize,
+    pub policy: PlacementPolicy,
+}
+
+impl NodeMap {
+    pub fn new(p: usize, cores_per_node: usize, policy: PlacementPolicy) -> Self {
+        assert!(p >= 1 && cores_per_node >= 1);
+        NodeMap { p, cores_per_node, policy }
+    }
+
+    /// Number of (possibly partially filled) nodes.
+    pub fn node_count(&self) -> usize {
+        self.p.div_ceil(self.cores_per_node)
+    }
+
+    /// Node hosting `rank`.
+    pub fn node_of(&self, rank: usize) -> usize {
+        assert!(rank < self.p);
+        match self.policy {
+            PlacementPolicy::Contiguous => rank / self.cores_per_node,
+            PlacementPolicy::RoundRobin => rank % self.node_count(),
+        }
+    }
+
+    /// True if both ranks share a node (their traffic is memory-bandwidth
+    /// priced, not network priced).
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    /// Fraction of ordered pairs in `ranks` that are intra-node — the
+    /// quantity that differentiates ROW from COLUMN exchanges.
+    pub fn intra_node_fraction(&self, ranks: &[usize]) -> f64 {
+        let mut intra = 0usize;
+        let mut total = 0usize;
+        for &a in ranks {
+            for &b in ranks {
+                if a != b {
+                    total += 1;
+                    if self.same_node(a, b) {
+                        intra += 1;
+                    }
+                }
+            }
+        }
+        if total == 0 {
+            1.0
+        } else {
+            intra as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::ProcGrid;
+
+    #[test]
+    fn contiguous_fills_nodes_in_order() {
+        let m = NodeMap::new(24, 12, PlacementPolicy::Contiguous);
+        assert_eq!(m.node_count(), 2);
+        assert_eq!(m.node_of(0), 0);
+        assert_eq!(m.node_of(11), 0);
+        assert_eq!(m.node_of(12), 1);
+    }
+
+    #[test]
+    fn round_robin_deals_across_nodes() {
+        let m = NodeMap::new(24, 12, PlacementPolicy::RoundRobin);
+        assert_eq!(m.node_of(0), 0);
+        assert_eq!(m.node_of(1), 1);
+        assert_eq!(m.node_of(2), 0);
+    }
+
+    #[test]
+    fn row_stays_on_node_when_m1_divides_cores() {
+        // Paper's claim: with contiguous placement and M1 <= cores/node
+        // (and cores/node % M1 == 0), every ROW lands on one node.
+        let cores = 12;
+        let pg = ProcGrid::new(4, 6); // P = 24
+        let m = NodeMap::new(pg.p(), cores, PlacementPolicy::Contiguous);
+        for rank in 0..pg.p() {
+            let rows = pg.row_ranks(rank);
+            assert_eq!(m.intra_node_fraction(&rows), 1.0, "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn row_crosses_nodes_when_m1_exceeds_cores() {
+        let cores = 4;
+        let pg = ProcGrid::new(8, 2); // M1 = 8 > 4 cores/node
+        let m = NodeMap::new(pg.p(), cores, PlacementPolicy::Contiguous);
+        let rows = pg.row_ranks(0);
+        assert!(m.intra_node_fraction(&rows) < 1.0);
+    }
+
+    #[test]
+    fn column_exchange_is_inter_node_at_scale() {
+        let cores = 12;
+        let pg = ProcGrid::new(12, 8); // rows fill nodes exactly
+        let m = NodeMap::new(pg.p(), cores, PlacementPolicy::Contiguous);
+        let cols = pg.col_ranks(0);
+        assert_eq!(m.intra_node_fraction(&cols), 0.0);
+    }
+
+    #[test]
+    fn partial_last_node() {
+        let m = NodeMap::new(10, 4, PlacementPolicy::Contiguous);
+        assert_eq!(m.node_count(), 3);
+        assert_eq!(m.node_of(9), 2);
+    }
+}

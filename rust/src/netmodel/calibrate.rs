@@ -1,0 +1,101 @@
+//! Calibration: measure this host's own code to ground the model.
+//!
+//! The paper fits its model constants to measured data; we do the same.
+//! `Calibration::measure()` runs short micro-benchmarks of the *actual*
+//! library kernels (serial FFT for F, pack/unpack for σ_mem) and returns
+//! constants that `Machine::localhost` and the figure benches use for
+//! measured-scale predictions. Paper-scale rows use the preset machines.
+
+use std::time::Instant;
+
+use crate::fft::{C2cPlan, Complex, Direction};
+use crate::transpose::pack::{pack_x_to_y, unpack_x_to_y};
+use crate::util::SplitMix64;
+
+/// Host constants derived from measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct Calibration {
+    /// Effective FLOP rate on the crate's own 1D FFT, flops/s.
+    pub fft_flops: f64,
+    /// Streaming bandwidth of the crate's own pack/unpack, bytes/s.
+    pub pack_bw: f64,
+}
+
+impl Calibration {
+    /// Run the micro-benchmarks (a few hundred ms total).
+    pub fn measure() -> Self {
+        Calibration { fft_flops: measure_fft_flops(1024, 64), pack_bw: measure_pack_bw(64, 256) }
+    }
+
+    /// A cheap fixed calibration for tests (no timing).
+    pub fn nominal() -> Self {
+        Calibration { fft_flops: 1.0e9, pack_bw: 4.0e9 }
+    }
+}
+
+/// Measure sustained flops on batched length-`n` C2C FFTs.
+pub fn measure_fft_flops(n: usize, batch: usize) -> f64 {
+    let plan = C2cPlan::<f64>::new(n, Direction::Forward);
+    let mut rng = SplitMix64::new(0xCAFE);
+    let mut data: Vec<Complex<f64>> =
+        (0..n * batch).map(|_| Complex::new(rng.next_normal(), rng.next_normal())).collect();
+    let mut scratch = vec![Complex::zero(); plan.scratch_len()];
+    // Warmup.
+    plan.execute_batch(&mut data, &mut scratch);
+    let reps = 5;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        plan.execute_batch(&mut data, &mut scratch);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    // 5 n log2 n flops per complex line.
+    let flops = (reps * batch) as f64 * 5.0 * n as f64 * (n as f64).log2();
+    flops / secs
+}
+
+/// Measure pack+unpack streaming bandwidth on a realistic pencil shape.
+pub fn measure_pack_bw(nz: usize, n: usize) -> f64 {
+    let (ny, h) = (n, n / 2 + 1);
+    let mut rng = SplitMix64::new(0xBEEF);
+    let input: Vec<Complex<f64>> =
+        (0..nz * ny * h).map(|_| Complex::new(rng.next_normal(), 0.0)).collect();
+    let mut buf = vec![Complex::zero(); nz * ny * h];
+    let mut out = vec![Complex::zero(); nz * h * ny];
+    // Warmup.
+    pack_x_to_y(&input, nz, ny, h, 0, h, &mut buf);
+    let reps = 3;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        pack_x_to_y(&input, nz, ny, h, 0, h, &mut buf);
+        unpack_x_to_y(&buf, nz, h, ny, 0, ny, &mut out);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    // Each rep streams the volume 4x (pack read+write, unpack read+write).
+    let bytes = (reps * 4 * nz * ny * h * std::mem::size_of::<Complex<f64>>()) as f64;
+    bytes / secs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fft_flops_positive_and_sane() {
+        let f = measure_fft_flops(256, 16);
+        // Anything from 10 Mflop/s (emulated) to 100 Gflop/s is "sane".
+        assert!(f > 1.0e7 && f < 1.0e11, "got {f:.3e}");
+    }
+
+    #[test]
+    fn pack_bw_positive_and_sane() {
+        let bw = measure_pack_bw(16, 64);
+        assert!(bw > 1.0e7 && bw < 1.0e12, "got {bw:.3e}");
+    }
+
+    #[test]
+    fn nominal_is_fixed() {
+        let c = Calibration::nominal();
+        assert_eq!(c.fft_flops, 1.0e9);
+        assert_eq!(c.pack_bw, 4.0e9);
+    }
+}

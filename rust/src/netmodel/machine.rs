@@ -1,0 +1,125 @@
+//! Named machine descriptions used by the figure benches.
+//!
+//! Numbers come from the paper's §4.1 hardware descriptions and public
+//! spec sheets of the era; the *calibratable* constants (F, σ_mem, c, and
+//! the Alltoallv penalty) carry defaults that [`super::calibrate`] can
+//! override with values measured on this host's own code.
+
+use super::topo::Interconnect;
+
+/// A machine model: everything Eq. 3 needs plus placement facts.
+#[derive(Debug, Clone)]
+pub struct Machine {
+    pub name: &'static str,
+    /// Effective per-core FLOP rate on FFT kernels, flops/s (the paper's
+    /// F parameter — well below peak, FFTs are memory-bound).
+    pub flops_per_core: f64,
+    /// Per-task memory bandwidth, bytes/s (σ_mem).
+    pub mem_bw_per_task: f64,
+    /// Memory accesses per element across FFT + transpose steps (b).
+    pub b_mem_accesses: f64,
+    /// Network contention / efficiency constant (c >= 1 inflates wire
+    /// time; paper's fit implies ~6% network efficiency at 65k cores).
+    pub c_contention: f64,
+    pub cores_per_node: usize,
+    pub interconnect: Interconnect,
+    /// Multiplier on exchange time when `alltoallv` is used instead of
+    /// `alltoall` (the Cray XT pathology of §3.4; 1.0 = no penalty).
+    pub alltoallv_penalty: f64,
+    /// Per-message overhead, seconds (injection + matching). Drives the
+    /// Fig-3 effects: many small messages hurt at extreme aspect ratios,
+    /// and SeaStar's injection limit penalises very wide exchanges.
+    pub msg_latency: f64,
+}
+
+impl Machine {
+    /// Cray XT5 (Kraken/Jaguar class): 2.6 GHz Opteron, 12 cores/node,
+    /// SeaStar2 3D torus at 9.6 GB/s per link.
+    pub fn cray_xt5() -> Self {
+        Machine {
+            name: "Cray XT5",
+            // ~1 Gflop/s effective per core on FFT (of 10.4 peak).
+            flops_per_core: 1.0e9,
+            // ~25.6 GB/s node STREAM / 12 cores.
+            mem_bw_per_task: 2.1e9,
+            // Eq. 3's b counts memory accesses per element across "FFT
+            // operations and all the local and non-local transposition
+            // steps": ~log2(N) butterfly passes x (read+write) x 3
+            // dimensions + 2 transposes' pack/unpack ≈ 40 for the grids
+            // studied (fits the paper's 45% weak-scaling anchor).
+            b_mem_accesses: 40.0,
+            // Fit to the paper's anchors (212 GB/s effective bisection at 65k
+            // cores, 45% weak efficiency, ~80% comm share) -> c ~ 12.
+            c_contention: 9.0,
+            cores_per_node: 12,
+            interconnect: Interconnect::Torus3D { link_bw: 9.6e9, cores_per_node: 12 },
+            // Schulz: Alltoallv markedly slower than Alltoall on XT.
+            alltoallv_penalty: 1.6,
+            // SeaStar per-message cost is high (no RDMA offload for
+            // many-peer alltoall) — the paper's "limitation on the number
+            // of messages" hypothesis at high core counts.
+            msg_latency: 6.0e-6,
+        }
+    }
+
+    /// Sun/AMD Ranger: 2.3 GHz Opteron, 16 cores/node, InfiniBand Clos.
+    pub fn ranger() -> Self {
+        Machine {
+            name: "Ranger",
+            flops_per_core: 0.9e9,
+            mem_bw_per_task: 1.3e9,
+            b_mem_accesses: 40.0,
+            c_contention: 8.0,
+            cores_per_node: 16,
+            // SDR IB ~1 GB/s per node port.
+            interconnect: Interconnect::Clos { port_bw: 1.0e9, cores_per_node: 16 },
+            alltoallv_penalty: 1.0,
+            msg_latency: 2.0e-6,
+        }
+    }
+
+    /// "This host": a single-node machine whose constants come from
+    /// calibration; interconnect is shared memory (modelled as Clos with
+    /// memory-bandwidth ports — ROW and COLUMN exchanges both intra-node).
+    pub fn localhost(flops: f64, mem_bw: f64) -> Self {
+        Machine {
+            name: "localhost",
+            flops_per_core: flops,
+            mem_bw_per_task: mem_bw,
+            b_mem_accesses: 12.0,
+            c_contention: 1.0,
+            cores_per_node: usize::MAX,
+            interconnect: Interconnect::Clos { port_bw: mem_bw, cores_per_node: 1 },
+            alltoallv_penalty: 1.0,
+            msg_latency: 2.0e-7,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_have_positive_constants() {
+        for m in [Machine::cray_xt5(), Machine::ranger()] {
+            assert!(m.flops_per_core > 0.0);
+            assert!(m.mem_bw_per_task > 0.0);
+            assert!(m.c_contention >= 1.0);
+            assert!(m.alltoallv_penalty >= 1.0);
+            assert!(m.cores_per_node > 0);
+        }
+    }
+
+    #[test]
+    fn xt5_has_torus_ranger_has_clos() {
+        assert!((Machine::cray_xt5().interconnect.exponent() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((Machine::ranger().interconnect.exponent() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn xt5_alltoallv_penalised_ranger_not() {
+        assert!(Machine::cray_xt5().alltoallv_penalty > 1.0);
+        assert_eq!(Machine::ranger().alltoallv_penalty, 1.0);
+    }
+}

@@ -1,0 +1,34 @@
+//! Machine & network performance model — the Cray XT5 / Ranger stand-in.
+//!
+//! The paper's evaluation ran on machines with 10⁴–10⁵ cores that we do
+//! not have; the paper itself models that regime with an asymptotic cost
+//! model (Eq. 1/3/4). This module implements that model as a first-class
+//! substrate:
+//!
+//! * [`machine`] — named machine descriptions (Cray XT5 "Kraken"/"Jaguar",
+//!   Sun/AMD "Ranger") with per-core FLOP rate, per-task memory bandwidth,
+//!   interconnect law, link bandwidth, cores per node;
+//! * [`topo`] — bisection-bandwidth laws: 3D torus `σ_bi ∝ P^{2/3}` and
+//!   full-bisection fat-tree/Clos `σ_bi ∝ P`;
+//! * [`model`] — Eq. 3 evaluator: `T = N³[2.5·log₂N/(P·F) + b·m/(P·σ_mem)
+//!   + c·m/(2·σ_bi(P))]`, per-exchange pricing with the ROW-on-node
+//!   discount of §4.2-3, the Cray `Alltoallv` penalty of §3.4, and the 1D
+//!   (single-transpose) variant for Fig. 10;
+//! * [`fit`] — least-squares fit of `a/P + d/P^{2/3}` to strong-scaling
+//!   series (the magenta crosses of Fig. 4) and the effective-bisection-
+//!   bandwidth extraction (the paper's 212 GB/s estimate);
+//! * [`calibrate`] — derives F, σ_mem and c from *measured* runs of this
+//!   repo's own FFT/pack/exchange benches so paper-scale rows are grounded
+//!   in the real code's constants.
+
+pub mod calibrate;
+pub mod fit;
+pub mod machine;
+pub mod model;
+pub mod topo;
+
+pub use calibrate::Calibration;
+pub use fit::{fit_strong_scaling, FitResult};
+pub use machine::Machine;
+pub use model::{predict, CostBreakdown, ModelInput};
+pub use topo::Interconnect;

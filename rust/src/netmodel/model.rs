@@ -1,0 +1,251 @@
+//! Eq. 3 of the paper, evaluated per exchange:
+//!
+//!   T_FFT = N³ [ 2.5·log₂(N³)/(P·F) + b·m/(P·σ_mem) + c·m/(2·σ_bi(P)) ]
+//!
+//! extended with the structure §4.2 describes in words:
+//! * the ROW exchange is priced at node memory bandwidth when the whole
+//!   row fits on one node (contiguous placement, M1 ≤ cores/node),
+//!   otherwise at bisection bandwidth like the COLUMN exchange;
+//! * per-message overhead `(M−1)·t_msg` per exchange (the Fig-3 effects at
+//!   extreme aspect ratios);
+//! * the Cray `Alltoallv` penalty multiplier when USEEVEN is off;
+//! * M1 = 1 (1D slab decomposition) makes the ROW exchange vanish —
+//!   Fig. 10's single-transpose advantage falls out naturally.
+
+use super::machine::Machine;
+
+/// One scenario to price.
+#[derive(Debug, Clone)]
+pub struct ModelInput {
+    /// Global grid (cubic grids in the paper's studies, but any size works).
+    pub nx: usize,
+    pub ny: usize,
+    pub nz: usize,
+    /// Processor grid.
+    pub m1: usize,
+    pub m2: usize,
+    /// Bytes per exchanged element (16 = complex f64, 8 = complex f32).
+    pub elem_bytes: f64,
+    /// USEEVEN: padded `alltoall` instead of `alltoallv`.
+    pub use_even: bool,
+    pub machine: Machine,
+}
+
+impl ModelInput {
+    /// Cubic-grid convenience with double-precision elements.
+    pub fn cubic(n: usize, m1: usize, m2: usize, machine: Machine) -> Self {
+        ModelInput { nx: n, ny: n, nz: n, m1, m2, elem_bytes: 16.0, use_even: false, machine }
+    }
+
+    pub fn p(&self) -> usize {
+        self.m1 * self.m2
+    }
+
+    pub fn ntot(&self) -> f64 {
+        (self.nx as f64) * (self.ny as f64) * (self.nz as f64)
+    }
+
+    /// FLOPs of one forward (or backward) R2C 3D FFT: 2.5·N³·log₂(N³)
+    /// (half of the 5·N log₂ N complex-FFT convention, since R2C halves
+    /// the work — the convention behind the paper's TFlops axis).
+    pub fn flops(&self) -> f64 {
+        2.5 * self.ntot() * self.ntot().log2()
+    }
+}
+
+/// Predicted seconds for ONE forward (or backward) 3D transform, split by
+/// component. Figures quote a forward+backward pair = 2 × total.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostBreakdown {
+    pub compute: f64,
+    pub memory: f64,
+    pub row_exchange: f64,
+    pub col_exchange: f64,
+    pub latency: f64,
+}
+
+impl CostBreakdown {
+    pub fn total(&self) -> f64 {
+        self.compute + self.memory + self.row_exchange + self.col_exchange + self.latency
+    }
+
+    /// Communication share (the blue squares of Fig. 4).
+    pub fn comm(&self) -> f64 {
+        self.row_exchange + self.col_exchange + self.latency
+    }
+}
+
+/// Price one forward 3D transform under the model.
+pub fn predict(input: &ModelInput) -> CostBreakdown {
+    let m = &input.machine;
+    let p = input.p() as f64;
+    let ntot = input.ntot();
+    let vol = input.elem_bytes * ntot; // bytes moved per transpose (total)
+
+    let compute = input.flops() / (p * m.flops_per_core);
+    let memory = m.b_mem_accesses * vol / (p * m.mem_bw_per_task);
+
+    let v_penalty = if input.use_even { 1.0 } else { m.alltoallv_penalty };
+
+    // ROW exchange: (M1-1)/M1 of each task's data moves; on-node if the
+    // row fits in a node under contiguous placement.
+    let row_frac = (input.m1 as f64 - 1.0) / input.m1 as f64;
+    let row_exchange = if input.m1 <= 1 {
+        0.0
+    } else if input.m1 <= m.cores_per_node {
+        // Memory-bandwidth priced: each task streams its share in and out.
+        2.0 * row_frac * vol / (p * m.mem_bw_per_task) * v_penalty
+    } else {
+        // Row spans nodes: bisection-priced like a full exchange.
+        m.c_contention * vol / (2.0 * m.interconnect.bisection_bw(input.p())) * v_penalty
+    };
+
+    // COLUMN exchange: always spans nodes at scale (§4.2-3); halve the
+    // volume across the bisection.
+    let col_frac = (input.m2 as f64 - 1.0) / input.m2 as f64;
+    let col_exchange = if input.m2 <= 1 {
+        0.0
+    } else if input.p() <= m.cores_per_node {
+        2.0 * col_frac * vol / (p * m.mem_bw_per_task) * v_penalty
+    } else {
+        m.c_contention * vol / (2.0 * m.interconnect.bisection_bw(input.p())) * v_penalty
+    };
+
+    // Message overhead: each task sends (M1-1) + (M2-1) messages per
+    // transform.
+    let latency = ((input.m1 - 1) + (input.m2 - 1)) as f64 * m.msg_latency;
+
+    CostBreakdown { compute, memory, row_exchange, col_exchange, latency }
+}
+
+/// §2's transpose-vs-distributed comparison ([Foster] Table 1): the
+/// distributed (binary-exchange) 1D FFT moves `(N³/P)·log₂(M)` elements
+/// per task against the transpose method's `(N³/P)·(M-1)/M ≈ N³/P`, so
+/// the transpose approach exchanges ~`log₂(M)/2` times less volume
+/// (each binary-exchange step moves half the local data both ways).
+/// Returns that advantage factor for a sub-communicator of `m` tasks.
+pub fn transpose_volume_advantage(m: usize) -> f64 {
+    if m <= 1 {
+        return 1.0;
+    }
+    let mf = m as f64;
+    // distributed: log2(m) steps x (1/2 local volume each way) = log2(m)
+    // halves; transpose: (m-1)/m of local volume once.
+    (mf.log2() / 2.0) / ((mf - 1.0) / mf) * 2.0 / 2.0
+}
+
+/// TFLOPS achieved for a forward+backward pair completing in `secs`.
+pub fn tflops_pair(input: &ModelInput, secs: f64) -> f64 {
+    2.0 * input.flops() / secs / 1e12
+}
+
+/// Weak-scaling efficiency per the paper's Fig.-9 definition: core count
+/// ×8 per grid-size ×2, with a log(N) factor folded into the work: the
+/// efficiency of (n2, p2) relative to (n1, p1) is
+/// `[T1 · W2 / (W1 · (P2/P1))] / T2` with `W = N³ log₂ N`.
+pub fn weak_efficiency(n1: usize, p1: usize, t1: f64, n2: usize, p2: usize, t2: f64) -> f64 {
+    let w = |n: usize| {
+        let nf = n as f64;
+        nf * nf * nf * nf.log2()
+    };
+    let ideal_t2 = t1 * (w(n2) / w(n1)) / (p2 as f64 / p1 as f64);
+    ideal_t2 / t2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netmodel::machine::Machine;
+
+    #[test]
+    fn compute_term_scales_inverse_p() {
+        let a = predict(&ModelInput::cubic(1024, 32, 32, Machine::cray_xt5()));
+        let b = predict(&ModelInput::cubic(1024, 32, 64, Machine::cray_xt5()));
+        assert!((a.compute / b.compute - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn comm_dominates_at_high_core_counts() {
+        // Paper: ~80% of time in communication at high core counts.
+        let c = predict(&ModelInput::cubic(4096, 32, 2048, Machine::cray_xt5()));
+        assert!(c.comm() / c.total() > 0.5, "comm share {}", c.comm() / c.total());
+    }
+
+    #[test]
+    fn row_on_node_cheaper_than_square_at_scale() {
+        // Fig. 3's central claim: M1 <= cores/node beats the square grid
+        // when rows then stay on node.
+        let m = Machine::cray_xt5();
+        let on_node = predict(&ModelInput::cubic(2048, 12, 1024 / 12 * 12 / 12, m.clone()));
+        let _ = on_node;
+        let narrow = predict(&ModelInput::cubic(2048, 8, 128, m.clone()));
+        let square = predict(&ModelInput::cubic(2048, 32, 32, m.clone()));
+        assert!(
+            narrow.total() < square.total(),
+            "narrow {} vs square {}",
+            narrow.total(),
+            square.total()
+        );
+    }
+
+    #[test]
+    fn useeven_helps_on_cray_only() {
+        let mut inp = ModelInput::cubic(2048, 12, 128, Machine::cray_xt5());
+        let v = predict(&inp).total();
+        inp.use_even = true;
+        let even = predict(&inp).total();
+        assert!(even < v);
+
+        let mut inp = ModelInput::cubic(2048, 16, 96, Machine::ranger());
+        let v = predict(&inp).total();
+        inp.use_even = true;
+        let even = predict(&inp).total();
+        assert!((even - v).abs() / v < 1e-12);
+    }
+
+    #[test]
+    fn one_d_beats_2d_at_moderate_scale_but_cannot_pass_n() {
+        // Fig. 10: 1xP (one transpose) is faster at P <= N.
+        let m = Machine::cray_xt5;
+        let p = 512;
+        let one_d = predict(&ModelInput::cubic(2048, 1, p, m()));
+        let two_d = predict(&ModelInput::cubic(2048, 4, p / 4, m()));
+        assert!(one_d.total() < two_d.total());
+    }
+
+    #[test]
+    fn latency_grows_with_aspect_extremes() {
+        let m = Machine::ranger;
+        let wide = predict(&ModelInput::cubic(2048, 1, 1024, m()));
+        let best = predict(&ModelInput::cubic(2048, 16, 64, m()));
+        assert!(wide.latency > best.latency);
+    }
+
+    #[test]
+    fn transpose_beats_distributed_by_half_log_m() {
+        // Paper §2: "approximately log(M1)/2 or log(M2)/2 times less".
+        let adv = transpose_volume_advantage(1024);
+        assert!(adv > 4.5 && adv < 5.5, "log2(1024)/2 = 5, got {adv}");
+        assert_eq!(transpose_volume_advantage(1), 1.0);
+        // Monotone in m.
+        assert!(transpose_volume_advantage(64) < transpose_volume_advantage(4096));
+    }
+
+    #[test]
+    fn weak_efficiency_is_one_for_perfect_scaling() {
+        // If time grows exactly with W/P, efficiency is 1.
+        let w = |n: f64| n * n * n * n.log2();
+        let t1 = 1.0;
+        let t2 = t1 * (w(1024.0) / w(512.0)) / 8.0;
+        let e = weak_efficiency(512, 16, t1, 1024, 128, t2);
+        assert!((e - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tflops_pair_convention() {
+        let inp = ModelInput::cubic(1024, 32, 32, Machine::cray_xt5());
+        // 2 * 2.5 * N^3 log2(N^3) flops in 1 second.
+        let expect = 2.0 * 2.5 * (1024f64.powi(3)) * (1024f64.powi(3)).log2() / 1e12;
+        assert!((tflops_pair(&inp, 1.0) - expect).abs() < 1e-9);
+    }
+}

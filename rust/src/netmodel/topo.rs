@@ -1,0 +1,90 @@
+//! Interconnect bisection-bandwidth laws.
+//!
+//! The paper (§4.3): "this platform has 3D torus interconnect, and
+//! therefore bisection bandwidth scales asymptotically as O(P^{2/3})".
+//! Ranger's InfiniBand Clos is modelled as full bisection (∝ P) with a
+//! fixed per-port bandwidth.
+
+/// Interconnect family.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Interconnect {
+    /// 3D torus (SeaStar2 class): σ_bi(P) = 2 · link_bw · (P/cpn)^{2/3}
+    /// node-bisection links ×2 for the wraparound dimension pair.
+    Torus3D {
+        /// Peak bandwidth of one link, bytes/s.
+        link_bw: f64,
+        /// Cores per node (bisection counts nodes, not cores).
+        cores_per_node: usize,
+    },
+    /// Clos / fat-tree with full bisection: σ_bi(P) = port_bw · P / 2.
+    Clos {
+        /// Per-node injection bandwidth, bytes/s.
+        port_bw: f64,
+        cores_per_node: usize,
+    },
+}
+
+impl Interconnect {
+    /// Bisection bandwidth (bytes/s) of the partition holding `p` cores.
+    pub fn bisection_bw(&self, p: usize) -> f64 {
+        match *self {
+            Interconnect::Torus3D { link_bw, cores_per_node } => {
+                let nodes = (p as f64 / cores_per_node as f64).max(1.0);
+                // A cubic partition of n nodes has n^{2/3} links per face;
+                // torus wraparound doubles the cut.
+                2.0 * link_bw * nodes.powf(2.0 / 3.0)
+            }
+            Interconnect::Clos { port_bw, cores_per_node } => {
+                let nodes = (p as f64 / cores_per_node as f64).max(1.0);
+                port_bw * nodes / 2.0
+            }
+        }
+    }
+
+    /// Scaling exponent of σ_bi in P (2/3 for torus, 1 for Clos) — used by
+    /// the fit module to pick basis functions.
+    pub fn exponent(&self) -> f64 {
+        match self {
+            Interconnect::Torus3D { .. } => 2.0 / 3.0,
+            Interconnect::Clos { .. } => 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn torus_follows_two_thirds_power() {
+        let t = Interconnect::Torus3D { link_bw: 9.6e9, cores_per_node: 12 };
+        let b1 = t.bisection_bw(12 * 64); // 64 nodes
+        let b2 = t.bisection_bw(12 * 512); // 512 nodes = 8x
+        // 8^{2/3} = 4.
+        assert!((b2 / b1 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clos_scales_linearly() {
+        let c = Interconnect::Clos { port_bw: 1e9, cores_per_node: 16 };
+        let b1 = c.bisection_bw(160);
+        let b2 = c.bisection_bw(320);
+        assert!((b2 / b1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_kraken_bisection_magnitude() {
+        // Paper: 15x16x24 partition, 9.6 GB/s links -> expected bisection
+        // 16*24*9.6 GB/s = 3686 GB/s for 5462 nodes (65536 cores).
+        // Our cubic-partition law should land in the same decade.
+        let t = Interconnect::Torus3D { link_bw: 9.6e9, cores_per_node: 12 };
+        let b = t.bisection_bw(65536);
+        assert!(b > 1.0e12 && b < 1.2e13, "got {b:.3e}");
+    }
+
+    #[test]
+    fn small_p_clamps_to_one_node() {
+        let t = Interconnect::Torus3D { link_bw: 9.6e9, cores_per_node: 12 };
+        assert_eq!(t.bisection_bw(1), t.bisection_bw(12));
+    }
+}

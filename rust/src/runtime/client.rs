@@ -1,0 +1,210 @@
+//! The PJRT stage library: compiles artifact HLO text once per stage and
+//! serves executions. Shared across rank threads behind an `Arc`.
+//!
+//! Thread-safety note: the `xla` crate's wrappers are `!Send`/`!Sync`
+//! (`Rc` + raw PJRT pointers). Every XLA object here lives inside one
+//! `Mutex<Inner>`, and all compile/execute traffic is serialised through
+//! that lock, so only one thread ever touches the wrappers at a time —
+//! which makes the `unsafe impl Send for Inner` sound. Serialised PJRT
+//! execution is acceptable: this engine exists to prove the three-layer
+//! composition end to end; the native engine is the performance path
+//! (DESIGN.md §4).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::util::error::{Error, Result};
+
+use super::manifest::{Manifest, StageId, StageKind};
+
+fn rt(e: xla::Error) -> Error {
+    Error::Runtime(e.to_string())
+}
+
+struct Inner {
+    client: xla::PjRtClient,
+    cache: HashMap<StageId, xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: `Inner` is only ever accessed while holding the StageLibrary
+// mutex, so the non-atomic internals (Rc refcounts, raw PJRT pointers)
+// are never touched by two threads concurrently.
+unsafe impl Send for Inner {}
+
+/// Lazily-compiled library of per-stage PJRT executables.
+pub struct StageLibrary {
+    dir: PathBuf,
+    manifest: Manifest,
+    platform: String,
+    inner: Mutex<Inner>,
+}
+
+impl StageLibrary {
+    /// Open `dir` (must contain `manifest.txt`) on the PJRT CPU client.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(rt)?;
+        let platform = client.platform_name();
+        Ok(StageLibrary {
+            dir,
+            manifest,
+            platform,
+            inner: Mutex::new(Inner { client, cache: HashMap::new() }),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.platform.clone()
+    }
+
+    /// Whether an artifact exists for this id.
+    pub fn has(&self, id: &StageId) -> bool {
+        self.manifest.get(id).is_some()
+    }
+
+    /// Execute an artifact. `inputs` are (flat data, dims) pairs matching
+    /// the artifact's declared shapes; returns the tuple outputs as flat
+    /// vectors. Generic over f32/f64 via the xla crate's element traits.
+    fn run<E>(&self, id: &StageId, inputs: &[(&[E], &[i64])]) -> Result<Vec<Vec<E>>>
+    where
+        E: xla::NativeType + xla::ArrayElement,
+    {
+        let entry = self.manifest.get(id).ok_or_else(|| {
+            Error::Runtime(format!(
+                "no artifact for stage={} batch={} n={} dtype={} in {}",
+                id.kind.name(),
+                id.batch,
+                id.n,
+                id.dtype,
+                self.dir.display()
+            ))
+        })?;
+        let mut inner = self.inner.lock().expect("stage library poisoned");
+        if !inner.cache.contains_key(id) {
+            let proto = xla::HloModuleProto::from_text_file(
+                entry.path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+            )
+            .map_err(rt)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = inner.client.compile(&comp).map_err(rt)?;
+            inner.cache.insert(*id, exe);
+        }
+        let exe = inner.cache.get(id).expect("just inserted");
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| xla::Literal::vec1(data).reshape(dims).map_err(rt))
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&lits).map_err(rt)?;
+        let lit = result[0][0].to_literal_sync().map_err(rt)?;
+        let parts = lit.to_tuple().map_err(rt)?;
+        parts.into_iter().map(|p| p.to_vec::<E>().map_err(rt)).collect()
+    }
+
+    /// f64 entry point (used by the coordinator's `PjrtExec` impl).
+    pub fn run_f64(&self, id: &StageId, inputs: &[(&[f64], &[i64])]) -> Result<Vec<Vec<f64>>> {
+        debug_assert_eq!(id.dtype, "f64");
+        self.run(id, inputs)
+    }
+
+    /// f32 entry point.
+    pub fn run_f32(&self, id: &StageId, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        debug_assert_eq!(id.dtype, "f32");
+        self.run(id, inputs)
+    }
+
+    /// Convenience: batched R2C over X lines, f64:
+    /// input (batch*n) → (re, im) each (batch*(n/2+1)).
+    pub fn x_r2c_f64(&self, batch: usize, n: usize, input: &[f64]) -> Result<(Vec<f64>, Vec<f64>)> {
+        let id = StageId { kind: StageKind::XR2c, batch, n, dtype: "f64" };
+        let dims = [batch as i64, n as i64];
+        let mut out = self.run_f64(&id, &[(input, &dims)])?;
+        let im = out.pop().ok_or_else(|| Error::Runtime("missing im output".into()))?;
+        let re = out.pop().ok_or_else(|| Error::Runtime("missing re output".into()))?;
+        Ok((re, im))
+    }
+
+    /// Convenience: batched C2C (forward or unnormalised inverse), f64.
+    pub fn c2c_f64(
+        &self,
+        inverse: bool,
+        batch: usize,
+        n: usize,
+        re: &[f64],
+        im: &[f64],
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        let kind = if inverse { StageKind::C2cBwd } else { StageKind::C2cFwd };
+        let id = StageId { kind, batch, n, dtype: "f64" };
+        let dims = [batch as i64, n as i64];
+        let mut out = self.run_f64(&id, &[(re, &dims), (im, &dims)])?;
+        let oim = out.pop().ok_or_else(|| Error::Runtime("missing im output".into()))?;
+        let ore = out.pop().ok_or_else(|| Error::Runtime("missing re output".into()))?;
+        Ok((ore, oim))
+    }
+
+    /// Convenience: batched C2R (unnormalised), f64. Inputs are packed
+    /// half-complex planes of width n/2+1; output is (batch*n) real.
+    pub fn x_c2r_f64(&self, batch: usize, n: usize, re: &[f64], im: &[f64]) -> Result<Vec<f64>> {
+        let id = StageId { kind: StageKind::XC2r, batch, n, dtype: "f64" };
+        let h = (n / 2 + 1) as i64;
+        let dims = [batch as i64, h];
+        let mut out = self.run_f64(&id, &[(re, &dims), (im, &dims)])?;
+        out.pop().ok_or_else(|| Error::Runtime("missing output".into()))
+    }
+
+    /// Convenience: batched DCT-I, f64.
+    pub fn cheby_f64(&self, batch: usize, n: usize, input: &[f64]) -> Result<Vec<f64>> {
+        let id = StageId { kind: StageKind::Cheby, batch, n, dtype: "f64" };
+        let dims = [batch as i64, n as i64];
+        let mut out = self.run_f64(&id, &[(input, &dims)])?;
+        out.pop().ok_or_else(|| Error::Runtime("missing output".into()))
+    }
+
+    /// Convenience: fused whole-cube 3D R2C, f64 (smoke-test artifact).
+    pub fn fft3d_r2c_f64(&self, n: usize, input: &[f64]) -> Result<(Vec<f64>, Vec<f64>)> {
+        let id = StageId { kind: StageKind::Fft3dR2c, batch: n * n, n, dtype: "f64" };
+        let dims = [n as i64, n as i64, n as i64];
+        let mut out = self.run_f64(&id, &[(input, &dims)])?;
+        let im = out.pop().ok_or_else(|| Error::Runtime("missing im output".into()))?;
+        let re = out.pop().ok_or_else(|| Error::Runtime("missing re output".into()))?;
+        Ok((re, im))
+    }
+}
+
+impl std::fmt::Debug for StageLibrary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StageLibrary")
+            .field("dir", &self.dir)
+            .field("artifacts", &self.manifest.len())
+            .finish()
+    }
+}
+
+// Tests that need real artifacts live in rust/tests/runtime_pjrt.rs (they
+// require `make artifacts` to have run); here we only cover error paths
+// that need no artifacts.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_missing_dir_errors() {
+        let err = StageLibrary::open("/nonexistent/artifacts").unwrap_err();
+        assert!(matches!(err, Error::Io(_)));
+    }
+
+    #[test]
+    fn missing_artifact_is_reported_with_id() {
+        let dir = std::env::temp_dir().join("p3dfft_empty_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "# empty\n").unwrap();
+        let lib = StageLibrary::open(&dir).unwrap();
+        let err = lib.x_r2c_f64(4, 8, &vec![0.0; 32]).unwrap_err();
+        assert!(err.to_string().contains("x_r2c"), "{err}");
+    }
+}

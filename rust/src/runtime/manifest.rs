@@ -1,0 +1,198 @@
+//! Artifact manifest parser (`artifacts/manifest.txt`, written by
+//! `python -m compile.aot`). Plain tab-separated text — no serde offline.
+//!
+//! Format (one artifact per line):
+//!   `<file>\t<stage>\t<batch>\t<n>\t<dtype>\t<n_inputs>\t<n_outputs>`
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::error::{Error, Result};
+
+/// The compute stage a given artifact implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StageKind {
+    /// Real-to-complex forward over X lines.
+    XR2c,
+    /// Complex forward over Y or Z lines.
+    C2cFwd,
+    /// Complex (unnormalised) inverse.
+    C2cBwd,
+    /// Half-complex to real (unnormalised) inverse over X lines.
+    XC2r,
+    /// DCT-I (Chebyshev).
+    Cheby,
+    /// Fused whole-3D R2C for one cube (runtime smoke test).
+    Fft3dR2c,
+}
+
+impl StageKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "x_r2c" => StageKind::XR2c,
+            "c2c_fwd" => StageKind::C2cFwd,
+            "c2c_bwd" => StageKind::C2cBwd,
+            "x_c2r" => StageKind::XC2r,
+            "cheby" => StageKind::Cheby,
+            "fft3d_r2c" => StageKind::Fft3dR2c,
+            other => return Err(Error::Runtime(format!("unknown stage kind {other:?}"))),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StageKind::XR2c => "x_r2c",
+            StageKind::C2cFwd => "c2c_fwd",
+            StageKind::C2cBwd => "c2c_bwd",
+            StageKind::XC2r => "x_c2r",
+            StageKind::Cheby => "cheby",
+            StageKind::Fft3dR2c => "fft3d_r2c",
+        }
+    }
+}
+
+/// Key identifying one artifact: stage + static shape + dtype.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct StageId {
+    pub kind: StageKind,
+    pub batch: usize,
+    pub n: usize,
+    /// "f32" or "f64".
+    pub dtype: &'static str,
+}
+
+fn intern_dtype(s: &str) -> Result<&'static str> {
+    match s {
+        "f32" => Ok("f32"),
+        "f64" => Ok("f64"),
+        other => Err(Error::Runtime(format!("unknown dtype {other:?}"))),
+    }
+}
+
+/// One manifest entry.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub id: StageId,
+    pub path: PathBuf,
+    pub n_inputs: usize,
+    pub n_outputs: usize,
+}
+
+/// Parsed manifest: stage id → artifact file.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: HashMap<StageId, Entry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; artifact paths are resolved against `dir`.
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut entries = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split('\t').collect();
+            if fields.len() != 7 {
+                return Err(Error::Parse {
+                    line: lineno + 1,
+                    msg: format!("expected 7 tab-separated fields, got {}", fields.len()),
+                });
+            }
+            let parse_usize = |s: &str, what: &str| {
+                s.parse::<usize>().map_err(|_| Error::Parse {
+                    line: lineno + 1,
+                    msg: format!("bad {what}: {s:?}"),
+                })
+            };
+            let id = StageId {
+                kind: StageKind::parse(fields[1])?,
+                batch: parse_usize(fields[2], "batch")?,
+                n: parse_usize(fields[3], "n")?,
+                dtype: intern_dtype(fields[4])?,
+            };
+            entries.insert(
+                id,
+                Entry {
+                    id,
+                    path: dir.join(fields[0]),
+                    n_inputs: parse_usize(fields[5], "n_inputs")?,
+                    n_outputs: parse_usize(fields[6], "n_outputs")?,
+                },
+            );
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn get(&self, id: &StageId) -> Option<&Entry> {
+        self.entries.get(id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// All ids of a given kind (diagnostics).
+    pub fn ids_of(&self, kind: StageKind) -> Vec<StageId> {
+        let mut v: Vec<StageId> =
+            self.entries.keys().filter(|id| id.kind == kind).copied().collect();
+        v.sort_by_key(|id| (id.batch, id.n, id.dtype));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# p3dfft artifact manifest v1
+# file\tstage\tbatch\tn\tdtype\tn_inputs\tn_outputs
+x_r2c_b256_n32_f64.hlo.txt\tx_r2c\t256\t32\tf64\t1\t2
+c2c_fwd_b144_n32_f32.hlo.txt\tc2c_fwd\t144\t32\tf32\t2\t2
+";
+
+    #[test]
+    fn parses_entries_and_resolves_paths() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/artifacts")).unwrap();
+        assert_eq!(m.len(), 2);
+        let id = StageId { kind: StageKind::XR2c, batch: 256, n: 32, dtype: "f64" };
+        let e = m.get(&id).unwrap();
+        assert_eq!(e.n_inputs, 1);
+        assert_eq!(e.n_outputs, 2);
+        assert!(e.path.ends_with("x_r2c_b256_n32_f64.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        let bad = "only\tthree\tfields\n";
+        let err = Manifest::parse(bad, Path::new(".")).unwrap_err();
+        assert!(err.to_string().contains("line 1"));
+    }
+
+    #[test]
+    fn rejects_unknown_stage_and_dtype() {
+        let bad = "f.hlo\tbogus\t1\t2\tf64\t1\t1\n";
+        assert!(Manifest::parse(bad, Path::new(".")).is_err());
+        let bad = "f.hlo\tx_r2c\t1\t2\tf16\t1\t1\n";
+        assert!(Manifest::parse(bad, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn ids_of_filters_by_kind() {
+        let m = Manifest::parse(SAMPLE, Path::new(".")).unwrap();
+        assert_eq!(m.ids_of(StageKind::XR2c).len(), 1);
+        assert_eq!(m.ids_of(StageKind::Cheby).len(), 0);
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt` produced by
+//! `python/compile/aot.py`) and execute them from the Rust hot path.
+//!
+//! This is the L3↔L2 seam of the three-layer architecture: python/JAX runs
+//! once at build time; at run time the [`StageLibrary`] compiles the HLO
+//! text on the PJRT CPU client and serves per-stage executions to the
+//! coordinator's `Engine::Pjrt` path. Interchange is HLO *text* — the
+//! image's xla_extension 0.5.1 rejects jax ≥ 0.5's serialized protos
+//! (64-bit instruction ids), while the text parser reassigns ids.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::StageLibrary;
+pub use manifest::{Manifest, StageId, StageKind};

@@ -1,0 +1,781 @@
+//! Transpose plans: geometry + buffer metadata for the ROW (X↔Y) and
+//! COLUMN (Y↔Z) exchanges, executed over a [`Comm`] with either
+//! `alltoallv` (default) or the USEEVEN padded `alltoall` (§3.4).
+
+use crate::fft::{Complex, Real};
+use crate::grid::{block_range, Decomp};
+use crate::mpi::Comm;
+use crate::util::timer::{Stage, StageTimer};
+
+use super::pack;
+
+/// Exchange options (the paper's user-tunable knobs).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExchangeOptions {
+    /// USEEVEN: pad blocks to a uniform size and use `alltoall` instead of
+    /// `alltoallv` — the Cray XT workaround of §3.4/[Schulz].
+    pub use_even: bool,
+}
+
+/// Plan for the X↔Y transpose within one ROW sub-communicator.
+///
+/// Forward: spectral X-pencil `[nz][ny_loc][h]` → Y-pencil
+/// `[nz][h_loc][ny_glob]`. Backward is the exact inverse.
+#[derive(Debug, Clone)]
+pub struct TransposeXY {
+    /// My row rank (r1) and the row size (M1).
+    pub m1: usize,
+    pub r1: usize,
+    /// Local z extent (shared by the whole row).
+    pub nz: usize,
+    /// Global packed spectral width and global Y.
+    pub h: usize,
+    pub ny_glob: usize,
+    /// Global spectral-x ranges per row peer.
+    pub x_ranges: Vec<std::ops::Range<usize>>,
+    /// Global y ranges per row peer.
+    pub y_ranges: Vec<std::ops::Range<usize>>,
+}
+
+impl TransposeXY {
+    /// Build the plan for `world_rank` of `decomp`.
+    pub fn new(decomp: &Decomp, world_rank: usize) -> Self {
+        let (r1, _r2) = decomp.pgrid.coords(world_rank);
+        let m1 = decomp.pgrid.m1;
+        let xp = decomp.x_pencil_spec(world_rank);
+        TransposeXY {
+            m1,
+            r1,
+            nz: xp.dims[0],
+            h: decomp.h(),
+            ny_glob: decomp.ny,
+            x_ranges: (0..m1).map(|j| block_range(decomp.h(), m1, j)).collect(),
+            y_ranges: (0..m1).map(|j| block_range(decomp.ny, m1, j)).collect(),
+        }
+    }
+
+    /// My local y extent (X-pencil) and local spectral width (Y-pencil).
+    pub fn ny_loc(&self) -> usize {
+        self.y_ranges[self.r1].len()
+    }
+
+    pub fn h_loc(&self) -> usize {
+        self.x_ranges[self.r1].len()
+    }
+
+    /// Elements sent to row peer `j` in the forward direction.
+    pub fn scount_fwd(&self, j: usize) -> usize {
+        self.nz * self.ny_loc() * self.x_ranges[j].len()
+    }
+
+    /// Elements received from row peer `j` in the forward direction.
+    pub fn rcount_fwd(&self, j: usize) -> usize {
+        self.nz * self.h_loc() * self.y_ranges[j].len()
+    }
+
+    /// Uniform padded block for USEEVEN (max over all row pairs).
+    pub fn even_block(&self) -> usize {
+        let max_x = self.x_ranges.iter().map(|r| r.len()).max().unwrap_or(0);
+        let max_y = self.y_ranges.iter().map(|r| r.len()).max().unwrap_or(0);
+        self.nz * max_x * max_y
+    }
+
+    /// Send/recv buffer sizes (elements) for either direction.
+    pub fn buf_len(&self, opts: ExchangeOptions) -> usize {
+        if opts.use_even {
+            self.even_block() * self.m1
+        } else {
+            // Forward send total == backward recv total and vice versa;
+            // both equal nz * ny_loc * h ... take the max of the two.
+            let fwd: usize = (0..self.m1).map(|j| self.scount_fwd(j)).sum();
+            let bwd: usize = (0..self.m1).map(|j| self.rcount_fwd(j)).sum();
+            fwd.max(bwd)
+        }
+    }
+
+    /// Forward transpose: `input` spectral X-pencil → `output` Y-pencil.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward<T: Real>(
+        &self,
+        row: &Comm,
+        input: &[Complex<T>],
+        output: &mut [Complex<T>],
+        sendbuf: &mut [Complex<T>],
+        recvbuf: &mut [Complex<T>],
+        opts: ExchangeOptions,
+        timer: &mut StageTimer,
+    ) {
+        debug_assert_eq!(row.size(), self.m1);
+        debug_assert_eq!(row.rank(), self.r1);
+        let (scounts, sdispls, rcounts, rdispls) = self.meta_fwd(opts);
+        timer.time(Stage::Pack, || {
+            for j in 0..self.m1 {
+                let r = &self.x_ranges[j];
+                pack::pack_x_to_y(
+                    input,
+                    self.nz,
+                    self.ny_loc(),
+                    self.h,
+                    r.start,
+                    r.end,
+                    &mut sendbuf[sdispls[j]..sdispls[j] + self.scount_fwd(j)],
+                );
+            }
+        });
+        timer.time(Stage::Exchange, || {
+            self.do_exchange(row, sendbuf, recvbuf, &scounts, &sdispls, &rcounts, &rdispls, opts);
+        });
+        timer.time(Stage::Unpack, || {
+            for j in 0..self.m1 {
+                let r = &self.y_ranges[j];
+                pack::unpack_x_to_y(
+                    &recvbuf[rdispls[j]..rdispls[j] + self.rcount_fwd(j)],
+                    self.nz,
+                    self.h_loc(),
+                    self.ny_glob,
+                    r.start,
+                    r.end,
+                    output,
+                );
+            }
+        });
+    }
+
+    /// Backward transpose: `input` Y-pencil → `output` spectral X-pencil.
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward<T: Real>(
+        &self,
+        row: &Comm,
+        input: &[Complex<T>],
+        output: &mut [Complex<T>],
+        sendbuf: &mut [Complex<T>],
+        recvbuf: &mut [Complex<T>],
+        opts: ExchangeOptions,
+        timer: &mut StageTimer,
+    ) {
+        // Counts reverse: backward scount(j) == forward rcount(j).
+        let (rc, rd, sc, sd) = self.meta_fwd(opts);
+        let (scounts, sdispls, rcounts, rdispls) = (sc, sd, rc, rd);
+        timer.time(Stage::Pack, || {
+            for j in 0..self.m1 {
+                let r = &self.y_ranges[j];
+                pack::pack_y_to_x(
+                    input,
+                    self.nz,
+                    self.h_loc(),
+                    self.ny_glob,
+                    r.start,
+                    r.end,
+                    &mut sendbuf[sdispls[j]..sdispls[j] + self.rcount_fwd(j)],
+                );
+            }
+        });
+        timer.time(Stage::Exchange, || {
+            self.do_exchange(row, sendbuf, recvbuf, &scounts, &sdispls, &rcounts, &rdispls, opts);
+        });
+        timer.time(Stage::Unpack, || {
+            for j in 0..self.m1 {
+                let r = &self.x_ranges[j];
+                pack::unpack_y_to_x(
+                    &recvbuf[rdispls[j]..rdispls[j] + self.scount_fwd(j)],
+                    self.nz,
+                    self.ny_loc(),
+                    self.h,
+                    r.start,
+                    r.end,
+                    output,
+                );
+            }
+        });
+    }
+
+
+    /// Non-STRIDE1 forward: XYZ-order spectral X-pencil → XYZ-order
+    /// Y-pencil `[nz][ny_glob][h_loc]`. Same counts/volumes as the STRIDE1
+    /// path; packs are contiguous slab copies (no local transpose).
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_xyz<T: Real>(
+        &self,
+        row: &Comm,
+        input: &[Complex<T>],
+        output: &mut [Complex<T>],
+        sendbuf: &mut [Complex<T>],
+        recvbuf: &mut [Complex<T>],
+        opts: ExchangeOptions,
+        timer: &mut StageTimer,
+    ) {
+        let (scounts, sdispls, rcounts, rdispls) = self.meta_fwd(opts);
+        timer.time(Stage::Pack, || {
+            for j in 0..self.m1 {
+                let r = &self.x_ranges[j];
+                pack::pack_x_to_y_xyz(
+                    input,
+                    self.nz,
+                    self.ny_loc(),
+                    self.h,
+                    r.start,
+                    r.end,
+                    &mut sendbuf[sdispls[j]..sdispls[j] + self.scount_fwd(j)],
+                );
+            }
+        });
+        timer.time(Stage::Exchange, || {
+            self.do_exchange(row, sendbuf, recvbuf, &scounts, &sdispls, &rcounts, &rdispls, opts);
+        });
+        timer.time(Stage::Unpack, || {
+            for j in 0..self.m1 {
+                let r = &self.y_ranges[j];
+                pack::unpack_x_to_y_xyz(
+                    &recvbuf[rdispls[j]..rdispls[j] + self.rcount_fwd(j)],
+                    self.nz,
+                    self.h_loc(),
+                    self.ny_glob,
+                    r.start,
+                    r.end,
+                    output,
+                );
+            }
+        });
+    }
+
+    /// Non-STRIDE1 backward: XYZ-order Y-pencil → XYZ-order spectral
+    /// X-pencil.
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward_xyz<T: Real>(
+        &self,
+        row: &Comm,
+        input: &[Complex<T>],
+        output: &mut [Complex<T>],
+        sendbuf: &mut [Complex<T>],
+        recvbuf: &mut [Complex<T>],
+        opts: ExchangeOptions,
+        timer: &mut StageTimer,
+    ) {
+        let (rc, rd, sc, sd) = self.meta_fwd(opts);
+        let (scounts, sdispls, rcounts, rdispls) = (sc, sd, rc, rd);
+        timer.time(Stage::Pack, || {
+            for j in 0..self.m1 {
+                let r = &self.y_ranges[j];
+                pack::pack_y_to_x_xyz(
+                    input,
+                    self.nz,
+                    self.h_loc(),
+                    self.ny_glob,
+                    r.start,
+                    r.end,
+                    &mut sendbuf[sdispls[j]..sdispls[j] + self.rcount_fwd(j)],
+                );
+            }
+        });
+        timer.time(Stage::Exchange, || {
+            self.do_exchange(row, sendbuf, recvbuf, &scounts, &sdispls, &rcounts, &rdispls, opts);
+        });
+        timer.time(Stage::Unpack, || {
+            for j in 0..self.m1 {
+                let r = &self.x_ranges[j];
+                pack::unpack_y_to_x_xyz(
+                    &recvbuf[rdispls[j]..rdispls[j] + self.scount_fwd(j)],
+                    self.nz,
+                    self.ny_loc(),
+                    self.h,
+                    r.start,
+                    r.end,
+                    output,
+                );
+            }
+        });
+    }
+
+    /// counts/displs for the forward direction under `opts`.
+    fn meta_fwd(&self, opts: ExchangeOptions) -> (Vec<usize>, Vec<usize>, Vec<usize>, Vec<usize>) {
+        meta(
+            self.m1,
+            opts,
+            |j| self.scount_fwd(j),
+            |j| self.rcount_fwd(j),
+            self.even_block(),
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn do_exchange<T: Real>(
+        &self,
+        comm: &Comm,
+        sendbuf: &[Complex<T>],
+        recvbuf: &mut [Complex<T>],
+        scounts: &[usize],
+        sdispls: &[usize],
+        rcounts: &[usize],
+        rdispls: &[usize],
+        opts: ExchangeOptions,
+    ) {
+        let p = self.m1;
+        if opts.use_even {
+            let len = self.even_block() * p;
+            comm.alltoall(&sendbuf[..len], &mut recvbuf[..len], self.even_block());
+        } else {
+            let slen = sdispls[p - 1] + scounts[p - 1];
+            let rlen = rdispls[p - 1] + rcounts[p - 1];
+            comm.alltoallv(&sendbuf[..slen], scounts, sdispls, &mut recvbuf[..rlen], rcounts, rdispls);
+        }
+    }
+}
+
+/// Plan for the Y↔Z transpose within one COLUMN sub-communicator.
+///
+/// Forward: Y-pencil `[nz_loc][h_loc][ny_glob]` → Z-pencil
+/// `[h_loc][ny2_loc][nz_glob]`.
+#[derive(Debug, Clone)]
+pub struct TransposeYZ {
+    pub m2: usize,
+    pub r2: usize,
+    /// Local packed-spectral extent (shared by the whole column).
+    pub h_loc: usize,
+    pub ny_glob: usize,
+    pub nz_glob: usize,
+    /// Global y ranges per column peer (split by M2).
+    pub y_ranges: Vec<std::ops::Range<usize>>,
+    /// Global z ranges per column peer.
+    pub z_ranges: Vec<std::ops::Range<usize>>,
+}
+
+impl TransposeYZ {
+    pub fn new(decomp: &Decomp, world_rank: usize) -> Self {
+        let (_r1, r2) = decomp.pgrid.coords(world_rank);
+        let m2 = decomp.pgrid.m2;
+        let yp = decomp.y_pencil(world_rank);
+        TransposeYZ {
+            m2,
+            r2,
+            h_loc: yp.dims[1],
+            ny_glob: decomp.ny,
+            nz_glob: decomp.nz,
+            y_ranges: (0..m2).map(|j| block_range(decomp.ny, m2, j)).collect(),
+            z_ranges: (0..m2).map(|j| block_range(decomp.nz, m2, j)).collect(),
+        }
+    }
+
+    pub fn nz_loc(&self) -> usize {
+        self.z_ranges[self.r2].len()
+    }
+
+    pub fn ny2_loc(&self) -> usize {
+        self.y_ranges[self.r2].len()
+    }
+
+    pub fn scount_fwd(&self, j: usize) -> usize {
+        self.h_loc * self.y_ranges[j].len() * self.nz_loc()
+    }
+
+    pub fn rcount_fwd(&self, j: usize) -> usize {
+        self.h_loc * self.ny2_loc() * self.z_ranges[j].len()
+    }
+
+    pub fn even_block(&self) -> usize {
+        let max_y = self.y_ranges.iter().map(|r| r.len()).max().unwrap_or(0);
+        let max_z = self.z_ranges.iter().map(|r| r.len()).max().unwrap_or(0);
+        self.h_loc * max_y * max_z
+    }
+
+    pub fn buf_len(&self, opts: ExchangeOptions) -> usize {
+        if opts.use_even {
+            self.even_block() * self.m2
+        } else {
+            let fwd: usize = (0..self.m2).map(|j| self.scount_fwd(j)).sum();
+            let bwd: usize = (0..self.m2).map(|j| self.rcount_fwd(j)).sum();
+            fwd.max(bwd)
+        }
+    }
+
+    /// Forward transpose: Y-pencil → Z-pencil.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward<T: Real>(
+        &self,
+        col: &Comm,
+        input: &[Complex<T>],
+        output: &mut [Complex<T>],
+        sendbuf: &mut [Complex<T>],
+        recvbuf: &mut [Complex<T>],
+        opts: ExchangeOptions,
+        timer: &mut StageTimer,
+    ) {
+        debug_assert_eq!(col.size(), self.m2);
+        debug_assert_eq!(col.rank(), self.r2);
+        let (scounts, sdispls, rcounts, rdispls) = self.meta_fwd(opts);
+        timer.time(Stage::Pack, || {
+            for j in 0..self.m2 {
+                let r = &self.y_ranges[j];
+                pack::pack_y_to_z(
+                    input,
+                    self.nz_loc(),
+                    self.h_loc,
+                    self.ny_glob,
+                    r.start,
+                    r.end,
+                    &mut sendbuf[sdispls[j]..sdispls[j] + self.scount_fwd(j)],
+                );
+            }
+        });
+        timer.time(Stage::Exchange, || {
+            self.do_exchange(col, sendbuf, recvbuf, &scounts, &sdispls, &rcounts, &rdispls, opts);
+        });
+        timer.time(Stage::Unpack, || {
+            for j in 0..self.m2 {
+                let r = &self.z_ranges[j];
+                pack::unpack_y_to_z(
+                    &recvbuf[rdispls[j]..rdispls[j] + self.rcount_fwd(j)],
+                    self.h_loc,
+                    self.ny2_loc(),
+                    self.nz_glob,
+                    r.start,
+                    r.end,
+                    output,
+                );
+            }
+        });
+    }
+
+    /// Backward transpose: Z-pencil → Y-pencil.
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward<T: Real>(
+        &self,
+        col: &Comm,
+        input: &[Complex<T>],
+        output: &mut [Complex<T>],
+        sendbuf: &mut [Complex<T>],
+        recvbuf: &mut [Complex<T>],
+        opts: ExchangeOptions,
+        timer: &mut StageTimer,
+    ) {
+        let (rc, rd, sc, sd) = self.meta_fwd(opts);
+        let (scounts, sdispls, rcounts, rdispls) = (sc, sd, rc, rd);
+        timer.time(Stage::Pack, || {
+            for j in 0..self.m2 {
+                let r = &self.z_ranges[j];
+                pack::pack_z_to_y(
+                    input,
+                    self.h_loc,
+                    self.ny2_loc(),
+                    self.nz_glob,
+                    r.start,
+                    r.end,
+                    &mut sendbuf[sdispls[j]..sdispls[j] + self.rcount_fwd(j)],
+                );
+            }
+        });
+        timer.time(Stage::Exchange, || {
+            self.do_exchange(col, sendbuf, recvbuf, &scounts, &sdispls, &rcounts, &rdispls, opts);
+        });
+        timer.time(Stage::Unpack, || {
+            for j in 0..self.m2 {
+                let r = &self.y_ranges[j];
+                pack::unpack_z_to_y(
+                    &recvbuf[rdispls[j]..rdispls[j] + self.scount_fwd(j)],
+                    self.nz_loc(),
+                    self.h_loc,
+                    self.ny_glob,
+                    r.start,
+                    r.end,
+                    output,
+                );
+            }
+        });
+    }
+
+
+    /// Non-STRIDE1 forward: XYZ-order Y-pencil `[nz_loc][ny_glob][h_loc]`
+    /// → XYZ-order Z-pencil `[nz_glob][ny2_loc][h_loc]`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_xyz<T: Real>(
+        &self,
+        col: &Comm,
+        input: &[Complex<T>],
+        output: &mut [Complex<T>],
+        sendbuf: &mut [Complex<T>],
+        recvbuf: &mut [Complex<T>],
+        opts: ExchangeOptions,
+        timer: &mut StageTimer,
+    ) {
+        let (scounts, sdispls, rcounts, rdispls) = self.meta_fwd(opts);
+        timer.time(Stage::Pack, || {
+            for j in 0..self.m2 {
+                let r = &self.y_ranges[j];
+                pack::pack_y_to_z_xyz(
+                    input,
+                    self.nz_loc(),
+                    self.h_loc,
+                    self.ny_glob,
+                    r.start,
+                    r.end,
+                    &mut sendbuf[sdispls[j]..sdispls[j] + self.scount_fwd(j)],
+                );
+            }
+        });
+        timer.time(Stage::Exchange, || {
+            self.do_exchange(col, sendbuf, recvbuf, &scounts, &sdispls, &rcounts, &rdispls, opts);
+        });
+        timer.time(Stage::Unpack, || {
+            for j in 0..self.m2 {
+                let r = &self.z_ranges[j];
+                pack::unpack_y_to_z_xyz(
+                    &recvbuf[rdispls[j]..rdispls[j] + self.rcount_fwd(j)],
+                    self.h_loc,
+                    self.ny2_loc(),
+                    self.nz_glob,
+                    r.start,
+                    r.end,
+                    output,
+                );
+            }
+        });
+    }
+
+    /// Non-STRIDE1 backward: XYZ-order Z-pencil → XYZ-order Y-pencil.
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward_xyz<T: Real>(
+        &self,
+        col: &Comm,
+        input: &[Complex<T>],
+        output: &mut [Complex<T>],
+        sendbuf: &mut [Complex<T>],
+        recvbuf: &mut [Complex<T>],
+        opts: ExchangeOptions,
+        timer: &mut StageTimer,
+    ) {
+        let (rc, rd, sc, sd) = self.meta_fwd(opts);
+        let (scounts, sdispls, rcounts, rdispls) = (sc, sd, rc, rd);
+        timer.time(Stage::Pack, || {
+            for j in 0..self.m2 {
+                let r = &self.z_ranges[j];
+                pack::pack_z_to_y_xyz(
+                    input,
+                    self.h_loc,
+                    self.ny2_loc(),
+                    self.nz_glob,
+                    r.start,
+                    r.end,
+                    &mut sendbuf[sdispls[j]..sdispls[j] + self.rcount_fwd(j)],
+                );
+            }
+        });
+        timer.time(Stage::Exchange, || {
+            self.do_exchange(col, sendbuf, recvbuf, &scounts, &sdispls, &rcounts, &rdispls, opts);
+        });
+        timer.time(Stage::Unpack, || {
+            for j in 0..self.m2 {
+                let r = &self.y_ranges[j];
+                pack::unpack_z_to_y_xyz(
+                    &recvbuf[rdispls[j]..rdispls[j] + self.scount_fwd(j)],
+                    self.nz_loc(),
+                    self.h_loc,
+                    self.ny_glob,
+                    r.start,
+                    r.end,
+                    output,
+                );
+            }
+        });
+    }
+
+    fn meta_fwd(&self, opts: ExchangeOptions) -> (Vec<usize>, Vec<usize>, Vec<usize>, Vec<usize>) {
+        meta(
+            self.m2,
+            opts,
+            |j| self.scount_fwd(j),
+            |j| self.rcount_fwd(j),
+            self.even_block(),
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn do_exchange<T: Real>(
+        &self,
+        comm: &Comm,
+        sendbuf: &[Complex<T>],
+        recvbuf: &mut [Complex<T>],
+        scounts: &[usize],
+        sdispls: &[usize],
+        rcounts: &[usize],
+        rdispls: &[usize],
+        opts: ExchangeOptions,
+    ) {
+        let p = self.m2;
+        if opts.use_even {
+            let len = self.even_block() * p;
+            comm.alltoall(&sendbuf[..len], &mut recvbuf[..len], self.even_block());
+        } else {
+            let slen = sdispls[p - 1] + scounts[p - 1];
+            let rlen = rdispls[p - 1] + rcounts[p - 1];
+            comm.alltoallv(&sendbuf[..slen], scounts, sdispls, &mut recvbuf[..rlen], rcounts, rdispls);
+        }
+    }
+}
+
+/// Shared counts/displacements builder. Under USEEVEN every displacement
+/// advances by the uniform padded block (contents beyond the true count
+/// are don't-care padding, exactly as in the paper's workaround).
+fn meta(
+    p: usize,
+    opts: ExchangeOptions,
+    scount: impl Fn(usize) -> usize,
+    rcount: impl Fn(usize) -> usize,
+    even_block: usize,
+) -> (Vec<usize>, Vec<usize>, Vec<usize>, Vec<usize>) {
+    let mut scounts = Vec::with_capacity(p);
+    let mut rcounts = Vec::with_capacity(p);
+    let mut sdispls = Vec::with_capacity(p);
+    let mut rdispls = Vec::with_capacity(p);
+    let (mut soff, mut roff) = (0usize, 0usize);
+    for j in 0..p {
+        scounts.push(scount(j));
+        rcounts.push(rcount(j));
+        sdispls.push(soff);
+        rdispls.push(roff);
+        if opts.use_even {
+            soff += even_block;
+            roff += even_block;
+        } else {
+            soff += scount(j);
+            roff += rcount(j);
+        }
+    }
+    (scounts, sdispls, rcounts, rdispls)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::ProcGrid;
+    use crate::mpi::Universe;
+
+    fn enc(x: usize, y: usize, z: usize) -> Complex<f64> {
+        Complex::new((x * 1_000_000 + y * 1_000 + z) as f64, -1.0)
+    }
+
+    /// Distributed X→Y→Z forward chain on encoded global coordinates, then
+    /// back — every element must land at its Table-1 location and return.
+    fn roundtrip_case(nx: usize, ny: usize, nz: usize, m1: usize, m2: usize, use_even: bool) {
+        let decomp = Decomp::new(nx, ny, nz, ProcGrid::new(m1, m2)).unwrap();
+        let opts = ExchangeOptions { use_even };
+        let u = Universe::new(decomp.p());
+        let results = u
+            .run(move |c| {
+                let rank = c.rank();
+                let (row, col) = c.cart_2d(decomp.pgrid)?;
+                let txy = TransposeXY::new(&decomp, rank);
+                let tyz = TransposeYZ::new(&decomp, rank);
+                let xp = decomp.x_pencil_spec(rank);
+                let yp = decomp.y_pencil(rank);
+                let zp = decomp.z_pencil(rank);
+                let mut timer = StageTimer::new();
+
+                // Fill the spectral X-pencil with encoded global coords.
+                let mut xdata = vec![Complex::zero(); xp.len()];
+                for z in 0..xp.dims[0] {
+                    for y in 0..xp.dims[1] {
+                        for x in 0..decomp.h() {
+                            xdata[(z * xp.dims[1] + y) * decomp.h() + x] =
+                                enc(x, y + xp.offsets[1], z + xp.offsets[0]);
+                        }
+                    }
+                }
+
+                let blen = txy.buf_len(opts).max(tyz.buf_len(opts));
+                let mut sb = vec![Complex::zero(); blen];
+                let mut rb = vec![Complex::zero(); blen];
+
+                let mut ydata = vec![Complex::zero(); yp.len()];
+                txy.forward(&row, &xdata, &mut ydata, &mut sb, &mut rb, opts, &mut timer);
+                // Verify Y-pencil contents.
+                for z in 0..yp.dims[0] {
+                    for xl in 0..yp.dims[1] {
+                        for y in 0..decomp.ny {
+                            let got = ydata[(z * yp.dims[1] + xl) * decomp.ny + y];
+                            let want = enc(xl + yp.offsets[1], y, z + yp.offsets[0]);
+                            if got != want {
+                                return Err(crate::Error::Mpi(format!(
+                                    "rank {rank} ypencil mismatch at z={z} x={xl} y={y}: {got} != {want}"
+                                )));
+                            }
+                        }
+                    }
+                }
+
+                let mut zdata = vec![Complex::zero(); zp.len()];
+                tyz.forward(&col, &ydata, &mut zdata, &mut sb, &mut rb, opts, &mut timer);
+                for xl in 0..zp.dims[0] {
+                    for yl in 0..zp.dims[1] {
+                        for z in 0..decomp.nz {
+                            let got = zdata[(xl * zp.dims[1] + yl) * decomp.nz + z];
+                            let want = enc(xl + zp.offsets[0], yl + zp.offsets[1], z);
+                            if got != want {
+                                return Err(crate::Error::Mpi(format!(
+                                    "rank {rank} zpencil mismatch: {got} != {want}"
+                                )));
+                            }
+                        }
+                    }
+                }
+
+                // And back.
+                let mut yback = vec![Complex::zero(); yp.len()];
+                tyz.backward(&col, &zdata, &mut yback, &mut sb, &mut rb, opts, &mut timer);
+                if yback != ydata {
+                    return Err(crate::Error::Mpi(format!("rank {rank} Z->Y backward mismatch")));
+                }
+                let mut xback = vec![Complex::zero(); xp.len()];
+                txy.backward(&row, &yback, &mut xback, &mut sb, &mut rb, opts, &mut timer);
+                if xback != xdata {
+                    return Err(crate::Error::Mpi(format!("rank {rank} Y->X backward mismatch")));
+                }
+                Ok(true)
+            })
+            .unwrap();
+        assert!(results.into_iter().all(|b| b));
+    }
+
+    #[test]
+    fn even_grid_2x2() {
+        roundtrip_case(8, 8, 8, 2, 2, false);
+    }
+
+    #[test]
+    fn even_grid_2x2_useeven() {
+        roundtrip_case(8, 8, 8, 2, 2, true);
+    }
+
+    #[test]
+    fn uneven_grid_3x2() {
+        roundtrip_case(10, 9, 7, 3, 2, false);
+    }
+
+    #[test]
+    fn uneven_grid_3x2_useeven() {
+        roundtrip_case(10, 9, 7, 3, 2, true);
+    }
+
+    #[test]
+    fn one_d_decomposition_1xp() {
+        // 1D slab decomposition: ROW is trivial (M1=1), all exchange in
+        // the COLUMN transpose.
+        roundtrip_case(8, 8, 8, 1, 4, false);
+    }
+
+    #[test]
+    fn one_d_decomposition_px1() {
+        roundtrip_case(8, 12, 8, 4, 1, false);
+    }
+
+    #[test]
+    fn tall_processor_grid() {
+        roundtrip_case(16, 12, 10, 2, 5, false);
+    }
+
+    #[test]
+    fn useeven_padding_matches_alltoallv_results() {
+        // Same decomposition both ways must produce identical pencils —
+        // padding must never leak into the data.
+        roundtrip_case(12, 10, 9, 3, 3, true);
+        roundtrip_case(12, 10, 9, 3, 3, false);
+    }
+}

@@ -1,0 +1,19 @@
+//! The two parallel transposes of the paper's Fig. 2 pipeline.
+//!
+//! * X→Y within a ROW sub-communicator (`M1` ranks): redistributes the
+//!   packed spectral X axis so Y becomes local;
+//! * Y→Z within a COLUMN sub-communicator (`M2` ranks): redistributes Z.
+//!
+//! Each transpose is pack → `MPI_Alltoall(v)` → unpack. Packing embeds the
+//! STRIDE1 local memory transpose (loop-blocked for cache, §3.3 of the
+//! paper); the exchange uses `alltoallv` by default or padded `alltoall`
+//! under the USEEVEN option (§3.4); unpacking is contiguous-run copies.
+//!
+//! Pack order conventions (documented per kernel in [`pack`]):
+//! X→Y buffers travel as `[z][x][y]`, Y→Z buffers as `[x][y][z]`, so the
+//! receiving side always writes its pencil's stride-1 axis in runs.
+
+pub mod exchange;
+pub mod pack;
+
+pub use exchange::{ExchangeOptions, TransposeXY, TransposeYZ};

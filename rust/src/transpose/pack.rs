@@ -1,0 +1,666 @@
+//! Pack/unpack kernels for the two transposes, in both directions.
+//!
+//! Each kernel is an explicit index map (no abstraction tax on the hot
+//! path) with loop blocking where the copy is a genuine 2D transpose —
+//! the paper's §3.3: "Loop blocking is used with the memory transpose to
+//! optimize cache use."
+//!
+//! Geometry glossary (one rank's view):
+//!   X-pencil (spectral): `[nz_loc][ny_loc][h]`, x stride-1
+//!   Y-pencil:            `[nz_loc][h_loc][ny_glob]`, y stride-1
+//!   Z-pencil:            `[h_loc][ny2_loc][nz_glob]`, z stride-1
+//!
+//! Wire formats: X↔Y buffers are `[z][x][y]`; Y↔Z buffers are `[x][y][z]`.
+
+use crate::fft::{Complex, Real};
+
+/// Cache-blocking tile edge (elements). Swept in the §Perf pass
+/// (EXPERIMENTS.md §Perf): on this host 32 beats 16/64/128 at the
+/// large-pencil shapes (32×32 complex f64 = 16 KiB fits L1d; 64² spills).
+pub const TILE: usize = 32;
+
+/// Pack the X→Y send block for one ROW peer owning spectral-x range
+/// `[x0, x1)`. Input is the spectral X-pencil `[nz][ny][h]`; output buffer
+/// is `[z][x - x0][y]` (len `nz * (x1-x0) * ny`).
+///
+/// The (x, y) plane is transposed during the copy (read stride `h` along
+/// y), so the loop is tiled.
+pub fn pack_x_to_y<T: Real>(
+    input: &[Complex<T>],
+    nz: usize,
+    ny: usize,
+    h: usize,
+    x0: usize,
+    x1: usize,
+    out: &mut [Complex<T>],
+) {
+    let w = x1 - x0;
+    debug_assert_eq!(input.len(), nz * ny * h);
+    debug_assert_eq!(out.len(), nz * w * ny);
+    for z in 0..nz {
+        let in_plane = &input[z * ny * h..(z + 1) * ny * h];
+        let out_plane = &mut out[z * w * ny..(z + 1) * w * ny];
+        // Tiled 2D transpose: out[(x - x0) * ny + y] = in[y * h + x].
+        let mut xt = x0;
+        while xt < x1 {
+            let xe = (xt + TILE).min(x1);
+            let mut yt = 0;
+            while yt < ny {
+                let ye = (yt + TILE).min(ny);
+                for x in xt..xe {
+                    let row = (x - x0) * ny;
+                    for y in yt..ye {
+                        out_plane[row + y] = in_plane[y * h + x];
+                    }
+                }
+                yt = ye;
+            }
+            xt = xe;
+        }
+    }
+}
+
+/// Unpack one ROW peer's X→Y block into the Y-pencil `[nz][h_loc][ny_glob]`.
+/// The peer owned global y range `[y0, y1)`; its buffer is `[z][x][y - y0]`.
+/// Pure contiguous-run copies.
+pub fn unpack_x_to_y<T: Real>(
+    buf: &[Complex<T>],
+    nz: usize,
+    h_loc: usize,
+    ny_glob: usize,
+    y0: usize,
+    y1: usize,
+    out: &mut [Complex<T>],
+) {
+    let w = y1 - y0;
+    debug_assert_eq!(buf.len(), nz * h_loc * w);
+    debug_assert_eq!(out.len(), nz * h_loc * ny_glob);
+    for z in 0..nz {
+        for x in 0..h_loc {
+            let src = &buf[(z * h_loc + x) * w..(z * h_loc + x + 1) * w];
+            let dst_base = (z * h_loc + x) * ny_glob + y0;
+            out[dst_base..dst_base + w].copy_from_slice(src);
+        }
+    }
+}
+
+/// Backward X←Y: pack the Y→X send block for one ROW peer owning global y
+/// range `[y0, y1)`. Input is the Y-pencil `[nz][h_loc][ny_glob]`; output
+/// buffer is `[z][x][y - y0]` (the same wire format as forward).
+pub fn pack_y_to_x<T: Real>(
+    input: &[Complex<T>],
+    nz: usize,
+    h_loc: usize,
+    ny_glob: usize,
+    y0: usize,
+    y1: usize,
+    out: &mut [Complex<T>],
+) {
+    let w = y1 - y0;
+    debug_assert_eq!(input.len(), nz * h_loc * ny_glob);
+    debug_assert_eq!(out.len(), nz * h_loc * w);
+    for z in 0..nz {
+        for x in 0..h_loc {
+            let src_base = (z * h_loc + x) * ny_glob + y0;
+            let dst = &mut out[(z * h_loc + x) * w..(z * h_loc + x + 1) * w];
+            dst.copy_from_slice(&input[src_base..src_base + w]);
+        }
+    }
+}
+
+/// Backward X←Y: unpack one ROW peer's block into the spectral X-pencil
+/// `[nz][ny][h]`. The peer owned spectral-x range `[x0, x1)`; its buffer
+/// is `[z][x - x0][y]`. Transposes (x, y) back — tiled.
+pub fn unpack_y_to_x<T: Real>(
+    buf: &[Complex<T>],
+    nz: usize,
+    ny: usize,
+    h: usize,
+    x0: usize,
+    x1: usize,
+    out: &mut [Complex<T>],
+) {
+    let w = x1 - x0;
+    debug_assert_eq!(buf.len(), nz * w * ny);
+    debug_assert_eq!(out.len(), nz * ny * h);
+    for z in 0..nz {
+        let in_plane = &buf[z * w * ny..(z + 1) * w * ny];
+        let out_plane = &mut out[z * ny * h..(z + 1) * ny * h];
+        let mut xt = x0;
+        while xt < x1 {
+            let xe = (xt + TILE).min(x1);
+            let mut yt = 0;
+            while yt < ny {
+                let ye = (yt + TILE).min(ny);
+                for x in xt..xe {
+                    let row = (x - x0) * ny;
+                    for y in yt..ye {
+                        out_plane[y * h + x] = in_plane[row + y];
+                    }
+                }
+                yt = ye;
+            }
+            xt = xe;
+        }
+    }
+}
+
+/// Pack the Y→Z send block for one COLUMN peer owning global y range
+/// `[y0, y1)` (split by M2). Input is the Y-pencil `[nz][h_loc][ny_glob]`;
+/// output buffer is `[x][y - y0][z]` (len `h_loc * (y1-y0) * nz`).
+///
+/// The (y/z ↔ x) gather has read stride `h_loc * ny_glob` along z — tiled
+/// over (y, z).
+pub fn pack_y_to_z<T: Real>(
+    input: &[Complex<T>],
+    nz: usize,
+    h_loc: usize,
+    ny_glob: usize,
+    y0: usize,
+    y1: usize,
+    out: &mut [Complex<T>],
+) {
+    let w = y1 - y0;
+    debug_assert_eq!(input.len(), nz * h_loc * ny_glob);
+    debug_assert_eq!(out.len(), h_loc * w * nz);
+    for x in 0..h_loc {
+        let out_x = &mut out[x * w * nz..(x + 1) * w * nz];
+        let mut yt = y0;
+        while yt < y1 {
+            let ye = (yt + TILE).min(y1);
+            let mut zt = 0;
+            while zt < nz {
+                let ze = (zt + TILE).min(nz);
+                for y in yt..ye {
+                    let row = (y - y0) * nz;
+                    for z in zt..ze {
+                        out_x[row + z] = input[(z * h_loc + x) * ny_glob + y];
+                    }
+                }
+                zt = ze;
+            }
+            yt = ye;
+        }
+    }
+}
+
+/// Unpack one COLUMN peer's Y→Z block into the Z-pencil
+/// `[h_loc][ny2_loc][nz_glob]`. The peer owned global z range `[z0, z1)`;
+/// its buffer is `[x][y][z - z0]`. Contiguous-run copies.
+pub fn unpack_y_to_z<T: Real>(
+    buf: &[Complex<T>],
+    h_loc: usize,
+    ny2: usize,
+    nz_glob: usize,
+    z0: usize,
+    z1: usize,
+    out: &mut [Complex<T>],
+) {
+    let w = z1 - z0;
+    debug_assert_eq!(buf.len(), h_loc * ny2 * w);
+    debug_assert_eq!(out.len(), h_loc * ny2 * nz_glob);
+    for x in 0..h_loc {
+        for y in 0..ny2 {
+            let src = &buf[(x * ny2 + y) * w..(x * ny2 + y + 1) * w];
+            let dst_base = (x * ny2 + y) * nz_glob + z0;
+            out[dst_base..dst_base + w].copy_from_slice(src);
+        }
+    }
+}
+
+/// Backward Y←Z: pack the Z→Y send block for one COLUMN peer owning global
+/// z range `[z0, z1)`. Input is the Z-pencil `[h_loc][ny2][nz_glob]`;
+/// output buffer is `[x][y][z - z0]`. Contiguous-run copies.
+pub fn pack_z_to_y<T: Real>(
+    input: &[Complex<T>],
+    h_loc: usize,
+    ny2: usize,
+    nz_glob: usize,
+    z0: usize,
+    z1: usize,
+    out: &mut [Complex<T>],
+) {
+    let w = z1 - z0;
+    debug_assert_eq!(input.len(), h_loc * ny2 * nz_glob);
+    debug_assert_eq!(out.len(), h_loc * ny2 * w);
+    for x in 0..h_loc {
+        for y in 0..ny2 {
+            let src_base = (x * ny2 + y) * nz_glob + z0;
+            let dst = &mut out[(x * ny2 + y) * w..(x * ny2 + y + 1) * w];
+            dst.copy_from_slice(&input[src_base..src_base + w]);
+        }
+    }
+}
+
+/// Backward Y←Z: unpack one COLUMN peer's block into the Y-pencil
+/// `[nz][h_loc][ny_glob]`. The peer owned global y range `[y0, y1)` (split
+/// by M2); its buffer is `[x][y - y0][z]`. Tiled scatter over (y, z).
+pub fn unpack_z_to_y<T: Real>(
+    buf: &[Complex<T>],
+    nz: usize,
+    h_loc: usize,
+    ny_glob: usize,
+    y0: usize,
+    y1: usize,
+    out: &mut [Complex<T>],
+) {
+    let w = y1 - y0;
+    debug_assert_eq!(buf.len(), h_loc * w * nz);
+    debug_assert_eq!(out.len(), nz * h_loc * ny_glob);
+    for x in 0..h_loc {
+        let in_x = &buf[x * w * nz..(x + 1) * w * nz];
+        let mut yt = y0;
+        while yt < y1 {
+            let ye = (yt + TILE).min(y1);
+            let mut zt = 0;
+            while zt < nz {
+                let ze = (zt + TILE).min(nz);
+                for y in yt..ye {
+                    let row = (y - y0) * nz;
+                    for z in zt..ze {
+                        out[(z * h_loc + x) * ny_glob + y] = in_x[row + z];
+                    }
+                }
+                zt = ze;
+            }
+            yt = ye;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Encode a global coordinate triple into a complex value so any
+    /// misrouted element is detected exactly.
+    fn enc(x: usize, y: usize, z: usize) -> Complex<f64> {
+        Complex::new((x * 1_000_000 + y * 1_000 + z) as f64, 0.5)
+    }
+
+    #[test]
+    fn pack_unpack_x_to_y_roundtrips_through_wire_format() {
+        let (nz, ny, h) = (3, 4, 5);
+        let (x0, x1) = (1, 4);
+        // Input X-pencil [nz][ny][h] with encoded global coords.
+        let mut input = vec![Complex::zero(); nz * ny * h];
+        for z in 0..nz {
+            for y in 0..ny {
+                for x in 0..h {
+                    input[(z * ny + y) * h + x] = enc(x, y, z);
+                }
+            }
+        }
+        let w = x1 - x0;
+        let mut buf = vec![Complex::zero(); nz * w * ny];
+        pack_x_to_y(&input, nz, ny, h, x0, x1, &mut buf);
+        // Wire format [z][x - x0][y].
+        for z in 0..nz {
+            for x in x0..x1 {
+                for y in 0..ny {
+                    assert_eq!(buf[(z * w + (x - x0)) * ny + y], enc(x, y, z));
+                }
+            }
+        }
+        // Now unpack as if we were the receiving rank: our h_loc = w,
+        // sender's y range is the full [0, ny).
+        let mut out = vec![Complex::zero(); nz * w * ny];
+        unpack_x_to_y(&buf, nz, w, ny, 0, ny, &mut out);
+        for z in 0..nz {
+            for xl in 0..w {
+                for y in 0..ny {
+                    assert_eq!(out[(z * w + xl) * ny + y], enc(x0 + xl, y, z));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_y_to_x_then_unpack_restores_x_pencil() {
+        let (nz, h_loc, ny) = (2, 3, 6);
+        // Y-pencil [nz][h_loc][ny] encoded (x index is local here).
+        let mut ypen = vec![Complex::zero(); nz * h_loc * ny];
+        for z in 0..nz {
+            for x in 0..h_loc {
+                for y in 0..ny {
+                    ypen[(z * h_loc + x) * ny + y] = enc(x, y, z);
+                }
+            }
+        }
+        let (y0, y1) = (2, 5);
+        let w = y1 - y0;
+        let mut buf = vec![Complex::zero(); nz * h_loc * w];
+        pack_y_to_x(&ypen, nz, h_loc, ny, y0, y1, &mut buf);
+        // Receiver: X-pencil with ny_loc = w, h = h_loc (sender's x block
+        // starts at 0 for the test).
+        let mut xpen = vec![Complex::zero(); nz * w * h_loc];
+        unpack_y_to_x(&buf, nz, w, h_loc, 0, h_loc, &mut xpen);
+        for z in 0..nz {
+            for yl in 0..w {
+                for x in 0..h_loc {
+                    assert_eq!(xpen[(z * w + yl) * h_loc + x], enc(x, y0 + yl, z));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_unpack_y_to_z_wire_and_landing() {
+        let (nz, h_loc, ny) = (4, 2, 6);
+        let mut ypen = vec![Complex::zero(); nz * h_loc * ny];
+        for z in 0..nz {
+            for x in 0..h_loc {
+                for y in 0..ny {
+                    ypen[(z * h_loc + x) * ny + y] = enc(x, y, z);
+                }
+            }
+        }
+        let (y0, y1) = (1, 4);
+        let w = y1 - y0;
+        let mut buf = vec![Complex::zero(); h_loc * w * nz];
+        pack_y_to_z(&ypen, nz, h_loc, ny, y0, y1, &mut buf);
+        // Wire [x][y - y0][z].
+        for x in 0..h_loc {
+            for y in y0..y1 {
+                for z in 0..nz {
+                    assert_eq!(buf[(x * w + (y - y0)) * nz + z], enc(x, y, z));
+                }
+            }
+        }
+        // Receiver Z-pencil [h_loc][w][nz_glob] with sender z range = all.
+        let mut zpen = vec![Complex::zero(); h_loc * w * nz];
+        unpack_y_to_z(&buf, h_loc, w, nz, 0, nz, &mut zpen);
+        for x in 0..h_loc {
+            for yl in 0..w {
+                for z in 0..nz {
+                    assert_eq!(zpen[(x * w + yl) * nz + z], enc(x, y0 + yl, z));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_z_to_y_then_unpack_restores_y_pencil() {
+        let (h_loc, ny2, nz) = (2, 3, 8);
+        let mut zpen = vec![Complex::zero(); h_loc * ny2 * nz];
+        for x in 0..h_loc {
+            for y in 0..ny2 {
+                for z in 0..nz {
+                    zpen[(x * ny2 + y) * nz + z] = enc(x, y, z);
+                }
+            }
+        }
+        let (z0, z1) = (3, 7);
+        let w = z1 - z0;
+        let mut buf = vec![Complex::zero(); h_loc * ny2 * w];
+        pack_z_to_y(&zpen, h_loc, ny2, nz, z0, z1, &mut buf);
+        // Receiver Y-pencil [w][h_loc][ny2] (its nz_loc = w, its y covers
+        // the sender's ny2 starting at 0).
+        let mut ypen = vec![Complex::zero(); w * h_loc * ny2];
+        unpack_z_to_y(&buf, w, h_loc, ny2, 0, ny2, &mut ypen);
+        for zl in 0..w {
+            for x in 0..h_loc {
+                for y in 0..ny2 {
+                    assert_eq!(ypen[(zl * h_loc + x) * ny2 + y], enc(x, y, z0 + zl));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiling_edges_cover_non_multiple_sizes() {
+        // Sizes straddling TILE boundaries exercise the tail tiles.
+        let (nz, ny, h) = (1, TILE + 7, TILE + 3);
+        let mut input = vec![Complex::zero(); nz * ny * h];
+        for y in 0..ny {
+            for x in 0..h {
+                input[y * h + x] = enc(x, y, 0);
+            }
+        }
+        let mut buf = vec![Complex::zero(); ny * h];
+        pack_x_to_y(&input, nz, ny, h, 0, h, &mut buf);
+        let mut back = vec![Complex::zero(); ny * h];
+        unpack_y_to_x(&buf, nz, ny, h, 0, h, &mut back);
+        assert_eq!(input, back);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Non-STRIDE1 (XYZ-order) kernels: no local transpose in the copy — packs
+// are contiguous slab copies and the FFTs run strided instead (§3.3's
+// "let the FFT library handle the strides" alternative).
+// Wire formats: X↔Y buffers travel as [z][y][x], Y↔Z buffers as [z][y][x].
+// ---------------------------------------------------------------------------
+
+/// XYZ X→Y pack for a ROW peer owning spectral-x `[x0, x1)`: slab copy of
+/// each (z, y) row's x-range. Input X-pencil `[nz][ny][h]`; out `[z][y][x']`.
+pub fn pack_x_to_y_xyz<T: Real>(
+    input: &[Complex<T>],
+    nz: usize,
+    ny: usize,
+    h: usize,
+    x0: usize,
+    x1: usize,
+    out: &mut [Complex<T>],
+) {
+    let w = x1 - x0;
+    debug_assert_eq!(input.len(), nz * ny * h);
+    debug_assert_eq!(out.len(), nz * ny * w);
+    for zy in 0..nz * ny {
+        out[zy * w..(zy + 1) * w].copy_from_slice(&input[zy * h + x0..zy * h + x1]);
+    }
+}
+
+/// XYZ X→Y unpack from a ROW peer owning global y `[y0, y1)` into the
+/// XYZ-order Y-pencil `[nz][ny_glob][h_loc]`: one contiguous copy per z.
+pub fn unpack_x_to_y_xyz<T: Real>(
+    buf: &[Complex<T>],
+    nz: usize,
+    h_loc: usize,
+    ny_glob: usize,
+    y0: usize,
+    y1: usize,
+    out: &mut [Complex<T>],
+) {
+    let w = y1 - y0;
+    debug_assert_eq!(buf.len(), nz * w * h_loc);
+    debug_assert_eq!(out.len(), nz * ny_glob * h_loc);
+    for z in 0..nz {
+        let src = &buf[z * w * h_loc..(z + 1) * w * h_loc];
+        let dst = (z * ny_glob + y0) * h_loc;
+        out[dst..dst + w * h_loc].copy_from_slice(src);
+    }
+}
+
+/// XYZ Y→X pack (backward) for a ROW peer owning global y `[y0, y1)`:
+/// one contiguous copy per z out of the XYZ Y-pencil.
+pub fn pack_y_to_x_xyz<T: Real>(
+    input: &[Complex<T>],
+    nz: usize,
+    h_loc: usize,
+    ny_glob: usize,
+    y0: usize,
+    y1: usize,
+    out: &mut [Complex<T>],
+) {
+    let w = y1 - y0;
+    debug_assert_eq!(input.len(), nz * ny_glob * h_loc);
+    debug_assert_eq!(out.len(), nz * w * h_loc);
+    for z in 0..nz {
+        let src = (z * ny_glob + y0) * h_loc;
+        out[z * w * h_loc..(z + 1) * w * h_loc]
+            .copy_from_slice(&input[src..src + w * h_loc]);
+    }
+}
+
+/// XYZ Y→X unpack (backward) from a ROW peer owning spectral-x `[x0, x1)`:
+/// scatter each (z, y) row's x-range back into the X-pencil.
+pub fn unpack_y_to_x_xyz<T: Real>(
+    buf: &[Complex<T>],
+    nz: usize,
+    ny: usize,
+    h: usize,
+    x0: usize,
+    x1: usize,
+    out: &mut [Complex<T>],
+) {
+    let w = x1 - x0;
+    debug_assert_eq!(buf.len(), nz * ny * w);
+    debug_assert_eq!(out.len(), nz * ny * h);
+    for zy in 0..nz * ny {
+        out[zy * h + x0..zy * h + x1].copy_from_slice(&buf[zy * w..(zy + 1) * w]);
+    }
+}
+
+/// XYZ Y→Z pack for a COLUMN peer owning global y `[y0, y1)` (split by M2):
+/// one contiguous copy per z out of the XYZ Y-pencil `[nz][ny_glob][h_loc]`.
+pub fn pack_y_to_z_xyz<T: Real>(
+    input: &[Complex<T>],
+    nz: usize,
+    h_loc: usize,
+    ny_glob: usize,
+    y0: usize,
+    y1: usize,
+    out: &mut [Complex<T>],
+) {
+    // Identical copy pattern to the backward X-direction slab.
+    pack_y_to_x_xyz(input, nz, h_loc, ny_glob, y0, y1, out);
+}
+
+/// XYZ Y→Z unpack from a COLUMN peer owning global z `[z0, z1)` into the
+/// XYZ Z-pencil `[nz_glob][ny2][h_loc]`: a single contiguous copy.
+pub fn unpack_y_to_z_xyz<T: Real>(
+    buf: &[Complex<T>],
+    h_loc: usize,
+    ny2: usize,
+    nz_glob: usize,
+    z0: usize,
+    z1: usize,
+    out: &mut [Complex<T>],
+) {
+    let w = z1 - z0;
+    debug_assert_eq!(buf.len(), w * ny2 * h_loc);
+    debug_assert_eq!(out.len(), nz_glob * ny2 * h_loc);
+    out[z0 * ny2 * h_loc..z1 * ny2 * h_loc].copy_from_slice(buf);
+}
+
+/// XYZ Z→Y pack (backward) for a COLUMN peer owning global z `[z0, z1)`:
+/// a single contiguous copy out of the XYZ Z-pencil.
+pub fn pack_z_to_y_xyz<T: Real>(
+    input: &[Complex<T>],
+    h_loc: usize,
+    ny2: usize,
+    nz_glob: usize,
+    z0: usize,
+    z1: usize,
+    out: &mut [Complex<T>],
+) {
+    let w = z1 - z0;
+    debug_assert_eq!(input.len(), nz_glob * ny2 * h_loc);
+    debug_assert_eq!(out.len(), w * ny2 * h_loc);
+    out.copy_from_slice(&input[z0 * ny2 * h_loc..z1 * ny2 * h_loc]);
+}
+
+/// XYZ Z→Y unpack (backward) from a COLUMN peer owning global y `[y0, y1)`:
+/// one contiguous copy per z into the XYZ Y-pencil.
+pub fn unpack_z_to_y_xyz<T: Real>(
+    buf: &[Complex<T>],
+    nz: usize,
+    h_loc: usize,
+    ny_glob: usize,
+    y0: usize,
+    y1: usize,
+    out: &mut [Complex<T>],
+) {
+    unpack_x_to_y_xyz(buf, nz, h_loc, ny_glob, y0, y1, out);
+}
+
+#[cfg(test)]
+mod xyz_tests {
+    use super::*;
+
+    fn enc(x: usize, y: usize, z: usize) -> Complex<f64> {
+        Complex::new((x * 1_000_000 + y * 1_000 + z) as f64, 2.0)
+    }
+
+    #[test]
+    fn xyz_xy_pack_unpack_roundtrip() {
+        let (nz, ny, h) = (3, 5, 7);
+        let mut input = vec![Complex::zero(); nz * ny * h];
+        for z in 0..nz {
+            for y in 0..ny {
+                for x in 0..h {
+                    input[(z * ny + y) * h + x] = enc(x, y, z);
+                }
+            }
+        }
+        let (x0, x1) = (2, 6);
+        let w = x1 - x0;
+        let mut buf = vec![Complex::zero(); nz * ny * w];
+        pack_x_to_y_xyz(&input, nz, ny, h, x0, x1, &mut buf);
+        // Receiver with h_loc = w, sender y-range = all of ny.
+        let mut ypen = vec![Complex::zero(); nz * ny * w];
+        unpack_x_to_y_xyz(&buf, nz, w, ny, 0, ny, &mut ypen);
+        for z in 0..nz {
+            for y in 0..ny {
+                for xl in 0..w {
+                    assert_eq!(ypen[(z * ny + y) * w + xl], enc(x0 + xl, y, z));
+                }
+            }
+        }
+        // Backward: pack from the Y-pencil and unpack into a fresh X-pencil.
+        let mut buf2 = vec![Complex::zero(); nz * ny * w];
+        pack_y_to_x_xyz(&ypen, nz, w, ny, 0, ny, &mut buf2);
+        let mut back = input.clone();
+        for v in back.iter_mut() {
+            *v = Complex::zero();
+        }
+        unpack_y_to_x_xyz(&buf2, nz, ny, h, x0, x1, &mut back);
+        for z in 0..nz {
+            for y in 0..ny {
+                for x in x0..x1 {
+                    assert_eq!(back[(z * ny + y) * h + x], enc(x, y, z));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn xyz_yz_pack_unpack_roundtrip() {
+        let (nz, h_loc, ny) = (6, 2, 4);
+        let mut ypen = vec![Complex::zero(); nz * ny * h_loc];
+        for z in 0..nz {
+            for y in 0..ny {
+                for x in 0..h_loc {
+                    ypen[(z * ny + y) * h_loc + x] = enc(x, y, z);
+                }
+            }
+        }
+        let (y0, y1) = (1, 3);
+        let w = y1 - y0;
+        let mut buf = vec![Complex::zero(); nz * w * h_loc];
+        pack_y_to_z_xyz(&ypen, nz, h_loc, ny, y0, y1, &mut buf);
+        // Receiver Z-pencil [nz][w][h_loc], sender z range = all of nz.
+        let mut zpen = vec![Complex::zero(); nz * w * h_loc];
+        unpack_y_to_z_xyz(&buf, h_loc, w, nz, 0, nz, &mut zpen);
+        for z in 0..nz {
+            for yl in 0..w {
+                for x in 0..h_loc {
+                    assert_eq!(zpen[(z * w + yl) * h_loc + x], enc(x, y0 + yl, z));
+                }
+            }
+        }
+        // Backward.
+        let mut buf2 = vec![Complex::zero(); nz * w * h_loc];
+        pack_z_to_y_xyz(&zpen, h_loc, w, nz, 0, nz, &mut buf2);
+        let mut yback = vec![Complex::zero(); nz * ny * h_loc];
+        unpack_z_to_y_xyz(&buf2, nz, h_loc, ny, y0, y1, &mut yback);
+        for z in 0..nz {
+            for y in y0..y1 {
+                for x in 0..h_loc {
+                    assert_eq!(yback[(z * ny + y) * h_loc + x], enc(x, y, z));
+                }
+            }
+        }
+    }
+}

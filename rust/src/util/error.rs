@@ -1,0 +1,77 @@
+//! Crate-wide error type. `anyhow` is reserved for binaries; the library
+//! surfaces typed errors so callers can distinguish configuration mistakes
+//! from runtime failures.
+
+use std::fmt;
+
+/// Errors produced by the p3dfft library.
+#[derive(Debug)]
+pub enum Error {
+    /// Invalid plan/grid configuration (paper Eq. 2 constraints, etc.).
+    InvalidConfig(String),
+    /// A buffer passed to the API has the wrong length.
+    BadShape { expected: usize, got: usize, what: &'static str },
+    /// Message-passing runtime failure (rank panicked, fabric torn down).
+    Mpi(String),
+    /// PJRT/XLA runtime failure (artifact missing, compile/execute error).
+    Runtime(String),
+    /// Config-file parse error.
+    Parse { line: usize, msg: String },
+    /// Generic I/O error.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidConfig(m) => write!(f, "invalid configuration: {m}"),
+            Error::BadShape { expected, got, what } => {
+                write!(f, "bad shape for {what}: expected {expected} elements, got {got}")
+            }
+            Error::Mpi(m) => write!(f, "mpi runtime: {m}"),
+            Error::Runtime(m) => write!(f, "pjrt runtime: {m}"),
+            Error::Parse { line, msg } => write!(f, "config parse error at line {line}: {msg}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_variants_are_descriptive() {
+        let e = Error::InvalidConfig("M1*M2 != P".into());
+        assert!(e.to_string().contains("M1*M2"));
+        let e = Error::BadShape { expected: 10, got: 3, what: "input pencil" };
+        assert!(e.to_string().contains("input pencil"));
+        let e = Error::Parse { line: 7, msg: "bad key".into() };
+        assert!(e.to_string().contains("line 7"));
+    }
+
+    #[test]
+    fn io_error_converts_and_chains() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

@@ -1,0 +1,14 @@
+//! Shared utilities: errors, timing, deterministic PRNG, robust statistics,
+//! and a minimal property-testing harness (no external dev-deps are
+//! available offline, so `proptest`'s role is filled by [`quickprop`]).
+
+pub mod error;
+pub mod prng;
+pub mod quickprop;
+pub mod stats;
+pub mod timer;
+
+pub use error::{Error, Result};
+pub use prng::SplitMix64;
+pub use stats::Summary;
+pub use timer::StageTimer;

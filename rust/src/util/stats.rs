@@ -1,0 +1,147 @@
+//! Robust timing statistics for the benchmark harness (criterion is not
+//! available offline; this module provides the subset we need: warmup
+//! discard, median/MAD, confidence through repetition).
+
+/// Summary statistics over a sample of measurements (seconds or any unit).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub median: f64,
+    /// Median absolute deviation (scaled by 1.4826 for normal consistency).
+    pub mad: f64,
+    pub min: f64,
+    pub max: f64,
+    pub stddev: f64,
+}
+
+impl Summary {
+    /// Compute a summary; panics on an empty sample.
+    pub fn from_samples(samples: &[f64]) -> Self {
+        assert!(!samples.is_empty(), "empty sample");
+        let n = samples.len();
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+        let median = percentile_sorted(&sorted, 50.0);
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            sorted.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut devs: Vec<f64> = sorted.iter().map(|v| (v - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = percentile_sorted(&devs, 50.0) * 1.4826;
+        Summary {
+            n,
+            mean,
+            median,
+            mad,
+            min: sorted[0],
+            max: sorted[n - 1],
+            stddev: var.sqrt(),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of an ascending-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = pct / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Ordinary least squares fit y = a*x0 + b*x1 for two basis columns
+/// (used by netmodel's `a/P + d/P^(2/3)` fit). Returns (a, b).
+pub fn lsq2(x0: &[f64], x1: &[f64], y: &[f64]) -> (f64, f64) {
+    assert_eq!(x0.len(), y.len());
+    assert_eq!(x1.len(), y.len());
+    // Normal equations for the 2x2 system.
+    let (mut s00, mut s01, mut s11, mut b0, mut b1) = (0.0, 0.0, 0.0, 0.0, 0.0);
+    for i in 0..y.len() {
+        s00 += x0[i] * x0[i];
+        s01 += x0[i] * x1[i];
+        s11 += x1[i] * x1[i];
+        b0 += x0[i] * y[i];
+        b1 += x1[i] * y[i];
+    }
+    let det = s00 * s11 - s01 * s01;
+    assert!(det.abs() > 1e-300, "singular normal equations");
+    ((s11 * b0 - s01 * b1) / det, (s00 * b1 - s01 * b0) / det)
+}
+
+/// Coefficient of determination R^2 for predictions vs observations.
+pub fn r_squared(obs: &[f64], pred: &[f64]) -> f64 {
+    assert_eq!(obs.len(), pred.len());
+    let mean = obs.iter().sum::<f64>() / obs.len() as f64;
+    let ss_tot: f64 = obs.iter().map(|v| (v - mean) * (v - mean)).sum();
+    let ss_res: f64 = obs
+        .iter()
+        .zip(pred)
+        .map(|(o, p)| (o - p) * (o - p))
+        .sum();
+    if ss_tot == 0.0 {
+        return 1.0;
+    }
+    1.0 - ss_res / ss_tot
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constant_sample() {
+        let s = Summary::from_samples(&[2.0, 2.0, 2.0]);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.mad, 0.0);
+        assert_eq!(s.stddev, 0.0);
+    }
+
+    #[test]
+    fn summary_median_odd_even() {
+        let s = Summary::from_samples(&[1.0, 2.0, 100.0]);
+        assert_eq!(s.median, 2.0);
+        let s = Summary::from_samples(&[1.0, 2.0, 3.0, 100.0]);
+        assert_eq!(s.median, 2.5);
+    }
+
+    #[test]
+    fn median_robust_to_outlier() {
+        let s = Summary::from_samples(&[1.0, 1.1, 0.9, 1.0, 50.0]);
+        assert!(s.median < 1.2);
+        assert!(s.mean > 5.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [0.0, 10.0];
+        assert_eq!(percentile_sorted(&v, 25.0), 2.5);
+    }
+
+    #[test]
+    fn lsq2_recovers_exact_coefficients() {
+        // y = 3*x0 + 5*x1 exactly.
+        let ps = [16.0, 64.0, 256.0, 1024.0, 4096.0];
+        let x0: Vec<f64> = ps.iter().map(|p| 1.0 / p).collect();
+        let x1: Vec<f64> = ps.iter().map(|p| p.powf(-2.0 / 3.0)).collect();
+        let y: Vec<f64> = x0.iter().zip(&x1).map(|(a, b)| 3.0 * a + 5.0 * b).collect();
+        let (a, b) = lsq2(&x0, &x1, &y);
+        assert!((a - 3.0).abs() < 1e-9, "a={a}");
+        assert!((b - 5.0).abs() < 1e-9, "b={b}");
+    }
+
+    #[test]
+    fn r_squared_perfect_and_poor() {
+        let obs = [1.0, 2.0, 3.0];
+        assert!((r_squared(&obs, &obs) - 1.0).abs() < 1e-12);
+        let bad = [3.0, 1.0, 2.0];
+        assert!(r_squared(&obs, &bad) < 0.5);
+    }
+}

@@ -1,0 +1,147 @@
+//! Per-stage wall-clock accounting. The paper reports total time and
+//! communication time separately (Fig. 4); `StageTimer` gives each rank a
+//! cheap way to attribute elapsed time to named stages, which the
+//! coordinator then reduces (max over ranks, like MPI_Wtime conventions).
+
+use std::time::Instant;
+
+/// Stage identifiers used throughout the pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stage {
+    /// Serial 1D FFT compute (any dimension).
+    Compute,
+    /// Pack into send buffers (incl. STRIDE1 local transpose).
+    Pack,
+    /// All-to-all exchange proper.
+    Exchange,
+    /// Unpack from receive buffers.
+    Unpack,
+    /// Everything else (setup, normalisation).
+    Other,
+}
+
+pub const ALL_STAGES: [Stage; 5] =
+    [Stage::Compute, Stage::Pack, Stage::Exchange, Stage::Unpack, Stage::Other];
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Compute => "compute",
+            Stage::Pack => "pack",
+            Stage::Exchange => "exchange",
+            Stage::Unpack => "unpack",
+            Stage::Other => "other",
+        }
+    }
+    fn index(self) -> usize {
+        match self {
+            Stage::Compute => 0,
+            Stage::Pack => 1,
+            Stage::Exchange => 2,
+            Stage::Unpack => 3,
+            Stage::Other => 4,
+        }
+    }
+}
+
+/// Accumulates seconds per stage. Not thread-safe by design: one per rank.
+#[derive(Debug, Clone, Default)]
+pub struct StageTimer {
+    acc: [f64; 5],
+}
+
+impl StageTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure, attributing its wall time to `stage`.
+    #[inline]
+    pub fn time<R>(&mut self, stage: Stage, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        self.acc[stage.index()] += t0.elapsed().as_secs_f64();
+        r
+    }
+
+    /// Add externally measured seconds to a stage.
+    pub fn add(&mut self, stage: Stage, secs: f64) {
+        self.acc[stage.index()] += secs;
+    }
+
+    pub fn get(&self, stage: Stage) -> f64 {
+        self.acc[stage.index()]
+    }
+
+    /// Total across all stages.
+    pub fn total(&self) -> f64 {
+        self.acc.iter().sum()
+    }
+
+    /// Communication = pack + exchange + unpack (the paper's "comm time"
+    /// includes the buffer packing that exists only because of the
+    /// transpose).
+    pub fn comm(&self) -> f64 {
+        self.get(Stage::Pack) + self.get(Stage::Exchange) + self.get(Stage::Unpack)
+    }
+
+    /// Element-wise max with another timer (reduction across ranks).
+    pub fn max_merge(&mut self, other: &StageTimer) {
+        for i in 0..self.acc.len() {
+            self.acc[i] = self.acc[i].max(other.acc[i]);
+        }
+    }
+
+    /// Reset all accumulators.
+    pub fn reset(&mut self) {
+        self.acc = [0.0; 5];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_accumulates() {
+        let mut t = StageTimer::new();
+        let v = t.time(Stage::Compute, || {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(t.get(Stage::Compute) >= 0.004);
+        assert_eq!(t.get(Stage::Pack), 0.0);
+    }
+
+    #[test]
+    fn comm_is_pack_exchange_unpack() {
+        let mut t = StageTimer::new();
+        t.add(Stage::Pack, 1.0);
+        t.add(Stage::Exchange, 2.0);
+        t.add(Stage::Unpack, 3.0);
+        t.add(Stage::Compute, 10.0);
+        assert_eq!(t.comm(), 6.0);
+        assert_eq!(t.total(), 16.0);
+    }
+
+    #[test]
+    fn max_merge_takes_elementwise_max() {
+        let mut a = StageTimer::new();
+        a.add(Stage::Compute, 1.0);
+        a.add(Stage::Pack, 5.0);
+        let mut b = StageTimer::new();
+        b.add(Stage::Compute, 2.0);
+        a.max_merge(&b);
+        assert_eq!(a.get(Stage::Compute), 2.0);
+        assert_eq!(a.get(Stage::Pack), 5.0);
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        let mut t = StageTimer::new();
+        t.add(Stage::Other, 9.0);
+        t.reset();
+        assert_eq!(t.total(), 0.0);
+    }
+}

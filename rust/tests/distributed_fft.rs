@@ -1,0 +1,365 @@
+//! Integration: the full distributed 3D FFT against absolute references.
+//!
+//! * tiny grids vs a naive O(N^6) 3D DFT (absolute correctness);
+//! * every decomposition vs the single-rank (1x1) run (consistency);
+//! * roundtrip with the known normalisation on even/uneven grids;
+//! * USEEVEN vs default producing identical numbers;
+//! * STRIDE1 vs non-STRIDE1 producing the same spectrum (up to layout);
+//! * the 1D slab special cases (1xP and Px1);
+//! * Chebyshev and Empty third-dimension kinds;
+//! * f32 precision plumbing.
+
+use p3dfft::bench::{sine_field, verify_roundtrip};
+use p3dfft::coordinator::{run_on_threads, run_on_threads_with, PlanSpec, TransformKind};
+use p3dfft::fft::Complex;
+use p3dfft::grid::ProcGrid;
+use p3dfft::util::SplitMix64;
+
+/// Naive 3D R2C DFT: output[kx][ky][kz] for kx < nx/2+1 (x outermost to
+/// match the Z-pencil global assembly).
+fn naive_fft3d(input: &[f64], nx: usize, ny: usize, nz: usize) -> Vec<Complex<f64>> {
+    let h = nx / 2 + 1;
+    let mut out = vec![Complex::<f64>::zero(); h * ny * nz];
+    for kx in 0..h {
+        for ky in 0..ny {
+            for kz in 0..nz {
+                let mut acc = Complex::<f64>::zero();
+                for z in 0..nz {
+                    for y in 0..ny {
+                        for x in 0..nx {
+                            let ang = -2.0
+                                * std::f64::consts::PI
+                                * ((kx * x) as f64 / nx as f64
+                                    + (ky * y) as f64 / ny as f64
+                                    + (kz * z) as f64 / nz as f64);
+                            let v = input[(z * ny + y) * nx + x];
+                            acc += Complex::new(v * ang.cos(), v * ang.sin());
+                        }
+                    }
+                }
+                out[(kx * ny + ky) * nz + kz] = acc;
+            }
+        }
+    }
+    out
+}
+
+/// Run the distributed forward transform and assemble the global spectrum
+/// as [kx][ky][kz] from the Z-pencils.
+fn distributed_forward(spec: &PlanSpec, input_global: Vec<f64>) -> Vec<Complex<f64>> {
+    let (nx, ny, nz) = (spec.nx, spec.ny, spec.nz);
+    let h = nx / 2 + 1;
+    let input = std::sync::Arc::new(input_global);
+    let report = run_on_threads(spec, move |ctx| {
+        let xp = ctx.plan.decomp.x_pencil(ctx.rank());
+        let mut local = vec![0.0f64; xp.len()];
+        for z in 0..xp.dims[0] {
+            for y in 0..xp.dims[1] {
+                for x in 0..nx {
+                    local[(z * xp.dims[1] + y) * nx + x] = input
+                        [((z + xp.offsets[0]) * ny + (y + xp.offsets[1])) * nx + x];
+                }
+            }
+        }
+        let mut out = ctx.alloc_output();
+        ctx.forward(&local, &mut out)?;
+        let zp = ctx.plan.decomp.z_pencil(ctx.rank());
+        Ok((zp.dims, zp.offsets, out))
+    })
+    .unwrap();
+    let mut global = vec![Complex::<f64>::zero(); h * ny * nz];
+    for (dims, offs, data) in report.per_rank {
+        for xl in 0..dims[0] {
+            for yl in 0..dims[1] {
+                for z in 0..nz {
+                    global[((xl + offs[0]) * ny + (yl + offs[1])) * nz + z] =
+                        data[(xl * dims[1] + yl) * nz + z];
+                }
+            }
+        }
+    }
+    global
+}
+
+fn random_field(nx: usize, ny: usize, nz: usize, seed: u64) -> Vec<f64> {
+    let mut rng = SplitMix64::new(seed);
+    (0..nx * ny * nz).map(|_| rng.next_normal()).collect()
+}
+
+#[test]
+fn forward_matches_naive_dft_on_tiny_grids() {
+    for (dims, pg) in [
+        ([4, 4, 4], ProcGrid::new(2, 2)),
+        ([6, 4, 8], ProcGrid::new(2, 2)),
+        ([8, 6, 4], ProcGrid::new(3, 2)),
+    ] {
+        let spec = PlanSpec::new(dims, pg).unwrap();
+        let input = random_field(dims[0], dims[1], dims[2], 42);
+        let got = distributed_forward(&spec, input.clone());
+        let want = naive_fft3d(&input, dims[0], dims[1], dims[2]);
+        let scale = (dims[0] * dims[1] * dims[2]) as f64;
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g.re - w.re).abs() < 1e-8 * scale && (g.im - w.im).abs() < 1e-8 * scale,
+                "dims={dims:?} pg={}x{} idx={i}: got {g}, want {w}",
+                pg.m1,
+                pg.m2
+            );
+        }
+    }
+}
+
+#[test]
+fn every_decomposition_matches_single_rank() {
+    let dims = [12, 10, 8];
+    let input = random_field(12, 10, 8, 7);
+    let reference =
+        distributed_forward(&PlanSpec::new(dims, ProcGrid::new(1, 1)).unwrap(), input.clone());
+    for (m1, m2) in [(1, 2), (2, 1), (2, 2), (1, 4), (4, 1), (3, 2), (2, 4), (5, 2)] {
+        let spec = match PlanSpec::new(dims, ProcGrid::new(m1, m2)) {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let got = distributed_forward(&spec, input.clone());
+        for (i, (g, w)) in got.iter().zip(&reference).enumerate() {
+            assert!(
+                (g.re - w.re).abs() < 1e-9 && (g.im - w.im).abs() < 1e-9,
+                "pg {m1}x{m2} idx {i}: {g} vs {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn useeven_bit_identical_to_alltoallv() {
+    let dims = [10, 9, 7]; // deliberately uneven over 3x2
+    let input = random_field(10, 9, 7, 99);
+    let a = distributed_forward(
+        &PlanSpec::new(dims, ProcGrid::new(3, 2)).unwrap(),
+        input.clone(),
+    );
+    let b = distributed_forward(
+        &PlanSpec::new(dims, ProcGrid::new(3, 2)).unwrap().with_use_even(true),
+        input,
+    );
+    assert_eq!(a, b, "USEEVEN must not change the numbers");
+}
+
+#[test]
+fn roundtrip_normalisation_across_configs() {
+    for (dims, m1, m2, use_even) in [
+        ([8, 8, 8], 2, 2, false),
+        ([16, 12, 10], 2, 3, false),
+        ([9, 15, 6], 3, 3, true),
+        ([8, 8, 8], 1, 4, false), // 1D slabs
+        ([12, 8, 8], 4, 1, false),
+    ] {
+        let spec = PlanSpec::new(dims, ProcGrid::new(m1, m2)).unwrap().with_use_even(use_even);
+        let (nx, ny, nz) = (dims[0], dims[1], dims[2]);
+        let report = run_on_threads(&spec, move |ctx| {
+            let input = ctx.make_real_input(sine_field::<f64>(nx, ny, nz));
+            let mut out = ctx.alloc_output();
+            let mut back = ctx.alloc_input();
+            ctx.forward(&input, &mut out)?;
+            ctx.backward(&out, &mut back)?;
+            Ok(verify_roundtrip(&input, &back, ctx.plan.normalization()))
+        })
+        .unwrap();
+        for (rank, err) in report.per_rank.iter().enumerate() {
+            assert!(*err < 1e-10, "dims={dims:?} pg={m1}x{m2} rank={rank}: err={err}");
+        }
+    }
+}
+
+#[test]
+fn non_stride1_matches_stride1_spectrum() {
+    let dims = [8, 6, 10];
+    let input = random_field(8, 6, 10, 5);
+    let s1 = distributed_forward(
+        &PlanSpec::new(dims, ProcGrid::new(2, 2)).unwrap(),
+        input.clone(),
+    );
+
+    // Non-STRIDE1 Z-pencil layout is [z][y][x_loc] — assemble accordingly.
+    let spec = PlanSpec::new(dims, ProcGrid::new(2, 2)).unwrap().with_stride1(false);
+    let (nx, ny, nz) = (dims[0], dims[1], dims[2]);
+    let h = nx / 2 + 1;
+    let input_arc = std::sync::Arc::new(input);
+    let report = run_on_threads(&spec, move |ctx| {
+        let xp = ctx.plan.decomp.x_pencil(ctx.rank());
+        let mut local = vec![0.0f64; xp.len()];
+        for z in 0..xp.dims[0] {
+            for y in 0..xp.dims[1] {
+                for x in 0..nx {
+                    local[(z * xp.dims[1] + y) * nx + x] = input_arc
+                        [((z + xp.offsets[0]) * ny + (y + xp.offsets[1])) * nx + x];
+                }
+            }
+        }
+        let mut out = ctx.alloc_output();
+        ctx.forward(&local, &mut out)?;
+        let zp = ctx.plan.decomp.z_pencil(ctx.rank());
+        Ok((zp.dims, zp.offsets, out))
+    })
+    .unwrap();
+    let mut s0 = vec![Complex::<f64>::zero(); h * ny * nz];
+    for (dims_l, offs, data) in report.per_rank {
+        // dims_l = [h_loc, ny2_loc, nz] (pencil descriptor), data layout is
+        // XYZ: [nz][ny2_loc][h_loc].
+        let (h_loc, ny2) = (dims_l[0], dims_l[1]);
+        for z in 0..nz {
+            for yl in 0..ny2 {
+                for xl in 0..h_loc {
+                    s0[((xl + offs[0]) * ny + (yl + offs[1])) * nz + z] =
+                        data[(z * ny2 + yl) * h_loc + xl];
+                }
+            }
+        }
+    }
+    for (i, (a, b)) in s1.iter().zip(&s0).enumerate() {
+        assert!(
+            (a.re - b.re).abs() < 1e-9 && (a.im - b.im).abs() < 1e-9,
+            "idx {i}: stride1 {a} vs xyz {b}"
+        );
+    }
+}
+
+#[test]
+fn non_stride1_roundtrip() {
+    let spec =
+        PlanSpec::new([8, 6, 10], ProcGrid::new(2, 2)).unwrap().with_stride1(false);
+    let report = run_on_threads(&spec, move |ctx| {
+        let input = ctx.make_real_input(sine_field::<f64>(8, 6, 10));
+        let mut out = ctx.alloc_output();
+        let mut back = ctx.alloc_input();
+        ctx.forward(&input, &mut out)?;
+        ctx.backward(&out, &mut back)?;
+        Ok(verify_roundtrip(&input, &back, ctx.plan.normalization()))
+    })
+    .unwrap();
+    assert!(report.per_rank.iter().all(|e| *e < 1e-10));
+}
+
+#[test]
+fn chebyshev_third_dimension_roundtrip() {
+    let spec = PlanSpec::new([8, 8, 9], ProcGrid::new(2, 2))
+        .unwrap()
+        .with_third(TransformKind::Cheby);
+    let report = run_on_threads(&spec, move |ctx| {
+        let input = ctx.make_real_input(|x, y, z| {
+            (x as f64 * 0.3).sin() + (y as f64 * 0.7).cos() + z as f64 * 0.01
+        });
+        let mut out = ctx.alloc_output();
+        let mut back = ctx.alloc_input();
+        ctx.forward(&input, &mut out)?;
+        ctx.backward(&out, &mut back)?;
+        Ok(verify_roundtrip(&input, &back, ctx.plan.normalization()))
+    })
+    .unwrap();
+    assert!(report.per_rank.iter().all(|e| *e < 1e-9), "{:?}", report.per_rank);
+}
+
+#[test]
+fn sine_third_dimension_roundtrip() {
+    let spec = PlanSpec::new([8, 8, 10], ProcGrid::new(2, 2))
+        .unwrap()
+        .with_third(TransformKind::Sine);
+    let report = run_on_threads(&spec, move |ctx| {
+        let input = ctx.make_real_input(|x, y, z| {
+            (x as f64 * 0.4).cos() + (y as f64 * 0.2).sin() + (z as f64 + 1.0) * 0.05
+        });
+        let mut out = ctx.alloc_output();
+        let mut back = ctx.alloc_input();
+        ctx.forward(&input, &mut out)?;
+        ctx.backward(&out, &mut back)?;
+        Ok(verify_roundtrip(&input, &back, ctx.plan.normalization()))
+    })
+    .unwrap();
+    assert!(report.per_rank.iter().all(|e| *e < 1e-9), "{:?}", report.per_rank);
+}
+
+#[test]
+fn empty_third_dimension_means_no_z_transform() {
+    // With TransformKind::Empty, the Z-pencil holds the X+Y-transformed
+    // data only; applying a manual Z FFT must reproduce the full Fft run.
+    let dims = [6, 6, 4];
+    let input = random_field(6, 6, 4, 31);
+    let full = distributed_forward(&PlanSpec::new(dims, ProcGrid::new(2, 2)).unwrap(), input.clone());
+
+    let spec =
+        PlanSpec::new(dims, ProcGrid::new(2, 2)).unwrap().with_third(TransformKind::Empty);
+    let input_arc = std::sync::Arc::new(input);
+    let (nx, ny, nz) = (dims[0], dims[1], dims[2]);
+    let h = nx / 2 + 1;
+    let report = run_on_threads(&spec, move |ctx| {
+        let xp = ctx.plan.decomp.x_pencil(ctx.rank());
+        let mut local = vec![0.0f64; xp.len()];
+        for z in 0..xp.dims[0] {
+            for y in 0..xp.dims[1] {
+                for x in 0..nx {
+                    local[(z * xp.dims[1] + y) * nx + x] = input_arc
+                        [((z + xp.offsets[0]) * ny + (y + xp.offsets[1])) * nx + x];
+                }
+            }
+        }
+        let mut out = ctx.alloc_output();
+        ctx.forward(&local, &mut out)?;
+        // Manual Z FFT on the stride-1 Z lines (the "custom transform").
+        use p3dfft::fft::{C2cPlan, Direction};
+        let plan = C2cPlan::<f64>::new(nz, Direction::Forward);
+        let mut scratch = vec![Complex::zero(); plan.scratch_len()];
+        plan.execute_batch(&mut out, &mut scratch);
+        let zp = ctx.plan.decomp.z_pencil(ctx.rank());
+        Ok((zp.dims, zp.offsets, out))
+    })
+    .unwrap();
+    let mut assembled = vec![Complex::<f64>::zero(); h * ny * nz];
+    for (dims_l, offs, data) in report.per_rank {
+        for xl in 0..dims_l[0] {
+            for yl in 0..dims_l[1] {
+                for z in 0..nz {
+                    assembled[((xl + offs[0]) * ny + (yl + offs[1])) * nz + z] =
+                        data[(xl * dims_l[1] + yl) * nz + z];
+                }
+            }
+        }
+    }
+    for (i, (a, b)) in assembled.iter().zip(&full).enumerate() {
+        assert!(
+            (a.re - b.re).abs() < 1e-9 && (a.im - b.im).abs() < 1e-9,
+            "idx {i}: empty+manual {a} vs full {b}"
+        );
+    }
+}
+
+#[test]
+fn f32_precision_roundtrip() {
+    let spec = PlanSpec::new([16, 16, 16], ProcGrid::new(2, 2)).unwrap();
+    let report = run_on_threads_with::<f32, f64>(&spec, move |ctx| {
+        let input = ctx.make_real_input(sine_field::<f32>(16, 16, 16));
+        let mut out = ctx.alloc_output();
+        let mut back = ctx.alloc_input();
+        ctx.forward(&input, &mut out)?;
+        ctx.backward(&out, &mut back)?;
+        Ok(verify_roundtrip(&input, &back, ctx.plan.normalization()))
+    })
+    .unwrap();
+    for err in report.per_rank {
+        assert!(err < 1e-3, "f32 roundtrip err {err}");
+    }
+}
+
+#[test]
+fn timing_report_has_all_stages() {
+    let spec = PlanSpec::new([16, 16, 16], ProcGrid::new(2, 2)).unwrap();
+    let report = run_on_threads(&spec, move |ctx| {
+        let input = ctx.make_real_input(sine_field::<f64>(16, 16, 16));
+        let mut out = ctx.alloc_output();
+        ctx.forward(&input, &mut out)?;
+        Ok(())
+    })
+    .unwrap();
+    assert!(report.compute() > 0.0, "compute stage timed");
+    assert!(report.comm() > 0.0, "comm stages timed");
+    assert!(report.bytes > 0, "fabric moved bytes");
+}

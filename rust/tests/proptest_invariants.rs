@@ -1,0 +1,241 @@
+//! Property-based invariants via the in-crate quickprop harness.
+//!
+//! Coordinator invariants the paper's design relies on:
+//! * the three pencil orientations partition the global grid for ANY
+//!   (grid, procgrid) satisfying Eq. 2;
+//! * forward+backward is exactly `N³ ·` identity for random grids and
+//!   processor grids, STRIDE1 or not, USEEVEN or not;
+//! * Parseval's identity holds across the distributed transform;
+//! * the serial FFT agrees with the naive DFT on random sizes;
+//! * alltoallv routing delivers every element exactly once for random
+//!   counts (the USEEVEN padding never leaks).
+
+use p3dfft::coordinator::{run_on_threads, PlanSpec};
+use p3dfft::fft::{naive_dft, C2cPlan, Complex, Direction};
+use p3dfft::grid::{Decomp, ProcGrid};
+use p3dfft::mpi::Universe;
+use p3dfft::util::quickprop::{check, Config};
+use p3dfft::util::SplitMix64;
+
+fn rand_spec(rng: &mut SplitMix64) -> Option<PlanSpec> {
+    let nx = 2 * rng.next_range(1, 8) as usize; // even, 2..16
+    let ny = rng.next_range(2, 12) as usize;
+    let nz = rng.next_range(2, 12) as usize;
+    let m1 = rng.next_range(1, 3) as usize;
+    let m2 = rng.next_range(1, 3) as usize;
+    PlanSpec::new([nx, ny, nz], ProcGrid::new(m1, m2)).ok()
+}
+
+#[test]
+fn prop_pencils_partition_global_grid() {
+    check(&Config { cases: 40, base_seed: 0xA11 }, "pencils partition", |rng| {
+        let spec = match rand_spec(rng) {
+            Some(s) => s,
+            None => return Ok(()),
+        };
+        let d = Decomp::new(spec.nx, spec.ny, spec.nz, spec.pgrid).unwrap();
+        let h = d.h();
+        // Every global (x, y, z) must be owned by exactly one rank per
+        // orientation.
+        let mut xown = vec![0u32; spec.nx * spec.ny * spec.nz];
+        let mut zown = vec![0u32; h * spec.ny * spec.nz];
+        for r in 0..d.p() {
+            let xp = d.x_pencil(r);
+            for z in 0..xp.dims[0] {
+                for y in 0..xp.dims[1] {
+                    for x in 0..xp.dims[2] {
+                        let gi = ((z + xp.offsets[0]) * spec.ny + (y + xp.offsets[1]))
+                            * spec.nx
+                            + x;
+                        xown[gi] += 1;
+                    }
+                }
+            }
+            let zp = d.z_pencil(r);
+            for xl in 0..zp.dims[0] {
+                for yl in 0..zp.dims[1] {
+                    for z in 0..zp.dims[2] {
+                        let gi = ((xl + zp.offsets[0]) * spec.ny + (yl + zp.offsets[1]))
+                            * spec.nz
+                            + z;
+                        zown[gi] += 1;
+                    }
+                }
+            }
+        }
+        if xown.iter().any(|&c| c != 1) {
+            return Err(format!("X-pencil coverage wrong for {spec:?}"));
+        }
+        if zown.iter().any(|&c| c != 1) {
+            return Err(format!("Z-pencil coverage wrong for {spec:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_roundtrip_is_scaled_identity() {
+    check(&Config { cases: 12, base_seed: 0xB22 }, "roundtrip", |rng| {
+        let mut spec = match rand_spec(rng) {
+            Some(s) => s,
+            None => return Ok(()),
+        };
+        if rng.next_f64() < 0.3 {
+            spec = spec.with_use_even(true);
+        }
+        if rng.next_f64() < 0.3 {
+            spec = spec.with_stride1(false);
+        }
+        let seed = rng.next_u64();
+        let report = run_on_threads(&spec, move |ctx| {
+            let mut lrng = SplitMix64::new(seed ^ ctx.rank() as u64);
+            let input: Vec<f64> =
+                (0..ctx.plan.input_len()).map(|_| lrng.next_normal()).collect();
+            let mut out = ctx.alloc_output();
+            let mut back = ctx.alloc_input();
+            ctx.forward(&input, &mut out)?;
+            ctx.backward(&out, &mut back)?;
+            let norm = ctx.plan.normalization();
+            let mut worst = 0.0f64;
+            for (a, b) in input.iter().zip(&back) {
+                worst = worst.max((b / norm - a).abs());
+            }
+            Ok(worst)
+        })
+        .map_err(|e| e.to_string())?;
+        let worst = report.per_rank.into_iter().fold(0.0f64, f64::max);
+        if worst > 1e-9 {
+            return Err(format!("roundtrip error {worst} for {spec:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parseval_across_distributed_transform() {
+    check(&Config { cases: 10, base_seed: 0xC33 }, "parseval", |rng| {
+        let spec = match rand_spec(rng) {
+            Some(s) => s,
+            None => return Ok(()),
+        };
+        let (nx, ny, nz) = (spec.nx, spec.ny, spec.nz);
+        let seed = rng.next_u64();
+        let report = run_on_threads(&spec, move |ctx| {
+            let mut lrng = SplitMix64::new(seed ^ (ctx.rank() as u64) << 8);
+            let input: Vec<f64> =
+                (0..ctx.plan.input_len()).map(|_| lrng.next_normal()).collect();
+            let e_time: f64 = input.iter().map(|v| v * v).sum();
+            let mut out = ctx.alloc_output();
+            ctx.forward(&input, &mut out)?;
+            // Spectral energy with conjugate-symmetry weights: interior
+            // kx (0 < kx < nx/2) modes represent two of the full modes.
+            let zp = ctx.plan.decomp.z_pencil(ctx.rank());
+            let h = nx / 2 + 1;
+            let mut e_freq = 0.0;
+            for xl in 0..zp.dims[0] {
+                let kx = xl + zp.offsets[0];
+                let w = if kx == 0 || (nx % 2 == 0 && kx == h - 1) { 1.0 } else { 2.0 };
+                for yl in 0..zp.dims[1] {
+                    for z in 0..zp.dims[2] {
+                        e_freq += w * out[(xl * zp.dims[1] + yl) * zp.dims[2] + z].norm_sqr();
+                    }
+                }
+            }
+            let te = ctx.sum_over_ranks(e_time);
+            let fe = ctx.sum_over_ranks(e_freq) / (nx * ny * nz) as f64;
+            Ok((te, fe))
+        })
+        .map_err(|e| e.to_string())?;
+        let (te, fe) = report.per_rank[0];
+        if (te - fe).abs() > 1e-6 * te.max(1.0) {
+            return Err(format!("Parseval violated: time {te} vs freq {fe} for {spec:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_serial_fft_matches_naive_random_sizes() {
+    check(&Config { cases: 30, base_seed: 0xD44 }, "fft vs naive", |rng| {
+        let n = rng.next_range(1, 200) as usize;
+        let mut data: Vec<Complex<f64>> = (0..n)
+            .map(|_| Complex::new(rng.next_normal(), rng.next_normal()))
+            .collect();
+        let expect = naive_dft(&data, false);
+        let plan = C2cPlan::new(n, Direction::Forward);
+        let mut scratch = vec![Complex::zero(); plan.scratch_len()];
+        plan.execute(&mut data, &mut scratch);
+        for (i, (g, e)) in data.iter().zip(&expect).enumerate() {
+            if (g.re - e.re).abs() > 1e-7 * n as f64 || (g.im - e.im).abs() > 1e-7 * n as f64 {
+                return Err(format!("n={n} idx={i}: {g} vs {e}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_alltoallv_delivers_exactly_once() {
+    check(&Config { cases: 10, base_seed: 0xE55 }, "alltoallv routing", |rng| {
+        let p = rng.next_range(2, 5) as usize;
+        // Random (symmetric-shape) counts: count[i][j] elements from i to j.
+        let mut counts = vec![vec![0usize; p]; p];
+        for (i, row) in counts.iter_mut().enumerate() {
+            for (j, c) in row.iter_mut().enumerate() {
+                *c = if i == j {
+                    rng.next_range(0, 4) as usize
+                } else {
+                    rng.next_range(0, 4) as usize
+                };
+            }
+        }
+        // Self counts must match (alltoallv asserts symmetric self block).
+        let counts = std::sync::Arc::new(counts);
+        let u = Universe::new(p);
+        let counts2 = counts.clone();
+        let results = u
+            .run(move |c| {
+                let me = c.rank();
+                let p = c.size();
+                let scounts: Vec<usize> = (0..p).map(|j| counts2[me][j]).collect();
+                let rcounts: Vec<usize> = (0..p).map(|i| counts2[i][me]).collect();
+                let mut sdispls = vec![0usize; p];
+                for j in 1..p {
+                    sdispls[j] = sdispls[j - 1] + scounts[j - 1];
+                }
+                let mut rdispls = vec![0usize; p];
+                for i in 1..p {
+                    rdispls[i] = rdispls[i - 1] + rcounts[i - 1];
+                }
+                // Element value encodes (sender, dest, ordinal).
+                let mut send = Vec::new();
+                for j in 0..p {
+                    for k in 0..scounts[j] {
+                        send.push((me * 10000 + j * 100 + k) as u64);
+                    }
+                }
+                let total_recv: usize = rcounts.iter().sum();
+                let mut recv = vec![u64::MAX; total_recv];
+                c.alltoallv(&send, &scounts, &sdispls, &mut recv, &rcounts, &rdispls);
+                // Verify every element came from the right sender with the
+                // right ordinal.
+                for i in 0..p {
+                    for k in 0..rcounts[i] {
+                        let v = recv[rdispls[i] + k];
+                        let want = (i * 10000 + me * 100 + k) as u64;
+                        if v != want {
+                            return Err(p3dfft::Error::Mpi(format!(
+                                "rank {me} from {i} slot {k}: got {v}, want {want}"
+                            )));
+                        }
+                    }
+                }
+                Ok(true)
+            })
+            .map_err(|e| e.to_string())?;
+        if !results.into_iter().all(|b| b) {
+            return Err("verification failed".into());
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,174 @@
+//! Integration over the PJRT runtime: load real AOT artifacts (built by
+//! `make artifacts`) and check their numerics against the native engine,
+//! then run the full distributed pipeline on the PJRT engine.
+//!
+//! These tests skip (with a loud message) when `artifacts/manifest.txt` is
+//! absent so `cargo test` works before `make artifacts`; the Makefile's
+//! `test` target always builds artifacts first.
+
+use std::path::{Path, PathBuf};
+
+use p3dfft::bench::{sine_field, verify_roundtrip};
+use p3dfft::coordinator::{run_on_threads, EngineKind, PlanSpec};
+use p3dfft::fft::{Complex, R2cPlan};
+use p3dfft::grid::ProcGrid;
+use p3dfft::runtime::StageLibrary;
+use p3dfft::util::SplitMix64;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {} — run `make artifacts` first", dir.display());
+        None
+    }
+}
+
+#[test]
+fn pjrt_r2c_stage_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let lib = StageLibrary::open(&dir).unwrap();
+    // The default artifact set is grid 32^3 on 2x2: x_r2c has batch 256,
+    // n 32 (even split).
+    let (batch, n) = (256, 32);
+    let mut rng = SplitMix64::new(1);
+    let input: Vec<f64> = (0..batch * n).map(|_| rng.next_normal()).collect();
+    let (re, im) = lib.x_r2c_f64(batch, n, &input).unwrap();
+
+    let plan = R2cPlan::<f64>::new(n);
+    let h = plan.out_len();
+    let mut native = vec![Complex::<f64>::zero(); batch * h];
+    let mut scratch = vec![Complex::zero(); plan.scratch_len()];
+    plan.execute_batch(&input, &mut native, &mut scratch);
+    for i in 0..batch * h {
+        assert!(
+            (re[i] - native[i].re).abs() < 1e-9 && (im[i] - native[i].im).abs() < 1e-9,
+            "idx {i}: pjrt ({}, {}) vs native {}",
+            re[i],
+            im[i],
+            native[i]
+        );
+    }
+}
+
+#[test]
+fn pjrt_c2c_roundtrip() {
+    let Some(dir) = artifacts_dir() else { return };
+    let lib = StageLibrary::open(&dir).unwrap();
+    // Y-stage artifact shape for 32^3 on 2x2: h=17 splits 9+8 over M1, so
+    // batches are 9*16=144 and 8*16=128 (there is no batch-256 C2C).
+    let (batch, n) = (144, 32);
+    let mut rng = SplitMix64::new(2);
+    let re: Vec<f64> = (0..batch * n).map(|_| rng.next_normal()).collect();
+    let im: Vec<f64> = (0..batch * n).map(|_| rng.next_normal()).collect();
+    let (fr, fi) = lib.c2c_f64(false, batch, n, &re, &im).unwrap();
+    let (br, bi) = lib.c2c_f64(true, batch, n, &fr, &fi).unwrap();
+    for i in 0..batch * n {
+        assert!((br[i] / n as f64 - re[i]).abs() < 1e-9);
+        assert!((bi[i] / n as f64 - im[i]).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn pjrt_fused_cube_matches_native_pipeline() {
+    let Some(dir) = artifacts_dir() else { return };
+    let lib = StageLibrary::open(&dir).unwrap();
+    let n = 16; // aot.py --fused-cube default
+    let mut rng = SplitMix64::new(3);
+    let input: Vec<f64> = (0..n * n * n).map(|_| rng.next_normal()).collect();
+    let (re, im) = lib.fft3d_r2c_f64(n, &input).unwrap();
+    //
+
+    // Native reference via the distributed pipeline on one rank.
+    let spec = PlanSpec::new([n, n, n], ProcGrid::new(1, 1)).unwrap();
+    let input2 = input.clone();
+    let report = run_on_threads(&spec, move |ctx| {
+        let mut out = ctx.alloc_output();
+        ctx.forward(&input2, &mut out)?;
+        Ok(out)
+    })
+    .unwrap();
+    let native = &report.per_rank[0];
+    // Fused artifact output is [nz][ny][h]; native Z-pencil is [h][ny][nz].
+    let h = n / 2 + 1;
+    for z in 0..n {
+        for y in 0..n {
+            for x in 0..h {
+                let a_re = re[(z * n + y) * h + x];
+                let a_im = im[(z * n + y) * h + x];
+                let b = native[(x * n + y) * n + z];
+                assert!(
+                    (a_re - b.re).abs() < 1e-8 && (a_im - b.im).abs() < 1e-8,
+                    "(x={x},y={y},z={z}): pjrt ({a_re},{a_im}) vs native {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_engine_full_distributed_roundtrip() {
+    let Some(dir) = artifacts_dir() else { return };
+    // The default artifact set is lowered for 32^3 on 2x2.
+    let spec = PlanSpec::new([32, 32, 32], ProcGrid::new(2, 2))
+        .unwrap()
+        .with_engine(EngineKind::Pjrt { artifacts_dir: dir });
+    let report = run_on_threads(&spec, move |ctx| {
+        let input = ctx.make_real_input(sine_field::<f64>(32, 32, 32));
+        let mut out = ctx.alloc_output();
+        let mut back = ctx.alloc_input();
+        ctx.forward(&input, &mut out)?;
+        ctx.backward(&out, &mut back)?;
+        Ok(verify_roundtrip(&input, &back, ctx.plan.normalization()))
+    })
+    .unwrap();
+    for (rank, err) in report.per_rank.iter().enumerate() {
+        assert!(*err < 1e-8, "rank {rank}: pjrt roundtrip err {err}");
+    }
+}
+
+#[test]
+fn pjrt_engine_matches_native_engine() {
+    let Some(dir) = artifacts_dir() else { return };
+    let dims = [32, 32, 32];
+    let mut rng = SplitMix64::new(4);
+    let field: Vec<f64> = (0..32 * 32 * 32).map(|_| rng.next_normal()).collect();
+    let field = std::sync::Arc::new(field);
+
+    let gather = |spec: PlanSpec| {
+        let field = field.clone();
+        let report = run_on_threads(&spec, move |ctx| {
+            let xp = ctx.plan.decomp.x_pencil(ctx.rank());
+            let mut local = vec![0.0f64; xp.len()];
+            for z in 0..xp.dims[0] {
+                for y in 0..xp.dims[1] {
+                    for x in 0..32 {
+                        local[(z * xp.dims[1] + y) * 32 + x] =
+                            field[((z + xp.offsets[0]) * 32 + (y + xp.offsets[1])) * 32 + x];
+                    }
+                }
+            }
+            let mut out = ctx.alloc_output();
+            ctx.forward(&local, &mut out)?;
+            Ok(out)
+        })
+        .unwrap();
+        report.per_rank
+    };
+
+    let native = gather(PlanSpec::new(dims, ProcGrid::new(2, 2)).unwrap());
+    let pjrt = gather(
+        PlanSpec::new(dims, ProcGrid::new(2, 2))
+            .unwrap()
+            .with_engine(EngineKind::Pjrt { artifacts_dir: dir }),
+    );
+    for (rank, (a, b)) in native.iter().zip(&pjrt).enumerate() {
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (x.re - y.re).abs() < 1e-8 && (x.im - y.im).abs() < 1e-8,
+                "rank {rank} idx {i}: native {x} vs pjrt {y}"
+            );
+        }
+    }
+}
