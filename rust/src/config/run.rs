@@ -18,6 +18,8 @@ pub struct RunConfig {
     pub iterations: usize,
     pub use_even: bool,
     pub stride1: bool,
+    /// Communication–compute overlap chunk count (1 = blocking pipeline).
+    pub overlap_chunks: usize,
     pub third: TransformKind,
     pub engine: String,
     pub artifacts_dir: PathBuf,
@@ -33,6 +35,7 @@ impl Default for RunConfig {
             iterations: 3,
             use_even: false,
             stride1: true,
+            overlap_chunks: 1,
             third: TransformKind::Fft,
             engine: "native".into(),
             artifacts_dir: "artifacts".into(),
@@ -61,6 +64,13 @@ impl RunConfig {
         rc.iterations = c.get_int("iterations", rc.iterations as i64).max(1) as usize;
         rc.use_even = c.get_bool("options.use_even", rc.use_even);
         rc.stride1 = c.get_bool("options.stride1", rc.stride1);
+        let oc = c.get_int("options.overlap_chunks", rc.overlap_chunks as i64);
+        if oc < 1 {
+            return Err(Error::InvalidConfig(format!(
+                "options.overlap_chunks must be >= 1, got {oc}"
+            )));
+        }
+        rc.overlap_chunks = oc as usize;
         rc.third = match c.get_str("options.third", "fft").as_str() {
             "fft" => TransformKind::Fft,
             "cheby" => TransformKind::Cheby,
@@ -98,6 +108,7 @@ impl RunConfig {
             "iterations" => self.iterations = tmp.iterations,
             "options.use_even" => self.use_even = tmp.use_even,
             "options.stride1" => self.stride1 = tmp.stride1,
+            "options.overlap_chunks" => self.overlap_chunks = tmp.overlap_chunks,
             "options.third" => self.third = tmp.third,
             "options.engine" => self.engine = tmp.engine,
             "options.artifacts_dir" => self.artifacts_dir = tmp.artifacts_dir,
@@ -124,6 +135,7 @@ impl RunConfig {
             .with_third(self.third)
             .with_use_even(self.use_even)
             .with_stride1(self.stride1)
+            .with_overlap_chunks(self.overlap_chunks)
             .with_engine(engine))
     }
 }
@@ -180,9 +192,23 @@ precision = "f32"
         rc.apply_override("grid.dims", "[8, 8, 8]").unwrap();
         rc.apply_override("options.use_even", "true").unwrap();
         rc.apply_override("iterations", "11").unwrap();
+        rc.apply_override("options.overlap_chunks", "4").unwrap();
         assert_eq!(rc.dims, [8, 8, 8]);
         assert!(rc.use_even);
         assert_eq!(rc.iterations, 11);
+        assert_eq!(rc.overlap_chunks, 4);
         assert!(rc.apply_override("bogus.key", "1").is_err());
+    }
+
+    #[test]
+    fn overlap_chunks_parses_and_validates() {
+        let c = ParsedConfig::parse("[options]\noverlap_chunks = 8\n").unwrap();
+        let rc = RunConfig::from_parsed(&c).unwrap();
+        assert_eq!(rc.overlap_chunks, 8);
+        let spec = rc.to_spec().unwrap();
+        assert_eq!(spec.opts.overlap_chunks, 8);
+
+        let c = ParsedConfig::parse("[options]\noverlap_chunks = 0\n").unwrap();
+        assert!(RunConfig::from_parsed(&c).is_err());
     }
 }

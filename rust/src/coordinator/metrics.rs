@@ -28,6 +28,14 @@ impl<R> RunReport<R> {
         self.timer.get(Stage::Compute)
     }
 
+    /// Exchange time hidden behind pack/unpack/compute by the chunked
+    /// overlap executor (zero on the blocking pipeline). Concurrent with
+    /// the other buckets — compare it against [`Self::comm`] to see how
+    /// much of the exchange the overlap hid.
+    pub fn overlap(&self) -> f64 {
+        self.timer.get(Stage::Overlap)
+    }
+
     /// One-line per-stage summary.
     pub fn stage_summary(&self) -> String {
         let mut parts = Vec::new();
@@ -50,10 +58,13 @@ mod tests {
         let mut t = StageTimer::new();
         t.add(Stage::Compute, 2.0);
         t.add(Stage::Exchange, 1.0);
+        t.add(Stage::Overlap, 0.5);
         let r = RunReport { per_rank: vec![(), ()], timer: t, wall: 3.5, bytes: 100 };
         assert_eq!(r.compute(), 2.0);
-        assert_eq!(r.comm(), 1.0);
+        assert_eq!(r.comm(), 1.0, "hidden overlap time must not count as comm");
+        assert_eq!(r.overlap(), 0.5);
         assert!(r.stage_summary().contains("compute=2.0000s"));
         assert!(r.stage_summary().contains("exchange=1.0000s"));
+        assert!(r.stage_summary().contains("overlap=0.5000s"));
     }
 }

@@ -1,16 +1,22 @@
 //! The P3DFFT coordinator — the paper's library, as a Rust API.
 //!
 //! * [`spec`] — [`PlanSpec`]: grid + processor grid + the user options of
-//!   §3 (STRIDE1, USEEVEN, third-dimension transform kind, engine choice);
-//! * [`plan`] — [`RankPlan`]: one rank's compiled pipeline: serial FFT
-//!   plans, the two transpose plans, buffer arena, stage timers, and the
-//!   forward/backward drivers (Fig. 2's three compute + two transpose
-//!   stages);
+//!   §3 (STRIDE1, USEEVEN, third-dimension transform kind, engine choice)
+//!   plus the `overlap_chunks` communication–compute overlap knob;
+//! * [`plan`] — [`RankPlan`]: one rank's compiled **stage graph**:
+//!   [`plan::pipeline::compile`] lowers the spec into ordered forward and
+//!   backward stage lists (Fig. 2's three compute + two transpose stages,
+//!   each transpose fused with the FFT that consumes its output) over a
+//!   shared, size-deduplicated [`plan::BufferPool`]. With
+//!   `overlap_chunks > 1` the transpose stages run the chunked overlap
+//!   executor: chunk `i` in flight while `i+1` packs and `i−1` unpacks
+//!   and transforms;
 //! * [`executor`] — [`run_on_threads`]: `mpirun` in miniature — spawns one
 //!   thread per rank, wires ROW/COLUMN communicators, hands each rank a
 //!   [`RankContext`], and reduces timing into a [`metrics::RunReport`];
 //! * [`metrics`] — cross-rank reductions of the per-stage timings (the
-//!   numbers the paper's figures plot).
+//!   numbers the paper's figures plot), including the overlapped-exchange
+//!   attribution.
 //!
 //! Input/output conventions follow §3.2 exactly: R2C takes X-pencils
 //! (real) and leaves Z-pencils (complex, packed width `(Nx+2)/2`); C2R is
@@ -26,5 +32,5 @@ pub mod spec;
 
 pub use executor::{run_on_threads, run_on_threads_with, RankContext};
 pub use metrics::RunReport;
-pub use plan::{Engine, RankPlan};
+pub use plan::{Engine, Pipeline, RankPlan};
 pub use spec::{EngineKind, Options, PlanSpec, TransformKind};

@@ -1,0 +1,142 @@
+//! Size-deduplicated buffer pool shared by all pipeline stages.
+//!
+//! Stage compilation ([`super::pipeline::compile`]) registers every buffer
+//! it will need in a [`PoolLayout`]; requests with the same name collapse
+//! into one slot sized to the largest request (e.g. the X↔Y and Y↔Z
+//! transposes share one `send` and one `recv` slot, and every FFT plan
+//! shares one `scratch` slot). [`BufferPool::build`] then allocates each
+//! slot once, so forward/backward never allocate on the hot path — the
+//! pool replaces the loose per-field scratch `Vec`s the pre-stage-graph
+//! `RankPlan` carried.
+//!
+//! Access is move-based: a stage [`BufferPool::take`]s a slot (an O(1)
+//! `Vec` move, no copy), works on it, and [`BufferPool::restore`]s it.
+//! Taking a slot that is already out is a pipeline-construction bug and
+//! panics with the slot name.
+
+use crate::fft::{Complex, Real};
+
+/// Identifies one pooled buffer; returned by [`PoolLayout::request`] and
+/// stable across [`BufferPool::build`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlotId(usize);
+
+/// Compile-time buffer plan: named slots with max-merged lengths.
+#[derive(Debug, Default)]
+pub struct PoolLayout {
+    slots: Vec<(&'static str, usize)>,
+}
+
+impl PoolLayout {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a need for `len` elements under `name`. Re-requesting a
+    /// name dedupes: the slot is sized to the max of all requests.
+    pub fn request(&mut self, name: &'static str, len: usize) -> SlotId {
+        if let Some(i) = self.slots.iter().position(|(n, _)| *n == name) {
+            self.slots[i].1 = self.slots[i].1.max(len);
+            SlotId(i)
+        } else {
+            self.slots.push((name, len));
+            SlotId(self.slots.len() - 1)
+        }
+    }
+
+    /// Number of distinct slots.
+    pub fn slot_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total elements the built pool will hold (arena footprint).
+    pub fn total_len(&self) -> usize {
+        self.slots.iter().map(|(_, l)| *l).sum()
+    }
+}
+
+/// The built pool: one zero-initialised buffer per slot.
+#[derive(Debug)]
+pub struct BufferPool<T: Real> {
+    bufs: Vec<Option<Vec<Complex<T>>>>,
+    names: Vec<&'static str>,
+}
+
+impl<T: Real> BufferPool<T> {
+    pub fn build(layout: &PoolLayout) -> Self {
+        BufferPool {
+            bufs: layout.slots.iter().map(|&(_, l)| Some(vec![Complex::zero(); l])).collect(),
+            names: layout.slots.iter().map(|&(n, _)| n).collect(),
+        }
+    }
+
+    /// Move a slot's buffer out (no copy). Panics if it is already taken —
+    /// two live takers would mean two stages racing on one buffer.
+    pub fn take(&mut self, id: SlotId) -> Vec<Complex<T>> {
+        self.bufs[id.0]
+            .take()
+            .unwrap_or_else(|| panic!("buffer slot {:?} already taken", self.names[id.0]))
+    }
+
+    /// Return a buffer taken with [`Self::take`].
+    pub fn restore(&mut self, id: SlotId, buf: Vec<Complex<T>>) {
+        debug_assert!(self.bufs[id.0].is_none(), "restoring a slot that was never taken");
+        self.bufs[id.0] = Some(buf);
+    }
+
+    /// Length of a slot's buffer (whether or not it is currently taken is
+    /// irrelevant to the recorded size — panics only if taken).
+    pub fn len_of(&self, id: SlotId) -> usize {
+        self.bufs[id.0].as_ref().map(|b| b.len()).expect("slot currently taken")
+    }
+
+    pub fn slot_count(&self) -> usize {
+        self.bufs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_dedupes_by_name_and_max_merges() {
+        let mut layout = PoolLayout::new();
+        let a = layout.request("send", 100);
+        let b = layout.request("recv", 50);
+        let a2 = layout.request("send", 200);
+        assert_eq!(a, a2);
+        assert_ne!(a, b);
+        assert_eq!(layout.slot_count(), 2);
+        assert_eq!(layout.total_len(), 250);
+
+        let pool: BufferPool<f64> = BufferPool::build(&layout);
+        assert_eq!(pool.len_of(a), 200, "deduped slot sized to the max request");
+        assert_eq!(pool.len_of(b), 50);
+    }
+
+    #[test]
+    fn take_restore_roundtrips_without_reallocating() {
+        let mut layout = PoolLayout::new();
+        let id = layout.request("ybuf", 8);
+        let mut pool: BufferPool<f64> = BufferPool::build(&layout);
+        let mut buf = pool.take(id);
+        let ptr = buf.as_ptr();
+        buf[3] = Complex::new(1.5, -2.5);
+        pool.restore(id, buf);
+        let buf = pool.take(id);
+        assert_eq!(buf.as_ptr(), ptr, "restore must hand back the same allocation");
+        assert_eq!(buf[3], Complex::new(1.5, -2.5));
+        pool.restore(id, buf);
+    }
+
+    #[test]
+    #[should_panic(expected = "already taken")]
+    fn double_take_panics_with_slot_name() {
+        let mut layout = PoolLayout::new();
+        let id = layout.request("send", 4);
+        let mut pool: BufferPool<f64> = BufferPool::build(&layout);
+        let _a = pool.take(id);
+        let _b = pool.take(id);
+    }
+}

@@ -1,0 +1,425 @@
+//! One rank's compiled transform pipeline (the library core of the paper),
+//! as an explicit **stage graph**.
+//!
+//! Forward R2C (Fig. 2): X-pencil real input → batched R2C over X →
+//! ROW transpose → batched C2C over Y → COLUMN transpose → third-dimension
+//! transform over Z → Z-pencil complex output. Backward is the mirror.
+//! [`pipeline::compile`] turns a [`PlanSpec`] into an ordered list of
+//! [`stages::PipelineStage`]s over a shared, size-deduplicated
+//! [`buffers::BufferPool`]; [`RankPlan`] owns the compiled pipelines and
+//! drives them.
+//!
+//! Two layout modes (§3.3):
+//! * STRIDE1 (default): packing embeds local transposes so every FFT runs
+//!   unit-stride (Table 1 upper half — Y-pencil YXZ, Z-pencil ZYX);
+//! * non-STRIDE1: all arrays stay XYZ order; packs become contiguous slab
+//!   copies and the Y/Z FFTs run strided ("let the FFT library handle the
+//!   strides").
+//!
+//! Two engines: the native serial-FFT substrate, or the PJRT stage library
+//! executing the AOT-lowered JAX/Pallas artifacts (STRIDE1 only — the
+//! artifacts are dense (batch, n) kernels).
+//!
+//! One executor knob: `overlap_chunks` — on the STRIDE1 + native path the
+//! transposes run chunked, overlapping each chunk's exchange with the
+//! neighbouring chunks' pack/unpack/FFT (bit-identical output; see
+//! [`stages`]).
+
+pub mod buffers;
+pub mod pipeline;
+pub mod stages;
+
+use std::sync::Arc;
+
+use crate::fft::{Complex, Real};
+use crate::grid::Decomp;
+use crate::mpi::Comm;
+use crate::runtime::StageLibrary;
+use crate::util::error::{Error, Result};
+use crate::util::timer::StageTimer;
+
+use super::spec::{EngineKind, PlanSpec, TransformKind};
+
+pub use buffers::{BufferPool, PoolLayout, SlotId};
+pub use pipeline::{compile, Pipeline};
+pub use stages::{PipelineStage, StageCtx, ThirdOp};
+
+/// Compute-stage engine (shared library handle for the PJRT case).
+#[derive(Clone)]
+pub enum Engine {
+    Native,
+    Pjrt(Arc<StageLibrary>),
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Engine::Native => write!(f, "Native"),
+            Engine::Pjrt(lib) => write!(f, "Pjrt({lib:?})"),
+        }
+    }
+}
+
+impl Engine {
+    /// Build the engine a spec asks for (opens the artifact dir once; the
+    /// caller shares the resulting `Engine` across ranks).
+    pub fn from_spec(spec: &PlanSpec) -> Result<Engine> {
+        match &spec.opts.engine {
+            EngineKind::Native => Ok(Engine::Native),
+            EngineKind::Pjrt { artifacts_dir } => {
+                if !spec.opts.stride1 {
+                    return Err(Error::InvalidConfig(
+                        "the PJRT engine requires STRIDE1 layout (artifacts are dense \
+                         (batch, n) kernels)"
+                            .into(),
+                    ));
+                }
+                Ok(Engine::Pjrt(Arc::new(StageLibrary::open(artifacts_dir)?)))
+            }
+        }
+    }
+}
+
+/// Dispatch of the per-stage compute to PJRT artifacts, per precision.
+pub trait PjrtExec: Real {
+    fn rt_r2c(lib: &StageLibrary, batch: usize, n: usize, input: &[Self])
+        -> Result<(Vec<Self>, Vec<Self>)>;
+    #[allow(clippy::too_many_arguments)]
+    fn rt_c2c(
+        lib: &StageLibrary,
+        inverse: bool,
+        batch: usize,
+        n: usize,
+        re: &[Self],
+        im: &[Self],
+    ) -> Result<(Vec<Self>, Vec<Self>)>;
+    fn rt_c2r(lib: &StageLibrary, batch: usize, n: usize, re: &[Self], im: &[Self])
+        -> Result<Vec<Self>>;
+    fn rt_cheby(lib: &StageLibrary, batch: usize, n: usize, x: &[Self]) -> Result<Vec<Self>>;
+}
+
+impl PjrtExec for f64 {
+    fn rt_r2c(lib: &StageLibrary, batch: usize, n: usize, input: &[f64])
+        -> Result<(Vec<f64>, Vec<f64>)> {
+        lib.x_r2c_f64(batch, n, input)
+    }
+    fn rt_c2c(
+        lib: &StageLibrary,
+        inverse: bool,
+        batch: usize,
+        n: usize,
+        re: &[f64],
+        im: &[f64],
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        lib.c2c_f64(inverse, batch, n, re, im)
+    }
+    fn rt_c2r(lib: &StageLibrary, batch: usize, n: usize, re: &[f64], im: &[f64])
+        -> Result<Vec<f64>> {
+        lib.x_c2r_f64(batch, n, re, im)
+    }
+    fn rt_cheby(lib: &StageLibrary, batch: usize, n: usize, x: &[f64]) -> Result<Vec<f64>> {
+        lib.cheby_f64(batch, n, x)
+    }
+}
+
+impl PjrtExec for f32 {
+    fn rt_r2c(lib: &StageLibrary, batch: usize, n: usize, input: &[f32])
+        -> Result<(Vec<f32>, Vec<f32>)> {
+        use crate::runtime::{StageId, StageKind};
+        let id = StageId { kind: StageKind::XR2c, batch, n, dtype: "f32" };
+        let dims = [batch as i64, n as i64];
+        let mut out = lib.run_f32(&id, &[(input, &dims)])?;
+        let im = out.pop().ok_or_else(|| Error::Runtime("missing im".into()))?;
+        let re = out.pop().ok_or_else(|| Error::Runtime("missing re".into()))?;
+        Ok((re, im))
+    }
+    fn rt_c2c(
+        lib: &StageLibrary,
+        inverse: bool,
+        batch: usize,
+        n: usize,
+        re: &[f32],
+        im: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        use crate::runtime::{StageId, StageKind};
+        let kind = if inverse { StageKind::C2cBwd } else { StageKind::C2cFwd };
+        let id = StageId { kind, batch, n, dtype: "f32" };
+        let dims = [batch as i64, n as i64];
+        let mut out = lib.run_f32(&id, &[(re, &dims), (im, &dims)])?;
+        let oim = out.pop().ok_or_else(|| Error::Runtime("missing im".into()))?;
+        let ore = out.pop().ok_or_else(|| Error::Runtime("missing re".into()))?;
+        Ok((ore, oim))
+    }
+    fn rt_c2r(lib: &StageLibrary, batch: usize, n: usize, re: &[f32], im: &[f32])
+        -> Result<Vec<f32>> {
+        use crate::runtime::{StageId, StageKind};
+        let id = StageId { kind: StageKind::XC2r, batch, n, dtype: "f32" };
+        let dims = [batch as i64, (n / 2 + 1) as i64];
+        let mut out = lib.run_f32(&id, &[(re, &dims), (im, &dims)])?;
+        out.pop().ok_or_else(|| Error::Runtime("missing output".into()))
+    }
+    fn rt_cheby(lib: &StageLibrary, batch: usize, n: usize, x: &[f32]) -> Result<Vec<f32>> {
+        use crate::runtime::{StageId, StageKind};
+        let id = StageId { kind: StageKind::Cheby, batch, n, dtype: "f32" };
+        let dims = [batch as i64, n as i64];
+        let mut out = lib.run_f32(&id, &[(x, &dims)])?;
+        out.pop().ok_or_else(|| Error::Runtime("missing output".into()))
+    }
+}
+
+/// One rank's plan: geometry, the compiled forward/backward stage graphs,
+/// and the shared buffer pool.
+pub struct RankPlan<T: Real + PjrtExec> {
+    pub spec: PlanSpec,
+    pub rank: usize,
+    pub decomp: Decomp,
+    engine: Engine,
+    fwd: Pipeline<T>,
+    bwd: Pipeline<T>,
+    pool: BufferPool<T>,
+    real_scratch: Vec<T>,
+    // Plane buffers for the PJRT engine (split/merge of interleaved data).
+    plane_re: Vec<T>,
+    plane_im: Vec<T>,
+    /// Per-stage wall-clock accounting for this rank.
+    pub timer: StageTimer,
+}
+
+impl<T: Real + PjrtExec> RankPlan<T> {
+    /// Compile a plan for `rank`. `engine` comes from [`Engine::from_spec`]
+    /// (shared across ranks when PJRT).
+    pub fn new(spec: &PlanSpec, rank: usize, engine: Engine) -> Result<Self> {
+        let decomp = spec.decomp()?;
+        if rank >= decomp.p() {
+            return Err(Error::InvalidConfig(format!(
+                "rank {rank} out of range for P = {}",
+                decomp.p()
+            )));
+        }
+        let (fwd, bwd, pool) = pipeline::compile::<T>(spec, &decomp, rank, &engine)?;
+        Ok(RankPlan {
+            spec: spec.clone(),
+            rank,
+            decomp,
+            engine,
+            fwd,
+            bwd,
+            pool,
+            real_scratch: vec![T::zero(); spec.nz.max(spec.nx)],
+            plane_re: Vec::new(),
+            plane_im: Vec::new(),
+            timer: StageTimer::new(),
+        })
+    }
+
+    /// Length of this rank's real input (X-pencil).
+    pub fn input_len(&self) -> usize {
+        self.decomp.x_pencil(self.rank).len()
+    }
+
+    /// Length of this rank's complex output (Z-pencil).
+    pub fn output_len(&self) -> usize {
+        self.decomp.z_pencil(self.rank).len()
+    }
+
+    /// Roundtrip scale: `backward(forward(x)) == normalization() * x`.
+    pub fn normalization(&self) -> T {
+        let fxy = T::from_usize(self.spec.nx * self.spec.ny).unwrap();
+        match self.spec.third {
+            TransformKind::Fft => fxy * T::from_usize(self.spec.nz).unwrap(),
+            TransformKind::Cheby => {
+                fxy * T::from_usize(2 * (self.spec.nz - 1)).unwrap()
+            }
+            TransformKind::Sine => fxy * T::from_usize(2 * (self.spec.nz + 1)).unwrap(),
+            TransformKind::Empty => fxy,
+        }
+    }
+
+    /// The forward stage order (diagnostics).
+    pub fn describe_forward(&self) -> String {
+        self.fwd.describe()
+    }
+
+    /// The backward stage order (diagnostics).
+    pub fn describe_backward(&self) -> String {
+        self.bwd.describe()
+    }
+
+    /// Forward R2C transform: `input` X-pencil (real, len `input_len`) →
+    /// `output` Z-pencil (complex, len `output_len`).
+    pub fn forward(
+        &mut self,
+        row: &Comm,
+        col: &Comm,
+        input: &[T],
+        output: &mut [Complex<T>],
+    ) -> Result<()> {
+        if input.len() != self.input_len() {
+            return Err(Error::BadShape {
+                expected: self.input_len(),
+                got: input.len(),
+                what: "forward input (X-pencil)",
+            });
+        }
+        if output.len() != self.output_len() {
+            return Err(Error::BadShape {
+                expected: self.output_len(),
+                got: output.len(),
+                what: "forward output (Z-pencil)",
+            });
+        }
+        let mut ctx = StageCtx {
+            row,
+            col,
+            engine: &self.engine,
+            pool: &mut self.pool,
+            real_scratch: &mut self.real_scratch,
+            plane_re: &mut self.plane_re,
+            plane_im: &mut self.plane_im,
+            real_in: Some(input),
+            real_out: None,
+            cplx_in: None,
+            cplx_out: Some(output),
+            timer: &mut self.timer,
+        };
+        self.fwd.run(&mut ctx)
+    }
+
+    /// Backward C2R transform: `input` Z-pencil → `output` X-pencil (real).
+    /// Unnormalised; divide by [`Self::normalization`] to invert exactly.
+    pub fn backward(
+        &mut self,
+        row: &Comm,
+        col: &Comm,
+        input: &[Complex<T>],
+        output: &mut [T],
+    ) -> Result<()> {
+        if input.len() != self.output_len() {
+            return Err(Error::BadShape {
+                expected: self.output_len(),
+                got: input.len(),
+                what: "backward input (Z-pencil)",
+            });
+        }
+        if output.len() != self.input_len() {
+            return Err(Error::BadShape {
+                expected: self.input_len(),
+                got: output.len(),
+                what: "backward output (X-pencil)",
+            });
+        }
+        let mut ctx = StageCtx {
+            row,
+            col,
+            engine: &self.engine,
+            pool: &mut self.pool,
+            real_scratch: &mut self.real_scratch,
+            plane_re: &mut self.plane_re,
+            plane_im: &mut self.plane_im,
+            real_in: None,
+            real_out: Some(output),
+            cplx_in: Some(input),
+            cplx_out: None,
+            timer: &mut self.timer,
+        };
+        self.bwd.run(&mut ctx)
+    }
+}
+
+/// Split interleaved complex data into (re, im) planes (PJRT marshalling).
+pub fn split_planes<T: Real>(data: &[Complex<T>], re: &mut Vec<T>, im: &mut Vec<T>) {
+    re.clear();
+    im.clear();
+    re.reserve(data.len());
+    im.reserve(data.len());
+    for c in data {
+        re.push(c.re);
+        im.push(c.im);
+    }
+}
+
+/// Merge (re, im) planes back into interleaved complex data.
+pub fn merge_planes<T: Real>(re: &[T], im: &[T], out: &mut [Complex<T>]) {
+    debug_assert_eq!(re.len(), im.len());
+    debug_assert_eq!(re.len(), out.len());
+    for ((o, &r), &i) in out.iter_mut().zip(re).zip(im) {
+        *o = Complex::new(r, i);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_merge_roundtrip() {
+        let data: Vec<Complex<f64>> =
+            (0..10).map(|i| Complex::new(i as f64, -(i as f64))).collect();
+        let (mut re, mut im) = (Vec::new(), Vec::new());
+        split_planes(&data, &mut re, &mut im);
+        assert_eq!(re[3], 3.0);
+        assert_eq!(im[3], -3.0);
+        let mut back = vec![Complex::zero(); 10];
+        merge_planes(&re, &im, &mut back);
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn engine_from_spec_native() {
+        use crate::grid::ProcGrid;
+        let spec = PlanSpec::new([8, 8, 8], ProcGrid::new(1, 1)).unwrap();
+        assert!(matches!(Engine::from_spec(&spec).unwrap(), Engine::Native));
+    }
+
+    #[test]
+    fn pjrt_rejects_non_stride1() {
+        use crate::coordinator::spec::EngineKind;
+        use crate::grid::ProcGrid;
+        let spec = PlanSpec::new([8, 8, 8], ProcGrid::new(1, 1))
+            .unwrap()
+            .with_stride1(false)
+            .with_engine(EngineKind::Pjrt { artifacts_dir: "/tmp".into() });
+        assert!(Engine::from_spec(&spec).is_err());
+    }
+
+    #[test]
+    fn normalization_per_transform_kind() {
+        use crate::grid::ProcGrid;
+        let mk = |third| {
+            let spec =
+                PlanSpec::new([8, 4, 6], ProcGrid::new(1, 1)).unwrap().with_third(third);
+            RankPlan::<f64>::new(&spec, 0, Engine::Native).unwrap().normalization()
+        };
+        assert_eq!(mk(TransformKind::Fft), (8 * 4 * 6) as f64);
+        assert_eq!(mk(TransformKind::Cheby), (8 * 4 * 10) as f64);
+        assert_eq!(mk(TransformKind::Sine), (8 * 4 * 14) as f64);
+        assert_eq!(mk(TransformKind::Empty), (8 * 4) as f64);
+    }
+
+    #[test]
+    fn rank_plan_reports_stage_graph() {
+        use crate::grid::ProcGrid;
+        let spec = PlanSpec::new([8, 8, 8], ProcGrid::new(2, 2)).unwrap();
+        let plan = RankPlan::<f64>::new(&spec, 0, Engine::Native).unwrap();
+        assert_eq!(plan.describe_forward(), "x-r2c -> xy-fwd+yfft -> yz-fwd+third");
+        assert_eq!(plan.describe_backward(), "yz-bwd+third -> xy-bwd+yfft -> x-c2r");
+    }
+
+    #[test]
+    fn shape_validation_errors() {
+        use crate::grid::ProcGrid;
+        use crate::mpi::Universe;
+        let spec = PlanSpec::new([8, 8, 8], ProcGrid::new(1, 1)).unwrap();
+        let u = Universe::new(1);
+        let spec2 = spec.clone();
+        let r = u.run(move |c| {
+            let (row, col) = c.cart_2d(spec2.pgrid)?;
+            let mut plan = RankPlan::<f64>::new(&spec2, 0, Engine::Native)?;
+            let bad_in = vec![0.0f64; 3];
+            let mut out = vec![Complex::zero(); plan.output_len()];
+            let e = plan.forward(&row, &col, &bad_in, &mut out).unwrap_err();
+            Ok(matches!(e, Error::BadShape { .. }))
+        });
+        assert!(r.unwrap()[0]);
+    }
+}

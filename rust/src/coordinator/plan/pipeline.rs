@@ -1,0 +1,288 @@
+//! Pipeline compilation: a [`crate::coordinator::PlanSpec`] becomes two
+//! ordered stage lists (forward and backward) over one shared,
+//! size-deduplicated [`BufferPool`].
+//!
+//! Compilation decides, once, everything the hot path must not re-decide:
+//! layout mode (STRIDE1 vs XYZ), engine validity, whether the chunked
+//! overlap executor applies (`overlap_chunks > 1`, STRIDE1 layout, native
+//! engine), chunk geometry for both transposes in both directions, and
+//! the buffer plan (slot names dedupe: both transposes share `send`/
+//! `recv`, every FFT shares `scratch`).
+
+use crate::fft::{C2cPlan, C2rPlan, Direction, R2cPlan, Real};
+use crate::grid::Decomp;
+use crate::transpose::{ExchangeOptions, TransposeXY, TransposeYZ};
+use crate::util::error::{Error, Result};
+
+use super::buffers::{BufferPool, PoolLayout};
+use super::stages::{
+    C2rStage, PipelineStage, R2cStage, StageCtx, ThirdOp, XyBwdStage, XyBwdXyzStage, XyFwdStage,
+    XyFwdXyzStage, YzBwdStage, YzBwdXyzStage, YzFwdStage, YzFwdXyzStage,
+};
+use super::{Engine, PjrtExec};
+use crate::coordinator::spec::{PlanSpec, TransformKind};
+
+/// An ordered list of stages; running it executes one transform direction.
+pub struct Pipeline<T: Real + PjrtExec> {
+    stages: Vec<Box<dyn PipelineStage<T>>>,
+}
+
+impl<T: Real + PjrtExec> Pipeline<T> {
+    pub fn run(&self, ctx: &mut StageCtx<'_, T>) -> Result<()> {
+        for stage in &self.stages {
+            stage.run(ctx)?;
+        }
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stages.is_empty()
+    }
+
+    /// Human-readable stage order, e.g.
+    /// `x-r2c -> xy-fwd+yfft -> yz-fwd+third`.
+    pub fn describe(&self) -> String {
+        self.stages.iter().map(|s| s.name()).collect::<Vec<_>>().join(" -> ")
+    }
+}
+
+/// Compile `spec` for `rank` into (forward pipeline, backward pipeline,
+/// buffer pool).
+pub fn compile<T: Real + PjrtExec>(
+    spec: &PlanSpec,
+    decomp: &Decomp,
+    rank: usize,
+    engine: &Engine,
+) -> Result<(Pipeline<T>, Pipeline<T>, BufferPool<T>)> {
+    let stride1 = spec.opts.stride1;
+    let is_pjrt = matches!(engine, Engine::Pjrt(_));
+    if is_pjrt && !stride1 {
+        return Err(Error::InvalidConfig("PJRT engine requires STRIDE1".into()));
+    }
+    if !stride1 && matches!(spec.third, TransformKind::Cheby | TransformKind::Sine) {
+        return Err(Error::InvalidConfig(
+            "Chebyshev/sine third transforms require STRIDE1 (ZYX) layout".into(),
+        ));
+    }
+    if is_pjrt && spec.third == TransformKind::Sine {
+        return Err(Error::InvalidConfig(
+            "the AOT artifact set does not include a DST stage; use the \
+             native engine for TransformKind::Sine"
+                .into(),
+        ));
+    }
+
+    let txy = TransposeXY::new(decomp, rank);
+    let tyz = TransposeYZ::new(decomp, rank);
+    let xopts = ExchangeOptions { use_even: spec.opts.use_even };
+    let k = spec.opts.overlap_chunks.max(1);
+    // Chunked overlap requires contiguous invariant-axis slabs (STRIDE1)
+    // and per-chunk batch shapes (native engine: the PJRT artifacts are
+    // lowered for full-pencil batches).
+    let overlap = k > 1 && stride1 && !is_pjrt;
+
+    let xp = decomp.x_pencil_spec(rank);
+    let yp = decomp.y_pencil(rank);
+    let zp = decomp.z_pencil(rank);
+    let buf_len = txy.buf_len(xopts).max(tyz.buf_len(xopts));
+
+    let r2c = R2cPlan::<T>::new(spec.nx);
+    let c2r = C2rPlan::<T>::new(spec.nx);
+    let fy_f = C2cPlan::<T>::new(spec.ny, Direction::Forward);
+    let fy_b = C2cPlan::<T>::new(spec.ny, Direction::Inverse);
+    // The STRIDE1 path transforms z inside a ThirdOp per direction stage;
+    // the XYZ layout uses strided Z plans instead, so build only the set
+    // the chosen layout actually runs.
+    let (third_f, third_b) = if stride1 {
+        (Some(ThirdOp::<T>::new(spec.third, spec.nz)), Some(ThirdOp::<T>::new(spec.third, spec.nz)))
+    } else {
+        (None, None)
+    };
+    let (fz_f, fz_b) = if !stride1 && spec.third == TransformKind::Fft {
+        (
+            Some(C2cPlan::<T>::new(spec.nz, Direction::Forward)),
+            Some(C2cPlan::<T>::new(spec.nz, Direction::Inverse)),
+        )
+    } else {
+        (None, None)
+    };
+
+    let scratch_len = r2c
+        .scratch_len()
+        .max(c2r.scratch_len())
+        .max(fy_f.scratch_len() + spec.ny)
+        .max(fy_b.scratch_len() + spec.ny)
+        .max(third_f.as_ref().map_or(0, |t| t.scratch_len()))
+        .max(fz_f.as_ref().map_or(0, |p| p.scratch_len() + spec.nz))
+        .max(fz_b.as_ref().map_or(0, |p| p.scratch_len() + spec.nz));
+
+    let mut layout = PoolLayout::new();
+    let xspec = layout.request("xspec", xp.len());
+    let ybuf = layout.request("ybuf", yp.len());
+    let send = layout.request("send", buf_len);
+    let recv = layout.request("recv", buf_len);
+    let zbuf = layout.request("zbuf", zp.len());
+    let scratch = layout.request("scratch", scratch_len);
+    let pool = BufferPool::build(&layout);
+
+    // Geometry constants the stages need.
+    let zplane = tyz.ny2_loc() * decomp.nz; // stride1 Z-pencil, per x
+    let zstride = tyz.ny2_loc() * txy.h_loc(); // xyz Z-pencil z-line stride
+
+    let mut fwd: Vec<Box<dyn PipelineStage<T>>> = Vec::with_capacity(3);
+    let mut bwd: Vec<Box<dyn PipelineStage<T>>> = Vec::with_capacity(3);
+
+    fwd.push(Box::new(R2cStage { plan: r2c, n: spec.nx, xspec, scratch }));
+    if stride1 {
+        fwd.push(Box::new(XyFwdStage {
+            txy: txy.clone(),
+            chunks: txy.chunks_fwd(k),
+            opts: xopts,
+            fy: fy_f,
+            ny: spec.ny,
+            overlap,
+            xspec,
+            ybuf,
+            send,
+            recv,
+            scratch,
+        }));
+        fwd.push(Box::new(YzFwdStage {
+            tyz: tyz.clone(),
+            chunks: tyz.chunks_fwd(k),
+            opts: xopts,
+            third: third_f.expect("stride1 builds the forward ThirdOp"),
+            zplane,
+            overlap,
+            ybuf,
+            send,
+            recv,
+            scratch,
+        }));
+        bwd.push(Box::new(YzBwdStage {
+            tyz: tyz.clone(),
+            chunks: tyz.chunks_bwd(k),
+            opts: xopts,
+            third: third_b.expect("stride1 builds the backward ThirdOp"),
+            zplane,
+            overlap,
+            zbuf,
+            ybuf,
+            send,
+            recv,
+            scratch,
+        }));
+        bwd.push(Box::new(XyBwdStage {
+            txy: txy.clone(),
+            chunks: txy.chunks_bwd(k),
+            opts: xopts,
+            fy: fy_b,
+            ny: spec.ny,
+            overlap,
+            ybuf,
+            xspec,
+            send,
+            recv,
+            scratch,
+        }));
+    } else {
+        fwd.push(Box::new(XyFwdXyzStage {
+            txy: txy.clone(),
+            opts: xopts,
+            fy: fy_f,
+            ny: spec.ny,
+            xspec,
+            ybuf,
+            send,
+            recv,
+            scratch,
+        }));
+        fwd.push(Box::new(YzFwdXyzStage {
+            tyz: tyz.clone(),
+            opts: xopts,
+            fz: fz_f,
+            zstride,
+            ybuf,
+            send,
+            recv,
+            scratch,
+        }));
+        bwd.push(Box::new(YzBwdXyzStage {
+            tyz: tyz.clone(),
+            opts: xopts,
+            fz: fz_b,
+            zstride,
+            zbuf,
+            ybuf,
+            send,
+            recv,
+            scratch,
+        }));
+        bwd.push(Box::new(XyBwdXyzStage {
+            txy: txy.clone(),
+            opts: xopts,
+            fy: fy_b,
+            ny: spec.ny,
+            ybuf,
+            xspec,
+            send,
+            recv,
+            scratch,
+        }));
+    }
+    bwd.push(Box::new(C2rStage { plan: c2r, n: spec.nx, xspec, scratch }));
+
+    Ok((Pipeline { stages: fwd }, Pipeline { stages: bwd }, pool))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::ProcGrid;
+
+    fn spec(dims: [usize; 3], m1: usize, m2: usize) -> PlanSpec {
+        PlanSpec::new(dims, ProcGrid::new(m1, m2)).unwrap()
+    }
+
+    #[test]
+    fn stride1_pipeline_structure() {
+        let s = spec([8, 8, 8], 2, 2);
+        let d = s.decomp().unwrap();
+        let (fwd, bwd, pool) = compile::<f64>(&s, &d, 0, &Engine::Native).unwrap();
+        assert_eq!(fwd.describe(), "x-r2c -> xy-fwd+yfft -> yz-fwd+third");
+        assert_eq!(bwd.describe(), "yz-bwd+third -> xy-bwd+yfft -> x-c2r");
+        assert_eq!(pool.slot_count(), 6, "xspec ybuf send recv zbuf scratch");
+    }
+
+    #[test]
+    fn xyz_pipeline_structure() {
+        let s = spec([8, 8, 8], 2, 2).with_stride1(false);
+        let d = s.decomp().unwrap();
+        let (fwd, bwd, _) = compile::<f64>(&s, &d, 0, &Engine::Native).unwrap();
+        assert_eq!(fwd.describe(), "x-r2c -> xy-fwd-xyz+yfft -> yz-fwd-xyz+zfft");
+        assert_eq!(bwd.describe(), "yz-bwd-xyz+zfft -> xy-bwd-xyz+yfft -> x-c2r");
+    }
+
+    #[test]
+    fn xyz_rejects_cheby_and_sine() {
+        for third in [TransformKind::Cheby, TransformKind::Sine] {
+            let s = spec([8, 8, 9], 2, 2).with_stride1(false).with_third(third);
+            let d = s.decomp().unwrap();
+            assert!(compile::<f64>(&s, &d, 0, &Engine::Native).is_err());
+        }
+    }
+
+    #[test]
+    fn overlap_chunks_clamp_to_axis() {
+        // Asking for more chunks than the invariant axis has planes must
+        // still compile (the chunk plan clamps).
+        let s = spec([8, 8, 4], 2, 2).with_overlap_chunks(64);
+        let d = s.decomp().unwrap();
+        let (fwd, _, _) = compile::<f64>(&s, &d, 0, &Engine::Native).unwrap();
+        assert_eq!(fwd.len(), 3);
+    }
+}

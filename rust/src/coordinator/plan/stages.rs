@@ -1,0 +1,1164 @@
+//! The pipeline stages of Fig. 2, as composable units.
+//!
+//! A [`PipelineStage`] is one node of the compiled stage graph: a compute
+//! stage (batched R2C/C2C/C2R or the third-dimension transform) or a
+//! composite transpose stage (pack → exchange → unpack fused with the FFT
+//! that consumes the landed pencil). [`super::pipeline::compile`] selects
+//! and orders them per [`crate::coordinator::PlanSpec`].
+//!
+//! The composite transpose stages have two execution paths:
+//! * **blocking** (`overlap == false`) — the paper's pipeline: one
+//!   `alltoall(v)` per transpose, then the full-pencil batched FFT;
+//! * **chunked overlap** (`overlap == true`) — the invariant axis is split
+//!   into `k` slabs and software-pipelined: while chunk `i` is in flight
+//!   over the pairwise point-to-point exchange, chunk `i+1` is being
+//!   packed and the just-landed chunk `i−1` is being unpacked and
+//!   transformed. Per-line FFTs are identical in both paths, so the
+//!   output is bit-for-bit the same; only wall-clock attribution changes
+//!   (hidden in-flight time lands in [`Stage::Overlap`]).
+
+use std::time::Instant;
+
+use crate::fft::{C2cPlan, C2rPlan, Complex, Dct1Plan, Direction, Dst1Plan, R2cPlan, Real};
+use crate::mpi::Comm;
+use crate::transpose::{ChunkPlan, ExchangeOptions, TransposeXY, TransposeYZ};
+use crate::util::error::{Error, Result};
+use crate::util::timer::{Stage, StageTimer};
+
+use super::buffers::{BufferPool, SlotId};
+use super::{merge_planes, split_planes, Engine, PjrtExec};
+use crate::coordinator::spec::TransformKind;
+
+/// Everything a stage may touch while running: communicators, the buffer
+/// pool, engine handle, marshalling scratch, the caller's input/output
+/// slices, and the per-rank timer.
+pub struct StageCtx<'a, T: Real> {
+    pub row: &'a Comm,
+    pub col: &'a Comm,
+    pub engine: &'a Engine,
+    pub pool: &'a mut BufferPool<T>,
+    pub real_scratch: &'a mut [T],
+    pub plane_re: &'a mut Vec<T>,
+    pub plane_im: &'a mut Vec<T>,
+    /// Forward input (real X-pencil).
+    pub real_in: Option<&'a [T]>,
+    /// Backward output (real X-pencil).
+    pub real_out: Option<&'a mut [T]>,
+    /// Backward input (complex Z-pencil).
+    pub cplx_in: Option<&'a [Complex<T>]>,
+    /// Forward output (complex Z-pencil).
+    pub cplx_out: Option<&'a mut [Complex<T>]>,
+    pub timer: &'a mut StageTimer,
+}
+
+/// One node of the compiled stage graph.
+pub trait PipelineStage<T: Real + PjrtExec> {
+    fn name(&self) -> &'static str;
+    fn run(&self, ctx: &mut StageCtx<'_, T>) -> Result<()>;
+}
+
+/// Marker taken when a chunk's sends are posted: the wall-clock instant
+/// plus a snapshot of the Exchange accumulator. The hidden (overlapped)
+/// time of the chunk is the wall time from post to drain *minus* whatever
+/// part of that interval was itself attributed to Exchange (draining an
+/// earlier chunk is an exposed wait, not hidden overlap) — otherwise the
+/// Overlap bucket would double-count the exposed waits.
+#[derive(Clone, Copy)]
+struct PostMark {
+    at: Instant,
+    exch_acc: f64,
+}
+
+fn mark_post(timer: &StageTimer) -> PostMark {
+    PostMark { at: Instant::now(), exch_acc: timer.get(Stage::Exchange) }
+}
+
+fn credit_overlap(timer: &mut StageTimer, mark: PostMark) {
+    let in_flight = mark.at.elapsed().as_secs_f64();
+    let exposed_since = timer.get(Stage::Exchange) - mark.exch_acc;
+    timer.add(Stage::Overlap, (in_flight - exposed_since).max(0.0));
+}
+
+/// Batched stride-1 C2C on `data` via the chosen engine.
+#[allow(clippy::too_many_arguments)]
+fn exec_c2c<T: Real + PjrtExec>(
+    engine: &Engine,
+    plan: &C2cPlan<T>,
+    inverse: bool,
+    n: usize,
+    data: &mut [Complex<T>],
+    scratch: &mut [Complex<T>],
+    plane_re: &mut Vec<T>,
+    plane_im: &mut Vec<T>,
+    timer: &mut StageTimer,
+) -> Result<()> {
+    match engine {
+        Engine::Native => {
+            timer.time(Stage::Compute, || plan.execute_batch(data, scratch));
+            Ok(())
+        }
+        Engine::Pjrt(lib) => {
+            let batch = data.len() / n;
+            split_planes(data, plane_re, plane_im);
+            let r = timer
+                .time(Stage::Compute, || T::rt_c2c(lib, inverse, batch, n, plane_re, plane_im));
+            match r {
+                Ok((re, im)) => {
+                    merge_planes(&re, &im, data);
+                    Ok(())
+                }
+                Err(e) => Err(e),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Third-dimension transform
+// ---------------------------------------------------------------------------
+
+enum ThirdKind<T: Real> {
+    Fft { fwd: C2cPlan<T>, bwd: C2cPlan<T> },
+    /// DCT-I is its own (unnormalised) inverse.
+    Cheby(Dct1Plan<T>),
+    /// DST-I likewise.
+    Sine(Dst1Plan<T>),
+    Empty,
+}
+
+/// The third-dimension transform of §3.1 applied to stride-1 z-lines.
+pub struct ThirdOp<T: Real> {
+    pub n: usize,
+    kind: ThirdKind<T>,
+}
+
+impl<T: Real> ThirdOp<T> {
+    pub fn new(third: TransformKind, nz: usize) -> Self {
+        let kind = match third {
+            TransformKind::Fft => ThirdKind::Fft {
+                fwd: C2cPlan::new(nz, Direction::Forward),
+                bwd: C2cPlan::new(nz, Direction::Inverse),
+            },
+            TransformKind::Cheby => ThirdKind::Cheby(Dct1Plan::new(nz)),
+            TransformKind::Sine => ThirdKind::Sine(Dst1Plan::new(nz)),
+            TransformKind::Empty => ThirdKind::Empty,
+        };
+        ThirdOp { n: nz, kind }
+    }
+
+    pub fn scratch_len(&self) -> usize {
+        match &self.kind {
+            ThirdKind::Fft { fwd, bwd } => fwd.scratch_len().max(bwd.scratch_len()) + self.n,
+            ThirdKind::Cheby(d) => d.scratch_len(),
+            ThirdKind::Sine(d) => d.scratch_len(),
+            ThirdKind::Empty => 0,
+        }
+    }
+
+    /// Native-engine application to contiguous stride-1 lines (the chunked
+    /// overlap path runs native-only, so it calls this directly).
+    pub fn apply_native(
+        &self,
+        inverse: bool,
+        data: &mut [Complex<T>],
+        scratch: &mut [Complex<T>],
+        real_scratch: &mut [T],
+        timer: &mut StageTimer,
+    ) {
+        match &self.kind {
+            ThirdKind::Fft { fwd, bwd } => {
+                let plan = if inverse { bwd } else { fwd };
+                timer.time(Stage::Compute, || plan.execute_batch(data, scratch));
+            }
+            ThirdKind::Cheby(d) => {
+                timer.time(Stage::Compute, || d.execute_complex_batch(data, real_scratch, scratch));
+            }
+            ThirdKind::Sine(d) => {
+                timer.time(Stage::Compute, || d.execute_complex_batch(data, real_scratch, scratch));
+            }
+            ThirdKind::Empty => {}
+        }
+    }
+}
+
+impl<T: Real + PjrtExec> ThirdOp<T> {
+    /// Engine-dispatched application (blocking path).
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply(
+        &self,
+        engine: &Engine,
+        inverse: bool,
+        data: &mut [Complex<T>],
+        scratch: &mut [Complex<T>],
+        real_scratch: &mut [T],
+        plane_re: &mut Vec<T>,
+        plane_im: &mut Vec<T>,
+        timer: &mut StageTimer,
+    ) -> Result<()> {
+        match engine {
+            Engine::Native => {
+                self.apply_native(inverse, data, scratch, real_scratch, timer);
+                Ok(())
+            }
+            Engine::Pjrt(lib) => match &self.kind {
+                ThirdKind::Fft { .. } => {
+                    let batch = data.len() / self.n;
+                    split_planes(data, plane_re, plane_im);
+                    let r = timer.time(Stage::Compute, || {
+                        T::rt_c2c(lib, inverse, batch, self.n, plane_re, plane_im)
+                    });
+                    match r {
+                        Ok((re, im)) => {
+                            merge_planes(&re, &im, data);
+                            Ok(())
+                        }
+                        Err(e) => Err(e),
+                    }
+                }
+                ThirdKind::Cheby(_) => {
+                    let batch = data.len() / self.n;
+                    split_planes(data, plane_re, plane_im);
+                    let r = timer.time(Stage::Compute, || -> Result<_> {
+                        let re = T::rt_cheby(lib, batch, self.n, plane_re)?;
+                        let im = T::rt_cheby(lib, batch, self.n, plane_im)?;
+                        Ok((re, im))
+                    });
+                    match r {
+                        Ok((re, im)) => {
+                            merge_planes(&re, &im, data);
+                            Ok(())
+                        }
+                        Err(e) => Err(e),
+                    }
+                }
+                ThirdKind::Sine(_) => Err(Error::InvalidConfig(
+                    "the AOT artifact set does not include a DST stage; use the \
+                     native engine for TransformKind::Sine"
+                        .into(),
+                )),
+                ThirdKind::Empty => Ok(()),
+            },
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Endpoint compute stages (X-direction R2C / C2R)
+// ---------------------------------------------------------------------------
+
+/// Stage 1 of the forward pipeline: batched R2C over X lines, real input →
+/// spectral X-pencil (`xspec` slot). Stride-1 in all layout modes.
+pub struct R2cStage<T: Real> {
+    pub plan: R2cPlan<T>,
+    pub n: usize,
+    pub xspec: SlotId,
+    pub scratch: SlotId,
+}
+
+impl<T: Real + PjrtExec> PipelineStage<T> for R2cStage<T> {
+    fn name(&self) -> &'static str {
+        "x-r2c"
+    }
+
+    fn run(&self, ctx: &mut StageCtx<'_, T>) -> Result<()> {
+        let input =
+            ctx.real_in.ok_or_else(|| Error::Runtime("r2c stage needs real input".into()))?;
+        let mut xspec = ctx.pool.take(self.xspec);
+        let res = match ctx.engine {
+            Engine::Native => {
+                let mut scratch = ctx.pool.take(self.scratch);
+                ctx.timer.time(Stage::Compute, || {
+                    self.plan.execute_batch(input, &mut xspec, &mut scratch);
+                });
+                ctx.pool.restore(self.scratch, scratch);
+                Ok(())
+            }
+            Engine::Pjrt(lib) => {
+                let batch = input.len() / self.n;
+                let r = ctx.timer.time(Stage::Compute, || T::rt_r2c(lib, batch, self.n, input));
+                match r {
+                    Ok((re, im)) => {
+                        merge_planes(&re, &im, &mut xspec);
+                        Ok(())
+                    }
+                    Err(e) => Err(e),
+                }
+            }
+        };
+        ctx.pool.restore(self.xspec, xspec);
+        res
+    }
+}
+
+/// Final stage of the backward pipeline: batched C2R over X lines,
+/// spectral X-pencil (`xspec` slot) → the caller's real output.
+pub struct C2rStage<T: Real> {
+    pub plan: C2rPlan<T>,
+    pub n: usize,
+    pub xspec: SlotId,
+    pub scratch: SlotId,
+}
+
+impl<T: Real + PjrtExec> PipelineStage<T> for C2rStage<T> {
+    fn name(&self) -> &'static str {
+        "x-c2r"
+    }
+
+    fn run(&self, ctx: &mut StageCtx<'_, T>) -> Result<()> {
+        let xspec = ctx.pool.take(self.xspec);
+        let output = match ctx.real_out.as_deref_mut() {
+            Some(o) => o,
+            None => {
+                ctx.pool.restore(self.xspec, xspec);
+                return Err(Error::Runtime("c2r stage needs real output".into()));
+            }
+        };
+        let res = match ctx.engine {
+            Engine::Native => {
+                let mut scratch = ctx.pool.take(self.scratch);
+                ctx.timer.time(Stage::Compute, || {
+                    self.plan.execute_batch(&xspec, output, &mut scratch);
+                });
+                ctx.pool.restore(self.scratch, scratch);
+                Ok(())
+            }
+            Engine::Pjrt(lib) => {
+                let batch = output.len() / self.n;
+                split_planes(&xspec, ctx.plane_re, ctx.plane_im);
+                let r = ctx.timer.time(Stage::Compute, || {
+                    T::rt_c2r(lib, batch, self.n, ctx.plane_re, ctx.plane_im)
+                });
+                match r {
+                    Ok(out) => {
+                        output.copy_from_slice(&out);
+                        Ok(())
+                    }
+                    Err(e) => Err(e),
+                }
+            }
+        };
+        ctx.pool.restore(self.xspec, xspec);
+        res
+    }
+}
+
+// ---------------------------------------------------------------------------
+// STRIDE1 composite transpose stages (blocking or chunked overlap)
+// ---------------------------------------------------------------------------
+
+/// Forward "ROW transpose + C2C over Y": spectral X-pencil (`xspec`) →
+/// Y-pencil (`ybuf`), Y lines transformed.
+pub struct XyFwdStage<T: Real> {
+    pub txy: TransposeXY,
+    pub chunks: ChunkPlan,
+    pub opts: ExchangeOptions,
+    pub fy: C2cPlan<T>,
+    pub ny: usize,
+    pub overlap: bool,
+    pub xspec: SlotId,
+    pub ybuf: SlotId,
+    pub send: SlotId,
+    pub recv: SlotId,
+    pub scratch: SlotId,
+}
+
+impl<T: Real> XyFwdStage<T> {
+    fn pack_and_post(
+        &self,
+        c: usize,
+        row: &Comm,
+        timer: &mut StageTimer,
+        xspec: &[Complex<T>],
+        send: &mut [Complex<T>],
+    ) -> PostMark {
+        let m = &self.chunks.chunks[c];
+        timer.time(Stage::Pack, || {
+            for j in 0..self.txy.m1 {
+                self.txy.pack_fwd_win(
+                    xspec,
+                    j,
+                    m.range.start,
+                    m.range.end,
+                    &mut send[m.sdispls[j]..m.sdispls[j] + m.scounts[j]],
+                );
+            }
+        });
+        timer.time(Stage::Exchange, || {
+            row.post_chunk_sends(c as u64, send, &m.scounts, &m.sdispls);
+        });
+        mark_post(timer)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_overlapped(
+        &self,
+        row: &Comm,
+        timer: &mut StageTimer,
+        xspec: &[Complex<T>],
+        ybuf: &mut [Complex<T>],
+        send: &mut [Complex<T>],
+        recv: &mut [Complex<T>],
+        scratch: &mut [Complex<T>],
+    ) {
+        let k = self.chunks.len();
+        let h_loc = self.txy.h_loc();
+        let mut posted = Vec::with_capacity(k);
+        posted.push(self.pack_and_post(0, row, timer, xspec, send));
+        for c in 0..k {
+            if c + 1 < k {
+                let t = self.pack_and_post(c + 1, row, timer, xspec, send);
+                posted.push(t);
+            }
+            let m = &self.chunks.chunks[c];
+            credit_overlap(timer, posted[c]);
+            timer.time(Stage::Exchange, || {
+                row.drain_chunk_recvs(c as u64, recv, &m.rcounts, &m.rdispls);
+            });
+            timer.time(Stage::Unpack, || {
+                for j in 0..self.txy.m1 {
+                    self.txy.unpack_fwd_win(
+                        &recv[m.rdispls[j]..m.rdispls[j] + m.rcounts[j]],
+                        j,
+                        m.range.start,
+                        m.range.end,
+                        ybuf,
+                    );
+                }
+            });
+            let slab = &mut ybuf[m.range.start * h_loc * self.ny..m.range.end * h_loc * self.ny];
+            timer.time(Stage::Compute, || self.fy.execute_batch(slab, scratch));
+        }
+    }
+}
+
+impl<T: Real + PjrtExec> PipelineStage<T> for XyFwdStage<T> {
+    fn name(&self) -> &'static str {
+        "xy-fwd+yfft"
+    }
+
+    fn run(&self, ctx: &mut StageCtx<'_, T>) -> Result<()> {
+        let xspec = ctx.pool.take(self.xspec);
+        let mut ybuf = ctx.pool.take(self.ybuf);
+        let mut send = ctx.pool.take(self.send);
+        let mut recv = ctx.pool.take(self.recv);
+        let mut scratch = ctx.pool.take(self.scratch);
+        let res = if self.overlap {
+            self.run_overlapped(
+                ctx.row,
+                ctx.timer,
+                &xspec,
+                &mut ybuf,
+                &mut send,
+                &mut recv,
+                &mut scratch,
+            );
+            Ok(())
+        } else {
+            self.txy.forward(
+                ctx.row,
+                &xspec,
+                &mut ybuf,
+                &mut send,
+                &mut recv,
+                self.opts,
+                ctx.timer,
+            );
+            exec_c2c(
+                ctx.engine,
+                &self.fy,
+                false,
+                self.ny,
+                &mut ybuf,
+                &mut scratch,
+                ctx.plane_re,
+                ctx.plane_im,
+                ctx.timer,
+            )
+        };
+        ctx.pool.restore(self.xspec, xspec);
+        ctx.pool.restore(self.ybuf, ybuf);
+        ctx.pool.restore(self.send, send);
+        ctx.pool.restore(self.recv, recv);
+        ctx.pool.restore(self.scratch, scratch);
+        res
+    }
+}
+
+/// Forward "COLUMN transpose + third-dimension transform": Y-pencil
+/// (`ybuf`) → the caller's Z-pencil output, z-lines transformed.
+pub struct YzFwdStage<T: Real> {
+    pub tyz: TransposeYZ,
+    pub chunks: ChunkPlan,
+    pub opts: ExchangeOptions,
+    pub third: ThirdOp<T>,
+    /// ny2_loc · nz_glob — elements per invariant-axis plane of the
+    /// Z-pencil.
+    pub zplane: usize,
+    pub overlap: bool,
+    pub ybuf: SlotId,
+    pub send: SlotId,
+    pub recv: SlotId,
+    pub scratch: SlotId,
+}
+
+impl<T: Real> YzFwdStage<T> {
+    fn pack_and_post(
+        &self,
+        c: usize,
+        col: &Comm,
+        timer: &mut StageTimer,
+        ybuf: &[Complex<T>],
+        send: &mut [Complex<T>],
+    ) -> PostMark {
+        let m = &self.chunks.chunks[c];
+        timer.time(Stage::Pack, || {
+            for j in 0..self.tyz.m2 {
+                self.tyz.pack_fwd_win(
+                    ybuf,
+                    j,
+                    m.range.start,
+                    m.range.end,
+                    &mut send[m.sdispls[j]..m.sdispls[j] + m.scounts[j]],
+                );
+            }
+        });
+        timer.time(Stage::Exchange, || {
+            col.post_chunk_sends(c as u64, send, &m.scounts, &m.sdispls);
+        });
+        mark_post(timer)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_overlapped(
+        &self,
+        col: &Comm,
+        timer: &mut StageTimer,
+        real_scratch: &mut [T],
+        ybuf: &[Complex<T>],
+        output: &mut [Complex<T>],
+        send: &mut [Complex<T>],
+        recv: &mut [Complex<T>],
+        scratch: &mut [Complex<T>],
+    ) {
+        let k = self.chunks.len();
+        let mut posted = Vec::with_capacity(k);
+        posted.push(self.pack_and_post(0, col, timer, ybuf, send));
+        for c in 0..k {
+            if c + 1 < k {
+                let t = self.pack_and_post(c + 1, col, timer, ybuf, send);
+                posted.push(t);
+            }
+            let m = &self.chunks.chunks[c];
+            credit_overlap(timer, posted[c]);
+            timer.time(Stage::Exchange, || {
+                col.drain_chunk_recvs(c as u64, recv, &m.rcounts, &m.rdispls);
+            });
+            timer.time(Stage::Unpack, || {
+                for j in 0..self.tyz.m2 {
+                    self.tyz.unpack_fwd_win(
+                        &recv[m.rdispls[j]..m.rdispls[j] + m.rcounts[j]],
+                        j,
+                        m.range.start,
+                        m.range.end,
+                        output,
+                    );
+                }
+            });
+            let slab = &mut output[m.range.start * self.zplane..m.range.end * self.zplane];
+            self.third.apply_native(false, slab, scratch, real_scratch, timer);
+        }
+    }
+}
+
+impl<T: Real + PjrtExec> PipelineStage<T> for YzFwdStage<T> {
+    fn name(&self) -> &'static str {
+        "yz-fwd+third"
+    }
+
+    fn run(&self, ctx: &mut StageCtx<'_, T>) -> Result<()> {
+        let ybuf = ctx.pool.take(self.ybuf);
+        let mut send = ctx.pool.take(self.send);
+        let mut recv = ctx.pool.take(self.recv);
+        let mut scratch = ctx.pool.take(self.scratch);
+        let res = (|| -> Result<()> {
+            let output = ctx
+                .cplx_out
+                .as_deref_mut()
+                .ok_or_else(|| Error::Runtime("yz-fwd stage needs complex output".into()))?;
+            if self.overlap {
+                self.run_overlapped(
+                    ctx.col,
+                    ctx.timer,
+                    ctx.real_scratch,
+                    &ybuf,
+                    output,
+                    &mut send,
+                    &mut recv,
+                    &mut scratch,
+                );
+                Ok(())
+            } else {
+                self.tyz.forward(
+                    ctx.col,
+                    &ybuf,
+                    output,
+                    &mut send,
+                    &mut recv,
+                    self.opts,
+                    ctx.timer,
+                );
+                self.third.apply(
+                    ctx.engine,
+                    false,
+                    output,
+                    &mut scratch,
+                    ctx.real_scratch,
+                    ctx.plane_re,
+                    ctx.plane_im,
+                    ctx.timer,
+                )
+            }
+        })();
+        ctx.pool.restore(self.ybuf, ybuf);
+        ctx.pool.restore(self.send, send);
+        ctx.pool.restore(self.recv, recv);
+        ctx.pool.restore(self.scratch, scratch);
+        res
+    }
+}
+
+/// Backward "third-dimension inverse + COLUMN transpose": the caller's
+/// Z-pencil input (copied into `zbuf` to preserve the user's buffer) →
+/// Y-pencil (`ybuf`).
+pub struct YzBwdStage<T: Real> {
+    pub tyz: TransposeYZ,
+    pub chunks: ChunkPlan,
+    pub opts: ExchangeOptions,
+    pub third: ThirdOp<T>,
+    pub zplane: usize,
+    pub overlap: bool,
+    pub zbuf: SlotId,
+    pub ybuf: SlotId,
+    pub send: SlotId,
+    pub recv: SlotId,
+    pub scratch: SlotId,
+}
+
+impl<T: Real> YzBwdStage<T> {
+    fn pack_and_post(
+        &self,
+        c: usize,
+        col: &Comm,
+        timer: &mut StageTimer,
+        zbuf: &[Complex<T>],
+        send: &mut [Complex<T>],
+    ) -> PostMark {
+        let m = &self.chunks.chunks[c];
+        timer.time(Stage::Pack, || {
+            for j in 0..self.tyz.m2 {
+                self.tyz.pack_bwd_win(
+                    zbuf,
+                    j,
+                    m.range.start,
+                    m.range.end,
+                    &mut send[m.sdispls[j]..m.sdispls[j] + m.scounts[j]],
+                );
+            }
+        });
+        timer.time(Stage::Exchange, || {
+            col.post_chunk_sends(c as u64, send, &m.scounts, &m.sdispls);
+        });
+        mark_post(timer)
+    }
+
+    fn drain_and_unpack(
+        &self,
+        c: usize,
+        col: &Comm,
+        timer: &mut StageTimer,
+        posted: &[PostMark],
+        recv: &mut [Complex<T>],
+        ybuf: &mut [Complex<T>],
+    ) {
+        let m = &self.chunks.chunks[c];
+        credit_overlap(timer, posted[c]);
+        timer.time(Stage::Exchange, || {
+            col.drain_chunk_recvs(c as u64, recv, &m.rcounts, &m.rdispls);
+        });
+        timer.time(Stage::Unpack, || {
+            for j in 0..self.tyz.m2 {
+                self.tyz.unpack_bwd_win(
+                    &recv[m.rdispls[j]..m.rdispls[j] + m.rcounts[j]],
+                    j,
+                    m.range.start,
+                    m.range.end,
+                    ybuf,
+                );
+            }
+        });
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_overlapped(
+        &self,
+        col: &Comm,
+        timer: &mut StageTimer,
+        real_scratch: &mut [T],
+        zbuf: &mut [Complex<T>],
+        ybuf: &mut [Complex<T>],
+        send: &mut [Complex<T>],
+        recv: &mut [Complex<T>],
+        scratch: &mut [Complex<T>],
+    ) {
+        let k = self.chunks.len();
+        let mut posted = Vec::with_capacity(k);
+        for c in 0..k {
+            let m = &self.chunks.chunks[c];
+            let slab = &mut zbuf[m.range.start * self.zplane..m.range.end * self.zplane];
+            self.third.apply_native(true, slab, scratch, real_scratch, timer);
+            let t = self.pack_and_post(c, col, timer, zbuf, send);
+            posted.push(t);
+            if c > 0 {
+                self.drain_and_unpack(c - 1, col, timer, &posted, recv, ybuf);
+            }
+        }
+        self.drain_and_unpack(k - 1, col, timer, &posted, recv, ybuf);
+    }
+}
+
+impl<T: Real + PjrtExec> PipelineStage<T> for YzBwdStage<T> {
+    fn name(&self) -> &'static str {
+        "yz-bwd+third"
+    }
+
+    fn run(&self, ctx: &mut StageCtx<'_, T>) -> Result<()> {
+        let input =
+            ctx.cplx_in.ok_or_else(|| Error::Runtime("yz-bwd stage needs complex input".into()))?;
+        let mut zbuf = ctx.pool.take(self.zbuf);
+        let mut ybuf = ctx.pool.take(self.ybuf);
+        let mut send = ctx.pool.take(self.send);
+        let mut recv = ctx.pool.take(self.recv);
+        let mut scratch = ctx.pool.take(self.scratch);
+        // Work on a copy of the caller's spectral data (in-place semantics
+        // for the user's buffer are preserved).
+        ctx.timer.time(Stage::Other, || zbuf[..input.len()].copy_from_slice(input));
+        let res = if self.overlap {
+            self.run_overlapped(
+                ctx.col,
+                ctx.timer,
+                ctx.real_scratch,
+                &mut zbuf,
+                &mut ybuf,
+                &mut send,
+                &mut recv,
+                &mut scratch,
+            );
+            Ok(())
+        } else {
+            let r = self.third.apply(
+                ctx.engine,
+                true,
+                &mut zbuf[..input.len()],
+                &mut scratch,
+                ctx.real_scratch,
+                ctx.plane_re,
+                ctx.plane_im,
+                ctx.timer,
+            );
+            if r.is_ok() {
+                self.tyz.backward(
+                    ctx.col,
+                    &zbuf,
+                    &mut ybuf,
+                    &mut send,
+                    &mut recv,
+                    self.opts,
+                    ctx.timer,
+                );
+            }
+            r
+        };
+        ctx.pool.restore(self.zbuf, zbuf);
+        ctx.pool.restore(self.ybuf, ybuf);
+        ctx.pool.restore(self.send, send);
+        ctx.pool.restore(self.recv, recv);
+        ctx.pool.restore(self.scratch, scratch);
+        res
+    }
+}
+
+/// Backward "C2C inverse over Y + ROW transpose": Y-pencil (`ybuf`) →
+/// spectral X-pencil (`xspec`).
+pub struct XyBwdStage<T: Real> {
+    pub txy: TransposeXY,
+    pub chunks: ChunkPlan,
+    pub opts: ExchangeOptions,
+    pub fy: C2cPlan<T>,
+    pub ny: usize,
+    pub overlap: bool,
+    pub ybuf: SlotId,
+    pub xspec: SlotId,
+    pub send: SlotId,
+    pub recv: SlotId,
+    pub scratch: SlotId,
+}
+
+impl<T: Real> XyBwdStage<T> {
+    fn pack_and_post(
+        &self,
+        c: usize,
+        row: &Comm,
+        timer: &mut StageTimer,
+        ybuf: &[Complex<T>],
+        send: &mut [Complex<T>],
+    ) -> PostMark {
+        let m = &self.chunks.chunks[c];
+        timer.time(Stage::Pack, || {
+            for j in 0..self.txy.m1 {
+                self.txy.pack_bwd_win(
+                    ybuf,
+                    j,
+                    m.range.start,
+                    m.range.end,
+                    &mut send[m.sdispls[j]..m.sdispls[j] + m.scounts[j]],
+                );
+            }
+        });
+        timer.time(Stage::Exchange, || {
+            row.post_chunk_sends(c as u64, send, &m.scounts, &m.sdispls);
+        });
+        mark_post(timer)
+    }
+
+    fn drain_and_unpack(
+        &self,
+        c: usize,
+        row: &Comm,
+        timer: &mut StageTimer,
+        posted: &[PostMark],
+        recv: &mut [Complex<T>],
+        xspec: &mut [Complex<T>],
+    ) {
+        let m = &self.chunks.chunks[c];
+        credit_overlap(timer, posted[c]);
+        timer.time(Stage::Exchange, || {
+            row.drain_chunk_recvs(c as u64, recv, &m.rcounts, &m.rdispls);
+        });
+        timer.time(Stage::Unpack, || {
+            for j in 0..self.txy.m1 {
+                self.txy.unpack_bwd_win(
+                    &recv[m.rdispls[j]..m.rdispls[j] + m.rcounts[j]],
+                    j,
+                    m.range.start,
+                    m.range.end,
+                    xspec,
+                );
+            }
+        });
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_overlapped(
+        &self,
+        row: &Comm,
+        timer: &mut StageTimer,
+        ybuf: &mut [Complex<T>],
+        xspec: &mut [Complex<T>],
+        send: &mut [Complex<T>],
+        recv: &mut [Complex<T>],
+        scratch: &mut [Complex<T>],
+    ) {
+        let k = self.chunks.len();
+        let h_loc = self.txy.h_loc();
+        let mut posted = Vec::with_capacity(k);
+        for c in 0..k {
+            let m = &self.chunks.chunks[c];
+            let slab = &mut ybuf[m.range.start * h_loc * self.ny..m.range.end * h_loc * self.ny];
+            timer.time(Stage::Compute, || self.fy.execute_batch(slab, scratch));
+            let t = self.pack_and_post(c, row, timer, ybuf, send);
+            posted.push(t);
+            if c > 0 {
+                self.drain_and_unpack(c - 1, row, timer, &posted, recv, xspec);
+            }
+        }
+        self.drain_and_unpack(k - 1, row, timer, &posted, recv, xspec);
+    }
+}
+
+impl<T: Real + PjrtExec> PipelineStage<T> for XyBwdStage<T> {
+    fn name(&self) -> &'static str {
+        "xy-bwd+yfft"
+    }
+
+    fn run(&self, ctx: &mut StageCtx<'_, T>) -> Result<()> {
+        let mut ybuf = ctx.pool.take(self.ybuf);
+        let mut xspec = ctx.pool.take(self.xspec);
+        let mut send = ctx.pool.take(self.send);
+        let mut recv = ctx.pool.take(self.recv);
+        let mut scratch = ctx.pool.take(self.scratch);
+        let res = if self.overlap {
+            self.run_overlapped(
+                ctx.row,
+                ctx.timer,
+                &mut ybuf,
+                &mut xspec,
+                &mut send,
+                &mut recv,
+                &mut scratch,
+            );
+            Ok(())
+        } else {
+            let r = exec_c2c(
+                ctx.engine,
+                &self.fy,
+                true,
+                self.ny,
+                &mut ybuf,
+                &mut scratch,
+                ctx.plane_re,
+                ctx.plane_im,
+                ctx.timer,
+            );
+            if r.is_ok() {
+                self.txy.backward(
+                    ctx.row,
+                    &ybuf,
+                    &mut xspec,
+                    &mut send,
+                    &mut recv,
+                    self.opts,
+                    ctx.timer,
+                );
+            }
+            r
+        };
+        ctx.pool.restore(self.ybuf, ybuf);
+        ctx.pool.restore(self.xspec, xspec);
+        ctx.pool.restore(self.send, send);
+        ctx.pool.restore(self.recv, recv);
+        ctx.pool.restore(self.scratch, scratch);
+        res
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Non-STRIDE1 (XYZ storage order) composite stages — blocking only: the
+// Y↔Z invariant axis (spectral x) is the fastest-varying index in XYZ
+// order, so chunk slabs are not contiguous and overlap buys nothing.
+// ---------------------------------------------------------------------------
+
+/// Forward XYZ "ROW transpose + strided C2C over Y".
+pub struct XyFwdXyzStage<T: Real> {
+    pub txy: TransposeXY,
+    pub opts: ExchangeOptions,
+    pub fy: C2cPlan<T>,
+    pub ny: usize,
+    pub xspec: SlotId,
+    pub ybuf: SlotId,
+    pub send: SlotId,
+    pub recv: SlotId,
+    pub scratch: SlotId,
+}
+
+impl<T: Real + PjrtExec> PipelineStage<T> for XyFwdXyzStage<T> {
+    fn name(&self) -> &'static str {
+        "xy-fwd-xyz+yfft"
+    }
+
+    fn run(&self, ctx: &mut StageCtx<'_, T>) -> Result<()> {
+        let xspec = ctx.pool.take(self.xspec);
+        let mut ybuf = ctx.pool.take(self.ybuf);
+        let mut send = ctx.pool.take(self.send);
+        let mut recv = ctx.pool.take(self.recv);
+        let mut scratch = ctx.pool.take(self.scratch);
+        self.txy.forward_xyz(
+            ctx.row,
+            &xspec,
+            &mut ybuf,
+            &mut send,
+            &mut recv,
+            self.opts,
+            ctx.timer,
+        );
+        // Y FFT, strided: within each z-plane of the [z][y][x_loc] array,
+        // line x has base x and stride h_loc.
+        let h_loc = self.txy.h_loc();
+        let ny = self.ny;
+        {
+            let plan = &self.fy;
+            let scratch = &mut scratch;
+            let ybuf = &mut ybuf;
+            ctx.timer.time(Stage::Compute, || {
+                for zplane in ybuf.chunks_exact_mut(ny * h_loc) {
+                    plan.execute_strided(zplane, h_loc, h_loc, scratch);
+                }
+            });
+        }
+        ctx.pool.restore(self.xspec, xspec);
+        ctx.pool.restore(self.ybuf, ybuf);
+        ctx.pool.restore(self.send, send);
+        ctx.pool.restore(self.recv, recv);
+        ctx.pool.restore(self.scratch, scratch);
+        Ok(())
+    }
+}
+
+/// Forward XYZ "COLUMN transpose + strided C2C over Z" (`None` plan means
+/// the Empty third transform).
+pub struct YzFwdXyzStage<T: Real> {
+    pub tyz: TransposeYZ,
+    pub opts: ExchangeOptions,
+    pub fz: Option<C2cPlan<T>>,
+    /// ny2_loc · h_loc — the z-line stride in the XYZ Z-pencil.
+    pub zstride: usize,
+    pub ybuf: SlotId,
+    pub send: SlotId,
+    pub recv: SlotId,
+    pub scratch: SlotId,
+}
+
+impl<T: Real + PjrtExec> PipelineStage<T> for YzFwdXyzStage<T> {
+    fn name(&self) -> &'static str {
+        "yz-fwd-xyz+zfft"
+    }
+
+    fn run(&self, ctx: &mut StageCtx<'_, T>) -> Result<()> {
+        let ybuf = ctx.pool.take(self.ybuf);
+        let mut send = ctx.pool.take(self.send);
+        let mut recv = ctx.pool.take(self.recv);
+        let mut scratch = ctx.pool.take(self.scratch);
+        let res = (|| -> Result<()> {
+            let output = ctx
+                .cplx_out
+                .as_deref_mut()
+                .ok_or_else(|| Error::Runtime("yz-fwd stage needs complex output".into()))?;
+            self.tyz.forward_xyz(
+                ctx.col,
+                &ybuf,
+                output,
+                &mut send,
+                &mut recv,
+                self.opts,
+                ctx.timer,
+            );
+            if let Some(plan) = &self.fz {
+                let scratch = &mut scratch;
+                ctx.timer.time(Stage::Compute, || {
+                    plan.execute_strided(output, self.zstride, self.zstride, scratch);
+                });
+            }
+            Ok(())
+        })();
+        ctx.pool.restore(self.ybuf, ybuf);
+        ctx.pool.restore(self.send, send);
+        ctx.pool.restore(self.recv, recv);
+        ctx.pool.restore(self.scratch, scratch);
+        res
+    }
+}
+
+/// Backward XYZ "strided C2C inverse over Z + COLUMN transpose".
+pub struct YzBwdXyzStage<T: Real> {
+    pub tyz: TransposeYZ,
+    pub opts: ExchangeOptions,
+    pub fz: Option<C2cPlan<T>>,
+    pub zstride: usize,
+    pub zbuf: SlotId,
+    pub ybuf: SlotId,
+    pub send: SlotId,
+    pub recv: SlotId,
+    pub scratch: SlotId,
+}
+
+impl<T: Real + PjrtExec> PipelineStage<T> for YzBwdXyzStage<T> {
+    fn name(&self) -> &'static str {
+        "yz-bwd-xyz+zfft"
+    }
+
+    fn run(&self, ctx: &mut StageCtx<'_, T>) -> Result<()> {
+        let input =
+            ctx.cplx_in.ok_or_else(|| Error::Runtime("yz-bwd stage needs complex input".into()))?;
+        let mut zbuf = ctx.pool.take(self.zbuf);
+        let mut ybuf = ctx.pool.take(self.ybuf);
+        let mut send = ctx.pool.take(self.send);
+        let mut recv = ctx.pool.take(self.recv);
+        let mut scratch = ctx.pool.take(self.scratch);
+        ctx.timer.time(Stage::Other, || zbuf[..input.len()].copy_from_slice(input));
+        if let Some(plan) = &self.fz {
+            let scratch = &mut scratch;
+            let data = &mut zbuf[..input.len()];
+            ctx.timer.time(Stage::Compute, || {
+                plan.execute_strided(data, self.zstride, self.zstride, scratch);
+            });
+        }
+        self.tyz.backward_xyz(
+            ctx.col,
+            &zbuf,
+            &mut ybuf,
+            &mut send,
+            &mut recv,
+            self.opts,
+            ctx.timer,
+        );
+        ctx.pool.restore(self.zbuf, zbuf);
+        ctx.pool.restore(self.ybuf, ybuf);
+        ctx.pool.restore(self.send, send);
+        ctx.pool.restore(self.recv, recv);
+        ctx.pool.restore(self.scratch, scratch);
+        Ok(())
+    }
+}
+
+/// Backward XYZ "strided C2C inverse over Y + ROW transpose".
+pub struct XyBwdXyzStage<T: Real> {
+    pub txy: TransposeXY,
+    pub opts: ExchangeOptions,
+    pub fy: C2cPlan<T>,
+    pub ny: usize,
+    pub ybuf: SlotId,
+    pub xspec: SlotId,
+    pub send: SlotId,
+    pub recv: SlotId,
+    pub scratch: SlotId,
+}
+
+impl<T: Real + PjrtExec> PipelineStage<T> for XyBwdXyzStage<T> {
+    fn name(&self) -> &'static str {
+        "xy-bwd-xyz+yfft"
+    }
+
+    fn run(&self, ctx: &mut StageCtx<'_, T>) -> Result<()> {
+        let mut ybuf = ctx.pool.take(self.ybuf);
+        let mut xspec = ctx.pool.take(self.xspec);
+        let mut send = ctx.pool.take(self.send);
+        let mut recv = ctx.pool.take(self.recv);
+        let mut scratch = ctx.pool.take(self.scratch);
+        let h_loc = self.txy.h_loc();
+        let ny = self.ny;
+        {
+            let plan = &self.fy;
+            let scratch = &mut scratch;
+            let ybuf = &mut ybuf;
+            ctx.timer.time(Stage::Compute, || {
+                for zplane in ybuf.chunks_exact_mut(ny * h_loc) {
+                    plan.execute_strided(zplane, h_loc, h_loc, scratch);
+                }
+            });
+        }
+        self.txy.backward_xyz(
+            ctx.row,
+            &ybuf,
+            &mut xspec,
+            &mut send,
+            &mut recv,
+            self.opts,
+            ctx.timer,
+        );
+        ctx.pool.restore(self.ybuf, ybuf);
+        ctx.pool.restore(self.xspec, xspec);
+        ctx.pool.restore(self.send, send);
+        ctx.pool.restore(self.recv, recv);
+        ctx.pool.restore(self.scratch, scratch);
+        Ok(())
+    }
+}

@@ -31,7 +31,8 @@ pub enum EngineKind {
     Pjrt { artifacts_dir: PathBuf },
 }
 
-/// The paper's user-tunable options (§3.3, §3.4, §4.2).
+/// The paper's user-tunable options (§3.3, §3.4, §4.2) plus this repo's
+/// overlap extension.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Options {
     /// STRIDE1: perform explicit local transposes during packing so every
@@ -41,12 +42,22 @@ pub struct Options {
     pub stride1: bool,
     /// USEEVEN: padded `alltoall` instead of `alltoallv`.
     pub use_even: bool,
+    /// Communication–compute overlap: split each transpose along its
+    /// invariant axis (z-slabs for X↔Y, x-slabs for Y↔Z) into this many
+    /// chunks and software-pipeline pack/exchange/unpack/FFT across them
+    /// (§3.3's "equivalent collection of point-to-point send/receive
+    /// calls", driven chunk by chunk). `1` (default) is the paper's
+    /// blocking pipeline, bit for bit. Values > 1 take effect on the
+    /// STRIDE1 + native-engine path; other paths fall back to blocking
+    /// (PJRT artifacts are compiled for full-pencil batch shapes, and the
+    /// XYZ layout has no contiguous slab on the Y↔Z invariant axis).
+    pub overlap_chunks: usize,
     pub engine: EngineKind,
 }
 
 impl Default for Options {
     fn default() -> Self {
-        Options { stride1: true, use_even: false, engine: EngineKind::Native }
+        Options { stride1: true, use_even: false, overlap_chunks: 1, engine: EngineKind::Native }
     }
 }
 
@@ -100,6 +111,13 @@ impl PlanSpec {
         self
     }
 
+    /// Builder: overlap chunk count (clamped to at least 1; `1` means the
+    /// blocking pipeline).
+    pub fn with_overlap_chunks(mut self, chunks: usize) -> Self {
+        self.opts.overlap_chunks = chunks.max(1);
+        self
+    }
+
     /// The decomposition object (revalidates).
     pub fn decomp(&self) -> Result<Decomp> {
         Decomp::new(self.nx, self.ny, self.nz, self.pgrid)
@@ -127,10 +145,12 @@ mod tests {
             .unwrap()
             .with_third(TransformKind::Cheby)
             .with_use_even(true)
-            .with_stride1(false);
+            .with_stride1(false)
+            .with_overlap_chunks(4);
         assert_eq!(s.third, TransformKind::Cheby);
         assert!(s.opts.use_even);
         assert!(!s.opts.stride1);
+        assert_eq!(s.opts.overlap_chunks, 4);
         assert_eq!(s.p(), 4);
     }
 
@@ -139,6 +159,13 @@ mod tests {
         let o = Options::default();
         assert!(o.stride1, "STRIDE1 is our engine default");
         assert!(!o.use_even, "Alltoallv is the paper's default");
+        assert_eq!(o.overlap_chunks, 1, "blocking pipeline is the default");
         assert_eq!(o.engine, EngineKind::Native);
+    }
+
+    #[test]
+    fn overlap_chunks_clamps_to_one() {
+        let s = PlanSpec::new([8, 8, 8], ProcGrid::new(1, 1)).unwrap().with_overlap_chunks(0);
+        assert_eq!(s.opts.overlap_chunks, 1);
     }
 }

@@ -3,32 +3,119 @@
 //! zero-copy hand-off to PJRT literals and MPI pack buffers).
 
 use std::fmt;
-use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Neg, Sub, SubAssign};
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
 
 /// Floating-point scalar usable throughout the library (f32 or f64) —
 /// the paper's "single and double precision" feature.
+///
+/// Self-contained (no `num-traits` offline): the trait carries exactly the
+/// constants, conversions and transcendental methods the generic FFT and
+/// transpose code calls on `T`. Where concrete `f32`/`f64` values are used
+/// the inherent std methods shadow these, so the impls below are only
+/// reached from generic contexts.
 pub trait Real:
-    num_traits::Float
-    + num_traits::FloatConst
-    + num_traits::FromPrimitive
-    + num_traits::NumAssign
+    Copy
+    + PartialEq
+    + PartialOrd
     + Send
     + Sync
     + fmt::Debug
     + fmt::Display
     + Default
     + 'static
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + MulAssign
+    + DivAssign
 {
     /// Short dtype tag matching the artifact manifest ("f32"/"f64").
     const DTYPE: &'static str;
+
+    fn zero() -> Self;
+    fn one() -> Self;
+    /// π in this precision (num-traits `FloatConst` convention).
+    #[allow(non_snake_case)]
+    fn PI() -> Self;
+    /// Lossy conversion from `usize` (num-traits `FromPrimitive` convention:
+    /// `Option` so call sites keep their `.unwrap()`).
+    fn from_usize(v: usize) -> Option<Self>;
+    /// Lossy conversion from `f64`.
+    fn from_f64(v: f64) -> Option<Self>;
+    /// Widening conversion to `f64` (num-traits `ToPrimitive` convention).
+    fn to_f64(self) -> Option<f64>;
+    fn sin(self) -> Self;
+    fn cos(self) -> Self;
+    fn sqrt(self) -> Self;
+    fn abs(self) -> Self;
+    fn max(self, other: Self) -> Self;
+    fn min(self, other: Self) -> Self;
 }
 
-impl Real for f32 {
-    const DTYPE: &'static str = "f32";
+macro_rules! impl_real {
+    ($t:ty, $dtype:literal, $pi:expr) => {
+        impl Real for $t {
+            const DTYPE: &'static str = $dtype;
+
+            #[inline(always)]
+            fn zero() -> Self {
+                0.0
+            }
+            #[inline(always)]
+            fn one() -> Self {
+                1.0
+            }
+            #[inline(always)]
+            #[allow(non_snake_case)]
+            fn PI() -> Self {
+                $pi
+            }
+            #[inline(always)]
+            fn from_usize(v: usize) -> Option<Self> {
+                Some(v as $t)
+            }
+            #[inline(always)]
+            fn from_f64(v: f64) -> Option<Self> {
+                Some(v as $t)
+            }
+            #[inline(always)]
+            fn to_f64(self) -> Option<f64> {
+                Some(self as f64)
+            }
+            #[inline(always)]
+            fn sin(self) -> Self {
+                <$t>::sin(self)
+            }
+            #[inline(always)]
+            fn cos(self) -> Self {
+                <$t>::cos(self)
+            }
+            #[inline(always)]
+            fn sqrt(self) -> Self {
+                <$t>::sqrt(self)
+            }
+            #[inline(always)]
+            fn abs(self) -> Self {
+                <$t>::abs(self)
+            }
+            #[inline(always)]
+            fn max(self, other: Self) -> Self {
+                <$t>::max(self, other)
+            }
+            #[inline(always)]
+            fn min(self, other: Self) -> Self {
+                <$t>::min(self, other)
+            }
+        }
+    };
 }
-impl Real for f64 {
-    const DTYPE: &'static str = "f64";
-}
+
+impl_real!(f32, "f32", std::f32::consts::PI);
+impl_real!(f64, "f64", std::f64::consts::PI);
 
 /// A complex number. `#[repr(C)]` guarantees (re, im) adjacency so a
 /// `&[Complex<T>]` can be reinterpreted as interleaved scalars for packing.

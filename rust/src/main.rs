@@ -66,6 +66,7 @@ fn print_help() {
          \n\
          CONFIG KEYS (file or -o): grid.dims=[nx,ny,nz] grid.pgrid=[m1,m2]\n\
            iterations=N options.use_even=bool options.stride1=bool\n\
+           options.overlap_chunks=K (chunked comm/compute overlap; 1 = blocking)\n\
            options.third=\"fft|cheby|empty\" options.engine=\"native|pjrt\"\n\
            options.artifacts_dir=\"artifacts\" options.precision=\"f32|f64\""
     );
@@ -109,7 +110,7 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
     let spec = rc.to_spec()?;
     println!(
         "p3dfft run: grid {}x{}x{} on {}x{} = {} ranks, engine={}, third={:?}, \
-         useeven={}, stride1={}, iterations={}",
+         useeven={}, stride1={}, overlap_chunks={}, iterations={}",
         spec.nx,
         spec.ny,
         spec.nz,
@@ -120,6 +121,7 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
         spec.third,
         spec.opts.use_even,
         spec.opts.stride1,
+        spec.opts.overlap_chunks,
         rc.iterations
     );
     let iterations = rc.iterations;
@@ -153,6 +155,12 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
         report.bytes as f64 / (1024.0 * 1024.0),
         100.0 * report.timer.get(Stage::Exchange) / report.timer.total().max(1e-12)
     );
+    if report.timer.get(Stage::Overlap) > 0.0 {
+        println!(
+            "overlapped exchange (in flight while packing/computing): {:.4}s",
+            report.timer.get(Stage::Overlap)
+        );
+    }
     if err > 1e-6 {
         return Err(anyhow::anyhow!("roundtrip verification FAILED (err = {err:.3e})"));
     }

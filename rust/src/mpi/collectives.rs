@@ -27,6 +27,11 @@ pub enum AlltoallAlgo {
 /// never match a stray user message).
 const COLL_TAG_BASE: u64 = 1 << 40;
 
+/// Tag namespace for the chunked (isend/irecv-style) exchange. Salted by
+/// chunk index; successive exchanges on the same communicator may reuse a
+/// salt because the fabric's mailboxes are FIFO per (src, dst, tag).
+const CHUNK_TAG_BASE: u64 = 1 << 41;
+
 impl Comm {
     /// `MPI_Alltoall`: equal blocks of `block` elements. `send.len()` and
     /// `recv.len()` must equal `block * size`. Block `j` of `send` goes to
@@ -148,6 +153,56 @@ impl Comm {
             );
         }
         self.barrier();
+    }
+
+    /// Post one chunk's sends of a chunked `alltoallv` and return
+    /// immediately (the fabric buffers sends, so this is the moral
+    /// equivalent of a row of `MPI_Isend`s). Peers are walked in the
+    /// pairwise order `(rank + s) mod p` — §3.3's "equivalent collection
+    /// of point-to-point send/receive calls" — with the self block first
+    /// (`s = 0`), which keeps the schedule deterministic and
+    /// contention-bounded. Counts/displacements are in elements, indexed
+    /// by peer; `salt` distinguishes in-flight chunks (the chunk index).
+    ///
+    /// Pair every post with exactly one [`Self::drain_chunk_recvs`] using
+    /// the same salt; matching is FIFO per (src, dst, tag), so repeated
+    /// transposes may reuse salts safely.
+    pub fn post_chunk_sends<T: Pod>(
+        &self,
+        salt: u64,
+        send: &[T],
+        scounts: &[usize],
+        sdispls: &[usize],
+    ) {
+        let p = self.size();
+        let me = self.rank();
+        let tag = CHUNK_TAG_BASE + salt;
+        for s in 0..p {
+            let to = (me + s) % p;
+            self.send(to, tag, &send[sdispls[to]..sdispls[to] + scounts[to]]);
+        }
+    }
+
+    /// Drain one chunk's receives (blocking), the `MPI_Waitall` of the
+    /// chunked exchange. Receives in the mirrored pairwise order
+    /// `(rank - s) mod p`, self block first. No barrier: the data
+    /// dependency (every peer posts chunk `salt` before draining it)
+    /// already orders the exchange, and skipping the barrier is what lets
+    /// the next chunk's pack overlap this chunk's flight.
+    pub fn drain_chunk_recvs<T: Pod>(
+        &self,
+        salt: u64,
+        recv: &mut [T],
+        rcounts: &[usize],
+        rdispls: &[usize],
+    ) {
+        let p = self.size();
+        let me = self.rank();
+        let tag = CHUNK_TAG_BASE + salt;
+        for s in 0..p {
+            let from = (me + p - s) % p;
+            self.recv_into(from, tag, &mut recv[rdispls[from]..rdispls[from] + rcounts[from]]);
+        }
     }
 
     /// Sum-allreduce of one f64.
@@ -413,6 +468,77 @@ mod tests {
             })
             .unwrap();
         assert!(got.into_iter().all(|x| x));
+    }
+
+    #[test]
+    fn chunked_post_drain_matches_alltoallv() {
+        // Two in-flight chunks with distinct salts, drained after both are
+        // posted, must deliver exactly what one alltoallv of the union
+        // delivers — including with chunk 1 posted before chunk 0 drains.
+        use super::super::communicator::Universe;
+        let u = Universe::new(3);
+        let got = u
+            .run(|c| {
+                let p = c.size();
+                let me = c.rank();
+                // Peer j gets 2 elements per chunk from everyone.
+                let scounts = vec![2usize; p];
+                let sdispls: Vec<usize> = (0..p).map(|j| 2 * j).collect();
+                let rcounts = scounts.clone();
+                let rdispls = sdispls.clone();
+                let mk = |chunk: usize| -> Vec<u64> {
+                    (0..2 * p).map(|i| (me * 100 + chunk * 10 + i) as u64).collect()
+                };
+                let send0 = mk(0);
+                let send1 = mk(1);
+                c.post_chunk_sends(0, &send0, &scounts, &sdispls);
+                c.post_chunk_sends(1, &send1, &scounts, &sdispls);
+                let mut recv0 = vec![0u64; 2 * p];
+                let mut recv1 = vec![0u64; 2 * p];
+                c.drain_chunk_recvs(0, &mut recv0, &rcounts, &rdispls);
+                c.drain_chunk_recvs(1, &mut recv1, &rcounts, &rdispls);
+                // Reference: blocking alltoallv of the same chunk-0 data.
+                let mut reference = vec![0u64; 2 * p];
+                c.alltoallv(&send0, &scounts, &sdispls, &mut reference, &rcounts, &rdispls);
+                Ok((recv0, recv1, reference))
+            })
+            .unwrap();
+        for me in 0..3 {
+            let (r0, r1, reference) = &got[me];
+            assert_eq!(r0, reference, "rank {me} chunk 0");
+            for i in 0..3 {
+                for k in 0..2 {
+                    assert_eq!(r1[2 * i + k], (i * 100 + 10 + 2 * me + k) as u64);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_salt_reuse_is_fifo_ordered() {
+        use super::super::communicator::Universe;
+        let u = Universe::new(2);
+        let got = u
+            .run(|c| {
+                let scounts = vec![1usize; 2];
+                let sdispls = vec![0usize, 1];
+                // Two rounds with the SAME salt, drained in order.
+                let a: Vec<u64> = vec![c.rank() as u64 * 10, c.rank() as u64 * 10 + 1];
+                let b: Vec<u64> = vec![c.rank() as u64 * 10 + 5, c.rank() as u64 * 10 + 6];
+                c.post_chunk_sends(3, &a, &scounts, &sdispls);
+                c.post_chunk_sends(3, &b, &scounts, &sdispls);
+                let mut ra = vec![0u64; 2];
+                let mut rb = vec![0u64; 2];
+                c.drain_chunk_recvs(3, &mut ra, &scounts, &sdispls);
+                c.drain_chunk_recvs(3, &mut rb, &scounts, &sdispls);
+                Ok((ra, rb))
+            })
+            .unwrap();
+        // Rank 0 receives rank 1's first round before its second.
+        assert_eq!(got[0].0[1], 10);
+        assert_eq!(got[0].1[1], 15);
+        assert_eq!(got[1].0[0], 1);
+        assert_eq!(got[1].1[0], 6);
     }
 
     #[test]

@@ -30,5 +30,5 @@ pub mod topo;
 pub use calibrate::Calibration;
 pub use fit::{fit_strong_scaling, FitResult};
 pub use machine::Machine;
-pub use model::{predict, CostBreakdown, ModelInput};
+pub use model::{predict, predict_overlapped, CostBreakdown, ModelInput};
 pub use topo::Interconnect;

@@ -118,6 +118,29 @@ pub fn predict(input: &ModelInput) -> CostBreakdown {
     CostBreakdown { compute, memory, row_exchange, col_exchange, latency }
 }
 
+/// Eq.-1-style prediction of the chunked overlap executor: the exchange
+/// volume of one transform is split into `k` chunks that software-pipeline
+/// against the (equally split) local work. In a `k`-stage pipeline the
+/// first chunk's exchange is fully exposed, each later chunk's exchange
+/// hides behind the previous chunk's compute (and vice versa), and the
+/// last chunk's compute is fully exposed:
+///
+///   T(k) = E/k + (k−1)·max(E/k, W/k) + W/k + k·L
+///
+/// with `E` the bisection/memory exchange terms, `W` the compute+memory
+/// terms and `L` the per-exchange message latency (each chunk re-pays the
+/// `(M−1)·t_msg` message overhead, which is why `k` has an optimum rather
+/// than growing monotonically better). `k = 1` reproduces
+/// [`CostBreakdown::total`] exactly, mirroring the executor's blocking
+/// fallback.
+pub fn predict_overlapped(input: &ModelInput, chunks: usize) -> f64 {
+    let c = predict(input);
+    let k = chunks.max(1) as f64;
+    let e = c.row_exchange + c.col_exchange;
+    let w = c.compute + c.memory;
+    e / k + (k - 1.0) * (e / k).max(w / k) + w / k + k * c.latency
+}
+
 /// §2's transpose-vs-distributed comparison ([Foster] Table 1): the
 /// distributed (binary-exchange) 1D FFT moves `(N³/P)·log₂(M)` elements
 /// per task against the transpose method's `(N³/P)·(M-1)/M ≈ N³/P`, so
@@ -219,6 +242,47 @@ mod tests {
         let wide = predict(&ModelInput::cubic(2048, 1, 1024, m()));
         let best = predict(&ModelInput::cubic(2048, 16, 64, m()));
         assert!(wide.latency > best.latency);
+    }
+
+    #[test]
+    fn overlapped_prediction_k1_equals_blocking_total() {
+        let inp = ModelInput::cubic(2048, 16, 64, Machine::cray_xt5());
+        let c = predict(&inp);
+        assert!((predict_overlapped(&inp, 1) - c.total()).abs() < 1e-12 * c.total());
+        assert!((predict_overlapped(&inp, 0) - c.total()).abs() < 1e-12 * c.total());
+    }
+
+    #[test]
+    fn overlapped_prediction_hides_exchange_behind_compute() {
+        // Comm-heavy scenario: a few chunks must beat blocking, and the
+        // asymptote is bounded below by max(E, W) plus latency.
+        let inp = ModelInput::cubic(2048, 32, 64, Machine::cray_xt5());
+        let c = predict(&inp);
+        let blocking = predict_overlapped(&inp, 1);
+        let k4 = predict_overlapped(&inp, 4);
+        assert!(k4 < blocking, "k=4 {k4} vs blocking {blocking}");
+        let e = c.row_exchange + c.col_exchange;
+        let w = c.compute + c.memory;
+        for k in [2usize, 4, 8, 64] {
+            assert!(predict_overlapped(&inp, k) >= e.max(w), "k={k} below pipeline bound");
+        }
+    }
+
+    #[test]
+    fn overlapped_prediction_has_interior_optimum() {
+        // Latency grows with k, so extreme chunk counts lose: the best k
+        // over a sweep is neither 1 nor the maximum swept value.
+        let inp = ModelInput::cubic(2048, 32, 64, Machine::cray_xt5());
+        let ks: Vec<usize> = vec![1, 2, 4, 8, 16, 64, 512, 4096, 65536];
+        let best = ks
+            .iter()
+            .copied()
+            .min_by(|&a, &b| {
+                predict_overlapped(&inp, a).partial_cmp(&predict_overlapped(&inp, b)).unwrap()
+            })
+            .unwrap();
+        assert!(best > 1, "overlap should pay at all on a comm-heavy run");
+        assert!(best < 65536, "unbounded chunking must lose to latency");
     }
 
     #[test]

@@ -1,58 +1,145 @@
 //! The PJRT stage library: compiles artifact HLO text once per stage and
 //! serves executions. Shared across rank threads behind an `Arc`.
 //!
-//! Thread-safety note: the `xla` crate's wrappers are `!Send`/`!Sync`
-//! (`Rc` + raw PJRT pointers). Every XLA object here lives inside one
-//! `Mutex<Inner>`, and all compile/execute traffic is serialised through
-//! that lock, so only one thread ever touches the wrappers at a time —
-//! which makes the `unsafe impl Send for Inner` sound. Serialised PJRT
-//! execution is acceptable: this engine exists to prove the three-layer
-//! composition end to end; the native engine is the performance path
-//! (DESIGN.md §4).
+//! Two builds:
+//! * `--features xla-pjrt` — the real backend over the external `xla`
+//!   crate (PJRT CPU client). Thread-safety note: the `xla` crate's
+//!   wrappers are `!Send`/`!Sync` (`Rc` + raw PJRT pointers). Every XLA
+//!   object lives inside one `Mutex<Inner>`, and all compile/execute
+//!   traffic is serialised through that lock, so only one thread ever
+//!   touches the wrappers at a time — which makes the
+//!   `unsafe impl Send for Inner` sound. Serialised PJRT execution is
+//!   acceptable: this engine exists to prove the three-layer composition
+//!   end to end; the native engine is the performance path (DESIGN.md).
+//! * default (offline) — a stub that loads and resolves the manifest
+//!   exactly like the real client (so artifact-lookup errors are
+//!   identical) but reports execution as unavailable. This keeps the
+//!   crate dependency-free in environments without the `xla` crate;
+//!   `rust/tests/runtime_pjrt.rs` skips itself when no artifacts exist.
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
 
 use crate::util::error::{Error, Result};
 
-use super::manifest::{Manifest, StageId, StageKind};
+use super::manifest::{Entry, Manifest, StageId, StageKind};
 
-fn rt(e: xla::Error) -> Error {
-    Error::Runtime(e.to_string())
+#[cfg(feature = "xla-pjrt")]
+mod backend {
+    use std::collections::HashMap;
+    use std::sync::Mutex;
+
+    use super::*;
+
+    fn rt(e: xla::Error) -> Error {
+        Error::Runtime(e.to_string())
+    }
+
+    pub(super) struct Inner {
+        client: xla::PjRtClient,
+        cache: HashMap<StageId, xla::PjRtLoadedExecutable>,
+    }
+
+    // SAFETY: `Inner` is only ever accessed while holding the StageLibrary
+    // mutex, so the non-atomic internals (Rc refcounts, raw PJRT pointers)
+    // are never touched by two threads concurrently.
+    unsafe impl Send for Inner {}
+
+    pub(super) struct Backend {
+        platform: String,
+        inner: Mutex<Inner>,
+    }
+
+    impl Backend {
+        pub(super) fn open() -> Result<Self> {
+            let client = xla::PjRtClient::cpu().map_err(rt)?;
+            let platform = client.platform_name();
+            Ok(Backend { platform, inner: Mutex::new(Inner { client, cache: HashMap::new() }) })
+        }
+
+        pub(super) fn platform(&self) -> String {
+            self.platform.clone()
+        }
+
+        pub(super) fn run<E>(
+            &self,
+            id: &StageId,
+            entry: &Entry,
+            inputs: &[(&[E], &[i64])],
+        ) -> Result<Vec<Vec<E>>>
+        where
+            E: xla::NativeType + xla::ArrayElement,
+        {
+            let mut inner = self.inner.lock().expect("stage library poisoned");
+            if !inner.cache.contains_key(id) {
+                let proto = xla::HloModuleProto::from_text_file(
+                    entry
+                        .path
+                        .to_str()
+                        .ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+                )
+                .map_err(rt)?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = inner.client.compile(&comp).map_err(rt)?;
+                inner.cache.insert(*id, exe);
+            }
+            let exe = inner.cache.get(id).expect("just inserted");
+            let lits: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|(data, dims)| xla::Literal::vec1(data).reshape(dims).map_err(rt))
+                .collect::<Result<_>>()?;
+            let result = exe.execute::<xla::Literal>(&lits).map_err(rt)?;
+            let lit = result[0][0].to_literal_sync().map_err(rt)?;
+            let parts = lit.to_tuple().map_err(rt)?;
+            parts.into_iter().map(|p| p.to_vec::<E>().map_err(rt)).collect()
+        }
+    }
 }
 
-struct Inner {
-    client: xla::PjRtClient,
-    cache: HashMap<StageId, xla::PjRtLoadedExecutable>,
-}
+#[cfg(not(feature = "xla-pjrt"))]
+mod backend {
+    use super::*;
 
-// SAFETY: `Inner` is only ever accessed while holding the StageLibrary
-// mutex, so the non-atomic internals (Rc refcounts, raw PJRT pointers)
-// are never touched by two threads concurrently.
-unsafe impl Send for Inner {}
+    /// Offline stub: manifest resolution works, execution does not.
+    pub(super) struct Backend;
+
+    impl Backend {
+        pub(super) fn open() -> Result<Self> {
+            Ok(Backend)
+        }
+
+        pub(super) fn platform(&self) -> String {
+            "unavailable (built without the xla-pjrt feature)".to_string()
+        }
+
+        pub(super) fn unavailable(&self, id: &StageId) -> Error {
+            Error::Runtime(format!(
+                "cannot execute stage={} batch={} n={} dtype={}: this build has no PJRT \
+                 backend (add the `xla` crate to [dependencies] and build with \
+                 --features xla-pjrt — see rust/Cargo.toml)",
+                id.kind.name(),
+                id.batch,
+                id.n,
+                id.dtype
+            ))
+        }
+    }
+}
 
 /// Lazily-compiled library of per-stage PJRT executables.
 pub struct StageLibrary {
     dir: PathBuf,
     manifest: Manifest,
-    platform: String,
-    inner: Mutex<Inner>,
+    backend: backend::Backend,
 }
 
 impl StageLibrary {
-    /// Open `dir` (must contain `manifest.txt`) on the PJRT CPU client.
+    /// Open `dir` (must contain `manifest.txt`) on the PJRT CPU client
+    /// (or the offline stub when built without `xla-pjrt`).
     pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&dir)?;
-        let client = xla::PjRtClient::cpu().map_err(rt)?;
-        let platform = client.platform_name();
-        Ok(StageLibrary {
-            dir,
-            manifest,
-            platform,
-            inner: Mutex::new(Inner { client, cache: HashMap::new() }),
-        })
+        let backend = backend::Backend::open()?;
+        Ok(StageLibrary { dir, manifest, backend })
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -60,7 +147,7 @@ impl StageLibrary {
     }
 
     pub fn platform(&self) -> String {
-        self.platform.clone()
+        self.backend.platform()
     }
 
     /// Whether an artifact exists for this id.
@@ -68,14 +155,10 @@ impl StageLibrary {
         self.manifest.get(id).is_some()
     }
 
-    /// Execute an artifact. `inputs` are (flat data, dims) pairs matching
-    /// the artifact's declared shapes; returns the tuple outputs as flat
-    /// vectors. Generic over f32/f64 via the xla crate's element traits.
-    fn run<E>(&self, id: &StageId, inputs: &[(&[E], &[i64])]) -> Result<Vec<Vec<E>>>
-    where
-        E: xla::NativeType + xla::ArrayElement,
-    {
-        let entry = self.manifest.get(id).ok_or_else(|| {
+    /// Resolve an id to its manifest entry, with the canonical "missing
+    /// artifact" error.
+    fn resolve(&self, id: &StageId) -> Result<&Entry> {
+        self.manifest.get(id).ok_or_else(|| {
             Error::Runtime(format!(
                 "no artifact for stage={} batch={} n={} dtype={} in {}",
                 id.kind.name(),
@@ -84,38 +167,39 @@ impl StageLibrary {
                 id.dtype,
                 self.dir.display()
             ))
-        })?;
-        let mut inner = self.inner.lock().expect("stage library poisoned");
-        if !inner.cache.contains_key(id) {
-            let proto = xla::HloModuleProto::from_text_file(
-                entry.path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
-            )
-            .map_err(rt)?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = inner.client.compile(&comp).map_err(rt)?;
-            inner.cache.insert(*id, exe);
-        }
-        let exe = inner.cache.get(id).expect("just inserted");
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(data, dims)| xla::Literal::vec1(data).reshape(dims).map_err(rt))
-            .collect::<Result<_>>()?;
-        let result = exe.execute::<xla::Literal>(&lits).map_err(rt)?;
-        let lit = result[0][0].to_literal_sync().map_err(rt)?;
-        let parts = lit.to_tuple().map_err(rt)?;
-        parts.into_iter().map(|p| p.to_vec::<E>().map_err(rt)).collect()
+        })
     }
 
     /// f64 entry point (used by the coordinator's `PjrtExec` impl).
+    #[cfg(feature = "xla-pjrt")]
     pub fn run_f64(&self, id: &StageId, inputs: &[(&[f64], &[i64])]) -> Result<Vec<Vec<f64>>> {
         debug_assert_eq!(id.dtype, "f64");
-        self.run(id, inputs)
+        let entry = self.resolve(id)?;
+        self.backend.run(id, entry, inputs)
     }
 
     /// f32 entry point.
+    #[cfg(feature = "xla-pjrt")]
     pub fn run_f32(&self, id: &StageId, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
         debug_assert_eq!(id.dtype, "f32");
-        self.run(id, inputs)
+        let entry = self.resolve(id)?;
+        self.backend.run(id, entry, inputs)
+    }
+
+    /// f64 entry point (offline stub: artifact lookup then "unavailable").
+    #[cfg(not(feature = "xla-pjrt"))]
+    pub fn run_f64(&self, id: &StageId, _inputs: &[(&[f64], &[i64])]) -> Result<Vec<Vec<f64>>> {
+        debug_assert_eq!(id.dtype, "f64");
+        let _entry = self.resolve(id)?;
+        Err(self.backend.unavailable(id))
+    }
+
+    /// f32 entry point (offline stub).
+    #[cfg(not(feature = "xla-pjrt"))]
+    pub fn run_f32(&self, id: &StageId, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        debug_assert_eq!(id.dtype, "f32");
+        let _entry = self.resolve(id)?;
+        Err(self.backend.unavailable(id))
     }
 
     /// Convenience: batched R2C over X lines, f64:
@@ -165,7 +249,7 @@ impl StageLibrary {
         out.pop().ok_or_else(|| Error::Runtime("missing output".into()))
     }
 
-    /// Convenience: fused whole-cube 3D R2C, f64 (smoke-test artifact).
+    /// Convenience: fused whole-cube 3D R2C, f64 (runtime smoke test).
     pub fn fft3d_r2c_f64(&self, n: usize, input: &[f64]) -> Result<(Vec<f64>, Vec<f64>)> {
         let id = StageId { kind: StageKind::Fft3dR2c, batch: n * n, n, dtype: "f64" };
         let dims = [n as i64, n as i64, n as i64];

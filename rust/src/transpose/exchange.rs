@@ -611,6 +611,288 @@ impl TransposeYZ {
     }
 }
 
+/// Per-chunk exchange metadata for the overlap executor: one
+/// invariant-axis window plus per-peer counts with *absolute*
+/// displacements into the full-transpose send/recv buffers. Chunk windows
+/// are disjoint, so chunk `i+1` can be packed while chunk `i` is still in
+/// flight and chunk `i-1` is being unpacked.
+#[derive(Debug, Clone)]
+pub struct ChunkMeta {
+    /// The invariant-axis window this chunk covers (z for X↔Y, spectral x
+    /// for Y↔Z).
+    pub range: std::ops::Range<usize>,
+    pub scounts: Vec<usize>,
+    pub sdispls: Vec<usize>,
+    pub rcounts: Vec<usize>,
+    pub rdispls: Vec<usize>,
+}
+
+/// A chunked view of one transpose direction: the invariant axis split
+/// into at most `k` block ranges (uneven tails allowed; `k` is clamped to
+/// the axis extent so no chunk is empty).
+#[derive(Debug, Clone)]
+pub struct ChunkPlan {
+    pub chunks: Vec<ChunkMeta>,
+}
+
+impl ChunkPlan {
+    pub fn len(&self) -> usize {
+        self.chunks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chunks.is_empty()
+    }
+}
+
+/// Build a chunk plan from per-peer counts *per invariant-axis plane*.
+fn chunk_plan(
+    axis_len: usize,
+    k: usize,
+    p: usize,
+    s_unit: impl Fn(usize) -> usize,
+    r_unit: impl Fn(usize) -> usize,
+) -> ChunkPlan {
+    let k = k.clamp(1, axis_len.max(1));
+    let s_plane: usize = (0..p).map(&s_unit).sum();
+    let r_plane: usize = (0..p).map(&r_unit).sum();
+    let mut chunks = Vec::with_capacity(k);
+    for c in 0..k {
+        let range = block_range(axis_len, k, c);
+        let len = range.len();
+        let mut scounts = Vec::with_capacity(p);
+        let mut sdispls = Vec::with_capacity(p);
+        let mut rcounts = Vec::with_capacity(p);
+        let mut rdispls = Vec::with_capacity(p);
+        let mut soff = range.start * s_plane;
+        let mut roff = range.start * r_plane;
+        for j in 0..p {
+            let sc = len * s_unit(j);
+            let rc = len * r_unit(j);
+            scounts.push(sc);
+            sdispls.push(soff);
+            soff += sc;
+            rcounts.push(rc);
+            rdispls.push(roff);
+            roff += rc;
+        }
+        chunks.push(ChunkMeta { range, scounts, sdispls, rcounts, rdispls });
+    }
+    ChunkPlan { chunks }
+}
+
+impl TransposeXY {
+    /// Chunked forward view: z-slabs, per-peer counts scaled per plane.
+    pub fn chunks_fwd(&self, k: usize) -> ChunkPlan {
+        chunk_plan(
+            self.nz,
+            k,
+            self.m1,
+            |j| self.ny_loc() * self.x_ranges[j].len(),
+            |j| self.h_loc() * self.y_ranges[j].len(),
+        )
+    }
+
+    /// Chunked backward view (send/recv roles of the forward swapped).
+    pub fn chunks_bwd(&self, k: usize) -> ChunkPlan {
+        chunk_plan(
+            self.nz,
+            k,
+            self.m1,
+            |j| self.h_loc() * self.y_ranges[j].len(),
+            |j| self.ny_loc() * self.x_ranges[j].len(),
+        )
+    }
+
+    /// Pack the forward send block for row peer `j`, z-window `[za, zb)`.
+    pub fn pack_fwd_win<T: Real>(
+        &self,
+        input: &[Complex<T>],
+        j: usize,
+        za: usize,
+        zb: usize,
+        out: &mut [Complex<T>],
+    ) {
+        let r = &self.x_ranges[j];
+        pack::pack_x_to_y_win(input, self.nz, self.ny_loc(), self.h, r.start, r.end, za, zb, out);
+    }
+
+    /// Unpack the forward recv block from row peer `j`, z-window `[za, zb)`.
+    pub fn unpack_fwd_win<T: Real>(
+        &self,
+        buf: &[Complex<T>],
+        j: usize,
+        za: usize,
+        zb: usize,
+        output: &mut [Complex<T>],
+    ) {
+        let r = &self.y_ranges[j];
+        pack::unpack_x_to_y_win(
+            buf,
+            self.nz,
+            self.h_loc(),
+            self.ny_glob,
+            r.start,
+            r.end,
+            za,
+            zb,
+            output,
+        );
+    }
+
+    /// Pack the backward send block for row peer `j`, z-window `[za, zb)`.
+    pub fn pack_bwd_win<T: Real>(
+        &self,
+        input: &[Complex<T>],
+        j: usize,
+        za: usize,
+        zb: usize,
+        out: &mut [Complex<T>],
+    ) {
+        let r = &self.y_ranges[j];
+        pack::pack_y_to_x_win(
+            input,
+            self.nz,
+            self.h_loc(),
+            self.ny_glob,
+            r.start,
+            r.end,
+            za,
+            zb,
+            out,
+        );
+    }
+
+    /// Unpack the backward recv block from row peer `j`, z-window `[za, zb)`.
+    pub fn unpack_bwd_win<T: Real>(
+        &self,
+        buf: &[Complex<T>],
+        j: usize,
+        za: usize,
+        zb: usize,
+        output: &mut [Complex<T>],
+    ) {
+        let r = &self.x_ranges[j];
+        pack::unpack_y_to_x_win(buf, self.nz, self.ny_loc(), self.h, r.start, r.end, za, zb, output);
+    }
+}
+
+impl TransposeYZ {
+    /// Chunked forward view: spectral-x slabs.
+    pub fn chunks_fwd(&self, k: usize) -> ChunkPlan {
+        chunk_plan(
+            self.h_loc,
+            k,
+            self.m2,
+            |j| self.y_ranges[j].len() * self.nz_loc(),
+            |j| self.ny2_loc() * self.z_ranges[j].len(),
+        )
+    }
+
+    /// Chunked backward view.
+    pub fn chunks_bwd(&self, k: usize) -> ChunkPlan {
+        chunk_plan(
+            self.h_loc,
+            k,
+            self.m2,
+            |j| self.ny2_loc() * self.z_ranges[j].len(),
+            |j| self.y_ranges[j].len() * self.nz_loc(),
+        )
+    }
+
+    /// Pack the forward send block for column peer `j`, x-window `[xa, xb)`.
+    pub fn pack_fwd_win<T: Real>(
+        &self,
+        input: &[Complex<T>],
+        j: usize,
+        xa: usize,
+        xb: usize,
+        out: &mut [Complex<T>],
+    ) {
+        let r = &self.y_ranges[j];
+        pack::pack_y_to_z_win(
+            input,
+            self.nz_loc(),
+            self.h_loc,
+            self.ny_glob,
+            r.start,
+            r.end,
+            xa,
+            xb,
+            out,
+        );
+    }
+
+    /// Unpack the forward recv block from column peer `j`, x-window `[xa, xb)`.
+    pub fn unpack_fwd_win<T: Real>(
+        &self,
+        buf: &[Complex<T>],
+        j: usize,
+        xa: usize,
+        xb: usize,
+        output: &mut [Complex<T>],
+    ) {
+        let r = &self.z_ranges[j];
+        pack::unpack_y_to_z_win(
+            buf,
+            self.h_loc,
+            self.ny2_loc(),
+            self.nz_glob,
+            r.start,
+            r.end,
+            xa,
+            xb,
+            output,
+        );
+    }
+
+    /// Pack the backward send block for column peer `j`, x-window `[xa, xb)`.
+    pub fn pack_bwd_win<T: Real>(
+        &self,
+        input: &[Complex<T>],
+        j: usize,
+        xa: usize,
+        xb: usize,
+        out: &mut [Complex<T>],
+    ) {
+        let r = &self.z_ranges[j];
+        pack::pack_z_to_y_win(
+            input,
+            self.h_loc,
+            self.ny2_loc(),
+            self.nz_glob,
+            r.start,
+            r.end,
+            xa,
+            xb,
+            out,
+        );
+    }
+
+    /// Unpack the backward recv block from column peer `j`, x-window `[xa, xb)`.
+    pub fn unpack_bwd_win<T: Real>(
+        &self,
+        buf: &[Complex<T>],
+        j: usize,
+        xa: usize,
+        xb: usize,
+        output: &mut [Complex<T>],
+    ) {
+        let r = &self.y_ranges[j];
+        pack::unpack_z_to_y_win(
+            buf,
+            self.nz_loc(),
+            self.h_loc,
+            self.ny_glob,
+            r.start,
+            r.end,
+            xa,
+            xb,
+            output,
+        );
+    }
+}
+
 /// Shared counts/displacements builder. Under USEEVEN every displacement
 /// advances by the uniform padded block (contents beyond the true count
 /// are don't-care padding, exactly as in the paper's workaround).
@@ -769,6 +1051,59 @@ mod tests {
     #[test]
     fn tall_processor_grid() {
         roundtrip_case(16, 12, 10, 2, 5, false);
+    }
+
+    #[test]
+    fn chunk_plans_partition_the_full_exchange() {
+        // Sum of per-chunk counts must equal the blocking counts, chunk
+        // windows must be disjoint, and everything must fit in buf_len —
+        // for uneven grids and k not dividing the axis.
+        let decomp = Decomp::new(10, 9, 7, ProcGrid::new(3, 2)).unwrap();
+        let opts = ExchangeOptions { use_even: false };
+        for rank in 0..decomp.p() {
+            let txy = TransposeXY::new(&decomp, rank);
+            let tyz = TransposeYZ::new(&decomp, rank);
+            for k in [1usize, 2, 3, 7, 16] {
+                let cp = txy.chunks_fwd(k);
+                assert!(cp.len() <= k.max(1) && !cp.is_empty());
+                for j in 0..txy.m1 {
+                    let total: usize = cp.chunks.iter().map(|c| c.scounts[j]).sum();
+                    assert_eq!(total, txy.scount_fwd(j), "rank {rank} k {k} peer {j}");
+                    let rtotal: usize = cp.chunks.iter().map(|c| c.rcounts[j]).sum();
+                    assert_eq!(rtotal, txy.rcount_fwd(j));
+                }
+                // Ranges partition the invariant axis in order.
+                let mut pos = 0;
+                for c in &cp.chunks {
+                    assert_eq!(c.range.start, pos);
+                    assert!(!c.range.is_empty());
+                    pos = c.range.end;
+                }
+                assert_eq!(pos, txy.nz);
+                // Displacement windows stay inside the blocking buffers.
+                for c in &cp.chunks {
+                    for j in 0..txy.m1 {
+                        assert!(c.sdispls[j] + c.scounts[j] <= txy.buf_len(opts));
+                        assert!(c.rdispls[j] + c.rcounts[j] <= txy.buf_len(opts));
+                    }
+                }
+
+                let cpz = tyz.chunks_fwd(k);
+                for j in 0..tyz.m2 {
+                    let total: usize = cpz.chunks.iter().map(|c| c.scounts[j]).sum();
+                    assert_eq!(total, tyz.scount_fwd(j));
+                    let rtotal: usize = cpz.chunks.iter().map(|c| c.rcounts[j]).sum();
+                    assert_eq!(rtotal, tyz.rcount_fwd(j));
+                }
+                // Backward views swap the roles exactly.
+                let cb = txy.chunks_bwd(k);
+                for (f, b) in cp.chunks.iter().zip(&cb.chunks) {
+                    assert_eq!(f.range, b.range);
+                    assert_eq!(f.scounts, b.rcounts);
+                    assert_eq!(f.rcounts, b.scounts);
+                }
+            }
+        }
     }
 
     #[test]

@@ -16,4 +16,4 @@
 pub mod exchange;
 pub mod pack;
 
-pub use exchange::{ExchangeOptions, TransposeXY, TransposeYZ};
+pub use exchange::{ChunkMeta, ChunkPlan, ExchangeOptions, TransposeXY, TransposeYZ};

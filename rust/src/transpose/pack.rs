@@ -34,12 +34,31 @@ pub fn pack_x_to_y<T: Real>(
     x1: usize,
     out: &mut [Complex<T>],
 ) {
+    pack_x_to_y_win(input, nz, ny, h, x0, x1, 0, nz, out);
+}
+
+/// Windowed [`pack_x_to_y`]: pack only z-planes `[za, zb)` of the X-pencil
+/// (the chunked overlap executor's unit of work). `input` is still the
+/// full pencil; `out` covers just the window (`(zb-za) * (x1-x0) * ny`).
+#[allow(clippy::too_many_arguments)]
+pub fn pack_x_to_y_win<T: Real>(
+    input: &[Complex<T>],
+    nz: usize,
+    ny: usize,
+    h: usize,
+    x0: usize,
+    x1: usize,
+    za: usize,
+    zb: usize,
+    out: &mut [Complex<T>],
+) {
     let w = x1 - x0;
     debug_assert_eq!(input.len(), nz * ny * h);
-    debug_assert_eq!(out.len(), nz * w * ny);
-    for z in 0..nz {
+    debug_assert!(za <= zb && zb <= nz);
+    debug_assert_eq!(out.len(), (zb - za) * w * ny);
+    for z in za..zb {
         let in_plane = &input[z * ny * h..(z + 1) * ny * h];
-        let out_plane = &mut out[z * w * ny..(z + 1) * w * ny];
+        let out_plane = &mut out[(z - za) * w * ny..(z - za + 1) * w * ny];
         // Tiled 2D transpose: out[(x - x0) * ny + y] = in[y * h + x].
         let mut xt = x0;
         while xt < x1 {
@@ -72,12 +91,31 @@ pub fn unpack_x_to_y<T: Real>(
     y1: usize,
     out: &mut [Complex<T>],
 ) {
+    unpack_x_to_y_win(buf, nz, h_loc, ny_glob, y0, y1, 0, nz, out);
+}
+
+/// Windowed [`unpack_x_to_y`]: the buffer holds z-planes `[za, zb)` only;
+/// `out` is still the full Y-pencil (absolute z indexing).
+#[allow(clippy::too_many_arguments)]
+pub fn unpack_x_to_y_win<T: Real>(
+    buf: &[Complex<T>],
+    nz: usize,
+    h_loc: usize,
+    ny_glob: usize,
+    y0: usize,
+    y1: usize,
+    za: usize,
+    zb: usize,
+    out: &mut [Complex<T>],
+) {
     let w = y1 - y0;
-    debug_assert_eq!(buf.len(), nz * h_loc * w);
+    debug_assert!(za <= zb && zb <= nz);
+    debug_assert_eq!(buf.len(), (zb - za) * h_loc * w);
     debug_assert_eq!(out.len(), nz * h_loc * ny_glob);
-    for z in 0..nz {
+    for z in za..zb {
         for x in 0..h_loc {
-            let src = &buf[(z * h_loc + x) * w..(z * h_loc + x + 1) * w];
+            let src_base = ((z - za) * h_loc + x) * w;
+            let src = &buf[src_base..src_base + w];
             let dst_base = (z * h_loc + x) * ny_glob + y0;
             out[dst_base..dst_base + w].copy_from_slice(src);
         }
@@ -96,13 +134,31 @@ pub fn pack_y_to_x<T: Real>(
     y1: usize,
     out: &mut [Complex<T>],
 ) {
+    pack_y_to_x_win(input, nz, h_loc, ny_glob, y0, y1, 0, nz, out);
+}
+
+/// Windowed [`pack_y_to_x`]: pack only z-planes `[za, zb)`.
+#[allow(clippy::too_many_arguments)]
+pub fn pack_y_to_x_win<T: Real>(
+    input: &[Complex<T>],
+    nz: usize,
+    h_loc: usize,
+    ny_glob: usize,
+    y0: usize,
+    y1: usize,
+    za: usize,
+    zb: usize,
+    out: &mut [Complex<T>],
+) {
     let w = y1 - y0;
     debug_assert_eq!(input.len(), nz * h_loc * ny_glob);
-    debug_assert_eq!(out.len(), nz * h_loc * w);
-    for z in 0..nz {
+    debug_assert!(za <= zb && zb <= nz);
+    debug_assert_eq!(out.len(), (zb - za) * h_loc * w);
+    for z in za..zb {
         for x in 0..h_loc {
             let src_base = (z * h_loc + x) * ny_glob + y0;
-            let dst = &mut out[(z * h_loc + x) * w..(z * h_loc + x + 1) * w];
+            let dst_base = ((z - za) * h_loc + x) * w;
+            let dst = &mut out[dst_base..dst_base + w];
             dst.copy_from_slice(&input[src_base..src_base + w]);
         }
     }
@@ -120,11 +176,28 @@ pub fn unpack_y_to_x<T: Real>(
     x1: usize,
     out: &mut [Complex<T>],
 ) {
+    unpack_y_to_x_win(buf, nz, ny, h, x0, x1, 0, nz, out);
+}
+
+/// Windowed [`unpack_y_to_x`]: the buffer holds z-planes `[za, zb)` only.
+#[allow(clippy::too_many_arguments)]
+pub fn unpack_y_to_x_win<T: Real>(
+    buf: &[Complex<T>],
+    nz: usize,
+    ny: usize,
+    h: usize,
+    x0: usize,
+    x1: usize,
+    za: usize,
+    zb: usize,
+    out: &mut [Complex<T>],
+) {
     let w = x1 - x0;
-    debug_assert_eq!(buf.len(), nz * w * ny);
+    debug_assert!(za <= zb && zb <= nz);
+    debug_assert_eq!(buf.len(), (zb - za) * w * ny);
     debug_assert_eq!(out.len(), nz * ny * h);
-    for z in 0..nz {
-        let in_plane = &buf[z * w * ny..(z + 1) * w * ny];
+    for z in za..zb {
+        let in_plane = &buf[(z - za) * w * ny..(z - za + 1) * w * ny];
         let out_plane = &mut out[z * ny * h..(z + 1) * ny * h];
         let mut xt = x0;
         while xt < x1 {
@@ -160,11 +233,29 @@ pub fn pack_y_to_z<T: Real>(
     y1: usize,
     out: &mut [Complex<T>],
 ) {
+    pack_y_to_z_win(input, nz, h_loc, ny_glob, y0, y1, 0, h_loc, out);
+}
+
+/// Windowed [`pack_y_to_z`]: pack only the spectral-x slab `[xa, xb)` (the
+/// Y↔Z transpose's invariant axis).
+#[allow(clippy::too_many_arguments)]
+pub fn pack_y_to_z_win<T: Real>(
+    input: &[Complex<T>],
+    nz: usize,
+    h_loc: usize,
+    ny_glob: usize,
+    y0: usize,
+    y1: usize,
+    xa: usize,
+    xb: usize,
+    out: &mut [Complex<T>],
+) {
     let w = y1 - y0;
     debug_assert_eq!(input.len(), nz * h_loc * ny_glob);
-    debug_assert_eq!(out.len(), h_loc * w * nz);
-    for x in 0..h_loc {
-        let out_x = &mut out[x * w * nz..(x + 1) * w * nz];
+    debug_assert!(xa <= xb && xb <= h_loc);
+    debug_assert_eq!(out.len(), (xb - xa) * w * nz);
+    for x in xa..xb {
+        let out_x = &mut out[(x - xa) * w * nz..(x - xa + 1) * w * nz];
         let mut yt = y0;
         while yt < y1 {
             let ye = (yt + TILE).min(y1);
@@ -196,12 +287,31 @@ pub fn unpack_y_to_z<T: Real>(
     z1: usize,
     out: &mut [Complex<T>],
 ) {
+    unpack_y_to_z_win(buf, h_loc, ny2, nz_glob, z0, z1, 0, h_loc, out);
+}
+
+/// Windowed [`unpack_y_to_z`]: the buffer holds the spectral-x slab
+/// `[xa, xb)` only; `out` is still the full Z-pencil (absolute x).
+#[allow(clippy::too_many_arguments)]
+pub fn unpack_y_to_z_win<T: Real>(
+    buf: &[Complex<T>],
+    h_loc: usize,
+    ny2: usize,
+    nz_glob: usize,
+    z0: usize,
+    z1: usize,
+    xa: usize,
+    xb: usize,
+    out: &mut [Complex<T>],
+) {
     let w = z1 - z0;
-    debug_assert_eq!(buf.len(), h_loc * ny2 * w);
+    debug_assert!(xa <= xb && xb <= h_loc);
+    debug_assert_eq!(buf.len(), (xb - xa) * ny2 * w);
     debug_assert_eq!(out.len(), h_loc * ny2 * nz_glob);
-    for x in 0..h_loc {
+    for x in xa..xb {
         for y in 0..ny2 {
-            let src = &buf[(x * ny2 + y) * w..(x * ny2 + y + 1) * w];
+            let src_base = ((x - xa) * ny2 + y) * w;
+            let src = &buf[src_base..src_base + w];
             let dst_base = (x * ny2 + y) * nz_glob + z0;
             out[dst_base..dst_base + w].copy_from_slice(src);
         }
@@ -220,13 +330,31 @@ pub fn pack_z_to_y<T: Real>(
     z1: usize,
     out: &mut [Complex<T>],
 ) {
+    pack_z_to_y_win(input, h_loc, ny2, nz_glob, z0, z1, 0, h_loc, out);
+}
+
+/// Windowed [`pack_z_to_y`]: pack only the spectral-x slab `[xa, xb)`.
+#[allow(clippy::too_many_arguments)]
+pub fn pack_z_to_y_win<T: Real>(
+    input: &[Complex<T>],
+    h_loc: usize,
+    ny2: usize,
+    nz_glob: usize,
+    z0: usize,
+    z1: usize,
+    xa: usize,
+    xb: usize,
+    out: &mut [Complex<T>],
+) {
     let w = z1 - z0;
     debug_assert_eq!(input.len(), h_loc * ny2 * nz_glob);
-    debug_assert_eq!(out.len(), h_loc * ny2 * w);
-    for x in 0..h_loc {
+    debug_assert!(xa <= xb && xb <= h_loc);
+    debug_assert_eq!(out.len(), (xb - xa) * ny2 * w);
+    for x in xa..xb {
         for y in 0..ny2 {
             let src_base = (x * ny2 + y) * nz_glob + z0;
-            let dst = &mut out[(x * ny2 + y) * w..(x * ny2 + y + 1) * w];
+            let dst_base = ((x - xa) * ny2 + y) * w;
+            let dst = &mut out[dst_base..dst_base + w];
             dst.copy_from_slice(&input[src_base..src_base + w]);
         }
     }
@@ -244,11 +372,29 @@ pub fn unpack_z_to_y<T: Real>(
     y1: usize,
     out: &mut [Complex<T>],
 ) {
+    unpack_z_to_y_win(buf, nz, h_loc, ny_glob, y0, y1, 0, h_loc, out);
+}
+
+/// Windowed [`unpack_z_to_y`]: the buffer holds the spectral-x slab
+/// `[xa, xb)` only; `out` is still the full Y-pencil (absolute x).
+#[allow(clippy::too_many_arguments)]
+pub fn unpack_z_to_y_win<T: Real>(
+    buf: &[Complex<T>],
+    nz: usize,
+    h_loc: usize,
+    ny_glob: usize,
+    y0: usize,
+    y1: usize,
+    xa: usize,
+    xb: usize,
+    out: &mut [Complex<T>],
+) {
     let w = y1 - y0;
-    debug_assert_eq!(buf.len(), h_loc * w * nz);
+    debug_assert!(xa <= xb && xb <= h_loc);
+    debug_assert_eq!(buf.len(), (xb - xa) * w * nz);
     debug_assert_eq!(out.len(), nz * h_loc * ny_glob);
-    for x in 0..h_loc {
-        let in_x = &buf[x * w * nz..(x + 1) * w * nz];
+    for x in xa..xb {
+        let in_x = &buf[(x - xa) * w * nz..(x - xa + 1) * w * nz];
         let mut yt = y0;
         while yt < y1 {
             let ye = (yt + TILE).min(y1);
@@ -405,6 +551,54 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn windowed_kernels_partition_the_full_kernel() {
+        // Packing chunk windows back to back must reproduce the full pack,
+        // for both transposes and uneven window splits.
+        let (nz, ny, h) = (7, 5, 6);
+        let (x0, x1) = (1, 5);
+        let w = x1 - x0;
+        let mut input = vec![Complex::zero(); nz * ny * h];
+        for z in 0..nz {
+            for y in 0..ny {
+                for x in 0..h {
+                    input[(z * ny + y) * h + x] = enc(x, y, z);
+                }
+            }
+        }
+        let mut full = vec![Complex::zero(); nz * w * ny];
+        pack_x_to_y(&input, nz, ny, h, x0, x1, &mut full);
+        let mut chunked = vec![Complex::zero(); nz * w * ny];
+        for (za, zb) in [(0usize, 3usize), (3, 4), (4, 7)] {
+            let base = za * w * ny;
+            let len = (zb - za) * w * ny;
+            pack_x_to_y_win(&input, nz, ny, h, x0, x1, za, zb, &mut chunked[base..base + len]);
+        }
+        assert_eq!(full, chunked);
+
+        // Y→Z over x windows.
+        let (nzl, h_loc, nyg) = (4, 5, 6);
+        let (y0, y1) = (2, 5);
+        let wy = y1 - y0;
+        let mut ypen = vec![Complex::zero(); nzl * h_loc * nyg];
+        for z in 0..nzl {
+            for x in 0..h_loc {
+                for y in 0..nyg {
+                    ypen[(z * h_loc + x) * nyg + y] = enc(x, y, z);
+                }
+            }
+        }
+        let mut fullz = vec![Complex::zero(); h_loc * wy * nzl];
+        pack_y_to_z(&ypen, nzl, h_loc, nyg, y0, y1, &mut fullz);
+        let mut chunkedz = vec![Complex::zero(); h_loc * wy * nzl];
+        for (xa, xb) in [(0usize, 2usize), (2, 3), (3, 5)] {
+            let base = xa * wy * nzl;
+            let len = (xb - xa) * wy * nzl;
+            pack_y_to_z_win(&ypen, nzl, h_loc, nyg, y0, y1, xa, xb, &mut chunkedz[base..base + len]);
+        }
+        assert_eq!(fullz, chunkedz);
     }
 
     #[test]

@@ -1,0 +1,175 @@
+//! Overlap-executor correctness: `overlap_chunks > 1` must be
+//! *bit-identical* to the blocking pipeline — same Z-pencil spectra
+//! forward, same real field backward — because chunking only reorders
+//! data movement, never per-line FFT arithmetic. Covered: even and uneven
+//! grids, chunk counts that do not divide the invariant axes (uneven
+//! chunk tails), chunk counts exceeding the axes (clamping), 1D
+//! decompositions, USEEVEN combination, Chebyshev third transform, and
+//! the overlap timing attribution.
+
+use p3dfft::bench::{sine_field, verify_roundtrip};
+use p3dfft::coordinator::{run_on_threads, PlanSpec, TransformKind};
+use p3dfft::fft::Complex;
+use p3dfft::grid::ProcGrid;
+
+/// Deterministic, rank-independent test field with no special symmetry.
+fn field(x: usize, y: usize, z: usize) -> f64 {
+    ((x * 37 + y * 101 + z * 13) as f64 * 0.7133).sin() + 0.25 * x as f64 - 0.125 * z as f64
+}
+
+/// Forward-transform `spec` and return every rank's Z-pencil verbatim.
+fn z_pencils(spec: &PlanSpec) -> Vec<Vec<Complex<f64>>> {
+    run_on_threads(spec, move |ctx| {
+        let input = ctx.make_real_input(field);
+        let mut out = ctx.alloc_output();
+        ctx.forward(&input, &mut out)?;
+        Ok(out)
+    })
+    .unwrap()
+    .per_rank
+}
+
+/// Forward+backward `spec` and return every rank's (unnormalised) real
+/// roundtrip output.
+fn roundtrip_backs(spec: &PlanSpec) -> Vec<Vec<f64>> {
+    run_on_threads(spec, move |ctx| {
+        let input = ctx.make_real_input(field);
+        let mut out = ctx.alloc_output();
+        let mut back = ctx.alloc_input();
+        ctx.forward(&input, &mut out)?;
+        ctx.backward(&out, &mut back)?;
+        Ok(back)
+    })
+    .unwrap()
+    .per_rank
+}
+
+#[test]
+fn overlap_chunks_bit_identical_z_pencils() {
+    // The acceptance grid: uneven dims over an uneven processor grid, so
+    // k = 7 exercises uneven chunk tails on both invariant axes
+    // (nz = 14 z-slabs, per-rank h_loc ≈ 3 x-slabs → clamped chunks).
+    for (dims, m1, m2) in [([10, 12, 14], 2, 3), ([8, 8, 8], 2, 2)] {
+        let blocking = z_pencils(&PlanSpec::new(dims, ProcGrid::new(m1, m2)).unwrap());
+        for k in [1usize, 2, 4, 7] {
+            let spec =
+                PlanSpec::new(dims, ProcGrid::new(m1, m2)).unwrap().with_overlap_chunks(k);
+            let chunked = z_pencils(&spec);
+            assert_eq!(
+                blocking, chunked,
+                "dims={dims:?} pgrid={m1}x{m2} k={k}: Z-pencils must be bit-identical"
+            );
+        }
+    }
+}
+
+#[test]
+fn overlap_chunks_bit_identical_backward() {
+    let dims = [10, 12, 14];
+    let blocking = roundtrip_backs(&PlanSpec::new(dims, ProcGrid::new(2, 3)).unwrap());
+    for k in [2usize, 4, 7] {
+        let spec = PlanSpec::new(dims, ProcGrid::new(2, 3)).unwrap().with_overlap_chunks(k);
+        assert_eq!(blocking, roundtrip_backs(&spec), "k={k} backward must be bit-identical");
+    }
+}
+
+#[test]
+fn overlap_roundtrip_normalisation() {
+    for (dims, m1, m2, k) in
+        [([16, 12, 10], 2, 3, 4), ([9, 15, 6], 3, 3, 2), ([8, 8, 8], 1, 4, 5), ([12, 8, 8], 4, 1, 3)]
+    {
+        let spec =
+            PlanSpec::new(dims, ProcGrid::new(m1, m2)).unwrap().with_overlap_chunks(k);
+        let (nx, ny, nz) = (dims[0], dims[1], dims[2]);
+        let report = run_on_threads(&spec, move |ctx| {
+            let input = ctx.make_real_input(sine_field::<f64>(nx, ny, nz));
+            let mut out = ctx.alloc_output();
+            let mut back = ctx.alloc_input();
+            ctx.forward(&input, &mut out)?;
+            ctx.backward(&out, &mut back)?;
+            Ok(verify_roundtrip(&input, &back, ctx.plan.normalization()))
+        })
+        .unwrap();
+        for (rank, err) in report.per_rank.iter().enumerate() {
+            assert!(*err < 1e-10, "dims={dims:?} pg={m1}x{m2} k={k} rank={rank}: err={err}");
+        }
+    }
+}
+
+#[test]
+fn overlap_with_useeven_still_bit_identical() {
+    // USEEVEN shapes only the blocking exchange; the chunked path uses
+    // exact counts. The numbers must agree regardless.
+    let dims = [10, 9, 7];
+    let blocking =
+        z_pencils(&PlanSpec::new(dims, ProcGrid::new(3, 2)).unwrap().with_use_even(true));
+    let chunked = z_pencils(
+        &PlanSpec::new(dims, ProcGrid::new(3, 2))
+            .unwrap()
+            .with_use_even(true)
+            .with_overlap_chunks(4),
+    );
+    assert_eq!(blocking, chunked);
+}
+
+#[test]
+fn overlap_chunks_exceeding_axis_clamp() {
+    // nz = 6 but k = 64: the chunk plan must clamp, not panic or corrupt.
+    let dims = [8, 8, 6];
+    let blocking = z_pencils(&PlanSpec::new(dims, ProcGrid::new(2, 2)).unwrap());
+    let chunked =
+        z_pencils(&PlanSpec::new(dims, ProcGrid::new(2, 2)).unwrap().with_overlap_chunks(64));
+    assert_eq!(blocking, chunked);
+}
+
+#[test]
+fn overlap_with_chebyshev_third() {
+    let dims = [8, 6, 9];
+    let spec = |k: usize| {
+        PlanSpec::new(dims, ProcGrid::new(2, 2))
+            .unwrap()
+            .with_third(TransformKind::Cheby)
+            .with_overlap_chunks(k)
+    };
+    let blocking = z_pencils(&spec(1));
+    for k in [2usize, 7] {
+        assert_eq!(blocking, z_pencils(&spec(k)), "cheby k={k}");
+    }
+    // And the roundtrip still normalises exactly.
+    let s = spec(3);
+    let report = run_on_threads(&s, move |ctx| {
+        let input = ctx.make_real_input(|x, y, z| {
+            (x as f64 * 0.3).sin() + (y as f64 * 0.7).cos() + z as f64 * 0.01
+        });
+        let mut out = ctx.alloc_output();
+        let mut back = ctx.alloc_input();
+        ctx.forward(&input, &mut out)?;
+        ctx.backward(&out, &mut back)?;
+        Ok(verify_roundtrip(&input, &back, ctx.plan.normalization()))
+    })
+    .unwrap();
+    assert!(report.per_rank.iter().all(|e| *e < 1e-9), "{:?}", report.per_rank);
+}
+
+#[test]
+fn overlap_attributes_hidden_exchange_time() {
+    let dims = [32, 32, 32];
+    let run = |k: usize| {
+        let spec = PlanSpec::new(dims, ProcGrid::new(2, 2)).unwrap().with_overlap_chunks(k);
+        run_on_threads(&spec, move |ctx| {
+            let input = ctx.make_real_input(sine_field::<f64>(32, 32, 32));
+            let mut out = ctx.alloc_output();
+            ctx.forward(&input, &mut out)?;
+            Ok(())
+        })
+        .unwrap()
+    };
+    let blocking = run(1);
+    assert_eq!(blocking.overlap(), 0.0, "blocking pipeline must report no overlap");
+    let chunked = run(4);
+    assert!(
+        chunked.overlap() > 0.0,
+        "chunked pipeline must attribute in-flight exchange time to the overlap bucket"
+    );
+    assert!(chunked.comm() > 0.0 && chunked.compute() > 0.0);
+}
