@@ -7,13 +7,18 @@
 //!
 //! Emits (a) model rows at the paper's exact scale on both machines and
 //! (b) measured rows from a thread-rank sweep at host scale.
+//!
+//! `--quick` (or `P3DFFT_BENCH_QUICK=1`) shrinks the measured sweep for
+//! the CI bench-smoke job; `P3DFFT_BENCH_JSON=PATH` appends every table
+//! to the `BENCH_ci.json` summary.
 
 use p3dfft::bench::paper::measured_strong_rows;
-use p3dfft::bench::{FigureRow, Table};
+use p3dfft::bench::{emit_json, quick_mode, FigureRow, Table};
 use p3dfft::grid::ProcGrid;
 use p3dfft::netmodel::{predict, Machine, ModelInput};
 
 fn main() {
+    let quick = quick_mode();
     for machine in [Machine::cray_xt5(), Machine::ranger()] {
         let n = 2048;
         let p = 1024;
@@ -37,10 +42,10 @@ fn main() {
             );
         }
         print!("{}", table.render());
+        emit_json("fig03_aspect_ratio", &table);
 
         // The paper's headline check: best non-square beats the square grid.
-        let square = 2.0
-            * predict(&ModelInput::cubic(n, 32, 32, machine.clone())).total();
+        let square = 2.0 * predict(&ModelInput::cubic(n, 32, 32, machine.clone())).total();
         let best = ProcGrid::factorizations(p)
             .into_iter()
             .filter(|pg| pg.m1 <= n / 2 + 1 && pg.m2 <= n)
@@ -59,13 +64,16 @@ fn main() {
         );
     }
 
-    // Measured mini-sweep: 64^3 at P = 8 thread ranks, all factorizations.
-    println!("measured sweep on this host (64^3, P = 8 thread ranks):");
-    let mut table = Table::new("Fig. 3 (measured, host scale)");
+    // Measured mini-sweep: all factorizations at host scale (quick mode
+    // shrinks the grid and rank count for the CI smoke job).
+    let (n, p, iters) = if quick { (32, 4, 1) } else { (64, 8, 3) };
+    println!("measured sweep on this host ({n}^3, P = {p} thread ranks):");
+    let mut table = Table::new(format!("Fig. 3 (measured, host scale, {n}^3 P={p})"));
     let pgrids: Vec<(usize, usize)> =
-        ProcGrid::factorizations(8).into_iter().map(|g| (g.m1, g.m2)).collect();
-    for row in measured_strong_rows(64, &pgrids, 3).unwrap() {
+        ProcGrid::factorizations(p).into_iter().map(|g| (g.m1, g.m2)).collect();
+    for row in measured_strong_rows(n, &pgrids, iters).unwrap() {
         table.push(row);
     }
     print!("{}", table.render());
+    emit_json("fig03_aspect_ratio", &table);
 }

@@ -15,27 +15,33 @@
 //! pipelining it against compute is the main lever past the 2D
 //! decomposition baseline (cf. CROFT arXiv:2002.04896, AccFFT
 //! arXiv:1506.07933).
+//!
+//! `--quick` / `P3DFFT_BENCH_QUICK=1` shrinks the measured side for the
+//! CI bench-smoke job; `P3DFFT_BENCH_JSON=PATH` appends both tables.
 
-use p3dfft::bench::{sine_field, verify_roundtrip, FigureRow, Table};
+use p3dfft::bench::{emit_json, quick_mode, sine_field, verify_roundtrip, FigureRow, Table};
 use p3dfft::coordinator::{run_on_threads, PlanSpec};
 use p3dfft::grid::ProcGrid;
 use p3dfft::netmodel::{predict, predict_overlapped, Machine, ModelInput};
 use p3dfft::util::timer::Stage;
 
 fn main() {
+    let quick = quick_mode();
     // ---- measured: host scale ---------------------------------------------
-    let dims = [96, 80, 72];
+    let dims = if quick { [48, 40, 32] } else { [96, 80, 72] };
+    let ks: &[usize] = if quick { &[1, 2, 4] } else { &[1, 2, 4, 8] };
     let (m1, m2) = (2, 2);
-    let iterations = 3;
+    let iterations = if quick { 1 } else { 3 };
     let mut table = Table::new(format!(
         "fig_overlap (measured): {}x{}x{} on {m1}x{m2} thread ranks, {iterations} iters",
         dims[0], dims[1], dims[2]
     ));
     let mut blocking_pair = 0.0;
-    for k in [1usize, 2, 4, 8] {
+    for &k in ks {
         let spec = PlanSpec::new(dims, ProcGrid::new(m1, m2))
             .unwrap()
-            .with_overlap_chunks(k);
+            .with_overlap_chunks(k)
+            .unwrap();
         let (nx, ny, nz) = (dims[0], dims[1], dims[2]);
         let report = run_on_threads(&spec, move |ctx| {
             let input = ctx.make_real_input(sine_field::<f64>(nx, ny, nz));
@@ -73,6 +79,7 @@ fn main() {
         );
     }
     print!("{}", table.render());
+    emit_json("fig_overlap", &table);
     println!("(exchange_s = exposed wait; overlap_s = in flight behind pack/unpack/compute)\n");
 
     // ---- modelled: paper scale --------------------------------------------
@@ -95,6 +102,7 @@ fn main() {
         );
     }
     print!("{}", table.render());
+    emit_json("fig_overlap", &table);
     let best = [1usize, 2, 4, 8, 16, 32, 64]
         .into_iter()
         .min_by(|&a, &b| {

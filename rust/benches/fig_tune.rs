@@ -1,0 +1,103 @@
+//! fig_tune: does the plan-time tuner pick the grid the measured
+//! Fig.-3-style sweep actually ranks first?
+//!
+//! For each problem shape: (a) run the *exhaustive measured sweep* over
+//! every Eq.-2-feasible `(m1, m2)` factorization of P on thread ranks
+//! (blocking pipeline, the Fig. 3 protocol), and (b) ask the tuner for
+//! its pick twice — on the fixed synthetic host profile (deterministic)
+//! and on the calibrated profile (micro-probed). The `agree` column
+//! records whether the tuner's `(m1, m2)` equals the measured winner —
+//! the number the CI bench-smoke artifact tracks per PR.
+//!
+//! `--quick` / `P3DFFT_BENCH_QUICK=1` shrinks the shapes;
+//! `P3DFFT_BENCH_JSON=PATH` appends the summary tables.
+
+use p3dfft::bench::{emit_json, quick_mode, FigureRow, Table};
+use p3dfft::coordinator::PlanSpec;
+use p3dfft::tune::{
+    autotune, grid_candidates, Candidate, MachineProfile, TuneOptions, TuneReport,
+};
+
+fn measured_sweep(dims: [usize; 3], p: usize, iters: usize) -> Vec<(usize, usize, f64)> {
+    let mut out = Vec::new();
+    for pg in grid_candidates(dims, p) {
+        let cand = Candidate { m1: pg.m1, m2: pg.m2, use_even: false, overlap_chunks: 1 };
+        let t = p3dfft::tune::refine::measure_candidate(dims, &cand, iters, 0xF16_7135)
+            .expect("measured sweep run");
+        out.push((pg.m1, pg.m2, t));
+    }
+    out.sort_by(|a, b| a.2.partial_cmp(&b.2).unwrap());
+    out
+}
+
+fn model_pick(dims: [usize; 3], p: usize, profile: MachineProfile) -> TuneReport {
+    let opts = TuneOptions {
+        profile,
+        // Match the measured sweep's axes: geometry only.
+        explore_use_even: false,
+        explore_overlap: false,
+        ..TuneOptions::default()
+    };
+    autotune(dims, p, &opts).expect("tuner run")
+}
+
+fn main() {
+    let quick = quick_mode();
+    let shapes: Vec<([usize; 3], usize, usize)> = if quick {
+        // (dims, P, iters)
+        vec![([32, 32, 32], 4, 1), ([16, 24, 48], 4, 1)]
+    } else {
+        vec![([64, 64, 64], 8, 3), ([32, 48, 96], 8, 3)]
+    };
+    let mut agreements = 0usize;
+    for (dims, p, iters) in &shapes {
+        let (dims, p, iters) = (*dims, *p, *iters);
+        let sweep = measured_sweep(dims, p, iters);
+        let mut table = Table::new(format!(
+            "fig_tune: {}x{}x{} on P={p} thread ranks (measured sweep vs tuner pick)",
+            dims[0], dims[1], dims[2]
+        ));
+        for (rank, (m1, m2, t)) in sweep.iter().enumerate() {
+            table.push(
+                FigureRow::new("measured", format!("{m1}x{m2}"))
+                    .col("rank", (rank + 1) as f64)
+                    .col("pair_s", *t),
+            );
+        }
+        let (best_m1, best_m2, best_t) = sweep[0];
+        let synthetic = model_pick(dims, p, MachineProfile::nominal_host());
+        let calibrated = model_pick(dims, p, MachineProfile::calibrated_quick());
+        for (series, report) in
+            [("tuner(synthetic)", &synthetic), ("tuner(calibrated)", &calibrated)]
+        {
+            let pick = &report.best().cand;
+            let agree = pick.m1 == best_m1 && pick.m2 == best_m2;
+            if series.contains("synthetic") && agree {
+                agreements += 1;
+            }
+            table.push(
+                FigureRow::new(series, format!("{}x{}", pick.m1, pick.m2))
+                    .col("model_s", report.best().model_s)
+                    .col("measured_best_s", best_t)
+                    .col("agree", f64::from(agree)),
+            );
+        }
+        print!("{}", table.render());
+        emit_json("fig_tune", &table);
+        println!(
+            "measured best {best_m1}x{best_m2} ({best_t:.6}s) vs tuner picks: \
+             synthetic {}x{}, calibrated {}x{}\n",
+            synthetic.best().cand.m1,
+            synthetic.best().cand.m2,
+            calibrated.best().cand.m1,
+            calibrated.best().cand.m2,
+        );
+        // The autotune API surface used by real callers: winner -> spec.
+        let (spec, _) = PlanSpec::autotune(dims, p, &TuneOptions::default()).expect("autotune");
+        assert_eq!(spec.p(), p, "autotuned spec must keep the rank count");
+    }
+    println!(
+        "tuner (synthetic profile) agreed with the measured sweep on {agreements}/{} shapes",
+        shapes.len()
+    );
+}

@@ -96,6 +96,62 @@ impl Table {
         }
         out
     }
+
+    /// Serialize as one JSON object: `{"bench": ..., "title": ...,
+    /// "rows": [{"series": ..., "x": ..., "cols": {...}}]}`. Non-finite
+    /// column values become `null` (JSON has no NaN/inf).
+    pub fn to_json(&self, bench: &str) -> String {
+        let mut out = String::new();
+        out.push_str("{\"bench\":");
+        out.push_str(&json_str(bench));
+        out.push_str(",\"title\":");
+        out.push_str(&json_str(&self.title));
+        out.push_str(",\"rows\":[");
+        for (i, r) in self.rows.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("{\"series\":");
+            out.push_str(&json_str(&r.series));
+            out.push_str(",\"x\":");
+            out.push_str(&json_str(&r.x));
+            out.push_str(",\"cols\":{");
+            for (j, (name, v)) in r.cols.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                out.push_str(&json_str(name));
+                out.push(':');
+                if v.is_finite() {
+                    out.push_str(&format!("{v:e}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            out.push_str("}}");
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
 }
 
 #[cfg(test)]
@@ -114,6 +170,18 @@ mod tests {
         assert!(s.contains("1.500000"));
         // Missing cell rendered as '-'.
         assert!(s.lines().last().unwrap().contains('-'));
+    }
+
+    #[test]
+    fn to_json_escapes_and_serialises() {
+        let mut t = Table::new("Fig \"X\"");
+        t.push(FigureRow::new("measured", "2x4").col("pair_s", 1.5).col("bad", f64::NAN));
+        let j = t.to_json("fig03");
+        assert!(j.starts_with("{\"bench\":\"fig03\""), "{j}");
+        assert!(j.contains("\\\"X\\\""), "{j}");
+        assert!(j.contains("\"pair_s\":1.5e0"), "{j}");
+        assert!(j.contains("\"bad\":null"), "{j}");
+        assert!(j.ends_with("]}"), "{j}");
     }
 
     #[test]

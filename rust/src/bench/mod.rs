@@ -4,9 +4,11 @@
 
 pub mod figures;
 pub mod paper;
+pub mod smoke;
 pub mod timing;
 pub mod workload;
 
 pub use figures::{FigureRow, Table};
+pub use smoke::{emit_json, quick_mode};
 pub use timing::{measure, MeasureOpts};
 pub use workload::{sine_field, verify_roundtrip};

@@ -1,0 +1,92 @@
+//! CI bench-smoke support: quick-mode detection and the JSON summary the
+//! workflow uploads as the `BENCH_ci.json` artifact.
+//!
+//! Quick mode (`--quick` argv flag or `P3DFFT_BENCH_QUICK=1`) tells the
+//! figure benches to shrink their measured sweeps to a few seconds total
+//! so every PR gets a perf data point. When `P3DFFT_BENCH_JSON=PATH` is
+//! set, each bench appends its tables to `PATH` as one JSON object per
+//! line (the workflow wraps the lines into a single JSON array with `jq`).
+
+use std::io::Write;
+
+use super::figures::Table;
+
+/// Environment variable enabling quick mode (any non-empty value but "0").
+pub const QUICK_ENV: &str = "P3DFFT_BENCH_QUICK";
+/// Environment variable naming the JSON-lines summary file.
+pub const JSON_ENV: &str = "P3DFFT_BENCH_JSON";
+
+/// True when the bench should run its reduced CI-smoke protocol.
+pub fn quick_mode() -> bool {
+    quick_from(
+        std::env::args().any(|a| a == "--quick"),
+        std::env::var(QUICK_ENV).ok().as_deref(),
+    )
+}
+
+/// Pure core of [`quick_mode`] (tests exercise this directly — mutating
+/// the process environment from parallel test threads is a data race).
+fn quick_from(argv_flag: bool, env_value: Option<&str>) -> bool {
+    argv_flag || env_value.map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
+/// Append `table` to the `P3DFFT_BENCH_JSON` file (one JSON object per
+/// line), tagged with the bench name. A no-op when the variable is unset;
+/// I/O errors are reported to stderr but never fail the bench.
+pub fn emit_json(bench: &str, table: &Table) {
+    emit_json_to(std::env::var(JSON_ENV).ok().as_deref(), bench, table);
+}
+
+/// Pure core of [`emit_json`]: `path = None` (unset) or empty is a no-op.
+fn emit_json_to(path: Option<&str>, bench: &str, table: &Table) {
+    let Some(path) = path else { return };
+    if path.is_empty() {
+        return;
+    }
+    let line = table.to_json(bench);
+    let result = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .and_then(|mut f| writeln!(f, "{line}"));
+    if let Err(e) = result {
+        eprintln!("warning: could not append bench JSON to {path}: {e}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::FigureRow;
+
+    #[test]
+    fn quick_from_reads_flag_and_env() {
+        assert!(!quick_from(false, None));
+        assert!(quick_from(true, None));
+        assert!(quick_from(false, Some("1")));
+        assert!(quick_from(false, Some("yes")));
+        assert!(!quick_from(false, Some("0")));
+        assert!(!quick_from(false, Some("")));
+    }
+
+    #[test]
+    fn emit_json_to_appends_one_line_per_table() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("p3dfft_smoke_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let path_str = path.to_str().unwrap();
+        let mut t = Table::new("smoke");
+        t.push(FigureRow::new("s", "x").col("v", 2.0));
+        emit_json_to(Some(path_str), "b1", &t);
+        emit_json_to(Some(path_str), "b2", &t);
+        // Unset / empty are no-ops.
+        emit_json_to(None, "b3", &t);
+        emit_json_to(Some(""), "b3", &t);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("\"bench\":\"b1\""));
+        assert!(lines[1].contains("\"bench\":\"b2\""));
+    }
+}

@@ -9,4 +9,4 @@ pub mod parser;
 pub mod run;
 
 pub use parser::{ParsedConfig, Value};
-pub use run::RunConfig;
+pub use run::{ChunkSetting, PgridSetting, RunConfig};

@@ -170,6 +170,12 @@ fn parse_value(s: &str, line: usize) -> Result<Value> {
     if let Ok(f) = s.parse::<f64>() {
         return Ok(Value::Float(f));
     }
+    // Bare `auto` (no quotes) is accepted for the tuner-resolved keys
+    // (`grid.pgrid`, `options.overlap_chunks`), so `-o grid.pgrid=auto`
+    // works on the CLI. Any other bare word stays an error.
+    if s == "auto" {
+        return Ok(Value::Str("auto".to_string()));
+    }
     Err(Error::Parse { line, msg: format!("unrecognised value {s:?}") })
 }
 
@@ -224,6 +230,18 @@ scale = 1.5
         assert!(err.to_string().contains("line 1"));
         let err = ParsedConfig::parse("[sec\nx = 1\n").unwrap_err();
         assert!(err.to_string().contains("line 1"));
+    }
+
+    #[test]
+    fn bare_auto_parses_as_string() {
+        let c = ParsedConfig::parse("[grid]\npgrid = auto\n[options]\noverlap_chunks = auto\n")
+            .unwrap();
+        assert_eq!(c.get_str("grid.pgrid", ""), "auto");
+        assert_eq!(c.get_str("options.overlap_chunks", ""), "auto");
+        // Quoted form is equivalent; other bare words still error.
+        let c = ParsedConfig::parse("pgrid = \"auto\"\n").unwrap();
+        assert_eq!(c.get_str("pgrid", ""), "auto");
+        assert!(ParsedConfig::parse("pgrid = automatic\n").is_err());
     }
 
     #[test]

@@ -4,22 +4,72 @@ use std::path::PathBuf;
 
 use crate::coordinator::{EngineKind, PlanSpec, TransformKind};
 use crate::grid::ProcGrid;
+use crate::tune::{MachineProfile, TuneOptions};
 use crate::util::error::{Error, Result};
 
 use super::parser::ParsedConfig;
 
+/// Typed getters that *reject* present-but-mistyped values instead of
+/// silently falling back to the default (so `iterations = auto` or
+/// `use_even = "yes"` are errors, not ignored).
+fn require_int(c: &ParsedConfig, key: &str, default: i64) -> Result<i64> {
+    match c.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_int()
+            .ok_or_else(|| Error::InvalidConfig(format!("{key} must be an integer"))),
+    }
+}
+
+fn require_bool(c: &ParsedConfig, key: &str, default: bool) -> Result<bool> {
+    match c.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_bool()
+            .ok_or_else(|| Error::InvalidConfig(format!("{key} must be true or false"))),
+    }
+}
+
+fn require_str(c: &ParsedConfig, key: &str, default: &str) -> Result<String> {
+    match c.get(key) {
+        None => Ok(default.to_string()),
+        Some(v) => v
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| Error::InvalidConfig(format!("{key} must be a string"))),
+    }
+}
+
+/// Processor-grid selection: an explicit `[m1, m2]` or `"auto"` (resolved
+/// at plan time by the tuner over `grid.nprocs` ranks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PgridSetting {
+    Auto,
+    Explicit(usize, usize),
+}
+
+/// Overlap-chunk selection: a fixed count or `"auto"` (model-resolved).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChunkSetting {
+    Auto,
+    Fixed(usize),
+}
+
 /// A fully-specified run: what `test_sine` (the paper's sample program)
-/// takes from its command line, plus our engine selection.
+/// takes from its command line, plus our engine selection and the
+/// tuner-resolved `"auto"` values.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
     pub dims: [usize; 3],
-    pub m1: usize,
-    pub m2: usize,
+    pub pgrid: PgridSetting,
+    /// Total rank count for `pgrid = "auto"` (`grid.nprocs`); with an
+    /// explicit grid it is implied by `m1 * m2` and may stay `None`.
+    pub nprocs: Option<usize>,
     pub iterations: usize,
     pub use_even: bool,
     pub stride1: bool,
     /// Communication–compute overlap chunk count (1 = blocking pipeline).
-    pub overlap_chunks: usize,
+    pub overlap_chunks: ChunkSetting,
     pub third: TransformKind,
     pub engine: String,
     pub artifacts_dir: PathBuf,
@@ -30,12 +80,12 @@ impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
             dims: [32, 32, 32],
-            m1: 2,
-            m2: 2,
+            pgrid: PgridSetting::Explicit(2, 2),
+            nprocs: None,
             iterations: 3,
             use_even: false,
             stride1: true,
-            overlap_chunks: 1,
+            overlap_chunks: ChunkSetting::Fixed(1),
             third: TransformKind::Fft,
             engine: "native".into(),
             artifacts_dir: "artifacts".into(),
@@ -48,30 +98,57 @@ impl RunConfig {
     /// Build from a parsed config file (all keys optional).
     pub fn from_parsed(c: &ParsedConfig) -> Result<Self> {
         let mut rc = RunConfig::default();
-        if let Some(v) = c.get("grid.dims").and_then(|v| v.as_int_array()) {
-            if v.len() != 3 || v.iter().any(|&d| d < 1) {
-                return Err(Error::InvalidConfig("grid.dims must be 3 positive ints".into()));
+        if let Some(v) = c.get("grid.dims") {
+            match v.as_int_array() {
+                Some(a) if a.len() == 3 && a.iter().all(|&d| d >= 1) => {
+                    rc.dims = [a[0] as usize, a[1] as usize, a[2] as usize];
+                }
+                _ => {
+                    return Err(Error::InvalidConfig("grid.dims must be 3 positive ints".into()))
+                }
             }
-            rc.dims = [v[0] as usize, v[1] as usize, v[2] as usize];
         }
-        if let Some(v) = c.get("grid.pgrid").and_then(|v| v.as_int_array()) {
-            if v.len() != 2 || v.iter().any(|&d| d < 1) {
-                return Err(Error::InvalidConfig("grid.pgrid must be 2 positive ints".into()));
+        if let Some(v) = c.get("grid.pgrid") {
+            rc.pgrid = match (v.as_int_array(), v.as_str()) {
+                (Some(a), _) if a.len() == 2 && a.iter().all(|&d| d >= 1) => {
+                    PgridSetting::Explicit(a[0] as usize, a[1] as usize)
+                }
+                (_, Some("auto")) => PgridSetting::Auto,
+                _ => {
+                    return Err(Error::InvalidConfig(
+                        "grid.pgrid must be 2 positive ints or \"auto\"".into(),
+                    ))
+                }
+            };
+        }
+        if let Some(v) = c.get("grid.nprocs") {
+            match v.as_int() {
+                Some(n) if n >= 1 => rc.nprocs = Some(n as usize),
+                _ => {
+                    return Err(Error::InvalidConfig("grid.nprocs must be a positive int".into()))
+                }
             }
-            rc.m1 = v[0] as usize;
-            rc.m2 = v[1] as usize;
         }
-        rc.iterations = c.get_int("iterations", rc.iterations as i64).max(1) as usize;
-        rc.use_even = c.get_bool("options.use_even", rc.use_even);
-        rc.stride1 = c.get_bool("options.stride1", rc.stride1);
-        let oc = c.get_int("options.overlap_chunks", rc.overlap_chunks as i64);
-        if oc < 1 {
-            return Err(Error::InvalidConfig(format!(
-                "options.overlap_chunks must be >= 1, got {oc}"
-            )));
+        rc.iterations = require_int(c, "iterations", rc.iterations as i64)?.max(1) as usize;
+        rc.use_even = require_bool(c, "options.use_even", rc.use_even)?;
+        rc.stride1 = require_bool(c, "options.stride1", rc.stride1)?;
+        if let Some(v) = c.get("options.overlap_chunks") {
+            rc.overlap_chunks = match (v.as_int(), v.as_str()) {
+                (Some(k), _) if k >= 1 => ChunkSetting::Fixed(k as usize),
+                (Some(k), _) => {
+                    return Err(Error::InvalidConfig(format!(
+                        "options.overlap_chunks must be >= 1, got {k}"
+                    )))
+                }
+                (_, Some("auto")) => ChunkSetting::Auto,
+                _ => {
+                    return Err(Error::InvalidConfig(
+                        "options.overlap_chunks must be an int >= 1 or \"auto\"".into(),
+                    ))
+                }
+            };
         }
-        rc.overlap_chunks = oc as usize;
-        rc.third = match c.get_str("options.third", "fft").as_str() {
+        rc.third = match require_str(c, "options.third", "fft")?.as_str() {
             "fft" => TransformKind::Fft,
             "cheby" => TransformKind::Cheby,
             "sine" => TransformKind::Sine,
@@ -82,9 +159,9 @@ impl RunConfig {
                 )))
             }
         };
-        rc.engine = c.get_str("options.engine", &rc.engine);
-        rc.artifacts_dir = PathBuf::from(c.get_str("options.artifacts_dir", "artifacts"));
-        rc.precision = c.get_str("options.precision", &rc.precision);
+        rc.engine = require_str(c, "options.engine", &rc.engine)?;
+        rc.artifacts_dir = PathBuf::from(require_str(c, "options.artifacts_dir", "artifacts")?);
+        rc.precision = require_str(c, "options.precision", &rc.precision)?;
         if rc.precision != "f64" && rc.precision != "f32" {
             return Err(Error::InvalidConfig("options.precision must be f32 or f64".into()));
         }
@@ -101,10 +178,8 @@ impl RunConfig {
         let tmp = RunConfig::from_parsed(&merged)?;
         match key {
             "grid.dims" => self.dims = tmp.dims,
-            "grid.pgrid" => {
-                self.m1 = tmp.m1;
-                self.m2 = tmp.m2;
-            }
+            "grid.pgrid" => self.pgrid = tmp.pgrid,
+            "grid.nprocs" => self.nprocs = tmp.nprocs,
             "iterations" => self.iterations = tmp.iterations,
             "options.use_even" => self.use_even = tmp.use_even,
             "options.stride1" => self.stride1 = tmp.stride1,
@@ -120,7 +195,47 @@ impl RunConfig {
         Ok(())
     }
 
-    /// Convert to a validated [`PlanSpec`].
+    /// The total rank count this config runs on: explicit `m1 * m2`, or
+    /// `grid.nprocs` when the grid is tuner-resolved. A `grid.nprocs`
+    /// that contradicts an explicit `grid.pgrid` is an error, not
+    /// silently ignored.
+    pub fn resolved_nprocs(&self) -> Result<usize> {
+        match self.pgrid {
+            PgridSetting::Explicit(m1, m2) => {
+                if let Some(n) = self.nprocs {
+                    if n != m1 * m2 {
+                        return Err(Error::InvalidConfig(format!(
+                            "grid.nprocs = {n} contradicts grid.pgrid = [{m1}, {m2}] \
+                             (= {} ranks); drop grid.nprocs or set grid.pgrid = \"auto\"",
+                            m1 * m2
+                        )));
+                    }
+                }
+                Ok(m1 * m2)
+            }
+            PgridSetting::Auto => self.nprocs.ok_or_else(|| {
+                Error::InvalidConfig(
+                    "grid.pgrid = \"auto\" needs grid.nprocs (total rank count)".into(),
+                )
+            }),
+        }
+    }
+
+    /// Bytes per exchanged spectral element for this precision (complex
+    /// f32 = 8, complex f64 = 16) — the volume unit the tuner prices.
+    pub fn elem_bytes(&self) -> f64 {
+        if self.precision == "f32" {
+            8.0
+        } else {
+            16.0
+        }
+    }
+
+    /// Convert to a validated [`PlanSpec`], resolving `"auto"` values
+    /// through the tuner (calibrated host profile, model-only path). The
+    /// tuner prices candidates under the settings this run will actually
+    /// use: `use_even` is pinned to the configured value, and a fixed
+    /// `overlap_chunks` is pinned rather than re-explored.
     pub fn to_spec(&self) -> Result<PlanSpec> {
         let engine = match self.engine.as_str() {
             "native" => EngineKind::Native,
@@ -131,11 +246,49 @@ impl RunConfig {
                 )))
             }
         };
-        Ok(PlanSpec::new(self.dims, ProcGrid::new(self.m1, self.m2))?
+        let (m1, m2, chunks) = match self.pgrid {
+            PgridSetting::Explicit(m1, m2) => {
+                self.resolved_nprocs()?; // rejects a contradictory grid.nprocs
+                let chunks = match self.overlap_chunks {
+                    ChunkSetting::Fixed(k) => k,
+                    ChunkSetting::Auto => crate::tune::best_chunks(
+                        self.dims,
+                        m1,
+                        m2,
+                        self.use_even,
+                        &MachineProfile::calibrated_quick(),
+                        self.elem_bytes(),
+                    ),
+                };
+                (m1, m2, chunks)
+            }
+            PgridSetting::Auto => {
+                let nprocs = self.resolved_nprocs()?;
+                let opts = TuneOptions {
+                    profile: MachineProfile::calibrated_quick(),
+                    elem_bytes: self.elem_bytes(),
+                    pin_use_even: Some(self.use_even),
+                    pin_overlap_chunks: match self.overlap_chunks {
+                        ChunkSetting::Fixed(k) => Some(k),
+                        ChunkSetting::Auto => None,
+                    },
+                    explore_overlap: matches!(self.overlap_chunks, ChunkSetting::Auto),
+                    ..TuneOptions::default()
+                };
+                let report = crate::tune::autotune(self.dims, nprocs, &opts)?;
+                let best = &report.best().cand;
+                let chunks = match self.overlap_chunks {
+                    ChunkSetting::Fixed(k) => k,
+                    ChunkSetting::Auto => best.overlap_chunks,
+                };
+                (best.m1, best.m2, chunks)
+            }
+        };
+        Ok(PlanSpec::new(self.dims, ProcGrid::new(m1, m2))?
             .with_third(self.third)
             .with_use_even(self.use_even)
             .with_stride1(self.stride1)
-            .with_overlap_chunks(self.overlap_chunks)
+            .with_overlap_chunks(chunks)?
             .with_engine(engine))
     }
 }
@@ -169,7 +322,7 @@ precision = "f32"
         .unwrap();
         let rc = RunConfig::from_parsed(&c).unwrap();
         assert_eq!(rc.dims, [16, 8, 12]);
-        assert_eq!((rc.m1, rc.m2), (2, 3));
+        assert_eq!(rc.pgrid, PgridSetting::Explicit(2, 3));
         assert_eq!(rc.iterations, 7);
         assert!(rc.use_even);
         assert_eq!(rc.third, TransformKind::Cheby);
@@ -184,6 +337,26 @@ precision = "f32"
         assert!(RunConfig::from_parsed(&c).is_err());
         let c = ParsedConfig::parse("[options]\nprecision = \"f16\"\n").unwrap();
         assert!(RunConfig::from_parsed(&c).is_err());
+        let c = ParsedConfig::parse("[grid]\npgrid = \"sideways\"\n").unwrap();
+        assert!(RunConfig::from_parsed(&c).is_err());
+        let c = ParsedConfig::parse("[grid]\nnprocs = 0\n").unwrap();
+        assert!(RunConfig::from_parsed(&c).is_err());
+    }
+
+    #[test]
+    fn auto_is_rejected_on_non_tuner_keys() {
+        // Bare `auto` parses as a string, but only the tuner-resolved
+        // keys accept it — elsewhere it must error, not silently default.
+        for text in [
+            "iterations = auto\n",
+            "[grid]\ndims = auto\n",
+            "[grid]\nnprocs = auto\n",
+            "[options]\nuse_even = auto\n",
+            "[options]\nstride1 = auto\n",
+        ] {
+            let c = ParsedConfig::parse(text).unwrap();
+            assert!(RunConfig::from_parsed(&c).is_err(), "{text:?} must be rejected");
+        }
     }
 
     #[test]
@@ -196,7 +369,7 @@ precision = "f32"
         assert_eq!(rc.dims, [8, 8, 8]);
         assert!(rc.use_even);
         assert_eq!(rc.iterations, 11);
-        assert_eq!(rc.overlap_chunks, 4);
+        assert_eq!(rc.overlap_chunks, ChunkSetting::Fixed(4));
         assert!(rc.apply_override("bogus.key", "1").is_err());
     }
 
@@ -204,11 +377,53 @@ precision = "f32"
     fn overlap_chunks_parses_and_validates() {
         let c = ParsedConfig::parse("[options]\noverlap_chunks = 8\n").unwrap();
         let rc = RunConfig::from_parsed(&c).unwrap();
-        assert_eq!(rc.overlap_chunks, 8);
+        assert_eq!(rc.overlap_chunks, ChunkSetting::Fixed(8));
         let spec = rc.to_spec().unwrap();
         assert_eq!(spec.opts.overlap_chunks, 8);
 
         let c = ParsedConfig::parse("[options]\noverlap_chunks = 0\n").unwrap();
         assert!(RunConfig::from_parsed(&c).is_err());
+    }
+
+    #[test]
+    fn contradictory_nprocs_is_rejected() {
+        let c = ParsedConfig::parse("[grid]\npgrid = [2, 2]\nnprocs = 8\n").unwrap();
+        let rc = RunConfig::from_parsed(&c).unwrap();
+        let err = rc.resolved_nprocs().unwrap_err();
+        assert!(err.to_string().contains("contradicts"), "{err}");
+        assert!(rc.to_spec().is_err());
+        // Consistent nprocs is fine.
+        let c = ParsedConfig::parse("[grid]\npgrid = [2, 2]\nnprocs = 4\n").unwrap();
+        let rc = RunConfig::from_parsed(&c).unwrap();
+        assert_eq!(rc.resolved_nprocs().unwrap(), 4);
+        assert!(rc.to_spec().is_ok());
+    }
+
+    #[test]
+    fn auto_pgrid_needs_nprocs() {
+        let c = ParsedConfig::parse("[grid]\npgrid = auto\n").unwrap();
+        let rc = RunConfig::from_parsed(&c).unwrap();
+        assert_eq!(rc.pgrid, PgridSetting::Auto);
+        assert!(rc.to_spec().is_err(), "auto without nprocs must be rejected");
+    }
+
+    #[test]
+    fn auto_pgrid_resolves_through_tuner() {
+        let c = ParsedConfig::parse("[grid]\ndims = [16, 16, 16]\npgrid = auto\nnprocs = 4\n")
+            .unwrap();
+        let rc = RunConfig::from_parsed(&c).unwrap();
+        assert_eq!(rc.resolved_nprocs().unwrap(), 4);
+        let spec = rc.to_spec().unwrap();
+        assert_eq!(spec.p(), 4);
+        assert!(spec.opts.overlap_chunks >= 1);
+    }
+
+    #[test]
+    fn auto_overlap_chunks_resolves_on_explicit_grid() {
+        let mut rc = RunConfig { dims: [16, 16, 16], ..RunConfig::default() };
+        rc.apply_override("options.overlap_chunks", "auto").unwrap();
+        assert_eq!(rc.overlap_chunks, ChunkSetting::Auto);
+        let spec = rc.to_spec().unwrap();
+        assert!(spec.opts.overlap_chunks >= 1);
     }
 }

@@ -280,7 +280,7 @@ mod tests {
     fn overlap_chunks_clamp_to_axis() {
         // Asking for more chunks than the invariant axis has planes must
         // still compile (the chunk plan clamps).
-        let s = spec([8, 8, 4], 2, 2).with_overlap_chunks(64);
+        let s = spec([8, 8, 4], 2, 2).with_overlap_chunks(64).unwrap();
         let d = s.decomp().unwrap();
         let (fwd, _, _) = compile::<f64>(&s, &d, 0, &Engine::Native).unwrap();
         assert_eq!(fwd.len(), 3);

@@ -4,7 +4,8 @@
 use std::path::PathBuf;
 
 use crate::grid::{Decomp, ProcGrid};
-use crate::util::error::Result;
+use crate::tune::{TuneOptions, TuneReport};
+use crate::util::error::{Error, Result};
 
 /// Third-dimension transform selection (§3.1: "sine/cosine (Chebyshev)
 /// transforms, as well as an empty transform which allows the user to
@@ -111,11 +112,32 @@ impl PlanSpec {
         self
     }
 
-    /// Builder: overlap chunk count (clamped to at least 1; `1` means the
-    /// blocking pipeline).
-    pub fn with_overlap_chunks(mut self, chunks: usize) -> Self {
-        self.opts.overlap_chunks = chunks.max(1);
-        self
+    /// Builder: overlap chunk count (`1` means the blocking pipeline).
+    /// `0` is rejected with the same `InvalidConfig` error the config
+    /// loader reports, instead of being silently clamped.
+    pub fn with_overlap_chunks(mut self, chunks: usize) -> Result<Self> {
+        if chunks < 1 {
+            return Err(Error::InvalidConfig(format!(
+                "options.overlap_chunks must be >= 1, got {chunks}"
+            )));
+        }
+        self.opts.overlap_chunks = chunks;
+        Ok(self)
+    }
+
+    /// Plan-time autotune: enumerate every Eq.-2-feasible `(m1, m2)`
+    /// factorization of `nprocs` (crossed with `use_even` and
+    /// `overlap_chunks` candidates), score them on `opts.profile`'s
+    /// machine model, optionally refine the top-K with short real runs,
+    /// and return the winning spec plus the full ranked [`TuneReport`].
+    pub fn autotune(
+        dims: [usize; 3],
+        nprocs: usize,
+        opts: &TuneOptions,
+    ) -> Result<(Self, TuneReport)> {
+        let report = crate::tune::autotune(dims, nprocs, opts)?;
+        let spec = report.best_spec()?;
+        Ok((spec, report))
     }
 
     /// The decomposition object (revalidates).
@@ -146,7 +168,8 @@ mod tests {
             .with_third(TransformKind::Cheby)
             .with_use_even(true)
             .with_stride1(false)
-            .with_overlap_chunks(4);
+            .with_overlap_chunks(4)
+            .unwrap();
         assert_eq!(s.third, TransformKind::Cheby);
         assert!(s.opts.use_even);
         assert!(!s.opts.stride1);
@@ -164,8 +187,30 @@ mod tests {
     }
 
     #[test]
-    fn overlap_chunks_clamps_to_one() {
-        let s = PlanSpec::new([8, 8, 8], ProcGrid::new(1, 1)).unwrap().with_overlap_chunks(0);
+    fn overlap_chunks_zero_is_invalid_config() {
+        let err = PlanSpec::new([8, 8, 8], ProcGrid::new(1, 1))
+            .unwrap()
+            .with_overlap_chunks(0)
+            .unwrap_err();
+        assert!(err.to_string().contains("overlap_chunks"), "{err}");
+        // 1 (the blocking pipeline) stays valid.
+        let s = PlanSpec::new([8, 8, 8], ProcGrid::new(1, 1))
+            .unwrap()
+            .with_overlap_chunks(1)
+            .unwrap();
         assert_eq!(s.opts.overlap_chunks, 1);
+    }
+
+    #[test]
+    fn autotune_resolves_a_feasible_spec() {
+        let (spec, report) =
+            PlanSpec::autotune([64, 64, 64], 8, &crate::tune::TuneOptions::default()).unwrap();
+        assert_eq!(spec.p(), 8);
+        assert_eq!(report.nprocs, 8);
+        assert_eq!(
+            (spec.pgrid.m1, spec.pgrid.m2),
+            (report.best().cand.m1, report.best().cand.m2)
+        );
+        assert!(!report.entries.is_empty());
     }
 }

@@ -159,7 +159,7 @@ impl Decomp {
         self.pgrid.p()
     }
 
-    /// X-pencil of `rank`: local array [nz/m2][ny/m1][nx], X stride-1.
+    /// X-pencil of `rank`: local array `[nz/m2][ny/m1][nx]`, X stride-1.
     pub fn x_pencil(&self, rank: usize) -> Pencil {
         let (r1, r2) = self.pgrid.coords(rank);
         Pencil {
@@ -177,14 +177,14 @@ impl Decomp {
         }
     }
 
-    /// Spectral X-pencil (after the R2C stage): [nz/m2][ny/m1][h].
+    /// Spectral X-pencil (after the R2C stage): `[nz/m2][ny/m1][h]`.
     pub fn x_pencil_spec(&self, rank: usize) -> Pencil {
         let mut p = self.x_pencil(rank);
         p.dims[2] = self.h();
         p
     }
 
-    /// Y-pencil of `rank`: local array [nz/m2][h/m1][ny], Y stride-1.
+    /// Y-pencil of `rank`: local array `[nz/m2][h/m1][ny]`, Y stride-1.
     pub fn y_pencil(&self, rank: usize) -> Pencil {
         let (r1, r2) = self.pgrid.coords(rank);
         Pencil {
@@ -202,7 +202,7 @@ impl Decomp {
         }
     }
 
-    /// Z-pencil of `rank`: local array [h/m1][ny/m2][nz], Z stride-1.
+    /// Z-pencil of `rank`: local array `[h/m1][ny/m2][nz]`, Z stride-1.
     pub fn z_pencil(&self, rank: usize) -> Pencil {
         let (r1, r2) = self.pgrid.coords(rank);
         Pencil {

@@ -9,7 +9,8 @@
 //!   sub-communicators ([`transpose`], [`mpi`]), and the library API
 //!   ([`coordinator`]): R2C/C2R 3D FFT, Chebyshev and empty third-dimension
 //!   transforms, STRIDE1/USEEVEN options, 1D decomposition as the `1×P`
-//!   special case.
+//!   special case — plus the plan-time autotuner ([`tune`]) that picks the
+//!   processor-grid aspect ratio and overlap/layout knobs for a run.
 //! * **L2/L1 (python/, build-time only)** — the per-task compute stages as
 //!   JAX functions calling Pallas matmul-DFT kernels, AOT-lowered to HLO
 //!   text in `artifacts/`, loaded and executed from Rust by [`runtime`].
@@ -48,6 +49,7 @@ pub mod mpi;
 pub mod netmodel;
 pub mod runtime;
 pub mod transpose;
+pub mod tune;
 pub mod util;
 
 pub use coordinator::{PlanSpec, TransformKind};

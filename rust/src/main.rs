@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   run           forward+backward loop with verification and timing
 //!                 (options from --config file and -o key=value overrides)
+//!   tune          rank processor grids / overlap chunks for a problem
+//!                 (probe -> score -> optional measured refinement)
 //!   sweep         aspect-ratio sweep at fixed P (Fig. 3 protocol)
 //!   model         price a scenario on a preset machine (Eq. 3)
 //!   fit           fit T = a/P + d/P^(2/3) to "P:t" pairs
@@ -18,6 +20,7 @@ use p3dfft::grid::layout::Table1Row;
 use p3dfft::grid::{local_dims_table1, ProcGrid};
 use p3dfft::netmodel::{fit_strong_scaling, predict, Machine, ModelInput};
 use p3dfft::runtime::StageLibrary;
+use p3dfft::tune::{MachineProfile, TuneOptions};
 use p3dfft::util::timer::Stage;
 
 fn main() -> ExitCode {
@@ -26,6 +29,7 @@ fn main() -> ExitCode {
     let rest = if args.is_empty() { &args[..] } else { &args[1..] };
     let result = match cmd {
         "run" => cmd_run(rest),
+        "tune" => cmd_tune(rest),
         "sweep" => cmd_sweep(rest),
         "model" => cmd_model(rest),
         "fit" => cmd_fit(rest),
@@ -58,15 +62,18 @@ fn print_help() {
          \n\
          COMMANDS:\n\
            run   [--config FILE] [-o key=value ...]   forward+backward loop + verify\n\
+           tune  [--config FILE] [--p P] [--machine host|cray_xt5|ranger]\n\
+                 [--refine K] [--top N]               rank (m1,m2)/chunk candidates\n\
            sweep [--config FILE] [--p P]              aspect-ratio sweep (Fig. 3)\n\
            model [--machine cray_xt5|ranger] [--n N] [--m1 M1] [--m2 M2] [--useeven]\n\
            fit   P:t [P:t ...]                        fit a/P + d/P^(2/3)\n\
            artifacts [--dir DIR]                      list/check AOT artifacts\n\
            info  [--config FILE]                      print Table-1 dims for the plan\n\
          \n\
-         CONFIG KEYS (file or -o): grid.dims=[nx,ny,nz] grid.pgrid=[m1,m2]\n\
+         CONFIG KEYS (file or -o): grid.dims=[nx,ny,nz] grid.pgrid=[m1,m2]|auto\n\
+           grid.nprocs=P (rank count for pgrid=auto)\n\
            iterations=N options.use_even=bool options.stride1=bool\n\
-           options.overlap_chunks=K (chunked comm/compute overlap; 1 = blocking)\n\
+           options.overlap_chunks=K|auto (chunked comm/compute overlap; 1 = blocking)\n\
            options.third=\"fft|cheby|empty\" options.engine=\"native|pjrt\"\n\
            options.artifacts_dir=\"artifacts\" options.precision=\"f32|f64\""
     );
@@ -165,6 +172,55 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
         return Err(anyhow::anyhow!("roundtrip verification FAILED (err = {err:.3e})"));
     }
     println!("verification OK");
+    Ok(())
+}
+
+fn cmd_tune(args: &[String]) -> anyhow::Result<()> {
+    let (rc, extras) = load_config(args, &["--p", "--machine", "--refine", "--top"])?;
+    let p = match extras.get("--p") {
+        Some(v) => v.parse::<usize>()?,
+        None => rc.resolved_nprocs()?,
+    };
+    let profile = match extras.get("--machine").map(String::as_str).unwrap_or("host") {
+        "host" => MachineProfile::calibrated_quick(),
+        "cray_xt5" => MachineProfile::synthetic(Machine::cray_xt5()),
+        "ranger" => MachineProfile::synthetic(Machine::ranger()),
+        other => return Err(anyhow::anyhow!("unknown machine {other:?}")),
+    };
+    let refine = extras.get("--refine").map(|v| v.parse::<usize>()).transpose()?.unwrap_or(0);
+    let top = extras.get("--top").map(|v| v.parse::<usize>()).transpose()?;
+    let opts = TuneOptions {
+        profile,
+        elem_bytes: rc.elem_bytes(),
+        refine_top_k: refine,
+        refine_iters: rc.iterations,
+        ..TuneOptions::default()
+    };
+    let (spec, mut report) = PlanSpec::autotune(rc.dims, p, &opts)?;
+    if let Some(n) = top {
+        report.entries.truncate(n.max(1));
+    }
+    print!("{}", report.render());
+    println!(
+        "picked: pgrid {}x{}, useeven={}, overlap_chunks={} \
+         (model {:.6}s/transform{})",
+        spec.pgrid.m1,
+        spec.pgrid.m2,
+        spec.opts.use_even,
+        spec.opts.overlap_chunks,
+        report.best().model_s,
+        match report.best().measured_s {
+            Some(m) => format!(", measured {m:.6}s/pair"),
+            None => String::new(),
+        }
+    );
+    println!(
+        "config: -o grid.pgrid=[{},{}] -o options.overlap_chunks={}{}",
+        spec.pgrid.m1,
+        spec.pgrid.m2,
+        spec.opts.overlap_chunks,
+        if spec.opts.use_even { " -o options.use_even=true" } else { "" }
+    );
     Ok(())
 }
 

@@ -9,6 +9,7 @@
 use std::time::Instant;
 
 use crate::fft::{C2cPlan, Complex, Direction};
+use crate::mpi::Universe;
 use crate::transpose::pack::{pack_x_to_y, unpack_x_to_y};
 use crate::util::SplitMix64;
 
@@ -75,6 +76,31 @@ pub fn measure_pack_bw(nz: usize, n: usize) -> f64 {
     bytes / secs
 }
 
+/// Measure aggregate `alltoall` bandwidth (bytes/s of off-rank traffic)
+/// on the thread fabric with `p` ranks exchanging `block` f64s per pair.
+/// Each rep times two exchanges inside a fresh universe; thread spawning
+/// is included in the timing (as it is in any short real run on this
+/// fabric), so this is a deliberately conservative fabric estimate.
+pub fn measure_alltoall_bw(p: usize, block: usize) -> f64 {
+    let reps = 3usize;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        let u = Universe::new(p);
+        u.run(move |c| {
+            let send: Vec<f64> = vec![c.rank() as f64; block * p];
+            let mut recv = vec![0.0f64; block * p];
+            c.alltoall(&send, &mut recv, block);
+            c.alltoall(&send, &mut recv, block);
+            Ok(())
+        })
+        .expect("alltoall probe");
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    // 2 exchanges per rep; off-rank volume p*(p-1)*block each.
+    let bytes = (reps * 2 * p * (p.saturating_sub(1)) * block * 8) as f64;
+    bytes / secs.max(1e-9)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -90,6 +116,12 @@ mod tests {
     fn pack_bw_positive_and_sane() {
         let bw = measure_pack_bw(16, 64);
         assert!(bw > 1.0e7 && bw < 1.0e12, "got {bw:.3e}");
+    }
+
+    #[test]
+    fn alltoall_bw_positive_and_sane() {
+        let bw = measure_alltoall_bw(2, 1024);
+        assert!(bw > 1.0e5 && bw < 1.0e13, "got {bw:.3e}");
     }
 
     #[test]

@@ -141,7 +141,7 @@ pub fn predict_overlapped(input: &ModelInput, chunks: usize) -> f64 {
     e / k + (k - 1.0) * (e / k).max(w / k) + w / k + k * c.latency
 }
 
-/// §2's transpose-vs-distributed comparison ([Foster] Table 1): the
+/// §2's transpose-vs-distributed comparison (Foster, Table 1): the
 /// distributed (binary-exchange) 1D FFT moves `(N³/P)·log₂(M)` elements
 /// per task against the transpose method's `(N³/P)·(M-1)/M ≈ N³/P`, so
 /// the transpose approach exchanges ~`log₂(M)/2` times less volume

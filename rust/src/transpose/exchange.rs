@@ -13,7 +13,7 @@ use super::pack;
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ExchangeOptions {
     /// USEEVEN: pad blocks to a uniform size and use `alltoall` instead of
-    /// `alltoallv` — the Cray XT workaround of §3.4/[Schulz].
+    /// `alltoallv` — the Cray XT workaround of §3.4 (Schulz).
     pub use_even: bool,
 }
 

@@ -1,0 +1,158 @@
+//! Candidate enumeration: every knob combination the tuner prices.
+//!
+//! The `(m1, m2)` space is the divisor-pair lattice of P filtered by the
+//! paper's Eq.-2 feasibility constraints (no rank may own an empty pencil
+//! in any orientation — checked through [`Decomp::new`], the same
+//! validation a real plan goes through). Overlap chunk counts are the
+//! powers of two up to the shortest invariant axis (more chunks than
+//! planes just clamp in the executor, so pricing them adds nothing).
+
+use crate::grid::{Decomp, ProcGrid};
+
+/// One point of the tuning space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Candidate {
+    pub m1: usize,
+    pub m2: usize,
+    /// USEEVEN: padded `alltoall` instead of `alltoallv`.
+    pub use_even: bool,
+    /// Communication–compute overlap chunk count (1 = blocking).
+    pub overlap_chunks: usize,
+}
+
+impl Candidate {
+    pub fn p(&self) -> usize {
+        self.m1 * self.m2
+    }
+
+    /// "2x8 even k=4" — the label the ranked table prints.
+    pub fn label(&self) -> String {
+        format!(
+            "{}x{}{} k={}",
+            self.m1,
+            self.m2,
+            if self.use_even { " even" } else { "" },
+            self.overlap_chunks
+        )
+    }
+}
+
+/// All Eq.-2-feasible processor grids with `m1 * m2 == p` for `dims`.
+pub fn grid_candidates(dims: [usize; 3], p: usize) -> Vec<ProcGrid> {
+    ProcGrid::factorizations(p)
+        .into_iter()
+        .filter(|pg| Decomp::new(dims[0], dims[1], dims[2], *pg).is_ok())
+        .collect()
+}
+
+/// Overlap chunk counts worth pricing for `dims`: 1 plus powers of two up
+/// to the shortest chunkable axis (z-slabs for X↔Y, x-slabs for Y↔Z),
+/// capped at 16 — past that the per-chunk message latency always loses.
+/// This is the *global* ladder; [`enumerate`] additionally clamps each
+/// candidate to [`max_executable_chunks`] for its grid.
+pub fn chunk_candidates(dims: [usize; 3]) -> Vec<usize> {
+    let h = dims[0] / 2 + 1;
+    let cap = dims[2].min(h).clamp(1, 16);
+    let mut out = vec![1usize];
+    let mut k = 2usize;
+    while k <= cap {
+        out.push(k);
+        k *= 2;
+    }
+    out
+}
+
+/// Largest overlap chunk count the executor can actually run on the
+/// `m1 x m2` grid: each transpose clamps its chunk plan to the *per-rank*
+/// local extent of the invariant axis — z-slabs `nz/m2` for X↔Y and
+/// spectral-x slabs `h/m1` for Y↔Z. Pricing a larger `k` would model a
+/// pipeline depth the real run silently reduces.
+pub fn max_executable_chunks(dims: [usize; 3], m1: usize, m2: usize) -> usize {
+    let h = dims[0] / 2 + 1;
+    ((dims[2] / m2.max(1)).min(h / m1.max(1))).max(1)
+}
+
+/// The full candidate cross product for one problem: every feasible grid
+/// crossed with the given `use_even` and `overlap_chunks` settings (the
+/// caller decides whether each knob is pinned to one value or explored).
+/// Chunk counts are clamped per grid to [`max_executable_chunks`] and
+/// deduplicated, so every candidate's `overlap_chunks` is one the
+/// executor will actually run.
+pub fn enumerate(dims: [usize; 3], p: usize, evens: &[bool], chunks: &[usize]) -> Vec<Candidate> {
+    let mut out = Vec::new();
+    for pg in grid_candidates(dims, p) {
+        let cap = max_executable_chunks(dims, pg.m1, pg.m2);
+        for &use_even in evens {
+            let mut seen: Vec<usize> = Vec::with_capacity(chunks.len());
+            for &k in chunks {
+                let overlap_chunks = k.min(cap);
+                if seen.contains(&overlap_chunks) {
+                    continue;
+                }
+                seen.push(overlap_chunks);
+                out.push(Candidate { m1: pg.m1, m2: pg.m2, use_even, overlap_chunks });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grids_are_exactly_feasible_divisor_pairs() {
+        // 64^3 on P=12: all six divisor pairs are feasible.
+        let grids = grid_candidates([64, 64, 64], 12);
+        let pairs: Vec<(usize, usize)> = grids.iter().map(|g| (g.m1, g.m2)).collect();
+        assert_eq!(pairs, vec![(1, 12), (2, 6), (3, 4), (4, 3), (6, 2), (12, 1)]);
+    }
+
+    #[test]
+    fn eq2_violations_are_rejected() {
+        // dims [8, 8, 64]: h = 5, so m1 <= 5 and m2 <= min(8, 64) = 8.
+        let grids = grid_candidates([8, 8, 64], 16);
+        for g in &grids {
+            assert!(g.m1 <= 5 && g.m2 <= 8, "infeasible {}x{} survived", g.m1, g.m2);
+        }
+        // 16x1 and 1x16 both violate Eq. 2 here; only 2x8 and 4x4 remain.
+        let pairs: Vec<(usize, usize)> = grids.iter().map(|g| (g.m1, g.m2)).collect();
+        assert_eq!(pairs, vec![(2, 8), (4, 4)]);
+    }
+
+    #[test]
+    fn chunk_candidates_capped_by_axes() {
+        assert_eq!(chunk_candidates([64, 64, 64]), vec![1, 2, 4, 8, 16]);
+        // nz = 4 caps the ladder.
+        assert_eq!(chunk_candidates([64, 64, 4]), vec![1, 2, 4]);
+        // h = 2 caps it from the X side.
+        assert_eq!(chunk_candidates([3, 64, 64]), vec![1, 2]);
+    }
+
+    #[test]
+    fn enumerate_crosses_all_knobs() {
+        let cands = enumerate([64, 64, 64], 4, &[false, true], &[1, 2, 4, 8, 16]);
+        // Grids 1x4 and 2x2 admit all 5 chunk counts; 4x1 clamps to
+        // h/m1 = 8 (16 -> 8, deduplicated), leaving 4. Times 2 use_even.
+        assert_eq!(cands.len(), (5 + 5 + 4) * 2);
+        let pinned = enumerate([64, 64, 64], 4, &[true], &[4]);
+        assert_eq!(pinned.len(), 3);
+        assert!(pinned.iter().all(|c| c.use_even && c.overlap_chunks == 4));
+    }
+
+    #[test]
+    fn enumerate_clamps_chunks_to_executable_depth() {
+        // dims [64,64,64], grid 16x2: YZ transpose clamps to h/m1 = 33/16
+        // = 2 slabs per rank — no candidate may price more chunks.
+        assert_eq!(max_executable_chunks([64, 64, 64], 16, 2), 2);
+        let cands = enumerate([64, 64, 64], 32, &[false], &[1, 2, 4, 8, 16]);
+        for c in cands.iter().filter(|c| c.m1 == 16) {
+            assert!(c.overlap_chunks <= 2, "{c:?} exceeds executable depth");
+        }
+        // And the clamped ladder is deduplicated.
+        let sixteen: Vec<usize> =
+            cands.iter().filter(|c| c.m1 == 16).map(|c| c.overlap_chunks).collect();
+        assert_eq!(sixteen, vec![1, 2]);
+    }
+}

@@ -1,0 +1,264 @@
+//! Plan-time autotuner — the paper's stated goal of a framework that
+//! "helps guide the user in making optimal choices for parameters of
+//! their runs", made executable (cf. OpenFFT's plan-time decomposition
+//! selection and AccFFT's automatic comm-strategy choice).
+//!
+//! Pipeline: **probe → score → refine.**
+//!
+//! 1. *Probe* ([`profile`]) — a machine profile supplies the Eq.-3
+//!    constants: either a fixed synthetic machine (paper presets, nominal
+//!    host) or constants calibrated from in-process micro-probes of the
+//!    library's own pack/FFT/alltoall kernels (the `calib_*` benches at
+//!    reduced size).
+//! 2. *Score* ([`candidates`], [`score`]) — enumerate every Eq.-2-feasible
+//!    `(m1, m2)` factorization of P crossed with `use_even` and
+//!    `overlap_chunks` settings, and price each with
+//!    [`crate::netmodel::predict_overlapped`] (the Fig.-3 aspect-ratio
+//!    effects, the §3.4 Alltoallv penalty and the chunked-overlap optimum
+//!    all fall out of the model).
+//! 3. *Refine* ([`refine`], optional) — re-measure the top-K candidates
+//!    with short real pipeline runs on thread ranks and let wall-clock
+//!    numbers settle the final order.
+//!
+//! Entry points: [`autotune`] (returns a ranked [`TuneReport`]),
+//! [`crate::coordinator::PlanSpec::autotune`] (report + concrete spec),
+//! `grid.pgrid = "auto"` / `options.overlap_chunks = "auto"` in run
+//! configs, and the `p3dfft tune` CLI subcommand.
+
+pub mod candidates;
+pub mod profile;
+pub mod refine;
+pub mod report;
+pub mod score;
+
+pub use candidates::{
+    chunk_candidates, enumerate, grid_candidates, max_executable_chunks, Candidate,
+};
+pub use profile::{MachineProfile, ProfileSource};
+pub use report::{TuneEntry, TuneReport};
+
+use crate::util::error::{Error, Result};
+
+/// Tuner knobs. `Default` is the deterministic model-only path on the
+/// nominal host profile (no timing anywhere — same inputs, same ranking).
+#[derive(Debug, Clone)]
+pub struct TuneOptions {
+    /// Machine profile candidates are priced on.
+    pub profile: MachineProfile,
+    /// Bytes per exchanged element (16 = complex f64, 8 = complex f32).
+    pub elem_bytes: f64,
+    /// Explore `use_even` (both settings) or pin it to `false`.
+    /// Ignored when `pin_use_even` is set.
+    pub explore_use_even: bool,
+    /// Explore `overlap_chunks > 1` or pin the blocking pipeline.
+    /// Ignored when `pin_overlap_chunks` is set.
+    pub explore_overlap: bool,
+    /// Price every candidate with exactly this `use_even` — the value the
+    /// run will actually use (the USEEVEN padding cost depends on the
+    /// grid, so tuning under a different setting optimises the wrong
+    /// objective). `None` falls back to `explore_use_even`.
+    pub pin_use_even: Option<bool>,
+    /// Price every candidate with exactly this `overlap_chunks`;
+    /// `None` falls back to `explore_overlap`.
+    pub pin_overlap_chunks: Option<usize>,
+    /// Refine this many of the model's top candidates with short real
+    /// pipeline runs (0 = model-only, fully deterministic).
+    pub refine_top_k: usize,
+    /// Forward+backward pairs measured per refined candidate.
+    pub refine_iters: usize,
+    /// PRNG seed for the refinement workload (recorded in the report).
+    pub seed: u64,
+}
+
+impl Default for TuneOptions {
+    fn default() -> Self {
+        TuneOptions {
+            profile: MachineProfile::nominal_host(),
+            elem_bytes: 16.0,
+            explore_use_even: true,
+            explore_overlap: true,
+            pin_use_even: None,
+            pin_overlap_chunks: None,
+            refine_top_k: 0,
+            refine_iters: 1,
+            seed: 0x5EED_CAFE,
+        }
+    }
+}
+
+/// Rank every feasible candidate for `dims` on `nprocs` ranks.
+///
+/// Deterministic for a synthetic profile with `refine_top_k == 0`; the
+/// sort order is total (score, then m1, use_even, chunks), so ties —
+/// e.g. `1xP` vs `Px1` on a symmetric machine — break toward the smaller
+/// `m1` (fewer ROW exchanges is the Fig.-10 preference) and the simpler
+/// option settings.
+pub fn autotune(dims: [usize; 3], nprocs: usize, opts: &TuneOptions) -> Result<TuneReport> {
+    if nprocs == 0 {
+        return Err(Error::InvalidConfig("autotune needs nprocs >= 1".into()));
+    }
+    let evens: Vec<bool> = match opts.pin_use_even {
+        Some(v) => vec![v],
+        None if opts.explore_use_even => vec![false, true],
+        None => vec![false],
+    };
+    let chunks: Vec<usize> = match opts.pin_overlap_chunks {
+        Some(0) => {
+            // Same contract as PlanSpec::with_overlap_chunks — no silent
+            // clamping of an invalid chunk count.
+            return Err(Error::InvalidConfig(
+                "options.overlap_chunks must be >= 1, got 0".into(),
+            ));
+        }
+        Some(k) => vec![k],
+        None if opts.explore_overlap => candidates::chunk_candidates(dims),
+        None => vec![1],
+    };
+    let cands = candidates::enumerate(dims, nprocs, &evens, &chunks);
+    if cands.is_empty() {
+        return Err(Error::InvalidConfig(format!(
+            "no Eq.-2-feasible processor grid: {}x{}x{} cannot be decomposed over {} ranks",
+            dims[0], dims[1], dims[2], nprocs
+        )));
+    }
+    let mut entries: Vec<TuneEntry> = cands
+        .into_iter()
+        .map(|cand| TuneEntry {
+            cand,
+            model_s: score::model_seconds(dims, &cand, &opts.profile, opts.elem_bytes),
+            measured_s: None,
+        })
+        .collect();
+    entries.sort_by(|a, b| {
+        a.model_s
+            .partial_cmp(&b.model_s)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cand.m1.cmp(&b.cand.m1))
+            .then(a.cand.use_even.cmp(&b.cand.use_even))
+            .then(a.cand.overlap_chunks.cmp(&b.cand.overlap_chunks))
+    });
+
+    if opts.refine_top_k > 0 {
+        let k = opts.refine_top_k.min(entries.len());
+        for e in entries.iter_mut().take(k) {
+            e.measured_s = Some(refine::measure_candidate(
+                dims,
+                &e.cand,
+                opts.refine_iters,
+                opts.seed,
+            )?);
+        }
+        // Refined candidates rank ahead, by measured pair time; the rest
+        // keep their model order behind them.
+        entries.sort_by(|a, b| match (a.measured_s, b.measured_s) {
+            (Some(x), Some(y)) => x.partial_cmp(&y).unwrap_or(std::cmp::Ordering::Equal),
+            (Some(_), None) => std::cmp::Ordering::Less,
+            (None, Some(_)) => std::cmp::Ordering::Greater,
+            (None, None) => a.model_s.partial_cmp(&b.model_s).unwrap_or(std::cmp::Ordering::Equal),
+        });
+    }
+
+    Ok(TuneReport {
+        dims,
+        nprocs,
+        profile: opts.profile.name.clone(),
+        seed: opts.seed,
+        entries,
+    })
+}
+
+/// Best `overlap_chunks` for an already-chosen grid, by model (used when
+/// `options.overlap_chunks = "auto"` rides on an explicit `grid.pgrid`).
+pub fn best_chunks(
+    dims: [usize; 3],
+    m1: usize,
+    m2: usize,
+    use_even: bool,
+    profile: &MachineProfile,
+    elem_bytes: f64,
+) -> usize {
+    let cap = candidates::max_executable_chunks(dims, m1, m2);
+    let mut ladder: Vec<usize> =
+        chunk_candidates(dims).into_iter().map(|k| k.min(cap)).collect();
+    ladder.dedup(); // ascending ladder stays sorted after the clamp
+    ladder
+        .into_iter()
+        .min_by(|&a, &b| {
+            let ta = score::model_seconds(
+                dims,
+                &Candidate { m1, m2, use_even, overlap_chunks: a },
+                profile,
+                elem_bytes,
+            );
+            let tb = score::model_seconds(
+                dims,
+                &Candidate { m1, m2, use_even, overlap_chunks: b },
+                profile,
+                elem_bytes,
+            );
+            ta.partial_cmp(&tb).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+        })
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netmodel::Machine;
+
+    #[test]
+    fn model_only_ranking_is_deterministic() {
+        let opts = TuneOptions::default();
+        let a = autotune([64, 64, 64], 8, &opts).unwrap();
+        let b = autotune([64, 64, 64], 8, &opts).unwrap();
+        assert_eq!(a.entries.len(), b.entries.len());
+        for (x, y) in a.entries.iter().zip(&b.entries) {
+            assert_eq!(x.cand, y.cand);
+            assert_eq!(x.model_s, y.model_s);
+        }
+    }
+
+    #[test]
+    fn infeasible_problem_is_an_error() {
+        // 4x4x4: h = 3, m1 <= 3 and m2 <= 4; P = 64 has no feasible pair
+        // (minimum P for any factorization would need m1*m2=64 with m1<=3,
+        // m2<=4 -> max 12 < 64).
+        assert!(autotune([4, 4, 4], 64, &TuneOptions::default()).is_err());
+        assert!(autotune([64, 64, 64], 0, &TuneOptions::default()).is_err());
+    }
+
+    #[test]
+    fn pinned_zero_chunks_is_invalid_config() {
+        let opts =
+            TuneOptions { pin_overlap_chunks: Some(0), ..TuneOptions::default() };
+        let err = autotune([64, 64, 64], 8, &opts).unwrap_err();
+        assert!(err.to_string().contains("overlap_chunks"), "{err}");
+    }
+
+    #[test]
+    fn cray_profile_prefers_on_node_rows() {
+        // Fig. 3: on the XT5 the winner keeps M1 <= cores/node.
+        let opts = TuneOptions {
+            profile: MachineProfile::synthetic(Machine::cray_xt5()),
+            explore_use_even: false,
+            explore_overlap: false,
+            ..TuneOptions::default()
+        };
+        let r = autotune([2048, 2048, 2048], 1024, &opts).unwrap();
+        let best = &r.best().cand;
+        assert!(
+            best.m1 <= 12,
+            "winner {}x{} should keep rows on a 12-core node",
+            best.m1,
+            best.m2
+        );
+    }
+
+    #[test]
+    fn best_chunks_is_interior_on_comm_heavy_problems() {
+        let profile = MachineProfile::synthetic(Machine::cray_xt5());
+        let k = best_chunks([2048, 2048, 2048], 32, 64, false, &profile, 16.0);
+        assert!(k > 1, "overlap should pay on a comm-heavy run, got k={k}");
+        assert!(k <= 16);
+    }
+}

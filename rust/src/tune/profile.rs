@@ -1,0 +1,127 @@
+//! Machine profiles for the plan-time tuner.
+//!
+//! The tuner scores candidates with [`crate::netmodel::predict`], which
+//! needs a [`Machine`]. A profile is either *synthetic* (one of the named
+//! paper machines, or a fixed nominal host — deterministic, used by tests
+//! and the figure benches) or *calibrated* (constants measured on this
+//! host by fast in-process micro-probes of the library's own kernels, the
+//! same kernels the `calib_*` benches time at full size).
+
+use crate::netmodel::calibrate::{measure_alltoall_bw, measure_fft_flops, measure_pack_bw};
+use crate::netmodel::{Interconnect, Machine};
+
+/// Where a profile's constants came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProfileSource {
+    /// Fixed constants: paper machine presets or the nominal host. Fully
+    /// deterministic — two tuner runs over the same synthetic profile
+    /// produce bit-identical rankings.
+    Synthetic,
+    /// Constants measured on this host by micro-probes.
+    Calibrated,
+}
+
+/// A named machine description the tuner prices candidates against.
+#[derive(Debug, Clone)]
+pub struct MachineProfile {
+    /// Display name (e.g. "localhost (nominal)", "Cray XT5").
+    pub name: String,
+    /// The Eq.-3 machine model fed to `netmodel::predict`.
+    pub machine: Machine,
+    pub source: ProfileSource,
+}
+
+impl MachineProfile {
+    /// Wrap a paper-machine preset (or any hand-built [`Machine`]) as a
+    /// fixed synthetic profile.
+    pub fn synthetic(machine: Machine) -> Self {
+        MachineProfile { name: machine.name.to_string(), machine, source: ProfileSource::Synthetic }
+    }
+
+    /// A fixed single-node host profile with nominal constants (1 Gflop/s
+    /// per core, 4 GB/s per-task streaming). Deterministic; the default
+    /// for tests and for `fig_tune`'s model-side pick.
+    pub fn nominal_host() -> Self {
+        MachineProfile {
+            name: "localhost (nominal)".to_string(),
+            machine: Machine::localhost(1.0e9, 4.0e9),
+            source: ProfileSource::Synthetic,
+        }
+    }
+
+    /// Calibrate a host profile from in-process micro-probes: the serial
+    /// FFT kernel for F, the STRIDE1 pack/unpack kernels for σ_mem, and a
+    /// thread-fabric `alltoall` for the exchange bandwidth — the same
+    /// kernels behind the `calib_local_fft`, `calib_pack` and
+    /// `calib_alltoall` benches, run at reduced size (a few ms total).
+    pub fn calibrated_quick() -> Self {
+        Self::calibrated_with(128, 8, 8, 48, 2, 8 * 1024)
+    }
+
+    /// Calibrate with explicit probe sizes (FFT length/batch, pack
+    /// nz/n, alltoall ranks/block-doubles).
+    pub fn calibrated_with(
+        fft_n: usize,
+        fft_batch: usize,
+        pack_nz: usize,
+        pack_n: usize,
+        a2a_ranks: usize,
+        a2a_block: usize,
+    ) -> Self {
+        let fft_flops = measure_fft_flops(fft_n, fft_batch);
+        let pack_bw = measure_pack_bw(pack_nz, pack_n);
+        let fabric_bw = measure_alltoall_bw(a2a_ranks, a2a_block);
+        let mut machine = Machine::localhost(fft_flops, pack_bw);
+        // The probe reports *aggregate* off-rank bandwidth over
+        // `a2a_ranks`; Clos `port_bw` is per-node injection bandwidth
+        // (bisection_bw multiplies by node count), so divide the rank
+        // count out or it would be counted twice.
+        let port_bw = fabric_bw / a2a_ranks.max(1) as f64;
+        machine.interconnect = Interconnect::Clos { port_bw, cores_per_node: 1 };
+        // One "node" per rank: Machine::localhost's cores_per_node of
+        // usize::MAX would route every exchange through the memory-
+        // bandwidth branch of the model and the measured fabric bandwidth
+        // would never be read; with cores_per_node = 1 inter-rank
+        // exchanges are priced through the Clos law above.
+        machine.cores_per_node = 1;
+        MachineProfile {
+            name: "localhost (calibrated)".to_string(),
+            machine,
+            source: ProfileSource::Calibrated,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nominal_host_is_synthetic_and_fixed() {
+        let a = MachineProfile::nominal_host();
+        let b = MachineProfile::nominal_host();
+        assert_eq!(a.source, ProfileSource::Synthetic);
+        assert_eq!(a.machine.flops_per_core, b.machine.flops_per_core);
+        assert_eq!(a.machine.mem_bw_per_task, b.machine.mem_bw_per_task);
+    }
+
+    #[test]
+    fn synthetic_wraps_paper_presets() {
+        let p = MachineProfile::synthetic(Machine::cray_xt5());
+        assert_eq!(p.name, "Cray XT5");
+        assert_eq!(p.source, ProfileSource::Synthetic);
+        assert!(p.machine.alltoallv_penalty > 1.0);
+    }
+
+    #[test]
+    fn calibrated_quick_produces_sane_constants() {
+        let p = MachineProfile::calibrated_quick();
+        assert_eq!(p.source, ProfileSource::Calibrated);
+        assert!(p.machine.flops_per_core > 1.0e6, "{:.3e}", p.machine.flops_per_core);
+        assert!(p.machine.mem_bw_per_task > 1.0e6, "{:.3e}", p.machine.mem_bw_per_task);
+        // The measured fabric bandwidth must actually reach the model:
+        // with one "node" per rank, exchanges take the bisection branch.
+        assert_eq!(p.machine.cores_per_node, 1);
+        assert!(p.machine.interconnect.bisection_bw(4) > 0.0);
+    }
+}

@@ -1,0 +1,118 @@
+//! The ranked tuner output: every priced candidate, best first, plus the
+//! concrete [`PlanSpec`] the winner resolves to.
+
+use crate::bench::{FigureRow, Table};
+use crate::coordinator::PlanSpec;
+use crate::grid::ProcGrid;
+use crate::util::error::Result;
+
+use super::candidates::Candidate;
+
+/// One ranked candidate with its scores.
+#[derive(Debug, Clone)]
+pub struct TuneEntry {
+    pub cand: Candidate,
+    /// Eq.-3 model prediction, seconds per forward transform.
+    pub model_s: f64,
+    /// Measured seconds per forward+backward pair from the refinement
+    /// runs (`None` when the candidate was ranked by model only).
+    pub measured_s: Option<f64>,
+}
+
+/// The tuner's full output: candidates best-first.
+#[derive(Debug, Clone)]
+pub struct TuneReport {
+    pub dims: [usize; 3],
+    pub nprocs: usize,
+    /// Name of the machine profile the scores were computed on.
+    pub profile: String,
+    /// Seed the refinement workload was generated from.
+    pub seed: u64,
+    /// All priced candidates, best first. Refined candidates (those with
+    /// `measured_s`) rank ahead of model-only ones, ordered by measured
+    /// time; the rest follow ordered by model time.
+    pub entries: Vec<TuneEntry>,
+}
+
+impl TuneReport {
+    /// The winning candidate.
+    pub fn best(&self) -> &TuneEntry {
+        &self.entries[0]
+    }
+
+    /// Resolve the winner into a validated [`PlanSpec`].
+    pub fn best_spec(&self) -> Result<PlanSpec> {
+        let c = &self.best().cand;
+        PlanSpec::new(self.dims, ProcGrid::new(c.m1, c.m2))?
+            .with_use_even(c.use_even)
+            .with_overlap_chunks(c.overlap_chunks)
+    }
+
+    /// Render the ranked candidate table (what `p3dfft tune` prints).
+    pub fn render(&self) -> String {
+        let mut table = self.to_table();
+        table.title = format!(
+            "tune: {}x{}x{} on P={} ranks, profile {}",
+            self.dims[0], self.dims[1], self.dims[2], self.nprocs, self.profile
+        );
+        table.render()
+    }
+
+    /// The ranked candidates as a [`Table`] (shared by `render` and the
+    /// CI bench-smoke JSON summary).
+    pub fn to_table(&self) -> Table {
+        let mut table = Table::new("tune");
+        for (rank, e) in self.entries.iter().enumerate() {
+            let mut row = FigureRow::new("candidate", e.cand.label())
+                .col("rank", (rank + 1) as f64)
+                .col("model_s", e.model_s);
+            if let Some(m) = e.measured_s {
+                row = row.col("measured_s", m);
+            }
+            table.push(row);
+        }
+        table
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(m1: usize, m2: usize, model_s: f64) -> TuneEntry {
+        TuneEntry {
+            cand: Candidate { m1, m2, use_even: false, overlap_chunks: 1 },
+            model_s,
+            measured_s: None,
+        }
+    }
+
+    #[test]
+    fn best_spec_resolves_winner() {
+        let r = TuneReport {
+            dims: [32, 32, 32],
+            nprocs: 4,
+            profile: "test".into(),
+            seed: 0,
+            entries: vec![entry(1, 4, 0.5), entry(2, 2, 0.7)],
+        };
+        let spec = r.best_spec().unwrap();
+        assert_eq!((spec.pgrid.m1, spec.pgrid.m2), (1, 4));
+        assert_eq!(spec.opts.overlap_chunks, 1);
+    }
+
+    #[test]
+    fn render_lists_candidates_ranked() {
+        let r = TuneReport {
+            dims: [32, 32, 32],
+            nprocs: 4,
+            profile: "test".into(),
+            seed: 0,
+            entries: vec![entry(1, 4, 0.5), entry(2, 2, 0.7)],
+        };
+        let s = r.render();
+        assert!(s.contains("1x4"), "{s}");
+        assert!(s.contains("2x2"), "{s}");
+        assert!(s.contains("model_s"), "{s}");
+    }
+}

@@ -1,0 +1,68 @@
+//! Model scoring: price one candidate with the Eq.-3 machine model.
+
+use crate::netmodel::{predict_overlapped, ModelInput};
+
+use super::candidates::Candidate;
+use super::profile::MachineProfile;
+
+/// Predicted seconds for one forward transform of `dims` under `cand` on
+/// `profile`'s machine. `overlap_chunks = 1` reproduces the blocking
+/// `predict(..).total()` exactly; larger counts use the Eq.-1-style
+/// pipelined prediction, so the chunk optimum the executor exposes is the
+/// one the tuner ranks by.
+pub fn model_seconds(
+    dims: [usize; 3],
+    cand: &Candidate,
+    profile: &MachineProfile,
+    elem_bytes: f64,
+) -> f64 {
+    let input = ModelInput {
+        nx: dims[0],
+        ny: dims[1],
+        nz: dims[2],
+        m1: cand.m1,
+        m2: cand.m2,
+        elem_bytes,
+        use_even: cand.use_even,
+        machine: profile.machine.clone(),
+    };
+    predict_overlapped(&input, cand.overlap_chunks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netmodel::{predict, Machine};
+
+    fn cand(m1: usize, m2: usize, use_even: bool, k: usize) -> Candidate {
+        Candidate { m1, m2, use_even, overlap_chunks: k }
+    }
+
+    #[test]
+    fn k1_matches_blocking_prediction() {
+        let profile = MachineProfile::synthetic(Machine::cray_xt5());
+        let dims = [256, 256, 256];
+        let s = model_seconds(dims, &cand(4, 8, false, 1), &profile, 16.0);
+        let input = ModelInput {
+            nx: 256,
+            ny: 256,
+            nz: 256,
+            m1: 4,
+            m2: 8,
+            elem_bytes: 16.0,
+            use_even: false,
+            machine: Machine::cray_xt5(),
+        };
+        let total = predict(&input).total();
+        assert!((s - total).abs() < 1e-12 * total);
+    }
+
+    #[test]
+    fn useeven_discount_shows_up_on_cray() {
+        let profile = MachineProfile::synthetic(Machine::cray_xt5());
+        let dims = [2048, 2048, 2048];
+        let v = model_seconds(dims, &cand(12, 128, false, 1), &profile, 16.0);
+        let e = model_seconds(dims, &cand(12, 128, true, 1), &profile, 16.0);
+        assert!(e < v, "useeven {e} vs alltoallv {v}");
+    }
+}

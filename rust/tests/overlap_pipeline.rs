@@ -53,7 +53,7 @@ fn overlap_chunks_bit_identical_z_pencils() {
         let blocking = z_pencils(&PlanSpec::new(dims, ProcGrid::new(m1, m2)).unwrap());
         for k in [1usize, 2, 4, 7] {
             let spec =
-                PlanSpec::new(dims, ProcGrid::new(m1, m2)).unwrap().with_overlap_chunks(k);
+                PlanSpec::new(dims, ProcGrid::new(m1, m2)).unwrap().with_overlap_chunks(k).unwrap();
             let chunked = z_pencils(&spec);
             assert_eq!(
                 blocking, chunked,
@@ -68,7 +68,8 @@ fn overlap_chunks_bit_identical_backward() {
     let dims = [10, 12, 14];
     let blocking = roundtrip_backs(&PlanSpec::new(dims, ProcGrid::new(2, 3)).unwrap());
     for k in [2usize, 4, 7] {
-        let spec = PlanSpec::new(dims, ProcGrid::new(2, 3)).unwrap().with_overlap_chunks(k);
+        let spec =
+            PlanSpec::new(dims, ProcGrid::new(2, 3)).unwrap().with_overlap_chunks(k).unwrap();
         assert_eq!(blocking, roundtrip_backs(&spec), "k={k} backward must be bit-identical");
     }
 }
@@ -79,7 +80,7 @@ fn overlap_roundtrip_normalisation() {
         [([16, 12, 10], 2, 3, 4), ([9, 15, 6], 3, 3, 2), ([8, 8, 8], 1, 4, 5), ([12, 8, 8], 4, 1, 3)]
     {
         let spec =
-            PlanSpec::new(dims, ProcGrid::new(m1, m2)).unwrap().with_overlap_chunks(k);
+            PlanSpec::new(dims, ProcGrid::new(m1, m2)).unwrap().with_overlap_chunks(k).unwrap();
         let (nx, ny, nz) = (dims[0], dims[1], dims[2]);
         let report = run_on_threads(&spec, move |ctx| {
             let input = ctx.make_real_input(sine_field::<f64>(nx, ny, nz));
@@ -107,7 +108,8 @@ fn overlap_with_useeven_still_bit_identical() {
         &PlanSpec::new(dims, ProcGrid::new(3, 2))
             .unwrap()
             .with_use_even(true)
-            .with_overlap_chunks(4),
+            .with_overlap_chunks(4)
+            .unwrap(),
     );
     assert_eq!(blocking, chunked);
 }
@@ -117,8 +119,9 @@ fn overlap_chunks_exceeding_axis_clamp() {
     // nz = 6 but k = 64: the chunk plan must clamp, not panic or corrupt.
     let dims = [8, 8, 6];
     let blocking = z_pencils(&PlanSpec::new(dims, ProcGrid::new(2, 2)).unwrap());
-    let chunked =
-        z_pencils(&PlanSpec::new(dims, ProcGrid::new(2, 2)).unwrap().with_overlap_chunks(64));
+    let chunked = z_pencils(
+        &PlanSpec::new(dims, ProcGrid::new(2, 2)).unwrap().with_overlap_chunks(64).unwrap(),
+    );
     assert_eq!(blocking, chunked);
 }
 
@@ -130,6 +133,7 @@ fn overlap_with_chebyshev_third() {
             .unwrap()
             .with_third(TransformKind::Cheby)
             .with_overlap_chunks(k)
+            .unwrap()
     };
     let blocking = z_pencils(&spec(1));
     for k in [2usize, 7] {
@@ -155,7 +159,8 @@ fn overlap_with_chebyshev_third() {
 fn overlap_attributes_hidden_exchange_time() {
     let dims = [32, 32, 32];
     let run = |k: usize| {
-        let spec = PlanSpec::new(dims, ProcGrid::new(2, 2)).unwrap().with_overlap_chunks(k);
+        let spec =
+            PlanSpec::new(dims, ProcGrid::new(2, 2)).unwrap().with_overlap_chunks(k).unwrap();
         run_on_threads(&spec, move |ctx| {
             let input = ctx.make_real_input(sine_field::<f64>(32, 32, 32));
             let mut out = ctx.alloc_output();
