@@ -1,0 +1,105 @@
+//! Kernel-throughput bench: lines/sec of the 1D execution layer for
+//! contiguous and strided batches at representative pencil shapes,
+//! blocked tile driver vs the seed's per-line execution.
+//!
+//! The per-line baselines are reproduced locally (scalar `execute` per
+//! contiguous line; element-by-element gather/scatter around a scalar
+//! `execute` for column-major lines — the exact loop the seed's
+//! `execute_strided` ran) so the before/after is measured in one binary
+//! on one host. Feeds EXPERIMENTS.md §Perf; in CI the quick-mode table is
+//! appended to the `BENCH_ci.json` artifact so per-PR kernel throughput
+//! is tracked alongside the fig03/fig_overlap/fig_tune tables.
+//!
+//! `--quick` / `P3DFFT_BENCH_QUICK=1` shrinks the sweep for the CI
+//! bench-smoke job; `P3DFFT_BENCH_JSON=PATH` appends the table.
+
+use p3dfft::bench::{emit_json, measure, quick_mode, FigureRow, MeasureOpts, Table};
+use p3dfft::fft::{C2cPlan, Complex, Direction};
+use p3dfft::util::SplitMix64;
+
+/// The seed's per-line strided execution: gather each column-major line
+/// element by element, scalar FFT, scatter back — the baseline the
+/// blocked tile gather replaces.
+fn execute_strided_perline(
+    plan: &C2cPlan<f64>,
+    data: &mut [Complex<f64>],
+    count: usize,
+    stride: usize,
+    line: &mut [Complex<f64>],
+    scratch: &mut [Complex<f64>],
+) {
+    for b in 0..count {
+        for (k, v) in line.iter_mut().enumerate() {
+            *v = data[b + k * stride];
+        }
+        plan.execute(line, scratch);
+        for (k, v) in line.iter().enumerate() {
+            data[b + k * stride] = *v;
+        }
+    }
+}
+
+fn rand_data(len: usize, seed: u64) -> Vec<Complex<f64>> {
+    let mut rng = SplitMix64::new(seed);
+    (0..len).map(|_| Complex::new(rng.next_normal(), rng.next_normal())).collect()
+}
+
+fn main() {
+    let quick = quick_mode();
+    let opts = MeasureOpts { warmup: 1, iterations: if quick { 3 } else { 9 } };
+    // (line length, lines per slab): pow-2, smooth and prime (Bluestein)
+    // lengths at pencil-plane line counts, including a non-multiple of
+    // the lane width to keep the ragged-tail paths in the measurement.
+    let shapes: &[(usize, usize)] = if quick {
+        &[(256, 120), (360, 64), (509, 32)]
+    } else {
+        &[(128, 512), (256, 256), (512, 256), (1024, 120), (360, 128), (509, 64)]
+    };
+
+    let mut table = Table::new(format!(
+        "fig_kernels: 1D execution layer, lines/sec (blocked tile driver vs per-line), {} iters",
+        opts.iterations
+    ));
+    for &(n, count) in shapes {
+        let plan = C2cPlan::<f64>::new(n, Direction::Forward);
+        let mut scratch = vec![Complex::<f64>::zero(); plan.scratch_len()];
+        let x = format!("n={n} lines={count}");
+
+        // Contiguous back-to-back lines (the STRIDE1 pencil shape).
+        let mut data = rand_data(n * count, n as u64);
+        let s_perline = measure(opts, || {
+            for line in data.chunks_exact_mut(n) {
+                plan.execute(line, &mut scratch);
+            }
+        });
+        let s_blocked = measure(opts, || {
+            plan.execute_batch(&mut data, &mut scratch);
+        });
+        table.push(
+            FigureRow::new("contiguous", x.clone())
+                .col("perline_mlps", count as f64 / s_perline.median / 1e6)
+                .col("blocked_mlps", count as f64 / s_blocked.median / 1e6)
+                .col("speedup", s_perline.median / s_blocked.median),
+        );
+
+        // Column-major lines, stride == count (the XYZ-order plane shape
+        // the strided stages transform).
+        let mut data = rand_data(n * count, n as u64 + 1);
+        let mut line = vec![Complex::<f64>::zero(); n];
+        let s_perline = measure(opts, || {
+            execute_strided_perline(&plan, &mut data, count, count, &mut line, &mut scratch);
+        });
+        let s_blocked = measure(opts, || {
+            plan.execute_strided(&mut data, count, count, &mut scratch);
+        });
+        table.push(
+            FigureRow::new("strided", x)
+                .col("perline_mlps", count as f64 / s_perline.median / 1e6)
+                .col("blocked_mlps", count as f64 / s_blocked.median / 1e6)
+                .col("speedup", s_perline.median / s_blocked.median),
+        );
+    }
+    print!("{}", table.render());
+    emit_json("fig_kernels", &table);
+    println!("(mlps = million lines/sec; speedup = per-line median / blocked median)");
+}

@@ -111,14 +111,20 @@ pub fn compile<T: Real + PjrtExec>(
         (None, None)
     };
 
+    // One shared scratch slot sized for the largest blocked-driver
+    // requirement among the plans the pipeline may run. Each plan's
+    // scratch_len() now covers its lane-interleaved tile plus kernel
+    // scratch, and the blocked execute_strided gathers straight into the
+    // tile, so the XYZ paths no longer need the extra per-line buffer the
+    // seed added here (`+ ny` / `+ nz`).
     let scratch_len = r2c
         .scratch_len()
         .max(c2r.scratch_len())
-        .max(fy_f.scratch_len() + spec.ny)
-        .max(fy_b.scratch_len() + spec.ny)
+        .max(fy_f.scratch_len())
+        .max(fy_b.scratch_len())
         .max(third_f.as_ref().map_or(0, |t| t.scratch_len()))
-        .max(fz_f.as_ref().map_or(0, |p| p.scratch_len() + spec.nz))
-        .max(fz_b.as_ref().map_or(0, |p| p.scratch_len() + spec.nz));
+        .max(fz_f.as_ref().map_or(0, |p| p.scratch_len()))
+        .max(fz_b.as_ref().map_or(0, |p| p.scratch_len()));
 
     let mut layout = PoolLayout::new();
     let xspec = layout.request("xspec", xp.len());

@@ -16,6 +16,15 @@
 //!   transformed. Per-line FFTs are identical in both paths, so the
 //!   output is bit-for-bit the same; only wall-clock attribution changes
 //!   (hidden in-flight time lands in [`Stage::Overlap`]).
+//!
+//! Every compute stage routes through the blocked tile drivers of
+//! [`crate::fft`] (`execute_batch` / `execute_strided` /
+//! `execute_complex_batch`), which transform
+//! [`TILE_LANES`](crate::tile::TILE_LANES) lines per kernel pass. The
+//! blocked kernels apply bit-identical per-lane arithmetic to the scalar
+//! ones, so chunked slabs whose line counts tile differently still
+//! produce bit-for-bit the same pencils — the invariant the
+//! `overlap_pipeline` tests pin down.
 
 use std::time::Instant;
 
@@ -147,8 +156,10 @@ impl<T: Real> ThirdOp<T> {
     }
 
     pub fn scratch_len(&self) -> usize {
+        // Each plan's scratch_len() covers its blocked driver in full; no
+        // extra per-line slack (see the pipeline's shared-slot sizing).
         match &self.kind {
-            ThirdKind::Fft { fwd, bwd } => fwd.scratch_len().max(bwd.scratch_len()) + self.n,
+            ThirdKind::Fft { fwd, bwd } => fwd.scratch_len().max(bwd.scratch_len()),
             ThirdKind::Cheby(d) => d.scratch_len(),
             ThirdKind::Sine(d) => d.scratch_len(),
             ThirdKind::Empty => 0,
@@ -981,7 +992,9 @@ impl<T: Real + PjrtExec> PipelineStage<T> for XyFwdXyzStage<T> {
             ctx.timer,
         );
         // Y FFT, strided: within each z-plane of the [z][y][x_loc] array,
-        // line x has base x and stride h_loc.
+        // line x has base x and stride h_loc. The blocked driver gathers
+        // TILE_LANES adjacent x-lines per tile as contiguous block copies
+        // and transforms them together.
         let h_loc = self.txy.h_loc();
         let ny = self.ny;
         {

@@ -11,6 +11,9 @@
 //! size M >= 2n-1, whose transform of the chirp sequence is precomputed at
 //! plan time.
 
+use crate::tile::TILE_LANES;
+
+use super::block::stockham_tile;
 use super::complex::{Complex, Real};
 use super::factor::next_pow2;
 use super::stockham::{stockham_radix2, twiddle_table};
@@ -91,6 +94,49 @@ impl<T: Real> BluesteinPlan<T> {
         let inv_m = T::one() / T::from_usize(m).unwrap();
         for k in 0..n {
             data[k] = a[k].scale(inv_m) * self.chirp[k];
+        }
+    }
+
+    /// Blocked variant of [`Self::execute`]: transform a full-width
+    /// `[n][W]` lane-interleaved tile in place (`W =`
+    /// [`TILE_LANES`](crate::tile::TILE_LANES)), running the inner
+    /// zero-padded power-of-two FFTs through the blocked Stockham kernel
+    /// so the chirp and kernel-spectrum factors are loaded once per
+    /// element for `W` lines. `scratch.len() >= 2 * m * W` — i.e. `W ·`
+    /// [`Self::scratch_len`].
+    pub fn execute_tile(&self, tile: &mut [Complex<T>], scratch: &mut [Complex<T>]) {
+        const W: usize = TILE_LANES;
+        let n = self.n;
+        let m = self.m;
+        debug_assert_eq!(tile.len(), n * W);
+        debug_assert!(scratch.len() >= 2 * m * W);
+        let (a, rest) = scratch.split_at_mut(m * W);
+        let fft_scratch = &mut rest[..m * W];
+
+        // a = x .* chirp per lane, zero-padded to m rows.
+        for j in 0..n {
+            let c = self.chirp[j];
+            for lane in 0..W {
+                a[j * W + lane] = tile[j * W + lane] * c;
+            }
+        }
+        for v in a[n * W..].iter_mut() {
+            *v = Complex::zero();
+        }
+        stockham_tile(a, fft_scratch, &self.tw_fwd);
+        for j in 0..m {
+            let bv = self.b_hat[j];
+            for v in a[j * W..(j + 1) * W].iter_mut() {
+                *v *= bv;
+            }
+        }
+        stockham_tile(a, fft_scratch, &self.tw_inv);
+        let inv_m = T::one() / T::from_usize(m).unwrap();
+        for k in 0..n {
+            let c = self.chirp[k];
+            for lane in 0..W {
+                tile[k * W + lane] = a[k * W + lane].scale(inv_m) * c;
+            }
         }
     }
 }

@@ -12,6 +12,8 @@
 //! machinery rather than the O(N²) dense matrix. DCT-I is its own inverse
 //! up to the factor 2(N-1).
 
+use crate::tile::{CACHE_TILE, TILE_LANES};
+
 use super::complex::{Complex, Real};
 use super::plan::{C2cPlan, Direction};
 
@@ -38,9 +40,10 @@ impl<T: Real> Dct1Plan<T> {
         false
     }
 
-    /// Scratch requirement in `Complex<T>` elements.
+    /// Scratch requirement in `Complex<T>` elements (covers the blocked
+    /// complex-batch driver: extension tile + inner plan scratch).
     pub fn scratch_len(&self) -> usize {
-        self.ext + self.inner.scratch_len()
+        TILE_LANES * self.ext + self.inner.scratch_len()
     }
 
     /// Transform one line in place (`data.len() == n`).
@@ -80,6 +83,12 @@ impl<T: Real> Dct1Plan<T> {
     /// real and imaginary planes independently (DCT is a real-linear map),
     /// which is how P3DFFT's Chebyshev third-dimension option acts on the
     /// already-complex Fourier coefficients. `real_scratch.len() >= n`.
+    ///
+    /// Blocked driver: `W =` [`TILE_LANES`](crate::tile::TILE_LANES) lines
+    /// at a time build their even extensions into a lane-interleaved
+    /// `[ext][W]` tile and share one blocked C2C pass per plane (two per
+    /// `W` lines instead of `2W` scalar FFTs). Ragged tail lines and the
+    /// FFT-free `n == 2` degenerate case use the per-line path.
     pub fn execute_complex_batch(
         &self,
         data: &mut [Complex<T>],
@@ -88,8 +97,57 @@ impl<T: Real> Dct1Plan<T> {
     ) {
         debug_assert_eq!(data.len() % self.n, 0);
         debug_assert!(real_scratch.len() >= self.n);
+        debug_assert!(scratch.len() >= self.scratch_len());
+        const W: usize = TILE_LANES;
+        let batch = data.len() / self.n;
+        let full = if self.n > 2 { batch / W } else { 0 };
+        if full > 0 {
+            let (etile, inner_scratch) = scratch.split_at_mut(self.ext * W);
+            for t in 0..full {
+                let b0 = t * W;
+                for part in 0..2 {
+                    // Even extension per lane:
+                    // [x_0, ..., x_{n-1}, x_{n-2}, ..., x_1].
+                    // Strip-mined over j so both tile write fronts (row j
+                    // and its mirror ext - j) stay L1-resident across the
+                    // lane passes.
+                    let mut jb = 0;
+                    while jb < self.n {
+                        let je = (jb + CACHE_TILE).min(self.n);
+                        for lane in 0..W {
+                            let row = &data[(b0 + lane) * self.n..(b0 + lane + 1) * self.n];
+                            for (j, c) in row.iter().enumerate().take(je).skip(jb) {
+                                let v = if part == 0 { c.re } else { c.im };
+                                etile[j * W + lane] = Complex::new(v, T::zero());
+                                if j >= 1 && j < self.n - 1 {
+                                    etile[(self.ext - j) * W + lane] = Complex::new(v, T::zero());
+                                }
+                            }
+                        }
+                        jb = je;
+                    }
+                    self.inner.execute_tile(etile, inner_scratch);
+                    let mut kb = 0;
+                    while kb < self.n {
+                        let ke = (kb + CACHE_TILE).min(self.n);
+                        for lane in 0..W {
+                            let row = &mut data[(b0 + lane) * self.n..(b0 + lane + 1) * self.n];
+                            for (k, c) in row.iter_mut().enumerate().take(ke).skip(kb) {
+                                let v = etile[k * W + lane].re;
+                                if part == 0 {
+                                    c.re = v;
+                                } else {
+                                    c.im = v;
+                                }
+                            }
+                        }
+                        kb = ke;
+                    }
+                }
+            }
+        }
         let tmp = &mut real_scratch[..self.n];
-        for line in data.chunks_exact_mut(self.n) {
+        for line in data[full * W * self.n..].chunks_exact_mut(self.n) {
             for (t, c) in tmp.iter_mut().zip(line.iter()) {
                 *t = c.re;
             }

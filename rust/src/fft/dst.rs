@@ -10,6 +10,8 @@
 //! indices 1..N and -x reversed at N+2..2N+1; then Y_k = -Im FFT_L(e)_{k+1}.
 //! DST-I is its own inverse up to the factor 2(N+1).
 
+use crate::tile::{CACHE_TILE, TILE_LANES};
+
 use super::complex::{Complex, Real};
 use super::plan::{C2cPlan, Direction};
 
@@ -36,9 +38,10 @@ impl<T: Real> Dst1Plan<T> {
         false
     }
 
-    /// Scratch requirement in `Complex<T>` elements.
+    /// Scratch requirement in `Complex<T>` elements (covers the blocked
+    /// complex-batch driver: extension tile + inner plan scratch).
     pub fn scratch_len(&self) -> usize {
-        self.ext + self.inner.scratch_len()
+        TILE_LANES * self.ext + self.inner.scratch_len()
     }
 
     /// Transform one line in place (`data.len() == n`).
@@ -71,6 +74,12 @@ impl<T: Real> Dst1Plan<T> {
 
     /// Batched DST-I over *complex* lines (re and im independently) — the
     /// shape used on Z-pencil Fourier coefficients.
+    ///
+    /// Blocked driver: `W =` [`TILE_LANES`](crate::tile::TILE_LANES) lines
+    /// at a time build their odd extensions into a lane-interleaved
+    /// `[ext][W]` tile and share one blocked C2C pass per plane (two per
+    /// `W` lines instead of `2W` scalar FFTs); ragged tail lines use the
+    /// per-line path.
     pub fn execute_complex_batch(
         &self,
         data: &mut [Complex<T>],
@@ -79,8 +88,59 @@ impl<T: Real> Dst1Plan<T> {
     ) {
         debug_assert_eq!(data.len() % self.n, 0);
         debug_assert!(real_scratch.len() >= self.n);
+        debug_assert!(scratch.len() >= self.scratch_len());
+        const W: usize = TILE_LANES;
+        let batch = data.len() / self.n;
+        let full = batch / W;
+        if full > 0 {
+            let (etile, inner_scratch) = scratch.split_at_mut(self.ext * W);
+            for t in 0..full {
+                let b0 = t * W;
+                for part in 0..2 {
+                    // Odd extension per lane:
+                    // [0, x_0..x_{n-1}, 0, -x_{n-1}..-x_0].
+                    // Strip-mined over j like the DCT build, so both tile
+                    // write fronts stay L1-resident across the lane passes.
+                    for lane in 0..W {
+                        etile[lane] = Complex::zero();
+                        etile[(self.n + 1) * W + lane] = Complex::zero();
+                    }
+                    let mut jb = 0;
+                    while jb < self.n {
+                        let je = (jb + CACHE_TILE).min(self.n);
+                        for lane in 0..W {
+                            let row = &data[(b0 + lane) * self.n..(b0 + lane + 1) * self.n];
+                            for (j, c) in row.iter().enumerate().take(je).skip(jb) {
+                                let v = if part == 0 { c.re } else { c.im };
+                                etile[(j + 1) * W + lane] = Complex::new(v, T::zero());
+                                etile[(self.ext - 1 - j) * W + lane] =
+                                    Complex::new(-v, T::zero());
+                            }
+                        }
+                        jb = je;
+                    }
+                    self.inner.execute_tile(etile, inner_scratch);
+                    let mut kb = 0;
+                    while kb < self.n {
+                        let ke = (kb + CACHE_TILE).min(self.n);
+                        for lane in 0..W {
+                            let row = &mut data[(b0 + lane) * self.n..(b0 + lane + 1) * self.n];
+                            for (k, c) in row.iter_mut().enumerate().take(ke).skip(kb) {
+                                let v = -etile[(k + 1) * W + lane].im;
+                                if part == 0 {
+                                    c.re = v;
+                                } else {
+                                    c.im = v;
+                                }
+                            }
+                        }
+                        kb = ke;
+                    }
+                }
+            }
+        }
         let tmp = &mut real_scratch[..self.n];
-        for line in data.chunks_exact_mut(self.n) {
+        for line in data[full * W * self.n..].chunks_exact_mut(self.n) {
             for (t, c) in tmp.iter_mut().zip(line.iter()) {
                 *t = c.re;
             }

@@ -11,17 +11,23 @@
 //!   dimensions" claim;
 //! * [`bluestein`] — chirp-z fallback so *every* length, prime or not, is
 //!   supported in O(n log n);
+//! * [`block`] — blocked variants of all three kernels operating on
+//!   lane-interleaved `[n][W]` tiles, so every pencil stage transforms
+//!   `W = `[`TILE_LANES`](crate::tile::TILE_LANES) lines per pass instead
+//!   of one (the serial hot path is memory-bound at pencil line lengths);
 //! * [`r2c`] — real-to-complex / complex-to-real transforms with the
 //!   half-complex packing of Table 1 (`(Nx+2)/2` complex outputs);
 //! * [`dct`] — DCT-I (Chebyshev) for the wall-bounded third dimension;
 //! * [`plan`] — FFTW-style plan objects (precomputed twiddles, scratch
-//!   sizing, batch execution over stride-1 lines, plus a strided execute
-//!   for the non-STRIDE1 path) and a process-wide plan cache.
+//!   sizing, tile-batched execution over stride-1 lines, plus a blocked
+//!   strided execute for the non-STRIDE1 path) and a process-wide plan
+//!   cache.
 //!
 //! Conventions match the L1 Pallas kernels bit-for-bit: forward DFT uses
 //! `exp(-2πi jk/n)`, inverse is **unnormalised** (the coordinator applies
 //! the single `1/(Nx·Ny·Nz)` factor at the end of a backward transform).
 
+pub mod block;
 pub mod bluestein;
 pub mod complex;
 pub mod dct;

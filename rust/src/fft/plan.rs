@@ -6,6 +6,11 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
+use crate::tile::TILE_LANES;
+
+use super::block::{
+    gather_lines, gather_strided, mixed_radix_tile, scatter_lines, scatter_strided, stockham_tile,
+};
 use super::bluestein::BluesteinPlan;
 use super::complex::{Complex, Real};
 use super::factor::{factorize, is_pow2, is_smooth};
@@ -73,8 +78,21 @@ impl<T: Real> C2cPlan<T> {
         self.dir
     }
 
-    /// Scratch (in `Complex<T>` elements) required by [`Self::execute`].
+    /// Scratch (in `Complex<T>` elements) required by every `execute*`
+    /// entry point of this plan.
+    ///
+    /// Sized for the blocked drivers ([`Self::execute_batch`] /
+    /// [`Self::execute_strided`]): one `[n][W]` lane-interleaved tile
+    /// plus `W` lanes of kernel scratch, `W =`
+    /// [`TILE_LANES`](crate::tile::TILE_LANES). The single-line
+    /// [`Self::execute`] needs only the kernel portion, so this bound is
+    /// valid (if generous) for it too.
     pub fn scratch_len(&self) -> usize {
+        TILE_LANES * (self.n + self.kernel_scratch())
+    }
+
+    /// Per-lane kernel scratch (the scalar kernels' requirement).
+    fn kernel_scratch(&self) -> usize {
         match &self.algo {
             Algo::Pow2 { .. } => self.n,
             Algo::Mixed { .. } => self.n,
@@ -96,20 +114,72 @@ impl<T: Real> C2cPlan<T> {
         }
     }
 
+    /// Transform one full-width `[n][W]` lane-interleaved tile in place
+    /// (`tile.len() == n * W`, `W =` [`TILE_LANES`](crate::tile::TILE_LANES))
+    /// through the blocked kernels. `scratch.len() >= W ·` the per-lane
+    /// kernel scratch; the tiling drivers pass the kernel-scratch region
+    /// of [`Self::scratch_len`].
+    pub fn execute_tile(&self, tile: &mut [Complex<T>], scratch: &mut [Complex<T>]) {
+        let tlen = self.n * TILE_LANES;
+        debug_assert_eq!(tile.len(), tlen);
+        debug_assert!(scratch.len() >= TILE_LANES * self.kernel_scratch());
+        match &self.algo {
+            Algo::Pow2 { tw } => stockham_tile(tile, &mut scratch[..tlen], tw),
+            Algo::Mixed { factors, tw } => {
+                // The out-of-place recursion lands in scratch; the copy
+                // back buys the uniform in-place tile contract every
+                // driver and inner-plan consumer relies on (~1/log n of
+                // the transform's own traffic).
+                let dst = &mut scratch[..tlen];
+                mixed_radix_tile(tile, dst, factors, tw);
+                tile.copy_from_slice(dst);
+            }
+            Algo::Bluestein(b) => b.execute_tile(tile, scratch),
+        }
+    }
+
     /// Transform `batch` contiguous stride-1 lines laid out back to back
     /// (`data.len() == batch * n`) — the shape every pencil stage uses.
+    ///
+    /// Tiling driver: groups of `W =` [`TILE_LANES`](crate::tile::TILE_LANES)
+    /// lines are transposed into the lane-interleaved tile, transformed by
+    /// the blocked kernels (one twiddle load per butterfly for `W` lines,
+    /// unit-stride lane loop), and transposed back. The ragged tail
+    /// (`batch % W` lines) runs through the per-line scalar kernels — the
+    /// lines are contiguous, so the scalar pass costs no gather.
     pub fn execute_batch(&self, data: &mut [Complex<T>], scratch: &mut [Complex<T>]) {
         debug_assert_eq!(data.len() % self.n, 0);
-        for line in data.chunks_exact_mut(self.n) {
-            self.execute(line, scratch);
+        debug_assert!(scratch.len() >= self.scratch_len());
+        if self.n == 1 {
+            return; // length-1 transform is the identity
+        }
+        let w = TILE_LANES;
+        let batch = data.len() / self.n;
+        let full = batch / w;
+        let (tile, kscratch) = scratch.split_at_mut(self.n * w);
+        for t in 0..full {
+            let b0 = t * w;
+            gather_lines(data, self.n, b0, tile);
+            self.execute_tile(tile, kscratch);
+            scatter_lines(tile, self.n, b0, data);
+        }
+        for b in full * w..batch {
+            self.execute(&mut data[b * self.n..(b + 1) * self.n], kscratch);
         }
     }
 
     /// Transform lines that are *not* unit stride: line `b` occupies
-    /// elements `base + b + k*stride` for `k < n` (column-major lines).
-    /// This is the "let the FFT library handle the strides" alternative the
-    /// paper contrasts with STRIDE1; we gather into scratch, transform, and
-    /// scatter back. `scratch.len() >= n + self.scratch_len()`.
+    /// elements `base + b + k*stride` for `b < count <= stride` (column-
+    /// major lines). This is the "let the FFT library handle the strides"
+    /// alternative the paper contrasts with STRIDE1.
+    ///
+    /// Blocked driver: because the lanes of one tile are *adjacent* lines,
+    /// gathering a `W`-wide tile reads one contiguous `W`-element block per
+    /// logical row instead of the seed's per-element strided loads; the
+    /// blocked kernels then transform all `W` lines at once. The ragged
+    /// tail (`count % W`) is zero-padded to a full tile — a scalar tail
+    /// here would reintroduce the per-element gather. `scratch.len() >=`
+    /// [`Self::scratch_len`].
     pub fn execute_strided(
         &self,
         data: &mut [Complex<T>],
@@ -117,16 +187,20 @@ impl<T: Real> C2cPlan<T> {
         stride: usize,
         scratch: &mut [Complex<T>],
     ) {
-        debug_assert!(scratch.len() >= self.n + self.scratch_len());
-        let (line, rest) = scratch.split_at_mut(self.n);
-        for b in 0..count {
-            for k in 0..self.n {
-                line[k] = data[b + k * stride];
-            }
-            self.execute(line, rest);
-            for k in 0..self.n {
-                data[b + k * stride] = line[k];
-            }
+        debug_assert!(count <= stride);
+        debug_assert!(scratch.len() >= self.scratch_len());
+        if self.n == 1 {
+            return;
+        }
+        let w = TILE_LANES;
+        let (tile, kscratch) = scratch.split_at_mut(self.n * w);
+        let mut b0 = 0;
+        while b0 < count {
+            let wb = (count - b0).min(w);
+            gather_strided(data, self.n, stride, b0, wb, tile);
+            self.execute_tile(tile, kscratch);
+            scatter_strided(tile, self.n, stride, b0, wb, data);
+            b0 += wb;
         }
     }
 }

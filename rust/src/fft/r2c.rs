@@ -9,6 +9,9 @@
 //! C2C, an accounting the paper's FLOP numbers rely on. Odd `n` falls back
 //! to the full complex transform.
 
+use crate::tile::{CACHE_TILE, TILE_LANES};
+
+use super::block::{gather_lines, scatter_lines};
 use super::complex::{Complex, Real};
 use super::plan::{C2cPlan, Direction};
 
@@ -52,10 +55,15 @@ impl<T: Real> R2cPlan<T> {
         self.n / 2 + 1
     }
 
-    /// Scratch requirement in `Complex<T>` elements.
+    /// Scratch requirement in `Complex<T>` elements (covers the blocked
+    /// batch driver: z-tile + untangle out-tile + inner plan scratch).
     pub fn scratch_len(&self) -> usize {
-        // Working line + inner plan scratch.
-        self.n.max(self.inner.len()) + self.inner.scratch_len()
+        if self.n % 2 == 0 {
+            TILE_LANES * (self.n / 2 + self.out_len()) + self.inner.scratch_len()
+        } else {
+            // Odd n runs the full-length scalar path per line.
+            self.n + self.inner.scratch_len()
+        }
     }
 
     /// Transform one real line into `out` (length n/2+1).
@@ -95,6 +103,13 @@ impl<T: Real> R2cPlan<T> {
     }
 
     /// Batched execute over `batch` back-to-back real lines.
+    ///
+    /// Even `n` runs the blocked driver: `W =`
+    /// [`TILE_LANES`](crate::tile::TILE_LANES) lines are packed into a
+    /// half-length lane-interleaved tile, transformed together by the
+    /// blocked C2C kernels, untangled across lanes (one untangle twiddle
+    /// load per output mode for `W` lines), and scattered to the output
+    /// rows. The ragged tail and odd `n` use the per-line scalar path.
     pub fn execute_batch(
         &self,
         input: &[T],
@@ -105,7 +120,52 @@ impl<T: Real> R2cPlan<T> {
         debug_assert_eq!(input.len() % self.n, 0);
         let batch = input.len() / self.n;
         debug_assert_eq!(out.len(), batch * h);
-        for b in 0..batch {
+        debug_assert!(scratch.len() >= self.scratch_len());
+        const W: usize = TILE_LANES;
+        let full = if self.n % 2 == 0 { batch / W } else { 0 };
+        if full > 0 {
+            let half = self.n / 2;
+            let halfc = T::from_f64(0.5).unwrap();
+            let (ztile, rest) = scratch.split_at_mut(half * W);
+            let (otile, inner_scratch) = rest.split_at_mut(h * W);
+            for t in 0..full {
+                let b0 = t * W;
+                // Pack real pairs into the half-length complex tile:
+                // contiguous reads per lane, stride-W tile writes, strip-
+                // mined so each tile strip stays L1-resident across lanes.
+                let mut jb = 0;
+                while jb < half {
+                    let je = (jb + CACHE_TILE).min(half);
+                    for lane in 0..W {
+                        let row = &input[(b0 + lane) * self.n..(b0 + lane + 1) * self.n];
+                        for j in jb..je {
+                            ztile[j * W + lane] = Complex::new(row[2 * j], row[2 * j + 1]);
+                        }
+                    }
+                    jb = je;
+                }
+                self.inner.execute_tile(ztile, inner_scratch);
+                // Untangle across lanes; each tw[k] is loaded once per k.
+                for lane in 0..W {
+                    let z0 = ztile[lane];
+                    otile[lane] = Complex::new(z0.re + z0.im, T::zero());
+                    otile[half * W + lane] = Complex::new(z0.re - z0.im, T::zero());
+                }
+                for k in 1..half {
+                    let twk = self.tw[k];
+                    for lane in 0..W {
+                        let zk = ztile[k * W + lane];
+                        let zc = ztile[(half - k) * W + lane].conj();
+                        let e = (zk + zc).scale(halfc);
+                        let d = (zk - zc).scale(halfc);
+                        let o = Complex::new(d.im, -d.re);
+                        otile[k * W + lane] = e + o * twk;
+                    }
+                }
+                scatter_lines(otile, h, b0, out);
+            }
+        }
+        for b in full * W..batch {
             self.execute(&input[b * self.n..(b + 1) * self.n], &mut out[b * h..(b + 1) * h], scratch);
         }
     }
@@ -150,8 +210,14 @@ impl<T: Real> C2rPlan<T> {
         self.n / 2 + 1
     }
 
+    /// Scratch requirement in `Complex<T>` elements (covers the blocked
+    /// batch driver: input tile + re-tangled z-tile + inner plan scratch).
     pub fn scratch_len(&self) -> usize {
-        self.n.max(self.inner.len()) + self.inner.scratch_len()
+        if self.n % 2 == 0 {
+            TILE_LANES * (self.in_len() + self.n / 2) + self.inner.scratch_len()
+        } else {
+            self.n + self.inner.scratch_len()
+        }
     }
 
     /// Transform one half-complex line (length n/2+1) into `out` (length n).
@@ -196,6 +262,11 @@ impl<T: Real> C2rPlan<T> {
     }
 
     /// Batched execute over back-to-back lines.
+    ///
+    /// Mirror of [`R2cPlan::execute_batch`]: even `n` gathers `W` spectral
+    /// lines into a lane-interleaved tile, re-tangles across lanes, runs
+    /// the blocked inverse C2C kernels once for all `W` lines, and unpacks
+    /// to contiguous real rows; the ragged tail and odd `n` stay scalar.
     pub fn execute_batch(
         &self,
         input: &[Complex<T>],
@@ -206,7 +277,49 @@ impl<T: Real> C2rPlan<T> {
         debug_assert_eq!(input.len() % h, 0);
         let batch = input.len() / h;
         debug_assert_eq!(out.len(), batch * self.n);
-        for b in 0..batch {
+        debug_assert!(scratch.len() >= self.scratch_len());
+        const W: usize = TILE_LANES;
+        let full = if self.n % 2 == 0 { batch / W } else { 0 };
+        if full > 0 {
+            let half = self.n / 2;
+            let halfc = T::from_f64(0.5).unwrap();
+            let two = T::from_f64(2.0).unwrap();
+            let (itile, rest) = scratch.split_at_mut(h * W);
+            let (ztile, inner_scratch) = rest.split_at_mut(half * W);
+            for t in 0..full {
+                let b0 = t * W;
+                gather_lines(input, h, b0, itile);
+                // Re-tangle the half spectra across lanes (see
+                // [`Self::execute`] for the per-line formula).
+                for k in 0..half {
+                    let twk = self.tw[k];
+                    for lane in 0..W {
+                        let xk = itile[k * W + lane];
+                        let xc = itile[(half - k) * W + lane].conj();
+                        let e = (xk + xc).scale(halfc);
+                        let o = (xk - xc).scale(halfc) * twk;
+                        ztile[k * W + lane] = e + o.mul_i();
+                    }
+                }
+                self.inner.execute_tile(ztile, inner_scratch);
+                // Unpack: contiguous writes per lane, stride-W tile reads,
+                // strip-mined like the pack above.
+                let mut jb = 0;
+                while jb < half {
+                    let je = (jb + CACHE_TILE).min(half);
+                    for lane in 0..W {
+                        let row = &mut out[(b0 + lane) * self.n..(b0 + lane + 1) * self.n];
+                        for j in jb..je {
+                            let z = ztile[j * W + lane];
+                            row[2 * j] = two * z.re;
+                            row[2 * j + 1] = two * z.im;
+                        }
+                    }
+                    jb = je;
+                }
+            }
+        }
+        for b in full * W..batch {
             self.execute(&input[b * h..(b + 1) * h], &mut out[b * self.n..(b + 1) * self.n], scratch);
         }
     }

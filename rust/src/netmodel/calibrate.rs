@@ -35,6 +35,11 @@ impl Calibration {
 }
 
 /// Measure sustained flops on batched length-`n` C2C FFTs.
+///
+/// Runs through `execute_batch`, i.e. the blocked tile driver the pencil
+/// stages use (with its scalar tail when `batch` is not a multiple of
+/// [`crate::tile::TILE_LANES`]) — the F constant prices exactly the code
+/// the hot path executes.
 pub fn measure_fft_flops(n: usize, batch: usize) -> f64 {
     let plan = C2cPlan::<f64>::new(n, Direction::Forward);
     let mut rng = SplitMix64::new(0xCAFE);

@@ -1,0 +1,54 @@
+//! Shared blocking constants for every cache-tiled kernel in the crate.
+//!
+//! Two knobs live here so a future tuning pass has a single place to sweep:
+//!
+//! * [`CACHE_TILE`] — the square tile edge used by 2D-transpose copies
+//!   (the pack/unpack kernels in [`crate::transpose::pack`] and the
+//!   gather/scatter side of the blocked FFT driver in
+//!   [`crate::fft::block`]);
+//! * [`TILE_LANES`] — the number of 1D lines the blocked FFT kernels
+//!   transform simultaneously (the lane width `W` of the `[n][W]`
+//!   lane-interleaved tile).
+//!
+//! `EXPERIMENTS.md` §Perf records the provenance of both values (the
+//! seed-era `CACHE_TILE` sweep, and the rationale plus pending measured
+//! sweep for `TILE_LANES`).
+
+/// Cache-blocking tile edge (elements) for 2D-transpose copies.
+///
+/// Swept in the §Perf pass (EXPERIMENTS.md §Perf): on the CI host 32
+/// beats 16/64/128 at the large-pencil shapes — 32×32 complex f64 tiles
+/// are 16 KiB and fit L1d, while 64² spills.
+pub const CACHE_TILE: usize = 32;
+
+/// Lane width `W` of the blocked FFT kernels: every butterfly is applied
+/// to `W` independent lines at once, with the lane loop innermost and
+/// unit-stride so it autovectorizes, and each twiddle loaded once per
+/// butterfly instead of once per line.
+///
+/// 8 complex-f64 lanes are 128 bytes (two cache lines) per tile row; the
+/// f32 instantiation halves that — enough reuse per twiddle load without
+/// the `[n][W]` tile spilling L2 at pencil line lengths. EXPERIMENTS.md
+/// §Perf records the rationale and holds the slot for a measured 4/8/16
+/// sweep; this constant is the single knob that sweep will turn.
+pub const TILE_LANES: usize = 8;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_width_divides_cache_tile() {
+        // The strided gather copies `TILE_LANES`-wide rows inside
+        // `CACHE_TILE`-deep blocks; the blocking arithmetic assumes the
+        // lane width is no wider than a cache tile edge.
+        assert!(TILE_LANES <= CACHE_TILE);
+        assert!(CACHE_TILE % TILE_LANES == 0);
+    }
+
+    #[test]
+    fn constants_are_powers_of_two() {
+        assert!(CACHE_TILE.is_power_of_two());
+        assert!(TILE_LANES.is_power_of_two());
+    }
+}

@@ -14,10 +14,13 @@
 
 use crate::fft::{Complex, Real};
 
-/// Cache-blocking tile edge (elements). Swept in the §Perf pass
-/// (EXPERIMENTS.md §Perf): on this host 32 beats 16/64/128 at the
-/// large-pencil shapes (32×32 complex f64 = 16 KiB fits L1d; 64² spills).
-pub const TILE: usize = 32;
+/// Cache-blocking tile edge (elements) — the shared
+/// [`CACHE_TILE`](crate::tile::CACHE_TILE) constant, re-exported under the
+/// historical name. The same knob blocks both these pack kernels and the
+/// blocked FFT driver's tile gather/scatter (`fft::block`), so a tuning
+/// pass has a single place to sweep; see EXPERIMENTS.md §Perf for the
+/// measured 16/32/64/128 comparison.
+pub use crate::tile::CACHE_TILE as TILE;
 
 /// Pack the X→Y send block for one ROW peer owning spectral-x range
 /// `[x0, x1)`. Input is the spectral X-pencil `[nz][ny][h]`; output buffer

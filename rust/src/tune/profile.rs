@@ -54,8 +54,13 @@ impl MachineProfile {
     /// thread-fabric `alltoall` for the exchange bandwidth — the same
     /// kernels behind the `calib_local_fft`, `calib_pack` and
     /// `calib_alltoall` benches, run at reduced size (a few ms total).
+    ///
+    /// The FFT probe batch (20 lines) deliberately covers two full
+    /// [`crate::tile::TILE_LANES`]-wide tiles of the blocked driver plus a
+    /// ragged scalar tail, so F is measured over the same blocked/tail mix
+    /// the pencil stages run.
     pub fn calibrated_quick() -> Self {
-        Self::calibrated_with(128, 8, 8, 48, 2, 8 * 1024)
+        Self::calibrated_with(128, 20, 8, 48, 2, 8 * 1024)
     }
 
     /// Calibrate with explicit probe sizes (FFT length/batch, pack

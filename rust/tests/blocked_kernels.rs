@@ -1,0 +1,298 @@
+//! Property tests for the blocked (tile-batched) execution layer: every
+//! blocked path — contiguous batches, strided batches, ragged edge tiles
+//! (`count % W != 0`), sizes with large prime factors (Bluestein) — is
+//! held against the naive O(n²) DFT oracle in both precisions, and the
+//! blocked driver must satisfy forward∘backward ≡ n·identity.
+
+use p3dfft::fft::{naive_dft, C2cPlan, C2rPlan, Complex, Direction, Dct1Plan, Dst1Plan, R2cPlan};
+use p3dfft::tile::TILE_LANES;
+use p3dfft::util::quickprop::{check, Config};
+use p3dfft::util::SplitMix64;
+
+/// Line lengths covering every algorithm class: powers of two (Stockham),
+/// smooth composites (mixed radix, incl. the generic radix-5 butterfly
+/// via 250 = 2·5³), and sizes with prime factors > 13 (Bluestein:
+/// 34 = 2·17, 97 prime); 1 is the degenerate identity.
+const SIZES: &[usize] = &[1, 2, 8, 12, 34, 60, 97, 128, 250];
+
+fn rand_lines(rng: &mut SplitMix64, n: usize, count: usize) -> Vec<Vec<Complex<f64>>> {
+    (0..count)
+        .map(|_| (0..n).map(|_| Complex::new(rng.next_normal(), rng.next_normal())).collect())
+        .collect()
+}
+
+fn close(g: Complex<f64>, e: Complex<f64>, tol: f64) -> bool {
+    (g.re - e.re).abs() < tol && (g.im - e.im).abs() < tol
+}
+
+#[test]
+fn prop_blocked_batch_matches_naive() {
+    let w = TILE_LANES;
+    check(&Config { cases: 24, base_seed: 0xB10C }, "blocked batch vs naive", |rng| {
+        let n = SIZES[rng.next_below(SIZES.len() as u64) as usize];
+        // Bias batches around tile boundaries: full tiles, W±1, ragged.
+        let batch = match rng.next_below(4) {
+            0 => rng.next_range(1, w as u64) as usize,
+            1 => w,
+            2 => w + 1 + rng.next_below(w as u64) as usize,
+            _ => 2 * w + rng.next_below(2 * w as u64) as usize,
+        };
+        let dir = if rng.next_below(2) == 0 { Direction::Forward } else { Direction::Inverse };
+        let lines = rand_lines(rng, n, batch);
+        let plan = C2cPlan::new(n, dir);
+        let mut data: Vec<Complex<f64>> = lines.iter().flatten().copied().collect();
+        let mut scratch = vec![Complex::zero(); plan.scratch_len()];
+        plan.execute_batch(&mut data, &mut scratch);
+        let tol = 1e-7 * n as f64;
+        for (b, line) in lines.iter().enumerate() {
+            let expect = naive_dft(line, dir.is_inverse());
+            for (k, e) in expect.iter().enumerate() {
+                let g = data[b * n + k];
+                if !close(g, *e, tol) {
+                    return Err(format!("n={n} batch={batch} line={b} k={k}: {g} vs {e}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_blocked_strided_matches_naive() {
+    let w = TILE_LANES;
+    check(&Config { cases: 24, base_seed: 0x51DE }, "blocked strided vs naive", |rng| {
+        let n = SIZES[rng.next_below(SIZES.len() as u64) as usize];
+        let count = rng.next_range(1, 3 * w as u64) as usize;
+        // stride >= count: the column-major contract (stride == count is
+        // the fully-interleaved plane the XYZ stages transform).
+        let stride = count + rng.next_below(4) as usize;
+        let lines = rand_lines(rng, n, count);
+        let plan = C2cPlan::new(n, Direction::Forward);
+        let mut data = vec![Complex::new(7.5, -7.5); n * stride];
+        for (b, line) in lines.iter().enumerate() {
+            for (k, &v) in line.iter().enumerate() {
+                data[b + k * stride] = v;
+            }
+        }
+        let untouched = data.clone();
+        let mut scratch = vec![Complex::zero(); plan.scratch_len()];
+        plan.execute_strided(&mut data, count, stride, &mut scratch);
+        let tol = 1e-7 * n as f64;
+        for (b, line) in lines.iter().enumerate() {
+            let expect = naive_dft(line, false);
+            for (k, e) in expect.iter().enumerate() {
+                let g = data[b + k * stride];
+                if !close(g, *e, tol) {
+                    return Err(format!("n={n} count={count} stride={stride} b={b} k={k}"));
+                }
+            }
+        }
+        // Columns count..stride do not belong to any line; the padded
+        // edge-tile scatter must leave them untouched.
+        for k in 0..n {
+            for b in count..stride {
+                if data[b + k * stride] != untouched[b + k * stride] {
+                    return Err(format!("padding column {b} clobbered at row {k}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_forward_backward_is_n_identity_through_blocked_driver() {
+    let w = TILE_LANES;
+    check(&Config { cases: 16, base_seed: 0x1DE1 }, "fwd∘bwd ≡ n·id (blocked)", |rng| {
+        let n = SIZES[rng.next_below(SIZES.len() as u64) as usize];
+        let batch = rng.next_range(1, 2 * w as u64 + 3) as usize;
+        let lines = rand_lines(rng, n, batch);
+        let fwd = C2cPlan::new(n, Direction::Forward);
+        let bwd = C2cPlan::new(n, Direction::Inverse);
+        let mut data: Vec<Complex<f64>> = lines.iter().flatten().copied().collect();
+        let mut scratch = vec![Complex::zero(); fwd.scratch_len().max(bwd.scratch_len())];
+        fwd.execute_batch(&mut data, &mut scratch);
+        bwd.execute_batch(&mut data, &mut scratch);
+        let tol = 1e-8 * n as f64;
+        for (b, line) in lines.iter().enumerate() {
+            for (k, e) in line.iter().enumerate() {
+                let g = data[b * n + k].scale(1.0 / n as f64);
+                if !close(g, *e, tol) {
+                    return Err(format!("n={n} batch={batch} line={b} k={k}: {g} vs {e}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_strided_roundtrip_is_n_identity() {
+    let w = TILE_LANES;
+    check(&Config { cases: 12, base_seed: 0x51D2 }, "strided fwd∘bwd ≡ n·id", |rng| {
+        let n = SIZES[1 + rng.next_below(SIZES.len() as u64 - 1) as usize];
+        let count = rng.next_range(1, 2 * w as u64 + 3) as usize;
+        let lines = rand_lines(rng, n, count);
+        let fwd = C2cPlan::new(n, Direction::Forward);
+        let bwd = C2cPlan::new(n, Direction::Inverse);
+        let mut data = vec![Complex::zero(); n * count];
+        for (b, line) in lines.iter().enumerate() {
+            for (k, &v) in line.iter().enumerate() {
+                data[b + k * count] = v;
+            }
+        }
+        let mut scratch = vec![Complex::zero(); fwd.scratch_len().max(bwd.scratch_len())];
+        fwd.execute_strided(&mut data, count, count, &mut scratch);
+        bwd.execute_strided(&mut data, count, count, &mut scratch);
+        let tol = 1e-8 * n as f64;
+        for (b, line) in lines.iter().enumerate() {
+            for (k, e) in line.iter().enumerate() {
+                let g = data[b + k * count].scale(1.0 / n as f64);
+                if !close(g, *e, tol) {
+                    return Err(format!("n={n} count={count} b={b} k={k}: {g} vs {e}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_blocked_batch_f32_matches_f64_oracle() {
+    let w = TILE_LANES;
+    check(&Config { cases: 12, base_seed: 0xF32 }, "blocked f32 vs f64 oracle", |rng| {
+        let n = SIZES[rng.next_below(SIZES.len() as u64) as usize];
+        let batch = rng.next_range(1, 2 * w as u64 + 2) as usize;
+        let lines = rand_lines(rng, n, batch);
+        let plan = C2cPlan::<f32>::new(n, Direction::Forward);
+        let mut data: Vec<Complex<f32>> =
+            lines.iter().flatten().map(|c| c.cast::<f32>()).collect();
+        let mut scratch = vec![Complex::zero(); plan.scratch_len()];
+        plan.execute_batch(&mut data, &mut scratch);
+        // f32 accumulates error fast at the Bluestein sizes; a loose
+        // absolute tolerance on unit-normal inputs still pins the path.
+        let tol = 2e-2 * n as f64;
+        for (b, line) in lines.iter().enumerate() {
+            let expect = naive_dft(line, false);
+            for (k, e) in expect.iter().enumerate() {
+                let g: Complex<f64> = data[b * n + k].cast();
+                if !close(g, *e, tol) {
+                    return Err(format!("n={n} batch={batch} line={b} k={k}: {g} vs {e}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_r2c_c2r_blocked_batch_matches_per_line() {
+    let w = TILE_LANES;
+    check(&Config { cases: 20, base_seed: 0x52C }, "r2c/c2r blocked vs per-line", |rng| {
+        // Even lengths take the blocked half-complex path; odd lengths
+        // pin the scalar fallback.
+        let n = rng.next_range(2, 80) as usize;
+        let batch = rng.next_range(1, 2 * w as u64 + 3) as usize;
+        let mut input = vec![0.0f64; batch * n];
+        for v in input.iter_mut() {
+            *v = rng.next_normal();
+        }
+        let fwd = R2cPlan::<f64>::new(n);
+        let bwd = C2rPlan::<f64>::new(n);
+        let h = fwd.out_len();
+        let mut out = vec![Complex::zero(); batch * h];
+        let mut scratch = vec![Complex::zero(); fwd.scratch_len().max(bwd.scratch_len())];
+        fwd.execute_batch(&input, &mut out, &mut scratch);
+        // Per-line reference through the scalar path.
+        let tol = 1e-9 * n as f64;
+        let mut single = vec![Complex::zero(); h];
+        for b in 0..batch {
+            fwd.execute(&input[b * n..(b + 1) * n], &mut single, &mut scratch);
+            for (k, e) in single.iter().enumerate() {
+                let g = out[b * h + k];
+                if !close(g, *e, tol) {
+                    return Err(format!("r2c n={n} batch={batch} b={b} k={k}: {g} vs {e}"));
+                }
+            }
+        }
+        // C2R roundtrip: blocked batch inverse must give n · input.
+        let mut back = vec![0.0f64; batch * n];
+        bwd.execute_batch(&out, &mut back, &mut scratch);
+        for (i, (g, e)) in back.iter().zip(&input).enumerate() {
+            if (g / n as f64 - e).abs() > 1e-9 {
+                return Err(format!("c2r roundtrip n={n} batch={batch} idx={i}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dct_dst_blocked_complex_batch_matches_per_line() {
+    let w = TILE_LANES;
+    check(&Config { cases: 16, base_seed: 0xDC7 }, "dct/dst blocked vs per-line", |rng| {
+        let n = rng.next_range(2, 40) as usize;
+        let batch = rng.next_range(1, 2 * w as u64 + 3) as usize;
+        let lines = rand_lines(rng, n, batch);
+        let flat: Vec<Complex<f64>> = lines.iter().flatten().copied().collect();
+
+        let dct = Dct1Plan::<f64>::new(n);
+        let mut blocked = flat.clone();
+        let mut rs = vec![0.0f64; n];
+        let mut scratch = vec![Complex::zero(); dct.scratch_len()];
+        dct.execute_complex_batch(&mut blocked, &mut rs, &mut scratch);
+        for (b, line) in lines.iter().enumerate() {
+            let mut single = line.clone();
+            dct.execute_complex_batch(&mut single, &mut rs, &mut scratch);
+            for (k, e) in single.iter().enumerate() {
+                let g = blocked[b * n + k];
+                if !close(g, *e, 1e-9 * n as f64) {
+                    return Err(format!("dct n={n} batch={batch} b={b} k={k}: {g} vs {e}"));
+                }
+            }
+        }
+
+        let dst = Dst1Plan::<f64>::new(n);
+        let mut blocked = flat;
+        let mut scratch = vec![Complex::zero(); dst.scratch_len()];
+        dst.execute_complex_batch(&mut blocked, &mut rs, &mut scratch);
+        for (b, line) in lines.iter().enumerate() {
+            let mut single = line.clone();
+            dst.execute_complex_batch(&mut single, &mut rs, &mut scratch);
+            for (k, e) in single.iter().enumerate() {
+                let g = blocked[b * n + k];
+                if !close(g, *e, 1e-9 * n as f64) {
+                    return Err(format!("dst n={n} batch={batch} b={b} k={k}: {g} vs {e}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn blocked_and_scalar_paths_are_bit_identical() {
+    // The blocked kernels apply per-lane arithmetic in exactly the order
+    // of the scalar kernels, so a line transformed inside a tile must be
+    // *bitwise* equal to the same line transformed alone — the invariant
+    // that keeps chunked-overlap outputs identical across chunk counts
+    // (overlap_pipeline.rs) now that slabs tile differently per k.
+    let w = TILE_LANES;
+    for &n in &[8usize, 12, 97] {
+        let mut rng = SplitMix64::new(n as u64 * 31);
+        let lines = rand_lines(&mut rng, n, 2 * w + 3);
+        let plan = C2cPlan::new(n, Direction::Forward);
+        let mut data: Vec<Complex<f64>> = lines.iter().flatten().copied().collect();
+        let mut scratch = vec![Complex::zero(); plan.scratch_len()];
+        plan.execute_batch(&mut data, &mut scratch);
+        for (b, line) in lines.iter().enumerate() {
+            let mut single = line.clone();
+            plan.execute(&mut single, &mut scratch);
+            assert_eq!(
+                &data[b * n..(b + 1) * n],
+                &single[..],
+                "n={n} line {b}: blocked and scalar results diverge"
+            );
+        }
+    }
+}
