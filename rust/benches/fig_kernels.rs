@@ -1,20 +1,31 @@
 //! Kernel-throughput bench: lines/sec of the 1D execution layer for
-//! contiguous and strided batches at representative pencil shapes,
-//! blocked tile driver vs the seed's per-line execution.
+//! contiguous and strided batches at representative pencil shapes —
+//! three-way: per-line scalar execution vs the blocked tile driver on the
+//! portable backend vs the blocked driver on the detected SIMD backend.
 //!
 //! The per-line baselines are reproduced locally (scalar `execute` per
 //! contiguous line; element-by-element gather/scatter around a scalar
 //! `execute` for column-major lines — the exact loop the seed's
 //! `execute_strided` ran) so the before/after is measured in one binary
-//! on one host. Feeds EXPERIMENTS.md §Perf; in CI the quick-mode table is
-//! appended to the `BENCH_ci.json` artifact so per-PR kernel throughput
-//! is tracked alongside the fig03/fig_overlap/fig_tune tables.
+//! on one host. The portable-vs-SIMD pair isolates the explicit-SIMD win
+//! from the blocking win. Feeds EXPERIMENTS.md §Perf; in CI the
+//! quick-mode table is appended to the `BENCH_ci.json` artifact so
+//! per-PR kernel throughput is tracked alongside the
+//! fig03/fig_overlap/fig_tune tables.
+//!
+//! Provenance: a leading `meta` row records the detected ISA, the backend
+//! the SIMD series ran on, and the compiled lane width `W`
+//! ([`p3dfft::tile::TILE_LANES`]). The CI lane sweep rebuilds this bench
+//! with `--features tile-lanes-4` / `tile-lanes-16` and appends to the
+//! same JSON, so the sweep points are distinguished by their `lanes`
+//! column.
 //!
 //! `--quick` / `P3DFFT_BENCH_QUICK=1` shrinks the sweep for the CI
 //! bench-smoke job; `P3DFFT_BENCH_JSON=PATH` appends the table.
 
 use p3dfft::bench::{emit_json, measure, quick_mode, FigureRow, MeasureOpts, Table};
-use p3dfft::fft::{C2cPlan, Complex, Direction};
+use p3dfft::fft::{isa_summary, Backend, C2cPlan, Complex, Direction};
+use p3dfft::tile::TILE_LANES;
 use p3dfft::util::SplitMix64;
 
 /// The seed's per-line strided execution: gather each column-major line
@@ -56,30 +67,48 @@ fn main() {
         &[(128, 512), (256, 256), (512, 256), (1024, 120), (360, 128), (509, 64)]
     };
 
+    let detected = Backend::detect();
     let mut table = Table::new(format!(
-        "fig_kernels: 1D execution layer, lines/sec (blocked tile driver vs per-line), {} iters",
+        "fig_kernels: 1D execution layer, lines/sec (per-line vs blocked-portable vs \
+         blocked-{}), W={}, {} iters",
+        detected.name(),
+        TILE_LANES,
         opts.iterations
     ));
+    // Provenance row: detected ISA, the backend behind the `simd_mlps`
+    // series, and the compiled lane width (the CI sweep's x-axis).
+    table.push(
+        FigureRow::new("meta", format!("isa={} backend={}", isa_summary(), detected.name()))
+            .col("lanes", TILE_LANES as f64),
+    );
     for &(n, count) in shapes {
-        let plan = C2cPlan::<f64>::new(n, Direction::Forward);
-        let mut scratch = vec![Complex::<f64>::zero(); plan.scratch_len()];
+        let portable = C2cPlan::<f64>::with_backend(n, Direction::Forward, Backend::Portable);
+        let simd = C2cPlan::<f64>::with_backend(n, Direction::Forward, detected);
+        let mut scratch =
+            vec![Complex::<f64>::zero(); portable.scratch_len().max(simd.scratch_len())];
         let x = format!("n={n} lines={count}");
 
         // Contiguous back-to-back lines (the STRIDE1 pencil shape).
         let mut data = rand_data(n * count, n as u64);
         let s_perline = measure(opts, || {
             for line in data.chunks_exact_mut(n) {
-                plan.execute(line, &mut scratch);
+                portable.execute(line, &mut scratch);
             }
         });
-        let s_blocked = measure(opts, || {
-            plan.execute_batch(&mut data, &mut scratch);
+        let s_portable = measure(opts, || {
+            portable.execute_batch(&mut data, &mut scratch);
+        });
+        let s_simd = measure(opts, || {
+            simd.execute_batch(&mut data, &mut scratch);
         });
         table.push(
             FigureRow::new("contiguous", x.clone())
                 .col("perline_mlps", count as f64 / s_perline.median / 1e6)
-                .col("blocked_mlps", count as f64 / s_blocked.median / 1e6)
-                .col("speedup", s_perline.median / s_blocked.median),
+                .col("portable_mlps", count as f64 / s_portable.median / 1e6)
+                .col("simd_mlps", count as f64 / s_simd.median / 1e6)
+                .col("speedup_blocked", s_perline.median / s_portable.median)
+                .col("speedup_simd", s_perline.median / s_simd.median)
+                .col("lanes", TILE_LANES as f64),
         );
 
         // Column-major lines, stride == count (the XYZ-order plane shape
@@ -87,19 +116,29 @@ fn main() {
         let mut data = rand_data(n * count, n as u64 + 1);
         let mut line = vec![Complex::<f64>::zero(); n];
         let s_perline = measure(opts, || {
-            execute_strided_perline(&plan, &mut data, count, count, &mut line, &mut scratch);
+            execute_strided_perline(&portable, &mut data, count, count, &mut line, &mut scratch);
         });
-        let s_blocked = measure(opts, || {
-            plan.execute_strided(&mut data, count, count, &mut scratch);
+        let s_portable = measure(opts, || {
+            portable.execute_strided(&mut data, count, count, &mut scratch);
+        });
+        let s_simd = measure(opts, || {
+            simd.execute_strided(&mut data, count, count, &mut scratch);
         });
         table.push(
             FigureRow::new("strided", x)
                 .col("perline_mlps", count as f64 / s_perline.median / 1e6)
-                .col("blocked_mlps", count as f64 / s_blocked.median / 1e6)
-                .col("speedup", s_perline.median / s_blocked.median),
+                .col("portable_mlps", count as f64 / s_portable.median / 1e6)
+                .col("simd_mlps", count as f64 / s_simd.median / 1e6)
+                .col("speedup_blocked", s_perline.median / s_portable.median)
+                .col("speedup_simd", s_perline.median / s_simd.median)
+                .col("lanes", TILE_LANES as f64),
         );
     }
     print!("{}", table.render());
     emit_json("fig_kernels", &table);
-    println!("(mlps = million lines/sec; speedup = per-line median / blocked median)");
+    println!(
+        "(mlps = million lines/sec; speedup_* = per-line median / blocked median; \
+         simd series backend: {})",
+        detected.name()
+    );
 }

@@ -1,17 +1,18 @@
-//! Blocked (multi-line) FFT kernels: every butterfly applied to
-//! [`TILE_LANES`] independent lines at once.
+//! Tile gather/scatter for the blocked (multi-line) FFT drivers: moving
+//! `W =` [`TILE_LANES`] lines between pencil storage and the
+//! lane-interleaved `[n][W]` tile (element `(k, lane)` at
+//! `tile[k * W + lane]`).
 //!
 //! The 1D FFT at pencil line lengths is memory-bound (the premise of the
 //! paper's §3.3 STRIDE1 discussion), so the per-line kernels in
 //! [`super::stockham`] / [`super::mixed`] leave throughput on the table
 //! twice over: each twiddle is re-loaded for every line, and the butterfly
-//! bodies are scalar. The kernels here operate on a **lane-interleaved
-//! tile** — a `[n][W]` structure-of-arrays slab with `W = TILE_LANES`,
-//! element `(k, lane)` at `tile[k * W + lane]` — so the innermost loop
-//! runs unit-stride across the `W` lanes: each twiddle is loaded once per
-//! butterfly for `W` lines and the lane loop autovectorizes. This is the
-//! batched, cache-blocked execution style of OpenFFT (arXiv:1501.07350)
-//! and AccFFT (arXiv:1506.07933) applied to our serial substrate; see
+//! bodies are scalar. The blocked kernels — dispatched per plan between
+//! the portable lane loops and the explicit SIMD backends, see
+//! [`super::simd`] — transform all `W` lanes of a tile at once; this
+//! module owns the data movement that feeds them. This is the batched,
+//! cache-blocked execution style of OpenFFT (arXiv:1501.07350) and AccFFT
+//! (arXiv:1506.07933) applied to our serial substrate; see
 //! `EXPERIMENTS.md` §Perf for the measured before/after.
 //!
 //! The tile is always full width: callers with a ragged tail (`count % W
@@ -20,256 +21,24 @@
 //! (strided lines, where a scalar pass would reintroduce the per-element
 //! gather this module exists to kill) — see the drivers in
 //! [`super::plan`].
-//!
-//! Per-lane arithmetic is performed in exactly the same order as the
-//! scalar kernels, so blocked and per-line execution agree to the last
-//! bit; the property tests in `tests/blocked_kernels.rs` hold every
-//! blocked path against the naive O(n²) DFT oracle.
 
 use crate::tile::{CACHE_TILE, TILE_LANES};
 
 use super::complex::{Complex, Real};
-use super::mixed::MAX_RADIX;
 
-/// Blocked Stockham autosort FFT over a `[n][W]` tile (`W =`
-/// [`TILE_LANES`], `n = data.len() / W` a power of two).
-///
-/// Mirrors [`super::stockham::stockham_radix2`] stage for stage — radix-4
-/// passes wherever the remaining sub-length divides by 4, one radix-2
-/// stage otherwise — but each butterfly body is a unit-stride loop over
-/// the `W` lanes. `tw` is the table from
-/// [`super::stockham::twiddle_table`] for this `n` and direction;
-/// `scratch.len() >= n * W`.
-pub fn stockham_tile<T: Real>(
-    data: &mut [Complex<T>],
-    scratch: &mut [Complex<T>],
-    tw: &[Complex<T>],
-) {
-    const W: usize = TILE_LANES;
-    let n = data.len() / W;
-    debug_assert_eq!(data.len(), n * W);
-    debug_assert!(n.is_power_of_two());
-    debug_assert!(scratch.len() >= n * W);
-    debug_assert!(tw.len() >= n / 2);
-    if n <= 1 {
-        return;
-    }
-    // Direction is encoded in the table: w[n/4] = ∓i (see the scalar
-    // kernel for the n == 2 caveat).
-    let rot = if n >= 4 { tw[n / 4] } else { Complex::zero() };
-    let forward = rot.im <= T::zero();
-
-    let scratch = &mut scratch[..n * W];
-    let mut len = n; // remaining sub-problem length
-    let mut m = 1; // contiguous run length
-    let mut from_data = true;
-
-    while len > 1 {
-        let (a, b): (&[Complex<T>], &mut [Complex<T>]) = if from_data {
-            (&*data, &mut *scratch)
-        } else {
-            (&*scratch, &mut *data)
-        };
-        if len % 4 == 0 {
-            let l = len / 4;
-            let tstride = n / len;
-            for j in 0..l {
-                let t1 = tw[j * tstride];
-                let t2 = t1 * t1;
-                let t3 = t1 * t2;
-                for k in 0..m {
-                    // Logical indices of the scalar kernel, scaled by W.
-                    let i0 = (m * j + k) * W;
-                    let i1 = (m * (j + l) + k) * W;
-                    let i2 = (m * (j + 2 * l) + k) * W;
-                    let i3 = (m * (j + 3 * l) + k) * W;
-                    let o = (4 * m * j + k) * W;
-                    for lane in 0..W {
-                        let c0 = a[i0 + lane];
-                        let c1 = a[i1 + lane];
-                        let c2 = a[i2 + lane];
-                        let c3 = a[i3 + lane];
-                        let d0 = c0 + c2;
-                        let d1 = c0 - c2;
-                        let d2 = c1 + c3;
-                        let e3 = c1 - c3;
-                        // ∓i rotation per direction.
-                        let d3 = if forward {
-                            Complex::new(e3.im, -e3.re)
-                        } else {
-                            Complex::new(-e3.im, e3.re)
-                        };
-                        b[o + lane] = d0 + d2;
-                        b[o + m * W + lane] = (d1 + d3) * t1;
-                        b[o + 2 * m * W + lane] = (d0 - d2) * t2;
-                        b[o + 3 * m * W + lane] = (d1 - d3) * t3;
-                    }
-                }
-            }
-            len = l;
-            m *= 4;
-        } else {
-            let l = len / 2;
-            let tstride = n / len;
-            for j in 0..l {
-                let w = tw[j * tstride];
-                for k in 0..m {
-                    let i0 = (m * j + k) * W;
-                    let i1 = (m * (j + l) + k) * W;
-                    let o = (2 * m * j + k) * W;
-                    for lane in 0..W {
-                        let c0 = a[i0 + lane];
-                        let c1 = a[i1 + lane];
-                        b[o + lane] = c0 + c1;
-                        b[o + m * W + lane] = (c0 - c1) * w;
-                    }
-                }
-            }
-            len = l;
-            m *= 2;
-        }
-        from_data = !from_data;
-    }
-
-    if !from_data {
-        data.copy_from_slice(scratch);
-    }
-}
-
-/// Blocked mixed-radix FFT: transforms the `[n][W]` tile `src` into `dst`
-/// (`n = src.len() / W`). `factors` is the ascending prime factorisation
-/// of `n`; `tw` the table from [`super::mixed::full_twiddle_table`].
-///
-/// Same decimation-in-time recursion as [`super::mixed::mixed_radix_fft`],
-/// with every per-element operation widened to a unit-stride lane loop.
-pub fn mixed_radix_tile<T: Real>(
-    src: &[Complex<T>],
-    dst: &mut [Complex<T>],
-    factors: &[usize],
-    tw: &[Complex<T>],
-) {
-    const W: usize = TILE_LANES;
-    let n = src.len() / W;
-    debug_assert_eq!(src.len(), n * W);
-    debug_assert_eq!(dst.len(), n * W);
-    debug_assert_eq!(factors.iter().product::<usize>().max(1), n);
-    rec_tile(src, 1, dst, n, factors, tw, tw.len());
-}
-
-/// Recursive worker: FFT of `n` logical elements read from `src` at
-/// logical stride `stride` (lane blocks of `W`), written contiguously to
-/// `dst[..n * W]`.
-fn rec_tile<T: Real>(
-    src: &[Complex<T>],
-    stride: usize,
-    dst: &mut [Complex<T>],
-    n: usize,
-    factors: &[usize],
-    tw: &[Complex<T>],
-    top_n: usize,
-) {
-    const W: usize = TILE_LANES;
-    if n == 1 {
-        dst[..W].copy_from_slice(&src[..W]);
-        return;
-    }
-    let r = factors[0];
-    let m = n / r;
-
-    for j in 0..r {
-        rec_tile(
-            &src[j * stride * W..],
-            stride * r,
-            &mut dst[j * m * W..(j + 1) * m * W],
-            m,
-            &factors[1..],
-            tw,
-            top_n,
-        );
-    }
-
-    let tsub = top_n / n; // w_n^x == tw[x * tsub]
-    let tr = top_n / r; // w_r^x == tw[x * tr]
-    match r {
-        2 => {
-            for k in 0..m {
-                let twk = tw[k * tsub];
-                for lane in 0..W {
-                    let a = dst[k * W + lane];
-                    let b = dst[(m + k) * W + lane] * twk;
-                    dst[k * W + lane] = a + b;
-                    dst[(m + k) * W + lane] = a - b;
-                }
-            }
-        }
-        3 => {
-            let w3 = tw[tr];
-            let w3sq = tw[2 * tr];
-            for k in 0..m {
-                let t1 = tw[k * tsub];
-                let t2 = tw[2 * k * tsub];
-                for lane in 0..W {
-                    let a = dst[k * W + lane];
-                    let b = dst[(m + k) * W + lane] * t1;
-                    let c = dst[(2 * m + k) * W + lane] * t2;
-                    dst[k * W + lane] = a + b + c;
-                    dst[(m + k) * W + lane] = a + b * w3 + c * w3sq;
-                    dst[(2 * m + k) * W + lane] = a + b * w3sq + c * w3;
-                }
-            }
-        }
-        4 => {
-            let w4 = tw[tr]; // exp(sign·2πi/4) = (0, ±1)
-            for k in 0..m {
-                let t1 = tw[k * tsub];
-                let t2 = tw[2 * k * tsub];
-                let t3 = tw[3 * k * tsub];
-                for lane in 0..W {
-                    let a = dst[k * W + lane];
-                    let b = dst[(m + k) * W + lane] * t1;
-                    let c = dst[(2 * m + k) * W + lane] * t2;
-                    let d = dst[(3 * m + k) * W + lane] * t3;
-                    let apc = a + c;
-                    let amc = a - c;
-                    let bpd = b + d;
-                    let bmd = (b - d) * w4;
-                    dst[k * W + lane] = apc + bpd;
-                    dst[(m + k) * W + lane] = amc + bmd;
-                    dst[(2 * m + k) * W + lane] = apc - bpd;
-                    dst[(3 * m + k) * W + lane] = amc - bmd;
-                }
-            }
-        }
-        _ => {
-            debug_assert!(r <= MAX_RADIX);
-            let mut t = [[Complex::<T>::zero(); W]; MAX_RADIX];
-            let mut acc = [Complex::<T>::zero(); W];
-            for k in 0..m {
-                for (j, tj) in t.iter_mut().enumerate().take(r) {
-                    let twj = tw[(j * k) * tsub];
-                    for lane in 0..W {
-                        tj[lane] = dst[(j * m + k) * W + lane] * twj;
-                    }
-                }
-                for q in 0..r {
-                    acc.copy_from_slice(&t[0]);
-                    for (j, tj) in t.iter().enumerate().take(r).skip(1) {
-                        let wq = tw[(j * q % r) * tr];
-                        for lane in 0..W {
-                            acc[lane] += tj[lane] * wq;
-                        }
-                    }
-                    dst[(q * m + k) * W..(q * m + k) * W + W].copy_from_slice(&acc);
-                }
-            }
-        }
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Tile gather/scatter: moving W lines between pencil storage and the
-// lane-interleaved tile.
-// ---------------------------------------------------------------------------
+// The strided gather copies TILE_LANES-wide rows inside CACHE_TILE-deep
+// blocks, and the contiguous gather strip-mines lanes against CACHE_TILE
+// strips; both assume the lane width divides the cache tile edge. A
+// TILE_LANES sweep (e.g. the tile-lanes-16 feature) that breaks this must
+// fail at compile time, not corrupt a gather.
+const _: () = assert!(
+    TILE_LANES <= CACHE_TILE,
+    "TILE_LANES must not exceed CACHE_TILE (tile rows are gathered in CACHE_TILE strips)"
+);
+const _: () = assert!(
+    CACHE_TILE % TILE_LANES == 0,
+    "CACHE_TILE must be a multiple of TILE_LANES (strided gathers copy whole lane rows per strip)"
+);
 
 /// Gather [`TILE_LANES`] full contiguous lines of length `n` (line `b0 +
 /// lane` starts at `src[(b0 + lane) * n]`) into the `[n][W]` tile.
@@ -365,104 +134,9 @@ pub fn scatter_strided<T: Real>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fft::mixed::full_twiddle_table;
-    use crate::fft::stockham::{stockham_radix2, twiddle_table};
-    use crate::fft::{factorize, naive_dft};
     use crate::util::SplitMix64;
 
     const W: usize = TILE_LANES;
-
-    fn rand_lines(n: usize, count: usize, seed: u64) -> Vec<Vec<Complex<f64>>> {
-        (0..count)
-            .map(|i| {
-                let mut rng = SplitMix64::new(seed + i as u64);
-                (0..n).map(|_| Complex::new(rng.next_normal(), rng.next_normal())).collect()
-            })
-            .collect()
-    }
-
-    fn to_tile(lines: &[Vec<Complex<f64>>]) -> Vec<Complex<f64>> {
-        let n = lines[0].len();
-        let mut tile = vec![Complex::zero(); n * W];
-        for (lane, line) in lines.iter().enumerate() {
-            for (k, &v) in line.iter().enumerate() {
-                tile[k * W + lane] = v;
-            }
-        }
-        tile
-    }
-
-    #[test]
-    fn stockham_tile_matches_scalar_per_lane() {
-        for n in [2usize, 4, 8, 64, 256] {
-            let lines = rand_lines(n, W, 10 + n as u64);
-            let mut tile = to_tile(&lines);
-            let tw = twiddle_table(n, false);
-            let mut scratch = vec![Complex::zero(); n * W];
-            stockham_tile(&mut tile, &mut scratch, &tw);
-            for (lane, line) in lines.iter().enumerate() {
-                let mut expect = line.clone();
-                let mut s = vec![Complex::zero(); n];
-                stockham_radix2(&mut expect, &mut s, &tw);
-                for k in 0..n {
-                    let g = tile[k * W + lane];
-                    let e = expect[k];
-                    assert!(
-                        (g.re - e.re).abs() < 1e-12 * n as f64
-                            && (g.im - e.im).abs() < 1e-12 * n as f64,
-                        "n={n} lane={lane} k={k}"
-                    );
-                }
-            }
-        }
-    }
-
-    #[test]
-    fn mixed_tile_matches_naive_per_lane() {
-        for n in [1usize, 6, 12, 60, 144] {
-            let lines = rand_lines(n, W, 99 + n as u64);
-            let tile = to_tile(&lines);
-            let mut dst = vec![Complex::zero(); n * W];
-            let tw = full_twiddle_table(n, false);
-            mixed_radix_tile(&tile, &mut dst, &factorize(n), &tw);
-            for (lane, line) in lines.iter().enumerate() {
-                let expect = naive_dft(line, false);
-                for k in 0..n {
-                    let g = dst[k * W + lane];
-                    let e = expect[k];
-                    assert!(
-                        (g.re - e.re).abs() < 1e-8 * n as f64
-                            && (g.im - e.im).abs() < 1e-8 * n as f64,
-                        "n={n} lane={lane} k={k}"
-                    );
-                }
-            }
-        }
-    }
-
-    #[test]
-    fn mixed_tile_generic_radix_path() {
-        // 11 · 13 exercises the generic (r > 4) lane butterflies.
-        for n in [11usize, 13, 143] {
-            let lines = rand_lines(n, W, 7 + n as u64);
-            let tile = to_tile(&lines);
-            let mut dst = vec![Complex::zero(); n * W];
-            let tw = full_twiddle_table(n, false);
-            mixed_radix_tile(&tile, &mut dst, &factorize(n), &tw);
-            for (lane, line) in lines.iter().enumerate() {
-                let expect = naive_dft(line, false);
-                for k in 0..n {
-                    let g = dst[k * W + lane];
-                    let e = expect[k];
-                    assert!(
-                        (g.re - e.re).abs() < 1e-8 * n as f64
-                            && (g.im - e.im).abs() < 1e-8 * n as f64,
-                        "n={n} lane={lane} k={k}"
-                    );
-                }
-            }
-        }
-    }
 
     #[test]
     fn gather_scatter_lines_roundtrip() {

@@ -13,9 +13,9 @@
 
 use crate::tile::TILE_LANES;
 
-use super::block::stockham_tile;
 use super::complex::{Complex, Real};
 use super::factor::next_pow2;
+use super::simd::{self, Backend};
 use super::stockham::{stockham_radix2, twiddle_table};
 
 /// Precomputed Bluestein machinery for one (n, direction).
@@ -30,10 +30,22 @@ pub struct BluesteinPlan<T: Real> {
     /// Twiddles for the inner pow-2 FFTs (forward + inverse).
     tw_fwd: Vec<Complex<T>>,
     tw_inv: Vec<Complex<T>>,
+    /// SIMD backend for the inner blocked FFTs (resolved at build). The
+    /// O(m) pointwise chirp/kernel-spectrum passes stay portable: they
+    /// are a sliver next to the two O(m log m) inner transforms, and
+    /// keeping them in one form keeps the bit-identity argument local to
+    /// the dispatched kernels.
+    backend: Backend,
 }
 
 impl<T: Real> BluesteinPlan<T> {
     pub fn new(n: usize, inverse: bool) -> Self {
+        Self::with_backend(n, inverse, Backend::detect())
+    }
+
+    /// Build with a forced SIMD backend for the inner FFTs (resolved to
+    /// an available one); see [`crate::fft::C2cPlan::with_backend`].
+    pub fn with_backend(n: usize, inverse: bool, backend: Backend) -> Self {
         assert!(n >= 1);
         let m = next_pow2(2 * n - 1);
         let sign = if inverse { T::one() } else { -T::one() };
@@ -59,7 +71,7 @@ impl<T: Real> BluesteinPlan<T> {
         }
         let mut scratch = vec![Complex::<T>::zero(); m];
         stockham_radix2(&mut b, &mut scratch, &tw_fwd);
-        BluesteinPlan { n, m, chirp, b_hat: b, tw_fwd, tw_inv }
+        BluesteinPlan { n, m, chirp, b_hat: b, tw_fwd, tw_inv, backend: backend.resolve() }
     }
 
     /// Scratch requirement for [`Self::execute`]: 2·m complex elements.
@@ -123,14 +135,14 @@ impl<T: Real> BluesteinPlan<T> {
         for v in a[n * W..].iter_mut() {
             *v = Complex::zero();
         }
-        stockham_tile(a, fft_scratch, &self.tw_fwd);
+        simd::stockham_tile(self.backend, a, fft_scratch, &self.tw_fwd);
         for j in 0..m {
             let bv = self.b_hat[j];
             for v in a[j * W..(j + 1) * W].iter_mut() {
                 *v *= bv;
             }
         }
-        stockham_tile(a, fft_scratch, &self.tw_inv);
+        simd::stockham_tile(self.backend, a, fft_scratch, &self.tw_inv);
         let inv_m = T::one() / T::from_usize(m).unwrap();
         for k in 0..n {
             let c = self.chirp[k];

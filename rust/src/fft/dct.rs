@@ -16,6 +16,7 @@ use crate::tile::{CACHE_TILE, TILE_LANES};
 
 use super::complex::{Complex, Real};
 use super::plan::{C2cPlan, Direction};
+use super::simd::Backend;
 
 /// Plan for a batched DCT-I of length n (n >= 2).
 #[derive(Debug, Clone)]
@@ -27,9 +28,16 @@ pub struct Dct1Plan<T: Real> {
 
 impl<T: Real> Dct1Plan<T> {
     pub fn new(n: usize) -> Self {
+        Self::with_backend(n, Backend::detect())
+    }
+
+    /// Build with a forced SIMD backend (resolved to an available one)
+    /// for the inner FFT; the O(n) extension build stays portable. See
+    /// [`C2cPlan::with_backend`].
+    pub fn with_backend(n: usize, backend: Backend) -> Self {
         assert!(n >= 2, "dct-i length must be >= 2");
         let ext = 2 * (n - 1).max(1);
-        Dct1Plan { n, ext, inner: C2cPlan::new(ext, Direction::Forward) }
+        Dct1Plan { n, ext, inner: C2cPlan::with_backend(ext, Direction::Forward, backend) }
     }
 
     pub fn len(&self) -> usize {

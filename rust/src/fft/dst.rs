@@ -14,6 +14,7 @@ use crate::tile::{CACHE_TILE, TILE_LANES};
 
 use super::complex::{Complex, Real};
 use super::plan::{C2cPlan, Direction};
+use super::simd::Backend;
 
 /// Plan for a batched DST-I of length n (n >= 1).
 #[derive(Debug, Clone)]
@@ -25,9 +26,16 @@ pub struct Dst1Plan<T: Real> {
 
 impl<T: Real> Dst1Plan<T> {
     pub fn new(n: usize) -> Self {
+        Self::with_backend(n, Backend::detect())
+    }
+
+    /// Build with a forced SIMD backend (resolved to an available one)
+    /// for the inner FFT; the O(n) extension build stays portable. See
+    /// [`C2cPlan::with_backend`].
+    pub fn with_backend(n: usize, backend: Backend) -> Self {
         assert!(n >= 1, "dst-i length must be >= 1");
         let ext = 2 * (n + 1);
-        Dst1Plan { n, ext, inner: C2cPlan::new(ext, Direction::Forward) }
+        Dst1Plan { n, ext, inner: C2cPlan::with_backend(ext, Direction::Forward, backend) }
     }
 
     pub fn len(&self) -> usize {

@@ -11,10 +11,15 @@
 //!   dimensions" claim;
 //! * [`bluestein`] — chirp-z fallback so *every* length, prime or not, is
 //!   supported in O(n log n);
-//! * [`block`] — blocked variants of all three kernels operating on
-//!   lane-interleaved `[n][W]` tiles, so every pencil stage transforms
+//! * [`block`] — gather/scatter between pencil storage and the
+//!   lane-interleaved `[n][W]` tiles the blocked kernels operate on, so
+//!   every pencil stage transforms
 //!   `W = `[`TILE_LANES`](crate::tile::TILE_LANES) lines per pass instead
 //!   of one (the serial hot path is memory-bound at pencil line lengths);
+//! * [`simd`] — the blocked tile kernels themselves, in a portable
+//!   per-lane form and an explicit AVX2 form, selected once per plan by
+//!   runtime CPU detection ([`Backend`]) with a bit-identity guarantee
+//!   across backends;
 //! * [`r2c`] — real-to-complex / complex-to-real transforms with the
 //!   half-complex packing of Table 1 (`(Nx+2)/2` complex outputs);
 //! * [`dct`] — DCT-I (Chebyshev) for the wall-bounded third dimension;
@@ -36,6 +41,7 @@ pub mod factor;
 pub mod mixed;
 pub mod plan;
 pub mod r2c;
+pub mod simd;
 pub mod stockham;
 
 pub use complex::{Complex, Real};
@@ -44,6 +50,7 @@ pub use dst::Dst1Plan;
 pub use factor::{factorize, is_pow2};
 pub use plan::{C2cPlan, Direction, PlanCache};
 pub use r2c::{C2rPlan, R2cPlan};
+pub use simd::{isa_summary, Backend};
 
 /// Naive O(n^2) DFT — the in-crate oracle every fast path is tested against.
 pub fn naive_dft<T: Real>(input: &[Complex<T>], inverse: bool) -> Vec<Complex<T>> {

@@ -8,13 +8,12 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::tile::TILE_LANES;
 
-use super::block::{
-    gather_lines, gather_strided, mixed_radix_tile, scatter_lines, scatter_strided, stockham_tile,
-};
+use super::block::{gather_lines, gather_strided, scatter_lines, scatter_strided};
 use super::bluestein::BluesteinPlan;
 use super::complex::{Complex, Real};
 use super::factor::{factorize, is_pow2, is_smooth};
 use super::mixed::{full_twiddle_table, mixed_radix_fft};
+use super::simd::{self, Backend};
 use super::stockham::{stockham_radix2, twiddle_table};
 
 /// Transform direction. Both directions are unnormalised.
@@ -50,20 +49,32 @@ pub struct C2cPlan<T: Real> {
     n: usize,
     dir: Direction,
     algo: Algo<T>,
+    /// SIMD backend the blocked kernels run with; resolved (guaranteed
+    /// available on this CPU) at plan build — see [`crate::fft::simd`].
+    backend: Backend,
 }
 
 impl<T: Real> C2cPlan<T> {
     pub fn new(n: usize, dir: Direction) -> Self {
+        Self::with_backend(n, dir, Backend::detect())
+    }
+
+    /// Build a plan forcing a specific SIMD backend (falls back to
+    /// [`Backend::Portable`] if `backend` is unavailable on this CPU).
+    /// [`Self::new`] uses the auto-detected backend; this entry point
+    /// exists for the forced-backend parity tests and the benches.
+    pub fn with_backend(n: usize, dir: Direction, backend: Backend) -> Self {
         assert!(n >= 1, "transform length must be >= 1");
+        let backend = backend.resolve();
         let inverse = dir.is_inverse();
         let algo = if is_pow2(n) {
             Algo::Pow2 { tw: twiddle_table(n, inverse) }
         } else if is_smooth(n) {
             Algo::Mixed { factors: factorize(n), tw: full_twiddle_table(n, inverse) }
         } else {
-            Algo::Bluestein(Box::new(BluesteinPlan::new(n, inverse)))
+            Algo::Bluestein(Box::new(BluesteinPlan::with_backend(n, inverse, backend)))
         };
-        C2cPlan { n, dir, algo }
+        C2cPlan { n, dir, algo, backend }
     }
 
     pub fn len(&self) -> usize {
@@ -76,6 +87,11 @@ impl<T: Real> C2cPlan<T> {
 
     pub fn direction(&self) -> Direction {
         self.dir
+    }
+
+    /// The SIMD backend this plan's blocked kernels execute with.
+    pub fn backend(&self) -> Backend {
+        self.backend
     }
 
     /// Scratch (in `Complex<T>` elements) required by every `execute*`
@@ -124,14 +140,14 @@ impl<T: Real> C2cPlan<T> {
         debug_assert_eq!(tile.len(), tlen);
         debug_assert!(scratch.len() >= TILE_LANES * self.kernel_scratch());
         match &self.algo {
-            Algo::Pow2 { tw } => stockham_tile(tile, &mut scratch[..tlen], tw),
+            Algo::Pow2 { tw } => simd::stockham_tile(self.backend, tile, &mut scratch[..tlen], tw),
             Algo::Mixed { factors, tw } => {
                 // The out-of-place recursion lands in scratch; the copy
                 // back buys the uniform in-place tile contract every
                 // driver and inner-plan consumer relies on (~1/log n of
                 // the transform's own traffic).
                 let dst = &mut scratch[..tlen];
-                mixed_radix_tile(tile, dst, factors, tw);
+                simd::mixed_radix_tile(self.backend, tile, dst, factors, tw);
                 tile.copy_from_slice(dst);
             }
             Algo::Bluestein(b) => b.execute_tile(tile, scratch),

@@ -14,6 +14,7 @@ use crate::tile::{CACHE_TILE, TILE_LANES};
 use super::block::{gather_lines, scatter_lines};
 use super::complex::{Complex, Real};
 use super::plan::{C2cPlan, Direction};
+use super::simd::{self, Backend};
 
 /// Plan for a batched real-to-complex forward transform of length n.
 #[derive(Debug, Clone)]
@@ -27,6 +28,13 @@ pub struct R2cPlan<T: Real> {
 
 impl<T: Real> R2cPlan<T> {
     pub fn new(n: usize) -> Self {
+        Self::with_backend(n, Backend::detect())
+    }
+
+    /// Build with a forced SIMD backend (resolved to an available one)
+    /// for the inner FFT and the cross-lane untangle; see
+    /// [`C2cPlan::with_backend`].
+    pub fn with_backend(n: usize, backend: Backend) -> Self {
         assert!(n >= 2, "r2c length must be >= 2");
         if n % 2 == 0 {
             let tw = (0..=n / 2)
@@ -36,9 +44,9 @@ impl<T: Real> R2cPlan<T> {
                     Complex::cis(ang)
                 })
                 .collect();
-            R2cPlan { n, inner: C2cPlan::new(n / 2, Direction::Forward), tw }
+            R2cPlan { n, inner: C2cPlan::with_backend(n / 2, Direction::Forward, backend), tw }
         } else {
-            R2cPlan { n, inner: C2cPlan::new(n, Direction::Forward), tw: Vec::new() }
+            R2cPlan { n, inner: C2cPlan::with_backend(n, Direction::Forward, backend), tw: Vec::new() }
         }
     }
 
@@ -125,7 +133,6 @@ impl<T: Real> R2cPlan<T> {
         let full = if self.n % 2 == 0 { batch / W } else { 0 };
         if full > 0 {
             let half = self.n / 2;
-            let halfc = T::from_f64(0.5).unwrap();
             let (ztile, rest) = scratch.split_at_mut(half * W);
             let (otile, inner_scratch) = rest.split_at_mut(h * W);
             for t in 0..full {
@@ -145,23 +152,9 @@ impl<T: Real> R2cPlan<T> {
                     jb = je;
                 }
                 self.inner.execute_tile(ztile, inner_scratch);
-                // Untangle across lanes; each tw[k] is loaded once per k.
-                for lane in 0..W {
-                    let z0 = ztile[lane];
-                    otile[lane] = Complex::new(z0.re + z0.im, T::zero());
-                    otile[half * W + lane] = Complex::new(z0.re - z0.im, T::zero());
-                }
-                for k in 1..half {
-                    let twk = self.tw[k];
-                    for lane in 0..W {
-                        let zk = ztile[k * W + lane];
-                        let zc = ztile[(half - k) * W + lane].conj();
-                        let e = (zk + zc).scale(halfc);
-                        let d = (zk - zc).scale(halfc);
-                        let o = Complex::new(d.im, -d.re);
-                        otile[k * W + lane] = e + o * twk;
-                    }
-                }
+                // Untangle across lanes (backend-dispatched; each tw[k]
+                // is loaded once per output mode for W lines).
+                simd::r2c_untangle(self.inner.backend(), ztile, otile, &self.tw, half);
                 scatter_lines(otile, h, b0, out);
             }
         }
@@ -182,6 +175,13 @@ pub struct C2rPlan<T: Real> {
 
 impl<T: Real> C2rPlan<T> {
     pub fn new(n: usize) -> Self {
+        Self::with_backend(n, Backend::detect())
+    }
+
+    /// Build with a forced SIMD backend (resolved to an available one)
+    /// for the inner FFT and the cross-lane re-tangle; see
+    /// [`C2cPlan::with_backend`].
+    pub fn with_backend(n: usize, backend: Backend) -> Self {
         assert!(n >= 2, "c2r length must be >= 2");
         if n % 2 == 0 {
             let tw = (0..=n / 2)
@@ -191,9 +191,9 @@ impl<T: Real> C2rPlan<T> {
                     Complex::cis(ang)
                 })
                 .collect();
-            C2rPlan { n, inner: C2cPlan::new(n / 2, Direction::Inverse), tw }
+            C2rPlan { n, inner: C2cPlan::with_backend(n / 2, Direction::Inverse, backend), tw }
         } else {
-            C2rPlan { n, inner: C2cPlan::new(n, Direction::Inverse), tw: Vec::new() }
+            C2rPlan { n, inner: C2cPlan::with_backend(n, Direction::Inverse, backend), tw: Vec::new() }
         }
     }
 
@@ -282,25 +282,16 @@ impl<T: Real> C2rPlan<T> {
         let full = if self.n % 2 == 0 { batch / W } else { 0 };
         if full > 0 {
             let half = self.n / 2;
-            let halfc = T::from_f64(0.5).unwrap();
             let two = T::from_f64(2.0).unwrap();
             let (itile, rest) = scratch.split_at_mut(h * W);
             let (ztile, inner_scratch) = rest.split_at_mut(half * W);
             for t in 0..full {
                 let b0 = t * W;
                 gather_lines(input, h, b0, itile);
-                // Re-tangle the half spectra across lanes (see
-                // [`Self::execute`] for the per-line formula).
-                for k in 0..half {
-                    let twk = self.tw[k];
-                    for lane in 0..W {
-                        let xk = itile[k * W + lane];
-                        let xc = itile[(half - k) * W + lane].conj();
-                        let e = (xk + xc).scale(halfc);
-                        let o = (xk - xc).scale(halfc) * twk;
-                        ztile[k * W + lane] = e + o.mul_i();
-                    }
-                }
+                // Re-tangle the half spectra across lanes (backend-
+                // dispatched; see [`Self::execute`] for the per-line
+                // formula).
+                simd::c2r_retangle(self.inner.backend(), itile, ztile, &self.tw, half);
                 self.inner.execute_tile(ztile, inner_scratch);
                 // Unpack: contiguous writes per lane, stride-W tile reads,
                 // strip-mined like the pack above.

@@ -1,0 +1,1034 @@
+//! AVX2 kernels: explicit 256-bit implementations of the blocked
+//! butterflies and the R2C/C2R cross-lane (un)tangle passes.
+//!
+//! Every function here is the same algorithm as its twin in
+//! [`super::portable`], with the unit-stride lane loop replaced by 256-bit
+//! vectors over the `[n][W]` tile rows: a `__m256d` holds 2 complex f64
+//! lanes, a `__m256` holds 4 complex f32 lanes, so one tile row is
+//! `W / 2` (f64) or `W / 4` (f32) vectors.
+//!
+//! **Bit-identity contract.** The dispatch layer guarantees blocked
+//! execution is bit-identical across backends (the invariant chunked
+//! overlap relies on), so these kernels must round exactly like the
+//! portable lane loops:
+//!
+//! * every arithmetic operation is the same IEEE operation, applied in
+//!   the same order as the portable kernel — no FMA anywhere (an FMA
+//!   contracts `a*b + c` into one rounding and would change results; this
+//!   is also why the dispatch layer only requires the `avx2` feature and
+//!   deliberately ignores `fma`);
+//! * the complex multiply computes the real part as `a.re*w.re -
+//!   a.im*w.im` via [`_mm256_addsub_pd`] exactly like the scalar `Mul`;
+//!   the imaginary part comes out as `a.im*w.re + a.re*w.im`, the scalar
+//!   expression with the addition commuted — IEEE addition of two finite
+//!   values is commutative in the result, so this is still bit-identical;
+//! * conjugation and `±i` rotations are sign-bit XORs (exact, preserving
+//!   `-0.0` exactly like the scalar negation);
+//! * data movement (permutes, blends, loads/stores) is exact.
+//!
+//! The forced-backend parity suite in `tests/blocked_kernels.rs` checks
+//! this contract end to end on both precisions; the module tests below
+//! check it per kernel.
+//!
+//! Twiddle *derivation* (e.g. `t2 = t1 * t1` in the radix-4 pass) stays
+//! in scalar `Complex` arithmetic so the products round exactly like the
+//! portable kernel before being broadcast.
+
+use core::arch::x86_64::*;
+
+use crate::tile::TILE_LANES;
+
+use super::super::complex::Complex;
+use super::super::mixed::MAX_RADIX;
+
+const W: usize = TILE_LANES;
+/// `__m256d` vectors (2 complex f64 lanes) per tile row.
+const VD: usize = W / 2;
+/// `__m256` vectors (4 complex f32 lanes) per tile row.
+const VS: usize = W / 4;
+
+// One f32 vector covers 4 complex lanes, so the narrowest supported
+// sweep width is 4; a non-multiple would leave a partial vector per row.
+const _: () = assert!(
+    TILE_LANES % 4 == 0,
+    "AVX2 kernels require TILE_LANES to be a multiple of 4 (one __m256 of complex f32)"
+);
+
+// ---------------------------------------------------------------------------
+// f64 helpers: one __m256d = [re0, im0, re1, im1] (two complex lanes).
+// ---------------------------------------------------------------------------
+
+/// Sign mask negating the imaginary (odd) f64 slots when XORed.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn neg_im_pd() -> __m256d {
+    _mm256_set_pd(-0.0, 0.0, -0.0, 0.0)
+}
+
+/// Sign mask negating the real (even) f64 slots when XORed.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn neg_re_pd() -> __m256d {
+    _mm256_set_pd(0.0, -0.0, 0.0, -0.0)
+}
+
+/// Swap re/im within each complex lane: `(re, im) -> (im, re)`.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn swap_pd(a: __m256d) -> __m256d {
+    _mm256_permute_pd::<0b0101>(a)
+}
+
+/// Complex multiply by a broadcast twiddle `w` (`wre = set1(w.re)`,
+/// `wim = set1(w.im)`), rounding exactly like the scalar `Complex::mul`:
+/// re slots get `a.re*w.re - a.im*w.im` (identical expression via
+/// addsub), im slots get `a.im*w.re + a.re*w.im` (scalar expression with
+/// the addition commuted — same IEEE result). No FMA.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn cmul_pd(a: __m256d, wre: __m256d, wim: __m256d) -> __m256d {
+    let t1 = _mm256_mul_pd(a, wre);
+    let t2 = _mm256_mul_pd(swap_pd(a), wim);
+    _mm256_addsub_pd(t1, t2)
+}
+
+/// Conjugate: `(re, im) -> (re, -im)` (exact sign flip).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn conj_pd(a: __m256d) -> __m256d {
+    _mm256_xor_pd(a, neg_im_pd())
+}
+
+/// Multiply by `i`: `(re, im) -> (-im, re)` (swap + exact sign flip).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn mul_i_pd(a: __m256d) -> __m256d {
+    _mm256_xor_pd(swap_pd(a), neg_re_pd())
+}
+
+/// Multiply by `-i`: `(re, im) -> (im, -re)` (swap + exact sign flip).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn mul_neg_i_pd(a: __m256d) -> __m256d {
+    _mm256_xor_pd(swap_pd(a), neg_im_pd())
+}
+
+// ---------------------------------------------------------------------------
+// f32 helpers: one __m256 = [re0, im0, .., re3, im3] (four complex lanes).
+// ---------------------------------------------------------------------------
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn neg_im_ps() -> __m256 {
+    _mm256_set_ps(-0.0, 0.0, -0.0, 0.0, -0.0, 0.0, -0.0, 0.0)
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn neg_re_ps() -> __m256 {
+    _mm256_set_ps(0.0, -0.0, 0.0, -0.0, 0.0, -0.0, 0.0, -0.0)
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn swap_ps(a: __m256) -> __m256 {
+    _mm256_permute_ps::<0b1011_0001>(a)
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn cmul_ps(a: __m256, wre: __m256, wim: __m256) -> __m256 {
+    let t1 = _mm256_mul_ps(a, wre);
+    let t2 = _mm256_mul_ps(swap_ps(a), wim);
+    _mm256_addsub_ps(t1, t2)
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn conj_ps(a: __m256) -> __m256 {
+    _mm256_xor_ps(a, neg_im_ps())
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn mul_i_ps(a: __m256) -> __m256 {
+    _mm256_xor_ps(swap_ps(a), neg_re_ps())
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn mul_neg_i_ps(a: __m256) -> __m256 {
+    _mm256_xor_ps(swap_ps(a), neg_im_ps())
+}
+
+// ---------------------------------------------------------------------------
+// Blocked Stockham.
+// ---------------------------------------------------------------------------
+
+/// AVX2 twin of [`super::portable::stockham_tile`] for f64 tiles.
+///
+/// # Safety
+///
+/// The caller must have verified AVX2 is available on the running CPU
+/// (the dispatch layer checks once at plan build).
+#[target_feature(enable = "avx2")]
+pub unsafe fn stockham_tile_f64(
+    data: &mut [Complex<f64>],
+    scratch: &mut [Complex<f64>],
+    tw: &[Complex<f64>],
+) {
+    let n = data.len() / W;
+    debug_assert_eq!(data.len(), n * W);
+    debug_assert!(n.is_power_of_two());
+    debug_assert!(scratch.len() >= n * W);
+    debug_assert!(tw.len() >= n / 2);
+    if n <= 1 {
+        return;
+    }
+    let rot = if n >= 4 { tw[n / 4] } else { Complex::zero() };
+    let forward = rot.im <= 0.0;
+
+    // Ping-pong through raw pointers (data and scratch never alias); all
+    // offsets below are in f64 scalars: complex index c -> 2*c.
+    let dp = data.as_mut_ptr() as *mut f64;
+    let sp = scratch.as_mut_ptr() as *mut f64;
+    let mut len = n;
+    let mut m = 1;
+    let mut from_data = true;
+
+    while len > 1 {
+        let (a, b) = if from_data { (dp as *const f64, sp) } else { (sp as *const f64, dp) };
+        if len % 4 == 0 {
+            let l = len / 4;
+            let tstride = n / len;
+            for j in 0..l {
+                let t1 = tw[j * tstride];
+                let t2 = t1 * t1;
+                let t3 = t1 * t2;
+                let t1re = _mm256_set1_pd(t1.re);
+                let t1im = _mm256_set1_pd(t1.im);
+                let t2re = _mm256_set1_pd(t2.re);
+                let t2im = _mm256_set1_pd(t2.im);
+                let t3re = _mm256_set1_pd(t3.re);
+                let t3im = _mm256_set1_pd(t3.im);
+                for k in 0..m {
+                    let i0 = 2 * (m * j + k) * W;
+                    let i1 = 2 * (m * (j + l) + k) * W;
+                    let i2 = 2 * (m * (j + 2 * l) + k) * W;
+                    let i3 = 2 * (m * (j + 3 * l) + k) * W;
+                    let o = 2 * (4 * m * j + k) * W;
+                    for v in 0..VD {
+                        let off = 4 * v;
+                        let c0 = _mm256_loadu_pd(a.add(i0 + off));
+                        let c1 = _mm256_loadu_pd(a.add(i1 + off));
+                        let c2 = _mm256_loadu_pd(a.add(i2 + off));
+                        let c3 = _mm256_loadu_pd(a.add(i3 + off));
+                        let d0 = _mm256_add_pd(c0, c2);
+                        let d1 = _mm256_sub_pd(c0, c2);
+                        let d2 = _mm256_add_pd(c1, c3);
+                        let e3 = _mm256_sub_pd(c1, c3);
+                        let d3 = if forward { mul_neg_i_pd(e3) } else { mul_i_pd(e3) };
+                        _mm256_storeu_pd(b.add(o + off), _mm256_add_pd(d0, d2));
+                        _mm256_storeu_pd(
+                            b.add(o + 2 * m * W + off),
+                            cmul_pd(_mm256_add_pd(d1, d3), t1re, t1im),
+                        );
+                        _mm256_storeu_pd(
+                            b.add(o + 4 * m * W + off),
+                            cmul_pd(_mm256_sub_pd(d0, d2), t2re, t2im),
+                        );
+                        _mm256_storeu_pd(
+                            b.add(o + 6 * m * W + off),
+                            cmul_pd(_mm256_sub_pd(d1, d3), t3re, t3im),
+                        );
+                    }
+                }
+            }
+            len = l;
+            m *= 4;
+        } else {
+            let l = len / 2;
+            let tstride = n / len;
+            for j in 0..l {
+                let w = tw[j * tstride];
+                let wre = _mm256_set1_pd(w.re);
+                let wim = _mm256_set1_pd(w.im);
+                for k in 0..m {
+                    let i0 = 2 * (m * j + k) * W;
+                    let i1 = 2 * (m * (j + l) + k) * W;
+                    let o = 2 * (2 * m * j + k) * W;
+                    for v in 0..VD {
+                        let off = 4 * v;
+                        let c0 = _mm256_loadu_pd(a.add(i0 + off));
+                        let c1 = _mm256_loadu_pd(a.add(i1 + off));
+                        _mm256_storeu_pd(b.add(o + off), _mm256_add_pd(c0, c1));
+                        _mm256_storeu_pd(
+                            b.add(o + 2 * m * W + off),
+                            cmul_pd(_mm256_sub_pd(c0, c1), wre, wim),
+                        );
+                    }
+                }
+            }
+            len = l;
+            m *= 2;
+        }
+        from_data = !from_data;
+    }
+
+    if !from_data {
+        data.copy_from_slice(&scratch[..n * W]);
+    }
+}
+
+/// AVX2 twin of [`super::portable::stockham_tile`] for f32 tiles.
+///
+/// # Safety
+///
+/// The caller must have verified AVX2 is available on the running CPU.
+#[target_feature(enable = "avx2")]
+pub unsafe fn stockham_tile_f32(
+    data: &mut [Complex<f32>],
+    scratch: &mut [Complex<f32>],
+    tw: &[Complex<f32>],
+) {
+    let n = data.len() / W;
+    debug_assert_eq!(data.len(), n * W);
+    debug_assert!(n.is_power_of_two());
+    debug_assert!(scratch.len() >= n * W);
+    debug_assert!(tw.len() >= n / 2);
+    if n <= 1 {
+        return;
+    }
+    let rot = if n >= 4 { tw[n / 4] } else { Complex::zero() };
+    let forward = rot.im <= 0.0;
+
+    let dp = data.as_mut_ptr() as *mut f32;
+    let sp = scratch.as_mut_ptr() as *mut f32;
+    let mut len = n;
+    let mut m = 1;
+    let mut from_data = true;
+
+    while len > 1 {
+        let (a, b) = if from_data { (dp as *const f32, sp) } else { (sp as *const f32, dp) };
+        if len % 4 == 0 {
+            let l = len / 4;
+            let tstride = n / len;
+            for j in 0..l {
+                let t1 = tw[j * tstride];
+                let t2 = t1 * t1;
+                let t3 = t1 * t2;
+                let t1re = _mm256_set1_ps(t1.re);
+                let t1im = _mm256_set1_ps(t1.im);
+                let t2re = _mm256_set1_ps(t2.re);
+                let t2im = _mm256_set1_ps(t2.im);
+                let t3re = _mm256_set1_ps(t3.re);
+                let t3im = _mm256_set1_ps(t3.im);
+                for k in 0..m {
+                    let i0 = 2 * (m * j + k) * W;
+                    let i1 = 2 * (m * (j + l) + k) * W;
+                    let i2 = 2 * (m * (j + 2 * l) + k) * W;
+                    let i3 = 2 * (m * (j + 3 * l) + k) * W;
+                    let o = 2 * (4 * m * j + k) * W;
+                    for v in 0..VS {
+                        let off = 8 * v;
+                        let c0 = _mm256_loadu_ps(a.add(i0 + off));
+                        let c1 = _mm256_loadu_ps(a.add(i1 + off));
+                        let c2 = _mm256_loadu_ps(a.add(i2 + off));
+                        let c3 = _mm256_loadu_ps(a.add(i3 + off));
+                        let d0 = _mm256_add_ps(c0, c2);
+                        let d1 = _mm256_sub_ps(c0, c2);
+                        let d2 = _mm256_add_ps(c1, c3);
+                        let e3 = _mm256_sub_ps(c1, c3);
+                        let d3 = if forward { mul_neg_i_ps(e3) } else { mul_i_ps(e3) };
+                        _mm256_storeu_ps(b.add(o + off), _mm256_add_ps(d0, d2));
+                        _mm256_storeu_ps(
+                            b.add(o + 2 * m * W + off),
+                            cmul_ps(_mm256_add_ps(d1, d3), t1re, t1im),
+                        );
+                        _mm256_storeu_ps(
+                            b.add(o + 4 * m * W + off),
+                            cmul_ps(_mm256_sub_ps(d0, d2), t2re, t2im),
+                        );
+                        _mm256_storeu_ps(
+                            b.add(o + 6 * m * W + off),
+                            cmul_ps(_mm256_sub_ps(d1, d3), t3re, t3im),
+                        );
+                    }
+                }
+            }
+            len = l;
+            m *= 4;
+        } else {
+            let l = len / 2;
+            let tstride = n / len;
+            for j in 0..l {
+                let w = tw[j * tstride];
+                let wre = _mm256_set1_ps(w.re);
+                let wim = _mm256_set1_ps(w.im);
+                for k in 0..m {
+                    let i0 = 2 * (m * j + k) * W;
+                    let i1 = 2 * (m * (j + l) + k) * W;
+                    let o = 2 * (2 * m * j + k) * W;
+                    for v in 0..VS {
+                        let off = 8 * v;
+                        let c0 = _mm256_loadu_ps(a.add(i0 + off));
+                        let c1 = _mm256_loadu_ps(a.add(i1 + off));
+                        _mm256_storeu_ps(b.add(o + off), _mm256_add_ps(c0, c1));
+                        _mm256_storeu_ps(
+                            b.add(o + 2 * m * W + off),
+                            cmul_ps(_mm256_sub_ps(c0, c1), wre, wim),
+                        );
+                    }
+                }
+            }
+            len = l;
+            m *= 2;
+        }
+        from_data = !from_data;
+    }
+
+    if !from_data {
+        data.copy_from_slice(&scratch[..n * W]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Blocked mixed radix.
+// ---------------------------------------------------------------------------
+
+/// AVX2 twin of [`super::portable::mixed_radix_tile`] for f64 tiles.
+///
+/// # Safety
+///
+/// The caller must have verified AVX2 is available on the running CPU.
+#[target_feature(enable = "avx2")]
+pub unsafe fn mixed_radix_tile_f64(
+    src: &[Complex<f64>],
+    dst: &mut [Complex<f64>],
+    factors: &[usize],
+    tw: &[Complex<f64>],
+) {
+    let n = src.len() / W;
+    debug_assert_eq!(src.len(), n * W);
+    debug_assert_eq!(dst.len(), n * W);
+    debug_assert_eq!(factors.iter().product::<usize>().max(1), n);
+    rec_tile_f64(src, 1, dst, n, factors, tw, tw.len());
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn rec_tile_f64(
+    src: &[Complex<f64>],
+    stride: usize,
+    dst: &mut [Complex<f64>],
+    n: usize,
+    factors: &[usize],
+    tw: &[Complex<f64>],
+    top_n: usize,
+) {
+    if n == 1 {
+        dst[..W].copy_from_slice(&src[..W]);
+        return;
+    }
+    let r = factors[0];
+    let m = n / r;
+
+    for j in 0..r {
+        rec_tile_f64(
+            &src[j * stride * W..],
+            stride * r,
+            &mut dst[j * m * W..(j + 1) * m * W],
+            m,
+            &factors[1..],
+            tw,
+            top_n,
+        );
+    }
+
+    let tsub = top_n / n;
+    let tr = top_n / r;
+    // All offsets below are in f64 scalars over dst's tile rows.
+    let p = dst.as_mut_ptr() as *mut f64;
+    match r {
+        2 => {
+            for k in 0..m {
+                let twk = tw[k * tsub];
+                let twre = _mm256_set1_pd(twk.re);
+                let twim = _mm256_set1_pd(twk.im);
+                for v in 0..VD {
+                    let ia = 2 * k * W + 4 * v;
+                    let ib = 2 * (m + k) * W + 4 * v;
+                    let a = _mm256_loadu_pd(p.add(ia));
+                    let b = cmul_pd(_mm256_loadu_pd(p.add(ib)), twre, twim);
+                    _mm256_storeu_pd(p.add(ia), _mm256_add_pd(a, b));
+                    _mm256_storeu_pd(p.add(ib), _mm256_sub_pd(a, b));
+                }
+            }
+        }
+        3 => {
+            let w3 = tw[tr];
+            let w3sq = tw[2 * tr];
+            let w3re = _mm256_set1_pd(w3.re);
+            let w3im = _mm256_set1_pd(w3.im);
+            let w3sqre = _mm256_set1_pd(w3sq.re);
+            let w3sqim = _mm256_set1_pd(w3sq.im);
+            for k in 0..m {
+                let t1 = tw[k * tsub];
+                let t2 = tw[2 * k * tsub];
+                let t1re = _mm256_set1_pd(t1.re);
+                let t1im = _mm256_set1_pd(t1.im);
+                let t2re = _mm256_set1_pd(t2.re);
+                let t2im = _mm256_set1_pd(t2.im);
+                for v in 0..VD {
+                    let ia = 2 * k * W + 4 * v;
+                    let ib = 2 * (m + k) * W + 4 * v;
+                    let ic = 2 * (2 * m + k) * W + 4 * v;
+                    let a = _mm256_loadu_pd(p.add(ia));
+                    let b = cmul_pd(_mm256_loadu_pd(p.add(ib)), t1re, t1im);
+                    let c = cmul_pd(_mm256_loadu_pd(p.add(ic)), t2re, t2im);
+                    _mm256_storeu_pd(p.add(ia), _mm256_add_pd(_mm256_add_pd(a, b), c));
+                    _mm256_storeu_pd(
+                        p.add(ib),
+                        _mm256_add_pd(
+                            _mm256_add_pd(a, cmul_pd(b, w3re, w3im)),
+                            cmul_pd(c, w3sqre, w3sqim),
+                        ),
+                    );
+                    _mm256_storeu_pd(
+                        p.add(ic),
+                        _mm256_add_pd(
+                            _mm256_add_pd(a, cmul_pd(b, w3sqre, w3sqim)),
+                            cmul_pd(c, w3re, w3im),
+                        ),
+                    );
+                }
+            }
+        }
+        4 => {
+            // w4 comes from the twiddle table (≈ ±i but not exactly), so
+            // it needs the full complex multiply to round like portable.
+            let w4 = tw[tr];
+            let w4re = _mm256_set1_pd(w4.re);
+            let w4im = _mm256_set1_pd(w4.im);
+            for k in 0..m {
+                let t1 = tw[k * tsub];
+                let t2 = tw[2 * k * tsub];
+                let t3 = tw[3 * k * tsub];
+                let t1re = _mm256_set1_pd(t1.re);
+                let t1im = _mm256_set1_pd(t1.im);
+                let t2re = _mm256_set1_pd(t2.re);
+                let t2im = _mm256_set1_pd(t2.im);
+                let t3re = _mm256_set1_pd(t3.re);
+                let t3im = _mm256_set1_pd(t3.im);
+                for v in 0..VD {
+                    let ia = 2 * k * W + 4 * v;
+                    let ib = 2 * (m + k) * W + 4 * v;
+                    let ic = 2 * (2 * m + k) * W + 4 * v;
+                    let id = 2 * (3 * m + k) * W + 4 * v;
+                    let a = _mm256_loadu_pd(p.add(ia));
+                    let b = cmul_pd(_mm256_loadu_pd(p.add(ib)), t1re, t1im);
+                    let c = cmul_pd(_mm256_loadu_pd(p.add(ic)), t2re, t2im);
+                    let d = cmul_pd(_mm256_loadu_pd(p.add(id)), t3re, t3im);
+                    let apc = _mm256_add_pd(a, c);
+                    let amc = _mm256_sub_pd(a, c);
+                    let bpd = _mm256_add_pd(b, d);
+                    let bmd = cmul_pd(_mm256_sub_pd(b, d), w4re, w4im);
+                    _mm256_storeu_pd(p.add(ia), _mm256_add_pd(apc, bpd));
+                    _mm256_storeu_pd(p.add(ib), _mm256_add_pd(amc, bmd));
+                    _mm256_storeu_pd(p.add(ic), _mm256_sub_pd(apc, bpd));
+                    _mm256_storeu_pd(p.add(id), _mm256_sub_pd(amc, bmd));
+                }
+            }
+        }
+        _ => {
+            debug_assert!(r <= MAX_RADIX);
+            let mut t = [[_mm256_setzero_pd(); VD]; MAX_RADIX];
+            for k in 0..m {
+                for (j, tj) in t.iter_mut().enumerate().take(r) {
+                    let twj = tw[(j * k) * tsub];
+                    let twre = _mm256_set1_pd(twj.re);
+                    let twim = _mm256_set1_pd(twj.im);
+                    for (v, tv) in tj.iter_mut().enumerate() {
+                        *tv = cmul_pd(
+                            _mm256_loadu_pd(p.add(2 * (j * m + k) * W + 4 * v)),
+                            twre,
+                            twim,
+                        );
+                    }
+                }
+                for q in 0..r {
+                    let mut acc = t[0];
+                    for (j, tj) in t.iter().enumerate().take(r).skip(1) {
+                        let wq = tw[(j * q % r) * tr];
+                        let wre = _mm256_set1_pd(wq.re);
+                        let wim = _mm256_set1_pd(wq.im);
+                        for (v, tv) in tj.iter().enumerate() {
+                            acc[v] = _mm256_add_pd(acc[v], cmul_pd(*tv, wre, wim));
+                        }
+                    }
+                    for (v, av) in acc.iter().enumerate() {
+                        _mm256_storeu_pd(p.add(2 * (q * m + k) * W + 4 * v), *av);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// AVX2 twin of [`super::portable::mixed_radix_tile`] for f32 tiles.
+///
+/// # Safety
+///
+/// The caller must have verified AVX2 is available on the running CPU.
+#[target_feature(enable = "avx2")]
+pub unsafe fn mixed_radix_tile_f32(
+    src: &[Complex<f32>],
+    dst: &mut [Complex<f32>],
+    factors: &[usize],
+    tw: &[Complex<f32>],
+) {
+    let n = src.len() / W;
+    debug_assert_eq!(src.len(), n * W);
+    debug_assert_eq!(dst.len(), n * W);
+    debug_assert_eq!(factors.iter().product::<usize>().max(1), n);
+    rec_tile_f32(src, 1, dst, n, factors, tw, tw.len());
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn rec_tile_f32(
+    src: &[Complex<f32>],
+    stride: usize,
+    dst: &mut [Complex<f32>],
+    n: usize,
+    factors: &[usize],
+    tw: &[Complex<f32>],
+    top_n: usize,
+) {
+    if n == 1 {
+        dst[..W].copy_from_slice(&src[..W]);
+        return;
+    }
+    let r = factors[0];
+    let m = n / r;
+
+    for j in 0..r {
+        rec_tile_f32(
+            &src[j * stride * W..],
+            stride * r,
+            &mut dst[j * m * W..(j + 1) * m * W],
+            m,
+            &factors[1..],
+            tw,
+            top_n,
+        );
+    }
+
+    let tsub = top_n / n;
+    let tr = top_n / r;
+    let p = dst.as_mut_ptr() as *mut f32;
+    match r {
+        2 => {
+            for k in 0..m {
+                let twk = tw[k * tsub];
+                let twre = _mm256_set1_ps(twk.re);
+                let twim = _mm256_set1_ps(twk.im);
+                for v in 0..VS {
+                    let ia = 2 * k * W + 8 * v;
+                    let ib = 2 * (m + k) * W + 8 * v;
+                    let a = _mm256_loadu_ps(p.add(ia));
+                    let b = cmul_ps(_mm256_loadu_ps(p.add(ib)), twre, twim);
+                    _mm256_storeu_ps(p.add(ia), _mm256_add_ps(a, b));
+                    _mm256_storeu_ps(p.add(ib), _mm256_sub_ps(a, b));
+                }
+            }
+        }
+        3 => {
+            let w3 = tw[tr];
+            let w3sq = tw[2 * tr];
+            let w3re = _mm256_set1_ps(w3.re);
+            let w3im = _mm256_set1_ps(w3.im);
+            let w3sqre = _mm256_set1_ps(w3sq.re);
+            let w3sqim = _mm256_set1_ps(w3sq.im);
+            for k in 0..m {
+                let t1 = tw[k * tsub];
+                let t2 = tw[2 * k * tsub];
+                let t1re = _mm256_set1_ps(t1.re);
+                let t1im = _mm256_set1_ps(t1.im);
+                let t2re = _mm256_set1_ps(t2.re);
+                let t2im = _mm256_set1_ps(t2.im);
+                for v in 0..VS {
+                    let ia = 2 * k * W + 8 * v;
+                    let ib = 2 * (m + k) * W + 8 * v;
+                    let ic = 2 * (2 * m + k) * W + 8 * v;
+                    let a = _mm256_loadu_ps(p.add(ia));
+                    let b = cmul_ps(_mm256_loadu_ps(p.add(ib)), t1re, t1im);
+                    let c = cmul_ps(_mm256_loadu_ps(p.add(ic)), t2re, t2im);
+                    _mm256_storeu_ps(p.add(ia), _mm256_add_ps(_mm256_add_ps(a, b), c));
+                    _mm256_storeu_ps(
+                        p.add(ib),
+                        _mm256_add_ps(
+                            _mm256_add_ps(a, cmul_ps(b, w3re, w3im)),
+                            cmul_ps(c, w3sqre, w3sqim),
+                        ),
+                    );
+                    _mm256_storeu_ps(
+                        p.add(ic),
+                        _mm256_add_ps(
+                            _mm256_add_ps(a, cmul_ps(b, w3sqre, w3sqim)),
+                            cmul_ps(c, w3re, w3im),
+                        ),
+                    );
+                }
+            }
+        }
+        4 => {
+            let w4 = tw[tr];
+            let w4re = _mm256_set1_ps(w4.re);
+            let w4im = _mm256_set1_ps(w4.im);
+            for k in 0..m {
+                let t1 = tw[k * tsub];
+                let t2 = tw[2 * k * tsub];
+                let t3 = tw[3 * k * tsub];
+                let t1re = _mm256_set1_ps(t1.re);
+                let t1im = _mm256_set1_ps(t1.im);
+                let t2re = _mm256_set1_ps(t2.re);
+                let t2im = _mm256_set1_ps(t2.im);
+                let t3re = _mm256_set1_ps(t3.re);
+                let t3im = _mm256_set1_ps(t3.im);
+                for v in 0..VS {
+                    let ia = 2 * k * W + 8 * v;
+                    let ib = 2 * (m + k) * W + 8 * v;
+                    let ic = 2 * (2 * m + k) * W + 8 * v;
+                    let id = 2 * (3 * m + k) * W + 8 * v;
+                    let a = _mm256_loadu_ps(p.add(ia));
+                    let b = cmul_ps(_mm256_loadu_ps(p.add(ib)), t1re, t1im);
+                    let c = cmul_ps(_mm256_loadu_ps(p.add(ic)), t2re, t2im);
+                    let d = cmul_ps(_mm256_loadu_ps(p.add(id)), t3re, t3im);
+                    let apc = _mm256_add_ps(a, c);
+                    let amc = _mm256_sub_ps(a, c);
+                    let bpd = _mm256_add_ps(b, d);
+                    let bmd = cmul_ps(_mm256_sub_ps(b, d), w4re, w4im);
+                    _mm256_storeu_ps(p.add(ia), _mm256_add_ps(apc, bpd));
+                    _mm256_storeu_ps(p.add(ib), _mm256_add_ps(amc, bmd));
+                    _mm256_storeu_ps(p.add(ic), _mm256_sub_ps(apc, bpd));
+                    _mm256_storeu_ps(p.add(id), _mm256_sub_ps(amc, bmd));
+                }
+            }
+        }
+        _ => {
+            debug_assert!(r <= MAX_RADIX);
+            let mut t = [[_mm256_setzero_ps(); VS]; MAX_RADIX];
+            for k in 0..m {
+                for (j, tj) in t.iter_mut().enumerate().take(r) {
+                    let twj = tw[(j * k) * tsub];
+                    let twre = _mm256_set1_ps(twj.re);
+                    let twim = _mm256_set1_ps(twj.im);
+                    for (v, tv) in tj.iter_mut().enumerate() {
+                        *tv = cmul_ps(
+                            _mm256_loadu_ps(p.add(2 * (j * m + k) * W + 8 * v)),
+                            twre,
+                            twim,
+                        );
+                    }
+                }
+                for q in 0..r {
+                    let mut acc = t[0];
+                    for (j, tj) in t.iter().enumerate().take(r).skip(1) {
+                        let wq = tw[(j * q % r) * tr];
+                        let wre = _mm256_set1_ps(wq.re);
+                        let wim = _mm256_set1_ps(wq.im);
+                        for (v, tv) in tj.iter().enumerate() {
+                            acc[v] = _mm256_add_ps(acc[v], cmul_ps(*tv, wre, wim));
+                        }
+                    }
+                    for (v, av) in acc.iter().enumerate() {
+                        _mm256_storeu_ps(p.add(2 * (q * m + k) * W + 8 * v), *av);
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// R2C / C2R cross-lane (un)tangle.
+// ---------------------------------------------------------------------------
+
+/// AVX2 twin of [`super::portable::r2c_untangle`] for f64 tiles.
+///
+/// # Safety
+///
+/// The caller must have verified AVX2 is available on the running CPU.
+#[target_feature(enable = "avx2")]
+pub unsafe fn r2c_untangle_f64(
+    ztile: &[Complex<f64>],
+    otile: &mut [Complex<f64>],
+    tw: &[Complex<f64>],
+    half: usize,
+) {
+    debug_assert!(ztile.len() >= half * W);
+    debug_assert!(otile.len() >= (half + 1) * W);
+    let zp = ztile.as_ptr() as *const f64;
+    let op = otile.as_mut_ptr() as *mut f64;
+    let zero = _mm256_setzero_pd();
+    let halfv = _mm256_set1_pd(0.5);
+    for v in 0..VD {
+        let off = 4 * v;
+        let z0 = _mm256_loadu_pd(zp.add(off));
+        let sw = swap_pd(z0);
+        // Even slots: re+im / re-im, matching the scalar expressions; the
+        // blend zeroes the imaginary slots exactly.
+        let sum = _mm256_add_pd(z0, sw);
+        let diff = _mm256_sub_pd(z0, sw);
+        _mm256_storeu_pd(op.add(off), _mm256_blend_pd::<0b1010>(sum, zero));
+        _mm256_storeu_pd(op.add(2 * half * W + off), _mm256_blend_pd::<0b1010>(diff, zero));
+    }
+    for k in 1..half {
+        let twk = tw[k];
+        let twre = _mm256_set1_pd(twk.re);
+        let twim = _mm256_set1_pd(twk.im);
+        for v in 0..VD {
+            let off = 4 * v;
+            let zk = _mm256_loadu_pd(zp.add(2 * k * W + off));
+            let zc = conj_pd(_mm256_loadu_pd(zp.add(2 * (half - k) * W + off)));
+            let e = _mm256_mul_pd(_mm256_add_pd(zk, zc), halfv);
+            let d = _mm256_mul_pd(_mm256_sub_pd(zk, zc), halfv);
+            let o = mul_neg_i_pd(d);
+            _mm256_storeu_pd(op.add(2 * k * W + off), _mm256_add_pd(e, cmul_pd(o, twre, twim)));
+        }
+    }
+}
+
+/// AVX2 twin of [`super::portable::r2c_untangle`] for f32 tiles.
+///
+/// # Safety
+///
+/// The caller must have verified AVX2 is available on the running CPU.
+#[target_feature(enable = "avx2")]
+pub unsafe fn r2c_untangle_f32(
+    ztile: &[Complex<f32>],
+    otile: &mut [Complex<f32>],
+    tw: &[Complex<f32>],
+    half: usize,
+) {
+    debug_assert!(ztile.len() >= half * W);
+    debug_assert!(otile.len() >= (half + 1) * W);
+    let zp = ztile.as_ptr() as *const f32;
+    let op = otile.as_mut_ptr() as *mut f32;
+    let zero = _mm256_setzero_ps();
+    let halfv = _mm256_set1_ps(0.5);
+    for v in 0..VS {
+        let off = 8 * v;
+        let z0 = _mm256_loadu_ps(zp.add(off));
+        let sw = swap_ps(z0);
+        let sum = _mm256_add_ps(z0, sw);
+        let diff = _mm256_sub_ps(z0, sw);
+        _mm256_storeu_ps(op.add(off), _mm256_blend_ps::<0b1010_1010>(sum, zero));
+        _mm256_storeu_ps(op.add(2 * half * W + off), _mm256_blend_ps::<0b1010_1010>(diff, zero));
+    }
+    for k in 1..half {
+        let twk = tw[k];
+        let twre = _mm256_set1_ps(twk.re);
+        let twim = _mm256_set1_ps(twk.im);
+        for v in 0..VS {
+            let off = 8 * v;
+            let zk = _mm256_loadu_ps(zp.add(2 * k * W + off));
+            let zc = conj_ps(_mm256_loadu_ps(zp.add(2 * (half - k) * W + off)));
+            let e = _mm256_mul_ps(_mm256_add_ps(zk, zc), halfv);
+            let d = _mm256_mul_ps(_mm256_sub_ps(zk, zc), halfv);
+            let o = mul_neg_i_ps(d);
+            _mm256_storeu_ps(op.add(2 * k * W + off), _mm256_add_ps(e, cmul_ps(o, twre, twim)));
+        }
+    }
+}
+
+/// AVX2 twin of [`super::portable::c2r_retangle`] for f64 tiles.
+///
+/// # Safety
+///
+/// The caller must have verified AVX2 is available on the running CPU.
+#[target_feature(enable = "avx2")]
+pub unsafe fn c2r_retangle_f64(
+    itile: &[Complex<f64>],
+    ztile: &mut [Complex<f64>],
+    tw: &[Complex<f64>],
+    half: usize,
+) {
+    debug_assert!(itile.len() >= (half + 1) * W);
+    debug_assert!(ztile.len() >= half * W);
+    let ip = itile.as_ptr() as *const f64;
+    let zp = ztile.as_mut_ptr() as *mut f64;
+    let halfv = _mm256_set1_pd(0.5);
+    for k in 0..half {
+        let twk = tw[k];
+        let twre = _mm256_set1_pd(twk.re);
+        let twim = _mm256_set1_pd(twk.im);
+        for v in 0..VD {
+            let off = 4 * v;
+            let xk = _mm256_loadu_pd(ip.add(2 * k * W + off));
+            let xc = conj_pd(_mm256_loadu_pd(ip.add(2 * (half - k) * W + off)));
+            let e = _mm256_mul_pd(_mm256_add_pd(xk, xc), halfv);
+            let o = cmul_pd(_mm256_mul_pd(_mm256_sub_pd(xk, xc), halfv), twre, twim);
+            _mm256_storeu_pd(zp.add(2 * k * W + off), _mm256_add_pd(e, mul_i_pd(o)));
+        }
+    }
+}
+
+/// AVX2 twin of [`super::portable::c2r_retangle`] for f32 tiles.
+///
+/// # Safety
+///
+/// The caller must have verified AVX2 is available on the running CPU.
+#[target_feature(enable = "avx2")]
+pub unsafe fn c2r_retangle_f32(
+    itile: &[Complex<f32>],
+    ztile: &mut [Complex<f32>],
+    tw: &[Complex<f32>],
+    half: usize,
+) {
+    debug_assert!(itile.len() >= (half + 1) * W);
+    debug_assert!(ztile.len() >= half * W);
+    let ip = itile.as_ptr() as *const f32;
+    let zp = ztile.as_mut_ptr() as *mut f32;
+    let halfv = _mm256_set1_ps(0.5);
+    for k in 0..half {
+        let twk = tw[k];
+        let twre = _mm256_set1_ps(twk.re);
+        let twim = _mm256_set1_ps(twk.im);
+        for v in 0..VS {
+            let off = 8 * v;
+            let xk = _mm256_loadu_ps(ip.add(2 * k * W + off));
+            let xc = conj_ps(_mm256_loadu_ps(ip.add(2 * (half - k) * W + off)));
+            let e = _mm256_mul_ps(_mm256_add_ps(xk, xc), halfv);
+            let o = cmul_ps(_mm256_mul_ps(_mm256_sub_ps(xk, xc), halfv), twre, twim);
+            _mm256_storeu_ps(zp.add(2 * k * W + off), _mm256_add_ps(e, mul_i_ps(o)));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::portable;
+    use super::*;
+    use crate::fft::factorize;
+    use crate::fft::mixed::full_twiddle_table;
+    use crate::fft::stockham::twiddle_table;
+    use crate::util::SplitMix64;
+
+    fn rand_tile_f64(n: usize, seed: u64) -> Vec<Complex<f64>> {
+        let mut rng = SplitMix64::new(seed);
+        (0..n * W).map(|_| Complex::new(rng.next_normal(), rng.next_normal())).collect()
+    }
+
+    fn rand_tile_f32(n: usize, seed: u64) -> Vec<Complex<f32>> {
+        rand_tile_f64(n, seed).iter().map(|z| Complex::new(z.re as f32, z.im as f32)).collect()
+    }
+
+    fn bits64(v: &[Complex<f64>]) -> Vec<(u64, u64)> {
+        v.iter().map(|z| (z.re.to_bits(), z.im.to_bits())).collect()
+    }
+
+    fn bits32(v: &[Complex<f32>]) -> Vec<(u32, u32)> {
+        v.iter().map(|z| (z.re.to_bits(), z.im.to_bits())).collect()
+    }
+
+    #[test]
+    fn stockham_bitwise_matches_portable() {
+        if !is_x86_feature_detected!("avx2") {
+            eprintln!("skipping: avx2 not available");
+            return;
+        }
+        for n in [2usize, 4, 8, 64, 256] {
+            for inverse in [false, true] {
+                let tile = rand_tile_f64(n, 31 + n as u64);
+                let tw = twiddle_table(n, inverse);
+                let mut a = tile.clone();
+                let mut b = tile.clone();
+                let mut sa = vec![Complex::zero(); n * W];
+                let mut sb = vec![Complex::zero(); n * W];
+                portable::stockham_tile(&mut a, &mut sa, &tw);
+                unsafe { stockham_tile_f64(&mut b, &mut sb, &tw) };
+                assert_eq!(bits64(&a), bits64(&b), "f64 n={n} inv={inverse}");
+
+                let tile = rand_tile_f32(n, 47 + n as u64);
+                let tw = twiddle_table(n, inverse);
+                let mut a = tile.clone();
+                let mut b = tile.clone();
+                let mut sa = vec![Complex::zero(); n * W];
+                let mut sb = vec![Complex::zero(); n * W];
+                portable::stockham_tile(&mut a, &mut sa, &tw);
+                unsafe { stockham_tile_f32(&mut b, &mut sb, &tw) };
+                assert_eq!(bits32(&a), bits32(&b), "f32 n={n} inv={inverse}");
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_radix_bitwise_matches_portable() {
+        if !is_x86_feature_detected!("avx2") {
+            eprintln!("skipping: avx2 not available");
+            return;
+        }
+        // Covers radix 2/3/4/5/7 and the generic 11/13 path.
+        for n in [6usize, 12, 60, 144, 11, 13, 143] {
+            let factors = factorize(n);
+            let tile = rand_tile_f64(n, 5 + n as u64);
+            let tw = full_twiddle_table(n, false);
+            let mut a = vec![Complex::zero(); n * W];
+            let mut b = vec![Complex::zero(); n * W];
+            portable::mixed_radix_tile(&tile, &mut a, &factors, &tw);
+            unsafe { mixed_radix_tile_f64(&tile, &mut b, &factors, &tw) };
+            assert_eq!(bits64(&a), bits64(&b), "f64 n={n}");
+
+            let tile = rand_tile_f32(n, 17 + n as u64);
+            let tw = full_twiddle_table(n, false);
+            let mut a = vec![Complex::zero(); n * W];
+            let mut b = vec![Complex::zero(); n * W];
+            portable::mixed_radix_tile(&tile, &mut a, &factors, &tw);
+            unsafe { mixed_radix_tile_f32(&tile, &mut b, &factors, &tw) };
+            assert_eq!(bits32(&a), bits32(&b), "f32 n={n}");
+        }
+    }
+
+    #[test]
+    fn untangle_retangle_bitwise_match_portable() {
+        if !is_x86_feature_detected!("avx2") {
+            eprintln!("skipping: avx2 not available");
+            return;
+        }
+        for half in [1usize, 4, 12, 50] {
+            let n = 2 * half;
+            let tw: Vec<Complex<f64>> = (0..=half)
+                .map(|k| Complex::cis(-2.0 * std::f64::consts::PI * k as f64 / n as f64))
+                .collect();
+            let ztile = rand_tile_f64(half, 3 + half as u64);
+            let mut oa = vec![Complex::new(7.0, 7.0); (half + 1) * W];
+            let mut ob = oa.clone();
+            portable::r2c_untangle(&ztile, &mut oa, &tw, half);
+            unsafe { r2c_untangle_f64(&ztile, &mut ob, &tw, half) };
+            assert_eq!(bits64(&oa), bits64(&ob), "untangle f64 half={half}");
+
+            let itile = rand_tile_f64(half + 1, 9 + half as u64);
+            let mut za = vec![Complex::zero(); half * W];
+            let mut zb = za.clone();
+            portable::c2r_retangle(&itile, &mut za, &tw, half);
+            unsafe { c2r_retangle_f64(&itile, &mut zb, &tw, half) };
+            assert_eq!(bits64(&za), bits64(&zb), "retangle f64 half={half}");
+
+            let twf: Vec<Complex<f32>> =
+                tw.iter().map(|z| Complex::new(z.re as f32, z.im as f32)).collect();
+            let ztile = rand_tile_f32(half, 21 + half as u64);
+            let mut oa = vec![Complex::new(7.0f32, 7.0); (half + 1) * W];
+            let mut ob = oa.clone();
+            portable::r2c_untangle(&ztile, &mut oa, &twf, half);
+            unsafe { r2c_untangle_f32(&ztile, &mut ob, &twf, half) };
+            assert_eq!(bits32(&oa), bits32(&ob), "untangle f32 half={half}");
+
+            let itile = rand_tile_f32(half + 1, 27 + half as u64);
+            let mut za = vec![Complex::zero(); half * W];
+            let mut zb = za.clone();
+            portable::c2r_retangle(&itile, &mut za, &twf, half);
+            unsafe { c2r_retangle_f32(&itile, &mut zb, &twf, half) };
+            assert_eq!(bits32(&za), bits32(&zb), "retangle f32 half={half}");
+        }
+    }
+}

@@ -1,0 +1,346 @@
+//! SIMD backend dispatch for the blocked FFT kernels.
+//!
+//! The hot lane loops of the blocked kernels exist in one reference form
+//! ([`portable`] — plain per-lane scalar code, what every Rust target can
+//! compile) and, on x86_64, an explicit AVX2 form ([`avx2`]). A
+//! [`Backend`] value picks between them **once, at plan build time**
+//! ([`Backend::detect`] runs CPU feature detection and caches the
+//! answer); the plan stores the resolved backend and every `execute*`
+//! call goes straight to the chosen kernels — no per-call feature test,
+//! no virtual dispatch in the butterfly loops.
+//!
+//! Adding a future backend (NEON, AVX-512) is one file plus a variant
+//! here: the dispatch functions below are the complete set of kernels a
+//! backend may specialise, and anything a backend does not provide falls
+//! back to [`portable`].
+//!
+//! # Bit-identity contract
+//!
+//! Backends are **bit-identical per lane**: for the same tile, every
+//! backend produces the same bytes. This keeps two guarantees the rest of
+//! the crate relies on, regardless of which CPU the process lands on:
+//!
+//! * blocked execution ≡ scalar per-line execution to the last bit (the
+//!   `tests/blocked_kernels.rs` invariant since the tile rewrite), and
+//! * chunked-overlap output is invariant in the number of chunks — which
+//!   would break if a chunk boundary could flip a result bit.
+//!
+//! The AVX2 kernels therefore use no FMA (it contracts two roundings into
+//! one) and perform every arithmetic operation in the portable kernel's
+//! order; see `avx2.rs` for the op-by-op argument and
+//! `tests/blocked_kernels.rs` for the forced-backend parity suite.
+//!
+//! # Scope
+//!
+//! The dispatched kernels are the tile butterflies (Stockham,
+//! mixed-radix) and the R2C/C2R cross-lane (un)tangle. The Bluestein
+//! pointwise chirp loops and the DCT/DST extension builds stay portable —
+//! they are O(n) alongside an O(n log n) dispatched inner FFT, and the
+//! plans thread the backend into those inner FFTs.
+
+use std::sync::OnceLock;
+
+use core::any::TypeId;
+
+use super::complex::{Complex, Real};
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2;
+pub(crate) mod portable;
+
+/// Environment variable overriding backend auto-detection
+/// (`portable`/`scalar`, `avx2`, or `auto`). Read once per process.
+pub const SIMD_ENV: &str = "P3DFFT_SIMD";
+
+/// Which kernel implementation a plan executes with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Backend {
+    /// Reference per-lane scalar loops; compiled for every target.
+    Portable,
+    /// Explicit 256-bit kernels (`core::arch::x86_64`); requires the
+    /// `avx2` CPU feature at runtime (FMA is deliberately not required —
+    /// the kernels avoid it to stay bit-identical to [`Portable`]).
+    Avx2,
+}
+
+impl Backend {
+    /// Whether this backend can run on the current CPU.
+    pub fn available(self) -> bool {
+        match self {
+            Backend::Portable => true,
+            Backend::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    is_x86_feature_detected!("avx2")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Stable lowercase name (bench JSON, CI logs).
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Portable => "portable",
+            Backend::Avx2 => "avx2",
+        }
+    }
+
+    /// This backend if the CPU supports it, otherwise [`Backend::Portable`].
+    /// Plan constructors call this so a stored backend is always runnable.
+    pub fn resolve(self) -> Backend {
+        if self.available() {
+            self
+        } else {
+            Backend::Portable
+        }
+    }
+
+    /// The backend new plans use: the best available one, unless the
+    /// [`SIMD_ENV`] environment variable forces a choice. Detection runs
+    /// once per process and is cached.
+    pub fn detect() -> Backend {
+        static DETECTED: OnceLock<Backend> = OnceLock::new();
+        *DETECTED.get_or_init(|| match std::env::var(SIMD_ENV) {
+            Ok(v) => match v.trim().to_ascii_lowercase().as_str() {
+                "portable" | "scalar" => Backend::Portable,
+                "avx2" => {
+                    if Backend::Avx2.available() {
+                        Backend::Avx2
+                    } else {
+                        eprintln!(
+                            "p3dfft: {SIMD_ENV}=avx2 requested but AVX2 is not available; \
+                             using the portable backend"
+                        );
+                        Backend::Portable
+                    }
+                }
+                "" | "auto" => Backend::Avx2.resolve(),
+                other => {
+                    eprintln!("p3dfft: unknown {SIMD_ENV} value {other:?}; auto-detecting");
+                    Backend::Avx2.resolve()
+                }
+            },
+            Err(_) => Backend::Avx2.resolve(),
+        })
+    }
+}
+
+/// Human-readable ISA summary of the running CPU, for bench provenance
+/// rows (e.g. `"x86_64+avx2+fma"`).
+pub fn isa_summary() -> String {
+    #[cfg(target_arch = "x86_64")]
+    {
+        let mut feats = Vec::new();
+        if is_x86_feature_detected!("avx2") {
+            feats.push("avx2");
+        }
+        if is_x86_feature_detected!("fma") {
+            feats.push("fma");
+        }
+        if is_x86_feature_detected!("avx512f") {
+            feats.push("avx512f");
+        }
+        if feats.is_empty() {
+            "x86_64".to_string()
+        } else {
+            format!("x86_64+{}", feats.join("+"))
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        std::env::consts::ARCH.to_string()
+    }
+}
+
+/// Reinterpret a complex slice between two `Real` types of identical
+/// `TypeId` (monomorphization-time specialisation: the check folds to a
+/// constant, so the cast is free).
+///
+/// # Safety
+///
+/// `TypeId::of::<T>() == TypeId::of::<U>()` must hold (then the types are
+/// the same and the `#[repr(C)]` layout is trivially identical).
+#[cfg(target_arch = "x86_64")]
+unsafe fn cast_ref<T: Real, U: Real>(s: &[Complex<T>]) -> &[Complex<U>] {
+    debug_assert_eq!(TypeId::of::<T>(), TypeId::of::<U>());
+    core::slice::from_raw_parts(s.as_ptr() as *const Complex<U>, s.len())
+}
+
+/// Mutable variant of [`cast_ref`].
+///
+/// # Safety
+///
+/// `TypeId::of::<T>() == TypeId::of::<U>()` must hold.
+#[cfg(target_arch = "x86_64")]
+unsafe fn cast_mut<T: Real, U: Real>(s: &mut [Complex<T>]) -> &mut [Complex<U>] {
+    debug_assert_eq!(TypeId::of::<T>(), TypeId::of::<U>());
+    core::slice::from_raw_parts_mut(s.as_mut_ptr() as *mut Complex<U>, s.len())
+}
+
+// The dispatch entry points are pub(crate) on purpose: a *public* safe
+// function taking an arbitrary `Backend` would let downstream code run
+// AVX2 kernels on a CPU without AVX2 (UB). Inside the crate, every stored
+// backend has been through `Backend::resolve()` at plan build.
+
+/// Blocked Stockham FFT over a `[n][W]` tile, via `backend`.
+pub(crate) fn stockham_tile<T: Real>(
+    backend: Backend,
+    data: &mut [Complex<T>],
+    scratch: &mut [Complex<T>],
+    tw: &[Complex<T>],
+) {
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => {
+            debug_assert!(Backend::Avx2.available());
+            if TypeId::of::<T>() == TypeId::of::<f64>() {
+                unsafe {
+                    avx2::stockham_tile_f64(cast_mut(data), cast_mut(scratch), cast_ref(tw));
+                }
+            } else if TypeId::of::<T>() == TypeId::of::<f32>() {
+                unsafe {
+                    avx2::stockham_tile_f32(cast_mut(data), cast_mut(scratch), cast_ref(tw));
+                }
+            } else {
+                portable::stockham_tile(data, scratch, tw);
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        Backend::Avx2 => portable::stockham_tile(data, scratch, tw),
+        Backend::Portable => portable::stockham_tile(data, scratch, tw),
+    }
+}
+
+/// Blocked mixed-radix FFT (`src` tile → `dst` tile), via `backend`.
+pub(crate) fn mixed_radix_tile<T: Real>(
+    backend: Backend,
+    src: &[Complex<T>],
+    dst: &mut [Complex<T>],
+    factors: &[usize],
+    tw: &[Complex<T>],
+) {
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => {
+            debug_assert!(Backend::Avx2.available());
+            if TypeId::of::<T>() == TypeId::of::<f64>() {
+                unsafe {
+                    avx2::mixed_radix_tile_f64(cast_ref(src), cast_mut(dst), factors, cast_ref(tw));
+                }
+            } else if TypeId::of::<T>() == TypeId::of::<f32>() {
+                unsafe {
+                    avx2::mixed_radix_tile_f32(cast_ref(src), cast_mut(dst), factors, cast_ref(tw));
+                }
+            } else {
+                portable::mixed_radix_tile(src, dst, factors, tw);
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        Backend::Avx2 => portable::mixed_radix_tile(src, dst, factors, tw),
+        Backend::Portable => portable::mixed_radix_tile(src, dst, factors, tw),
+    }
+}
+
+/// R2C cross-lane untangle (`ztile` → `otile`), via `backend`.
+pub(crate) fn r2c_untangle<T: Real>(
+    backend: Backend,
+    ztile: &[Complex<T>],
+    otile: &mut [Complex<T>],
+    tw: &[Complex<T>],
+    half: usize,
+) {
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => {
+            debug_assert!(Backend::Avx2.available());
+            if TypeId::of::<T>() == TypeId::of::<f64>() {
+                unsafe {
+                    avx2::r2c_untangle_f64(cast_ref(ztile), cast_mut(otile), cast_ref(tw), half);
+                }
+            } else if TypeId::of::<T>() == TypeId::of::<f32>() {
+                unsafe {
+                    avx2::r2c_untangle_f32(cast_ref(ztile), cast_mut(otile), cast_ref(tw), half);
+                }
+            } else {
+                portable::r2c_untangle(ztile, otile, tw, half);
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        Backend::Avx2 => portable::r2c_untangle(ztile, otile, tw, half),
+        Backend::Portable => portable::r2c_untangle(ztile, otile, tw, half),
+    }
+}
+
+/// C2R cross-lane re-tangle (`itile` → `ztile`), via `backend`.
+pub(crate) fn c2r_retangle<T: Real>(
+    backend: Backend,
+    itile: &[Complex<T>],
+    ztile: &mut [Complex<T>],
+    tw: &[Complex<T>],
+    half: usize,
+) {
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => {
+            debug_assert!(Backend::Avx2.available());
+            if TypeId::of::<T>() == TypeId::of::<f64>() {
+                unsafe {
+                    avx2::c2r_retangle_f64(cast_ref(itile), cast_mut(ztile), cast_ref(tw), half);
+                }
+            } else if TypeId::of::<T>() == TypeId::of::<f32>() {
+                unsafe {
+                    avx2::c2r_retangle_f32(cast_ref(itile), cast_mut(ztile), cast_ref(tw), half);
+                }
+            } else {
+                portable::c2r_retangle(itile, ztile, tw, half);
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        Backend::Avx2 => portable::c2r_retangle(itile, ztile, tw, half),
+        Backend::Portable => portable::c2r_retangle(itile, ztile, tw, half),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn portable_is_always_available() {
+        assert!(Backend::Portable.available());
+        assert_eq!(Backend::Portable.resolve(), Backend::Portable);
+    }
+
+    #[test]
+    fn resolve_never_returns_an_unavailable_backend() {
+        for b in [Backend::Portable, Backend::Avx2] {
+            assert!(b.resolve().available(), "{:?}", b);
+        }
+    }
+
+    #[test]
+    fn detect_returns_an_available_backend() {
+        let b = Backend::detect();
+        assert!(b.available(), "{:?}", b);
+        // Cached: repeated calls agree.
+        assert_eq!(b, Backend::detect());
+    }
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(Backend::Portable.name(), "portable");
+        assert_eq!(Backend::Avx2.name(), "avx2");
+    }
+
+    #[test]
+    fn isa_summary_names_the_arch() {
+        let s = isa_summary();
+        assert!(!s.is_empty());
+        #[cfg(target_arch = "x86_64")]
+        assert!(s.starts_with("x86_64"));
+    }
+}

@@ -3,7 +3,7 @@
 
 use std::sync::Arc;
 
-use super::fabric::{as_bytes, bytes_into, Barrier, Fabric, Pod};
+use super::fabric::{as_bytes, bytes_into, zeroed_vec, Barrier, Fabric, Pod};
 use crate::grid::ProcGrid;
 use crate::util::error::{Error, Result};
 
@@ -174,7 +174,7 @@ impl Comm {
         let bytes = self.fabric.recv(self.ranks[src], self.world_rank(), self.tag(user_tag));
         assert_eq!(bytes.len() % std::mem::size_of::<T>(), 0);
         let n = bytes.len() / std::mem::size_of::<T>();
-        let mut out = vec![unsafe { std::mem::zeroed() }; n];
+        let mut out = zeroed_vec::<T>(n);
         bytes_into(&bytes, &mut out);
         out
     }

@@ -12,7 +12,10 @@ use std::sync::{Arc, Condvar, Mutex};
 ///
 /// # Safety
 /// Implementors must be `Copy` with no padding-dependent invariants and no
-/// pointers; the fabric will reinterpret them as byte slices.
+/// pointers; the fabric will reinterpret them as byte slices. Additionally
+/// the all-zero byte pattern must be a valid value (required by
+/// [`zeroed_vec`]); every integer/float/complex element type satisfies
+/// this.
 pub unsafe trait Pod: Copy + Send + 'static {}
 
 unsafe impl Pod for u8 {}
@@ -35,6 +38,26 @@ pub(crate) fn bytes_into<T: Pod>(bytes: &[u8], out: &mut [T]) {
     unsafe {
         std::ptr::copy_nonoverlapping(bytes.as_ptr(), out.as_mut_ptr() as *mut u8, bytes.len());
     }
+}
+
+/// Allocate a `Vec<T>` of `n` all-zero-byte elements.
+///
+/// This is the fabric's one sanctioned way to conjure receive buffers:
+/// the `Pod` bound guarantees (see its safety contract) that the all-zero
+/// byte pattern is a valid `T`, which makes the zero-fill + `set_len`
+/// below sound — unlike the `vec![mem::zeroed(); n]` pattern this
+/// replaces, the obligation is carried by the trait rather than re-argued
+/// at each call site.
+pub fn zeroed_vec<T: Pod>(n: usize) -> Vec<T> {
+    let mut v = Vec::with_capacity(n);
+    // SAFETY: the first `n` elements are within the fresh allocation's
+    // capacity; `write_bytes` makes them all-zero bytes, a valid T per the
+    // Pod contract, so `set_len(n)` exposes only initialized elements.
+    unsafe {
+        std::ptr::write_bytes(v.as_mut_ptr(), 0u8, n);
+        v.set_len(n);
+    }
+    v
 }
 
 /// One directional mailbox (src → dst): tagged FIFO with blocking receive.

@@ -38,8 +38,10 @@ impl Calibration {
 ///
 /// Runs through `execute_batch`, i.e. the blocked tile driver the pencil
 /// stages use (with its scalar tail when `batch` is not a multiple of
-/// [`crate::tile::TILE_LANES`]) — the F constant prices exactly the code
-/// the hot path executes.
+/// [`crate::tile::TILE_LANES`]). The plan comes from `C2cPlan::new`, so
+/// the blocked kernels run on the auto-detected SIMD backend (or
+/// whatever `P3DFFT_SIMD` forces) — the F constant prices exactly the
+/// code, backend included, that the hot path executes in this process.
 pub fn measure_fft_flops(n: usize, batch: usize) -> f64 {
     let plan = C2cPlan::<f64>::new(n, Direction::Forward);
     let mut rng = SplitMix64::new(0xCAFE);

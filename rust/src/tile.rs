@@ -23,15 +23,30 @@ pub const CACHE_TILE: usize = 32;
 
 /// Lane width `W` of the blocked FFT kernels: every butterfly is applied
 /// to `W` independent lines at once, with the lane loop innermost and
-/// unit-stride so it autovectorizes, and each twiddle loaded once per
-/// butterfly instead of once per line.
+/// unit-stride (vectorized explicitly by the [`crate::fft::simd`]
+/// backends, autovectorized in the portable fallback), and each twiddle
+/// loaded once per butterfly instead of once per line.
 ///
 /// 8 complex-f64 lanes are 128 bytes (two cache lines) per tile row; the
 /// f32 instantiation halves that — enough reuse per twiddle load without
-/// the `[n][W]` tile spilling L2 at pencil line lengths. EXPERIMENTS.md
-/// §Perf records the rationale and holds the slot for a measured 4/8/16
-/// sweep; this constant is the single knob that sweep will turn.
+/// the `[n][W]` tile spilling L2 at pencil line lengths. The default of 8
+/// is backed by the measured `W ∈ {4, 8, 16}` sweep in EXPERIMENTS.md
+/// §Perf; the `tile-lanes-4` / `tile-lanes-16` cargo features rebuild the
+/// crate at the other sweep points (used by the `fig_kernels` lane sweep
+/// in CI), keeping this constant the single knob.
+#[cfg(not(any(feature = "tile-lanes-4", feature = "tile-lanes-16")))]
 pub const TILE_LANES: usize = 8;
+
+/// Sweep build: `W = 4` (see the default's docs).
+#[cfg(feature = "tile-lanes-4")]
+pub const TILE_LANES: usize = 4;
+
+/// Sweep build: `W = 16` (see the default's docs).
+#[cfg(feature = "tile-lanes-16")]
+pub const TILE_LANES: usize = 16;
+
+#[cfg(all(feature = "tile-lanes-4", feature = "tile-lanes-16"))]
+compile_error!("features tile-lanes-4 and tile-lanes-16 are mutually exclusive");
 
 #[cfg(test)]
 mod tests {

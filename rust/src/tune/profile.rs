@@ -9,6 +9,7 @@
 
 use crate::netmodel::calibrate::{measure_alltoall_bw, measure_fft_flops, measure_pack_bw};
 use crate::netmodel::{Interconnect, Machine};
+use crate::tile::TILE_LANES;
 
 /// Where a profile's constants came from.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -55,12 +56,14 @@ impl MachineProfile {
     /// kernels behind the `calib_local_fft`, `calib_pack` and
     /// `calib_alltoall` benches, run at reduced size (a few ms total).
     ///
-    /// The FFT probe batch (20 lines) deliberately covers two full
-    /// [`crate::tile::TILE_LANES`]-wide tiles of the blocked driver plus a
-    /// ragged scalar tail, so F is measured over the same blocked/tail mix
-    /// the pencil stages run.
+    /// The FFT probe batch (`2·W + W/2` lines, `W =`
+    /// [`TILE_LANES`]) deliberately covers two full lane-interleaved
+    /// tiles of the blocked driver — executed through the plan's
+    /// dispatched SIMD backend, so F prices the kernels the pencil stages
+    /// actually run on this host — plus a ragged scalar tail, keeping the
+    /// blocked/tail mix representative at any sweep width.
     pub fn calibrated_quick() -> Self {
-        Self::calibrated_with(128, 20, 8, 48, 2, 8 * 1024)
+        Self::calibrated_with(128, 2 * TILE_LANES + TILE_LANES / 2, 8, 48, 2, 8 * 1024)
     }
 
     /// Calibrate with explicit probe sizes (FFT length/batch, pack

@@ -4,6 +4,7 @@
 //! held against the naive O(n²) DFT oracle in both precisions, and the
 //! blocked driver must satisfy forward∘backward ≡ n·identity.
 
+use p3dfft::fft::{Backend, Real};
 use p3dfft::fft::{naive_dft, C2cPlan, C2rPlan, Complex, Direction, Dct1Plan, Dst1Plan, R2cPlan};
 use p3dfft::tile::TILE_LANES;
 use p3dfft::util::quickprop::{check, Config};
@@ -295,4 +296,213 @@ fn blocked_and_scalar_paths_are_bit_identical() {
             );
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Forced-backend parity: every blocked path under the portable and SIMD
+// backends must produce bitwise-equal outputs — the contract documented in
+// `fft::simd` (same arithmetic, same rounding order, per lane). Plans are
+// built with an explicit `Backend` override so the comparison never depends
+// on what `Backend::detect()` picks for this process.
+// ---------------------------------------------------------------------------
+
+/// Bit view of a scalar: parity must catch sign-of-zero and NaN-payload
+/// differences that `==` would hide.
+trait Bits: Real {
+    fn bits(self) -> u64;
+}
+
+impl Bits for f64 {
+    fn bits(self) -> u64 {
+        self.to_bits()
+    }
+}
+
+impl Bits for f32 {
+    fn bits(self) -> u64 {
+        u64::from(self.to_bits())
+    }
+}
+
+fn assert_bits_eq<T: Bits>(simd: &[Complex<T>], portable: &[Complex<T>], what: &str) {
+    assert_eq!(simd.len(), portable.len(), "{what}: length mismatch");
+    for (i, (s, p)) in simd.iter().zip(portable).enumerate() {
+        assert!(
+            s.re.bits() == p.re.bits() && s.im.bits() == p.im.bits(),
+            "{what}: element {i}: simd {s} != portable {p} (bitwise)"
+        );
+    }
+}
+
+fn assert_bits_eq_real<T: Bits>(simd: &[T], portable: &[T], what: &str) {
+    assert_eq!(simd.len(), portable.len(), "{what}: length mismatch");
+    for (i, (s, p)) in simd.iter().zip(portable).enumerate() {
+        assert!(s.bits() == p.bits(), "{what}: element {i}: simd {s} != portable {p} (bitwise)");
+    }
+}
+
+/// True when the AVX2 backend can actually run here. Otherwise the parity
+/// tests print a skip notice and return: forcing `Backend::Avx2` would
+/// resolve to portable at plan build and the comparison would be vacuous.
+fn simd_or_skip(test: &str) -> bool {
+    if Backend::Avx2.available() {
+        true
+    } else {
+        eprintln!("{test}: skipped — AVX2 not available on this host");
+        false
+    }
+}
+
+fn c2c_parity<T: Bits>() {
+    let w = TILE_LANES;
+    // Line lengths covering every dispatched kernel class: powers of two
+    // (Stockham radix-4/2), smooth composites (mixed radix, incl. the
+    // generic radix-5 arm via 250 = 2·5³), and Bluestein sizes (11, 13,
+    // 34, 97 and 143 = 11·13 — prime factors past the butterfly table).
+    for &n in &[1usize, 2, 4, 8, 11, 12, 13, 34, 60, 97, 128, 143, 250, 256] {
+        for dir in [Direction::Forward, Direction::Inverse] {
+            let dname = if dir.is_inverse() { "inverse" } else { "forward" };
+            let mut rng = SplitMix64::new(0xB17 + 2 * n as u64 + dir.is_inverse() as u64);
+            // 2W + 3: two full lane-interleaved tiles plus a ragged tail.
+            let lines = rand_lines(&mut rng, n, 2 * w + 3);
+            let flat: Vec<Complex<T>> = lines.iter().flatten().map(|c| c.cast::<T>()).collect();
+            let por = C2cPlan::<T>::with_backend(n, dir, Backend::Portable);
+            let smd = C2cPlan::<T>::with_backend(n, dir, Backend::Avx2);
+            assert_eq!(por.backend(), Backend::Portable);
+            assert_eq!(smd.backend(), Backend::Avx2, "available forced backend must stick");
+            let mut scratch = vec![Complex::zero(); por.scratch_len().max(smd.scratch_len())];
+            let mut a = flat.clone();
+            por.execute_batch(&mut a, &mut scratch);
+            let mut b = flat;
+            smd.execute_batch(&mut b, &mut scratch);
+            assert_bits_eq(&b, &a, &format!("c2c {} n={n} {dname}", T::DTYPE));
+        }
+    }
+}
+
+#[test]
+fn forced_backend_c2c_parity_bitwise() {
+    if !simd_or_skip("forced_backend_c2c_parity_bitwise") {
+        return;
+    }
+    c2c_parity::<f64>();
+    c2c_parity::<f32>();
+}
+
+fn strided_parity<T: Bits>() {
+    let w = TILE_LANES;
+    for &n in &[8usize, 12, 60, 97, 250] {
+        // Ragged count forces the zero-padded edge tile through the
+        // strided gather/scatter; columns count..stride are pure padding
+        // that neither backend may touch.
+        let count = 2 * w + 3;
+        let stride = count + 5;
+        let mut rng = SplitMix64::new(0x57 + 7 * n as u64);
+        let lines = rand_lines(&mut rng, n, count);
+        let fill = Complex::new(T::from_f64(7.5).unwrap(), T::from_f64(-7.5).unwrap());
+        let mut a = vec![fill; n * stride];
+        for (b, line) in lines.iter().enumerate() {
+            for (k, &v) in line.iter().enumerate() {
+                a[b + k * stride] = v.cast::<T>();
+            }
+        }
+        let mut b = a.clone();
+        let por = C2cPlan::<T>::with_backend(n, Direction::Forward, Backend::Portable);
+        let smd = C2cPlan::<T>::with_backend(n, Direction::Forward, Backend::Avx2);
+        let mut scratch = vec![Complex::zero(); por.scratch_len().max(smd.scratch_len())];
+        por.execute_strided(&mut a, count, stride, &mut scratch);
+        smd.execute_strided(&mut b, count, stride, &mut scratch);
+        // Whole plane, padding columns included: both backends transform
+        // the same lines and leave the padding bit-for-bit intact.
+        assert_bits_eq(&b, &a, &format!("strided c2c {} n={n}", T::DTYPE));
+    }
+}
+
+#[test]
+fn forced_backend_strided_parity_bitwise() {
+    if !simd_or_skip("forced_backend_strided_parity_bitwise") {
+        return;
+    }
+    strided_parity::<f64>();
+    strided_parity::<f32>();
+}
+
+fn r2c_c2r_parity<T: Bits>() {
+    let w = TILE_LANES;
+    // Even lengths drive the blocked half-complex (un)tangle — pow2,
+    // mixed and Bluestein (34 = 2·17) inner plans; 9 pins the odd-length
+    // scalar fallback.
+    for &n in &[6usize, 8, 16, 34, 100, 250, 9] {
+        let batch = 2 * w + 3;
+        let mut rng = SplitMix64::new(0x2C + 11 * n as u64);
+        let input: Vec<T> =
+            (0..batch * n).map(|_| T::from_f64(rng.next_normal()).unwrap()).collect();
+        let por = R2cPlan::<T>::with_backend(n, Backend::Portable);
+        let smd = R2cPlan::<T>::with_backend(n, Backend::Avx2);
+        let h = por.out_len();
+        let mut scratch = vec![Complex::zero(); por.scratch_len().max(smd.scratch_len())];
+        let mut oa = vec![Complex::zero(); batch * h];
+        por.execute_batch(&input, &mut oa, &mut scratch);
+        let mut ob = vec![Complex::zero(); batch * h];
+        smd.execute_batch(&input, &mut ob, &mut scratch);
+        assert_bits_eq(&ob, &oa, &format!("r2c {} n={n}", T::DTYPE));
+
+        let bpor = C2rPlan::<T>::with_backend(n, Backend::Portable);
+        let bsmd = C2rPlan::<T>::with_backend(n, Backend::Avx2);
+        let mut cscratch = vec![Complex::zero(); bpor.scratch_len().max(bsmd.scratch_len())];
+        let mut ra = vec![T::zero(); batch * n];
+        bpor.execute_batch(&oa, &mut ra, &mut cscratch);
+        let mut rb = vec![T::zero(); batch * n];
+        bsmd.execute_batch(&ob, &mut rb, &mut cscratch);
+        assert_bits_eq_real(&rb, &ra, &format!("c2r {} n={n}", T::DTYPE));
+    }
+}
+
+#[test]
+fn forced_backend_r2c_c2r_parity_bitwise() {
+    if !simd_or_skip("forced_backend_r2c_c2r_parity_bitwise") {
+        return;
+    }
+    r2c_c2r_parity::<f64>();
+    r2c_c2r_parity::<f32>();
+}
+
+fn dct_dst_parity<T: Bits>() {
+    let w = TILE_LANES;
+    // n = 2 is the DCT-1 degenerate case (no inner plan); the rest drive
+    // pow2 and mixed-radix inner transforms of the symmetric extension.
+    for &n in &[2usize, 5, 12, 33] {
+        let batch = 2 * w + 3;
+        let mut rng = SplitMix64::new(0xDC + 13 * n as u64);
+        let lines = rand_lines(&mut rng, n, batch);
+        let flat: Vec<Complex<T>> = lines.iter().flatten().map(|c| c.cast::<T>()).collect();
+        let mut rs = vec![T::zero(); n];
+
+        let por = Dct1Plan::<T>::with_backend(n, Backend::Portable);
+        let smd = Dct1Plan::<T>::with_backend(n, Backend::Avx2);
+        let mut scratch = vec![Complex::zero(); por.scratch_len().max(smd.scratch_len())];
+        let mut a = flat.clone();
+        por.execute_complex_batch(&mut a, &mut rs, &mut scratch);
+        let mut b = flat.clone();
+        smd.execute_complex_batch(&mut b, &mut rs, &mut scratch);
+        assert_bits_eq(&b, &a, &format!("dct {} n={n}", T::DTYPE));
+
+        let por = Dst1Plan::<T>::with_backend(n, Backend::Portable);
+        let smd = Dst1Plan::<T>::with_backend(n, Backend::Avx2);
+        let mut scratch = vec![Complex::zero(); por.scratch_len().max(smd.scratch_len())];
+        let mut a = flat.clone();
+        por.execute_complex_batch(&mut a, &mut rs, &mut scratch);
+        let mut b = flat;
+        smd.execute_complex_batch(&mut b, &mut rs, &mut scratch);
+        assert_bits_eq(&b, &a, &format!("dst {} n={n}", T::DTYPE));
+    }
+}
+
+#[test]
+fn forced_backend_dct_dst_parity_bitwise() {
+    if !simd_or_skip("forced_backend_dct_dst_parity_bitwise") {
+        return;
+    }
+    dct_dst_parity::<f64>();
+    dct_dst_parity::<f32>();
 }
