@@ -74,6 +74,12 @@ pub struct RunConfig {
     pub engine: String,
     pub artifacts_dir: PathBuf,
     pub precision: String,
+    /// Two-level node topology (`topology.cores_per_node`): group ranks
+    /// into nodes of this many cores. `None` defers to the
+    /// `P3DFFT_NODES` / `P3DFFT_CORES_PER_NODE` environment (flat when
+    /// unset). Shapes fabric link accounting, exchange ordering, and —
+    /// with `pgrid = "auto"` — the tuner's `(m1, m2)` placement scoring.
+    pub cores_per_node: Option<usize>,
 }
 
 impl Default for RunConfig {
@@ -90,6 +96,7 @@ impl Default for RunConfig {
             engine: "native".into(),
             artifacts_dir: "artifacts".into(),
             precision: "f64".into(),
+            cores_per_node: None,
         }
     }
 }
@@ -165,6 +172,19 @@ impl RunConfig {
         if rc.precision != "f64" && rc.precision != "f32" {
             return Err(Error::InvalidConfig("options.precision must be f32 or f64".into()));
         }
+        if let Some(v) = c.get("topology.cores_per_node") {
+            rc.cores_per_node = match (v.as_int(), v.as_str()) {
+                (Some(n), _) if n >= 1 => Some(n as usize),
+                // One node spanning every rank — pins a flat fabric even
+                // when P3DFFT_NODES is set in the environment.
+                (_, Some("flat")) => Some(usize::MAX),
+                _ => {
+                    return Err(Error::InvalidConfig(
+                        "topology.cores_per_node must be an int >= 1 or \"flat\"".into(),
+                    ))
+                }
+            };
+        }
         Ok(rc)
     }
 
@@ -188,6 +208,7 @@ impl RunConfig {
             "options.engine" => self.engine = tmp.engine,
             "options.artifacts_dir" => self.artifacts_dir = tmp.artifacts_dir,
             "options.precision" => self.precision = tmp.precision,
+            "topology.cores_per_node" => self.cores_per_node = tmp.cores_per_node,
             other => {
                 return Err(Error::InvalidConfig(format!("unknown config key {other:?}")));
             }
@@ -273,6 +294,7 @@ impl RunConfig {
                         ChunkSetting::Auto => None,
                     },
                     explore_overlap: matches!(self.overlap_chunks, ChunkSetting::Auto),
+                    cores_per_node: self.cores_per_node,
                     ..TuneOptions::default()
                 };
                 let report = crate::tune::autotune(self.dims, nprocs, &opts)?;
@@ -289,6 +311,7 @@ impl RunConfig {
             .with_use_even(self.use_even)
             .with_stride1(self.stride1)
             .with_overlap_chunks(chunks)?
+            .with_cores_per_node(self.cores_per_node)?
             .with_engine(engine))
     }
 }
@@ -371,6 +394,27 @@ precision = "f32"
         assert_eq!(rc.iterations, 11);
         assert_eq!(rc.overlap_chunks, ChunkSetting::Fixed(4));
         assert!(rc.apply_override("bogus.key", "1").is_err());
+    }
+
+    #[test]
+    fn topology_cores_per_node_parses_and_plumbs() {
+        let c = ParsedConfig::parse("[topology]\ncores_per_node = 2\n").unwrap();
+        let rc = RunConfig::from_parsed(&c).unwrap();
+        assert_eq!(rc.cores_per_node, Some(2));
+        let spec = rc.to_spec().unwrap();
+        assert_eq!(spec.opts.cores_per_node, Some(2));
+
+        // "flat" pins the flat topology regardless of the environment
+        // (one node spanning every rank).
+        let c = ParsedConfig::parse("[topology]\ncores_per_node = flat\n").unwrap();
+        assert_eq!(RunConfig::from_parsed(&c).unwrap().cores_per_node, Some(usize::MAX));
+
+        let c = ParsedConfig::parse("[topology]\ncores_per_node = 0\n").unwrap();
+        assert!(RunConfig::from_parsed(&c).is_err());
+
+        let mut rc = RunConfig::default();
+        rc.apply_override("topology.cores_per_node", "4").unwrap();
+        assert_eq!(rc.cores_per_node, Some(4));
     }
 
     #[test]

@@ -4,9 +4,9 @@
 use std::sync::Arc;
 
 use crate::fft::{Complex, Real};
-use crate::mpi::{Comm, Universe};
+use crate::mpi::{Comm, Hierarchy, PlacementPolicy, Universe};
 use crate::util::error::Result;
-use crate::util::timer::StageTimer;
+use crate::util::timer::{Stage, StageTimer};
 
 use super::plan::{Engine, PjrtExec, RankPlan};
 use super::metrics::RunReport;
@@ -102,7 +102,15 @@ where
 {
     let engine = Engine::from_spec(spec)?;
     let spec = spec.clone();
-    let universe = Universe::new(spec.p());
+    // Spec knob wins over the environment; `None` lets `Fabric::new`
+    // resolve `P3DFFT_NODES` / `P3DFFT_CORES_PER_NODE` (flat when unset).
+    let universe = match spec.opts.cores_per_node {
+        Some(cores) => Universe::with_topology(
+            spec.p(),
+            Hierarchy::two_level(spec.p(), cores, PlacementPolicy::Contiguous),
+        ),
+        None => Universe::new(spec.p()),
+    };
     let fabric = universe.fabric().clone();
     let f = Arc::new(f);
     let t0 = std::time::Instant::now();
@@ -111,6 +119,12 @@ where
         let plan = RankPlan::<T>::new(&spec, world.rank(), engine.clone())?;
         let mut ctx = RankContext { world, row, col, plan };
         let r = f(&mut ctx)?;
+        // Fold the fabric's modeled inter-node link time for this rank's
+        // sends into the timer (its own bucket, excluded from totals).
+        let link_s = ctx.world.fabric().link_seconds_by(ctx.world.world_rank());
+        if link_s > 0.0 {
+            ctx.plan.timer.add(Stage::Link, link_s);
+        }
         Ok((r, ctx.plan.timer.clone()))
     })?;
     let wall = t0.elapsed().as_secs_f64();
@@ -147,6 +161,30 @@ mod tests {
         .unwrap();
         assert_eq!(report.per_rank, vec![0, 1, 2, 3]);
         assert!(report.wall > 0.0);
+    }
+
+    #[test]
+    fn spec_topology_accrues_link_time_and_keeps_results() {
+        let dims = [8, 8, 8];
+        let run = |cores: Option<usize>| {
+            let spec = PlanSpec::new(dims, ProcGrid::new(2, 2))
+                .unwrap()
+                .with_cores_per_node(cores)
+                .unwrap();
+            run_on_threads(&spec, |ctx| {
+                let input = ctx.make_real_input(|x, y, z| (x + 3 * y + 7 * z) as f64);
+                let mut out = ctx.alloc_output();
+                ctx.forward(&input, &mut out)?;
+                Ok(out)
+            })
+            .unwrap()
+        };
+        let flat = run(Some(4)); // one 4-core node: no inter-node links
+        let two = run(Some(2)); // two nodes: COL exchanges cross nodes
+        assert_eq!(flat.link(), 0.0);
+        assert!(two.link() > 0.0, "inter-node sends must accrue link time");
+        // Topology is accounting + ordering only: spectra are bit-identical.
+        assert_eq!(flat.per_rank, two.per_rank);
     }
 
     #[test]

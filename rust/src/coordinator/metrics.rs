@@ -36,6 +36,14 @@ impl<R> RunReport<R> {
         self.timer.get(Stage::Overlap)
     }
 
+    /// Modeled inter-node link time accrued by the fabric's two-level
+    /// topology (zero on a flat fabric). Like [`Self::overlap`] it is not
+    /// elapsed thread time — it estimates what the same sends would cost
+    /// on real inter-node links — so it never inflates [`Self::comm`].
+    pub fn link(&self) -> f64 {
+        self.timer.get(Stage::Link)
+    }
+
     /// One-line per-stage summary.
     pub fn stage_summary(&self) -> String {
         let mut parts = Vec::new();
@@ -59,10 +67,12 @@ mod tests {
         t.add(Stage::Compute, 2.0);
         t.add(Stage::Exchange, 1.0);
         t.add(Stage::Overlap, 0.5);
+        t.add(Stage::Link, 0.25);
         let r = RunReport { per_rank: vec![(), ()], timer: t, wall: 3.5, bytes: 100 };
         assert_eq!(r.compute(), 2.0);
         assert_eq!(r.comm(), 1.0, "hidden overlap time must not count as comm");
         assert_eq!(r.overlap(), 0.5);
+        assert_eq!(r.link(), 0.25, "modeled link time must not count as comm");
         assert!(r.stage_summary().contains("compute=2.0000s"));
         assert!(r.stage_summary().contains("exchange=1.0000s"));
         assert!(r.stage_summary().contains("overlap=0.5000s"));

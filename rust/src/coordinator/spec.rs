@@ -54,11 +54,24 @@ pub struct Options {
     /// XYZ layout has no contiguous slab on the Y↔Z invariant axis).
     pub overlap_chunks: usize,
     pub engine: EngineKind,
+    /// Two-level node topology: group ranks into nodes of this many cores
+    /// so the fabric charges modeled link time to inter-node sends and the
+    /// exchange schedule drains intra-node partners first. `None`
+    /// (default) defers to the `P3DFFT_NODES` / `P3DFFT_CORES_PER_NODE`
+    /// environment (flat when unset). Payloads are bit-identical either
+    /// way — the topology only affects ordering and accounting.
+    pub cores_per_node: Option<usize>,
 }
 
 impl Default for Options {
     fn default() -> Self {
-        Options { stride1: true, use_even: false, overlap_chunks: 1, engine: EngineKind::Native }
+        Options {
+            stride1: true,
+            use_even: false,
+            overlap_chunks: 1,
+            engine: EngineKind::Native,
+            cores_per_node: None,
+        }
     }
 }
 
@@ -125,6 +138,19 @@ impl PlanSpec {
         Ok(self)
     }
 
+    /// Builder: two-level node topology (`Some(cores)` groups ranks into
+    /// contiguous nodes of that many cores; `None` defers to the
+    /// environment). `Some(0)` is rejected like the config loader does.
+    pub fn with_cores_per_node(mut self, cores: Option<usize>) -> Result<Self> {
+        if cores == Some(0) {
+            return Err(Error::InvalidConfig(
+                "topology.cores_per_node must be >= 1".into(),
+            ));
+        }
+        self.opts.cores_per_node = cores;
+        Ok(self)
+    }
+
     /// Plan-time autotune: enumerate every Eq.-2-feasible `(m1, m2)`
     /// factorization of `nprocs` (crossed with `use_even` and
     /// `overlap_chunks` candidates), score them on `opts.profile`'s
@@ -184,6 +210,16 @@ mod tests {
         assert!(!o.use_even, "Alltoallv is the paper's default");
         assert_eq!(o.overlap_chunks, 1, "blocking pipeline is the default");
         assert_eq!(o.engine, EngineKind::Native);
+        assert_eq!(o.cores_per_node, None, "topology defers to the environment");
+    }
+
+    #[test]
+    fn cores_per_node_builder_validates() {
+        let base = PlanSpec::new([8, 8, 8], ProcGrid::new(2, 2)).unwrap();
+        let err = base.clone().with_cores_per_node(Some(0)).unwrap_err();
+        assert!(err.to_string().contains("cores_per_node"), "{err}");
+        let s = base.with_cores_per_node(Some(2)).unwrap();
+        assert_eq!(s.opts.cores_per_node, Some(2));
     }
 
     #[test]

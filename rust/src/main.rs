@@ -63,7 +63,8 @@ fn print_help() {
          COMMANDS:\n\
            run   [--config FILE] [-o key=value ...]   forward+backward loop + verify\n\
            tune  [--config FILE] [--p P] [--machine host|cray_xt5|ranger]\n\
-                 [--refine K] [--top N]               rank (m1,m2)/chunk candidates\n\
+                 [--refine K] [--top N] [--cores-per-node C]\n\
+                 \x20                                    rank (m1,m2)/chunk candidates\n\
            sweep [--config FILE] [--p P]              aspect-ratio sweep (Fig. 3)\n\
            model [--machine cray_xt5|ranger] [--n N] [--m1 M1] [--m2 M2] [--useeven]\n\
            fit   P:t [P:t ...]                        fit a/P + d/P^(2/3)\n\
@@ -75,7 +76,9 @@ fn print_help() {
            iterations=N options.use_even=bool options.stride1=bool\n\
            options.overlap_chunks=K|auto (chunked comm/compute overlap; 1 = blocking)\n\
            options.third=\"fft|cheby|empty\" options.engine=\"native|pjrt\"\n\
-           options.artifacts_dir=\"artifacts\" options.precision=\"f32|f64\""
+           options.artifacts_dir=\"artifacts\" options.precision=\"f32|f64\"\n\
+           topology.cores_per_node=C|flat (two-level node map; also via\n\
+           P3DFFT_NODES / P3DFFT_CORES_PER_NODE env; unset = flat fabric)"
     );
 }
 
@@ -176,7 +179,8 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
 }
 
 fn cmd_tune(args: &[String]) -> anyhow::Result<()> {
-    let (rc, extras) = load_config(args, &["--p", "--machine", "--refine", "--top"])?;
+    let (rc, extras) =
+        load_config(args, &["--p", "--machine", "--refine", "--top", "--cores-per-node"])?;
     let p = match extras.get("--p") {
         Some(v) => v.parse::<usize>()?,
         None => rc.resolved_nprocs()?,
@@ -189,11 +193,17 @@ fn cmd_tune(args: &[String]) -> anyhow::Result<()> {
     };
     let refine = extras.get("--refine").map(|v| v.parse::<usize>()).transpose()?.unwrap_or(0);
     let top = extras.get("--top").map(|v| v.parse::<usize>()).transpose()?;
+    // --cores-per-node wins over the config file's topology section.
+    let cores_per_node = match extras.get("--cores-per-node") {
+        Some(v) => Some(v.parse::<usize>()?),
+        None => rc.cores_per_node,
+    };
     let opts = TuneOptions {
         profile,
         elem_bytes: rc.elem_bytes(),
         refine_top_k: refine,
         refine_iters: rc.iterations,
+        cores_per_node,
         ..TuneOptions::default()
     };
     let (spec, mut report) = PlanSpec::autotune(rc.dims, p, &opts)?;
@@ -214,6 +224,17 @@ fn cmd_tune(args: &[String]) -> anyhow::Result<()> {
             None => String::new(),
         }
     );
+    if let (Some(cpn), Some(row), Some(col)) =
+        (cores_per_node, report.best().row_intra, report.best().col_intra)
+    {
+        println!(
+            "placement: nodes of {cpn} cores; ROW exchanges {:.0}% intra-node{}, \
+             COLUMN {:.0}% intra-node",
+            100.0 * row,
+            if row >= 1.0 { " (rows stay on node)" } else { "" },
+            100.0 * col
+        );
+    }
     println!(
         "config: -o grid.pgrid=[{},{}] -o options.overlap_chunks={}{}",
         spec.pgrid.m1,

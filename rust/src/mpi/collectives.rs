@@ -4,10 +4,20 @@
 //!
 //! The implementation is send-all-then-receive-all with buffered sends, so
 //! it cannot deadlock; the self-block is a straight memcpy, as in any sane
-//! MPI. Receive order is by source rank, which makes results deterministic.
+//! MPI. Every message is addressed by (source, tag) into a disjoint buffer
+//! window, so results are deterministic and bit-identical for *any*
+//! peer-visiting order — which is what lets the order be a free scheduling
+//! knob: on a two-level topology the buffered and chunked paths walk
+//! intra-node peers first ([`Comm::chunk_peer_offsets`]) so modeled
+//! inter-node flight hides behind on-node drains. The interleaved
+//! `Pairwise` ablation keeps the classic offset ring: its blocking
+//! receive at step `s` assumes every rank runs the *same* offset
+//! sequence, and per-rank intra-first orders differ between ranks, which
+//! could deadlock a sendrecv ring.
 
 use super::communicator::Comm;
 use super::fabric::Pod;
+use super::hierarchy::intra_first_offsets;
 
 /// Which all-to-all schedule to run. The paper uses the system
 /// `MPI_Alltoall(v)` (our [`AlltoallAlgo::Buffered`] — post everything,
@@ -33,6 +43,30 @@ const COLL_TAG_BASE: u64 = 1 << 40;
 const CHUNK_TAG_BASE: u64 = 1 << 41;
 
 impl Comm {
+    /// Peer-visiting order (as pairwise offsets `0..p`) for this
+    /// communicator's exchanges: identity on a flat fabric, intra-node
+    /// first on a two-level one (see
+    /// [`crate::mpi::hierarchy::intra_first_offsets`]). `recv_side`
+    /// classifies the drain partner `(rank - s) mod p` instead of the send
+    /// partner `(rank + s) mod p` — the two sides of a pairwise round see
+    /// different partners at the same offset, so each orders by its own.
+    ///
+    /// Public so schedule tests can assert the pairwise-matching
+    /// invariant; the collectives below consume it internally.
+    pub fn chunk_peer_offsets(&self, recv_side: bool) -> Vec<usize> {
+        let p = self.size();
+        let topo = self.fabric().topology();
+        if topo.is_flat() {
+            return (0..p).collect();
+        }
+        let me = self.rank();
+        let my_world = self.world_rank();
+        intra_first_offsets(p, |s| {
+            let partner = if recv_side { (me + p - s) % p } else { (me + s) % p };
+            topo.nodes.same_node(my_world, self.world_rank_of(partner))
+        })
+    }
+
     /// `MPI_Alltoall`: equal blocks of `block` elements. `send.len()` and
     /// `recv.len()` must equal `block * size`. Block `j` of `send` goes to
     /// rank `j`; block `i` of `recv` comes from rank `i`.
@@ -56,14 +90,19 @@ impl Comm {
         assert_eq!(recv.len(), block * p, "alltoall recv size");
         let me = self.rank();
         let tag = COLL_TAG_BASE + 1;
-        // Self block first (pure memcpy, no fabric traffic).
+        // Self block first (pure memcpy, no fabric traffic). Peer order is
+        // topology-aware (intra-node first); since sends are buffered and
+        // all posted before any receive, any order is deadlock-free and
+        // payload-identical.
         recv[me * block..(me + 1) * block].copy_from_slice(&send[me * block..(me + 1) * block]);
-        for j in 0..p {
+        for s in self.chunk_peer_offsets(false) {
+            let j = (me + s) % p;
             if j != me {
                 self.send(j, tag, &send[j * block..(j + 1) * block]);
             }
         }
-        for i in 0..p {
+        for s in self.chunk_peer_offsets(true) {
+            let i = (me + p - s) % p;
             if i != me {
                 self.recv_into(i, tag, &mut recv[i * block..(i + 1) * block]);
             }
@@ -89,12 +128,14 @@ impl Comm {
         debug_assert_eq!(scounts[me], rcounts[me], "self block must be symmetric");
         recv[rdispls[me]..rdispls[me] + rcounts[me]]
             .copy_from_slice(&send[sdispls[me]..sdispls[me] + scounts[me]]);
-        for j in 0..p {
+        for s in self.chunk_peer_offsets(false) {
+            let j = (me + s) % p;
             if j != me {
                 self.send(j, tag, &send[sdispls[j]..sdispls[j] + scounts[j]]);
             }
         }
-        for i in 0..p {
+        for s in self.chunk_peer_offsets(true) {
+            let i = (me + p - s) % p;
             if i != me {
                 self.recv_into(i, tag, &mut recv[rdispls[i]..rdispls[i] + rcounts[i]]);
             }
@@ -161,12 +202,17 @@ impl Comm {
     /// pairwise order `(rank + s) mod p` — §3.3's "equivalent collection
     /// of point-to-point send/receive calls" — with the self block first
     /// (`s = 0`), which keeps the schedule deterministic and
-    /// contention-bounded. Counts/displacements are in elements, indexed
-    /// by peer; `salt` distinguishes in-flight chunks (the chunk index).
+    /// contention-bounded. On a two-level topology the offsets are
+    /// reordered intra-node first ([`Self::chunk_peer_offsets`]): on-node
+    /// peers get their blocks earliest so their drains never stall, while
+    /// inter-node flight hides behind them. Counts/displacements are in
+    /// elements, indexed by peer; `salt` distinguishes in-flight chunks
+    /// (the chunk index).
     ///
     /// Pair every post with exactly one [`Self::drain_chunk_recvs`] using
     /// the same salt; matching is FIFO per (src, dst, tag), so repeated
-    /// transposes may reuse salts safely.
+    /// transposes may reuse salts safely — and the same per-channel
+    /// addressing is why the peer order can never change payloads.
     pub fn post_chunk_sends<T: Pod>(
         &self,
         salt: u64,
@@ -177,7 +223,7 @@ impl Comm {
         let p = self.size();
         let me = self.rank();
         let tag = CHUNK_TAG_BASE + salt;
-        for s in 0..p {
+        for s in self.chunk_peer_offsets(false) {
             let to = (me + s) % p;
             self.send(to, tag, &send[sdispls[to]..sdispls[to] + scounts[to]]);
         }
@@ -185,10 +231,13 @@ impl Comm {
 
     /// Drain one chunk's receives (blocking), the `MPI_Waitall` of the
     /// chunked exchange. Receives in the mirrored pairwise order
-    /// `(rank - s) mod p`, self block first. No barrier: the data
-    /// dependency (every peer posts chunk `salt` before draining it)
-    /// already orders the exchange, and skipping the barrier is what lets
-    /// the next chunk's pack overlap this chunk's flight.
+    /// `(rank - s) mod p`, self block first, intra-node partners before
+    /// inter-node ones on a two-level topology — blocking on the fast
+    /// on-node messages first leaves modeled inter-node flight hidden
+    /// behind them. No barrier: the data dependency (every peer posts
+    /// chunk `salt` before draining it) already orders the exchange, and
+    /// skipping the barrier is what lets the next chunk's pack overlap
+    /// this chunk's flight.
     pub fn drain_chunk_recvs<T: Pod>(
         &self,
         salt: u64,
@@ -199,7 +248,7 @@ impl Comm {
         let p = self.size();
         let me = self.rank();
         let tag = CHUNK_TAG_BASE + salt;
-        for s in 0..p {
+        for s in self.chunk_peer_offsets(true) {
             let from = (me + p - s) % p;
             self.recv_into(from, tag, &mut recv[rdispls[from]..rdispls[from] + rcounts[from]]);
         }
@@ -539,6 +588,60 @@ mod tests {
         assert_eq!(got[0].1[1], 15);
         assert_eq!(got[1].0[0], 1);
         assert_eq!(got[1].1[0], 6);
+    }
+
+    #[test]
+    fn two_level_topology_is_bit_identical_to_flat() {
+        // Same chunked exchange on a flat universe and a 2-nodes-of-2
+        // universe: the intra-first order must not change a single byte.
+        use crate::mpi::{Hierarchy, PlacementPolicy, Universe};
+        let exchange = |u: Universe| {
+            u.run(|c| {
+                let p = c.size();
+                let me = c.rank();
+                let scounts = vec![3usize; p];
+                let sdispls: Vec<usize> = (0..p).map(|j| 3 * j).collect();
+                let send: Vec<u64> = (0..3 * p).map(|i| (me * 1000 + i) as u64).collect();
+                let mut recv = vec![0u64; 3 * p];
+                c.post_chunk_sends(0, &send, &scounts, &sdispls);
+                c.drain_chunk_recvs(0, &mut recv, &scounts, &sdispls);
+                let mut buf = vec![0u64; 3 * p];
+                c.alltoallv(&send, &scounts, &sdispls, &mut buf, &scounts, &sdispls);
+                Ok((recv, buf))
+            })
+            .unwrap()
+        };
+        let flat = exchange(Universe::with_topology(4, Hierarchy::flat(4)));
+        let two = exchange(Universe::with_topology(
+            4,
+            Hierarchy::two_level(4, 2, PlacementPolicy::Contiguous),
+        ));
+        assert_eq!(flat, two);
+    }
+
+    #[test]
+    fn chunk_peer_offsets_is_intra_first_permutation() {
+        use crate::mpi::{Hierarchy, PlacementPolicy, Universe};
+        let u = Universe::with_topology(6, Hierarchy::two_level(6, 3, PlacementPolicy::Contiguous));
+        let got = u
+            .run(|c| Ok((c.chunk_peer_offsets(false), c.chunk_peer_offsets(true))))
+            .unwrap();
+        for (me, (send, recv)) in got.iter().enumerate() {
+            for (order, recv_side) in [(send, false), (recv, true)] {
+                assert_eq!(order[0], 0, "rank {me}: self first");
+                let mut sorted = order.clone();
+                sorted.sort_unstable();
+                assert_eq!(sorted, (0..6).collect::<Vec<_>>(), "rank {me}: permutation");
+                // Intra partners strictly precede inter partners.
+                let node = |r: usize| r / 3;
+                let partner = |s: usize| if recv_side { (me + 6 - s) % 6 } else { (me + s) % 6 };
+                let intra: Vec<bool> =
+                    order[1..].iter().map(|&s| node(partner(s)) == node(me)).collect();
+                let first_inter = intra.iter().position(|&b| !b).unwrap();
+                assert!(intra[..first_inter].iter().all(|&b| b), "rank {me}: {order:?}");
+                assert!(intra[first_inter..].iter().all(|&b| !b), "rank {me}: {order:?}");
+            }
+        }
     }
 
     #[test]

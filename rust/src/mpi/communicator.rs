@@ -16,8 +16,15 @@ pub struct Universe {
 }
 
 impl Universe {
+    /// Universe over the environment-resolved topology (`P3DFFT_NODES` /
+    /// `P3DFFT_CORES_PER_NODE`; flat when unset).
     pub fn new(size: usize) -> Self {
         Universe { size, fabric: Fabric::new(size) }
+    }
+
+    /// Universe over an explicit two-level node topology.
+    pub fn with_topology(size: usize, topo: crate::mpi::Hierarchy) -> Self {
+        Universe { size, fabric: Fabric::with_topology(size, topo) }
     }
 
     pub fn size(&self) -> usize {

@@ -8,6 +8,8 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
+use super::hierarchy::Hierarchy;
+
 /// Marker for plain-old-data element types that can be sent as raw bytes.
 ///
 /// # Safety
@@ -153,11 +155,26 @@ pub struct Fabric {
     /// Failure flag: raised when any rank exits abnormally so the others
     /// abort their blocking waits instead of hanging forever.
     failed: Arc<AtomicUsize>,
+    /// Two-level node topology. Payloads are never affected; the hierarchy
+    /// only drives the modeled link accounting below and the intra-node-
+    /// first peer order of the chunked collectives.
+    topo: Hierarchy,
+    /// Modeled inter-node link time accrued per world rank (send side),
+    /// in nanoseconds. Zero on a flat topology.
+    link_ns: Vec<AtomicU64>,
 }
 
 impl Fabric {
+    /// Fabric with the topology resolved from the environment
+    /// (`P3DFFT_NODES` / `P3DFFT_CORES_PER_NODE`; flat when unset).
     pub fn new(world_size: usize) -> Arc<Self> {
+        Self::with_topology(world_size, Hierarchy::from_env(world_size))
+    }
+
+    /// Fabric with an explicit node topology.
+    pub fn with_topology(world_size: usize, topo: Hierarchy) -> Arc<Self> {
         assert!(world_size >= 1);
+        assert_eq!(topo.nodes.p, world_size, "topology rank count must match the fabric");
         let mut boxes = Vec::with_capacity(world_size * world_size);
         for _ in 0..world_size * world_size {
             boxes.push(Mailbox::default());
@@ -171,6 +188,8 @@ impl Fabric {
             splits: Mutex::new(HashMap::new()),
             barriers: Mutex::new(HashMap::new()),
             failed: failed.clone(),
+            topo,
+            link_ns: (0..world_size).map(|_| AtomicU64::new(0)).collect(),
         };
         f.barriers
             .lock()
@@ -179,14 +198,28 @@ impl Fabric {
         Arc::new(f)
     }
 
+    /// The node topology this fabric was built with.
+    pub fn topology(&self) -> &Hierarchy {
+        &self.topo
+    }
+
     #[inline]
     fn mbox(&self, src: usize, dst: usize) -> &Mailbox {
         &self.boxes[src * self.world_size + dst]
     }
 
-    /// Deliver a message (copy) from src to dst.
+    /// Deliver a message (copy) from src to dst. On a two-level topology
+    /// an inter-node send additionally accrues its modeled link cost to
+    /// the sender — pure accounting, the payload and its delivery are
+    /// bit-for-bit the same as on a flat fabric.
     pub(crate) fn send(&self, src: usize, dst: usize, tag: u64, data: Vec<u8>) {
         self.bytes_sent[src].fetch_add(data.len() as u64, Ordering::Relaxed);
+        if !self.topo.is_flat() {
+            let cost = self.topo.link_cost(src, dst, data.len());
+            if cost > 0.0 {
+                self.link_ns[src].fetch_add((cost * 1e9) as u64, Ordering::Relaxed);
+            }
+        }
         self.mbox(src, dst).push(tag, data);
     }
 
@@ -215,6 +248,17 @@ impl Fabric {
     /// Total bytes pushed through the whole fabric.
     pub fn bytes_total(&self) -> u64 {
         self.bytes_sent.iter().map(|a| a.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Modeled inter-node link seconds accrued by `world_rank`'s sends so
+    /// far (zero on a flat topology).
+    pub fn link_seconds_by(&self, world_rank: usize) -> f64 {
+        self.link_ns[world_rank].load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// Modeled inter-node link seconds summed over all ranks.
+    pub fn link_seconds_total(&self) -> f64 {
+        self.link_ns.iter().map(|a| a.load(Ordering::Relaxed) as f64 * 1e-9).sum()
     }
 
     pub(crate) fn fresh_comm_id(&self) -> u64 {
@@ -354,6 +398,32 @@ mod tests {
         thread::sleep(std::time::Duration::from_millis(30));
         f.mark_failed();
         assert!(h.join().unwrap(), "blocked recv must abort after teardown");
+    }
+
+    #[test]
+    fn link_accounting_charges_inter_node_sends_only() {
+        use crate::mpi::PlacementPolicy;
+        let topo = Hierarchy::two_level(4, 2, PlacementPolicy::Contiguous);
+        let per_msg = topo.link.cost(64);
+        let f = Fabric::with_topology(4, topo);
+        f.send(0, 1, 0, vec![0; 64]); // intra (node 0)
+        f.send(0, 2, 0, vec![0; 64]); // inter
+        f.send(0, 3, 0, vec![0; 64]); // inter
+        f.send(2, 3, 0, vec![0; 64]); // intra (node 1)
+        assert_eq!(f.link_seconds_by(1), 0.0);
+        assert_eq!(f.link_seconds_by(2), 0.0, "intra-node send is free");
+        let r0 = f.link_seconds_by(0);
+        assert!((r0 - 2.0 * per_msg).abs() < 1e-12, "{r0} vs {}", 2.0 * per_msg);
+        assert!((f.link_seconds_total() - r0).abs() < 1e-15);
+        // Payload delivery is untouched by the accounting.
+        assert_eq!(f.recv(0, 2, 0).len(), 64);
+    }
+
+    #[test]
+    fn flat_fabric_never_accrues_link_time() {
+        let f = Fabric::with_topology(2, Hierarchy::flat(2));
+        f.send(0, 1, 0, vec![0; 1 << 16]);
+        assert_eq!(f.link_seconds_total(), 0.0);
     }
 
     #[test]

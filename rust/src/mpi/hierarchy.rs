@@ -1,0 +1,243 @@
+//! Two-level (node / network) hierarchy over the thread-backed fabric.
+//!
+//! Real machines are not flat: ranks on one node exchange through shared
+//! memory while ranks on different nodes cross the interconnect, and the
+//! paper's scaling analysis (§4.3) is entirely about that asymmetry. The
+//! thread fabric cannot *be* slow across nodes — every transfer is a
+//! memcpy — so the hierarchy instead (a) groups ranks into nodes via
+//! [`NodeMap`], (b) attaches a modeled per-link cost that inter-node sends
+//! accrue into a dedicated timer bucket (payloads stay bit-identical; only
+//! accounting changes), and (c) defines the intra-node-first peer order the
+//! chunked pairwise exchange uses so modeled inter-node flight hides behind
+//! intra-node drains and local FFT work.
+//!
+//! Configuration mirrors the `P3DFFT_SIMD` precedent: the environment
+//! drives the default (`P3DFFT_NODES` or `P3DFFT_CORES_PER_NODE`, plus
+//! `P3DFFT_NODE_POLICY`), and `PlanSpec`/`RunConfig` (`topology.
+//! cores_per_node`) override it per plan.
+
+use super::topology::{NodeMap, PlacementPolicy};
+
+/// Modeled cost of one inter-node link, applied per message on the send
+/// side. Intra-node messages cost nothing extra — the fabric's real memcpy
+/// *is* their cost.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkModel {
+    /// Extra latency per inter-node message (seconds).
+    pub inter_latency_s: f64,
+    /// Modeled inter-node bandwidth (bytes/s) the message serializes over.
+    pub inter_bw: f64,
+}
+
+impl LinkModel {
+    /// Nominal commodity-cluster link: 2 µs latency, 3 GB/s per link —
+    /// roughly a quarter of one DDR channel, matching the "inter-node
+    /// bandwidth well below intra-node" regime the paper tunes for.
+    pub fn nominal() -> Self {
+        LinkModel { inter_latency_s: 2.0e-6, inter_bw: 3.0e9 }
+    }
+
+    /// Modeled seconds one inter-node message of `bytes` occupies its link.
+    pub fn cost(&self, bytes: usize) -> f64 {
+        self.inter_latency_s + bytes as f64 / self.inter_bw
+    }
+}
+
+/// A node map plus the link model priced onto inter-node traffic.
+#[derive(Debug, Clone)]
+pub struct Hierarchy {
+    pub nodes: NodeMap,
+    pub link: LinkModel,
+}
+
+impl Hierarchy {
+    /// Flat (single-node) topology: every pair is intra-node, no modeled
+    /// link cost ever accrues.
+    pub fn flat(p: usize) -> Self {
+        Hierarchy {
+            nodes: NodeMap::new(p, p.max(1), PlacementPolicy::Contiguous),
+            link: LinkModel::nominal(),
+        }
+    }
+
+    /// Two-level topology: `p` ranks on nodes of `cores_per_node`.
+    pub fn two_level(p: usize, cores_per_node: usize, policy: PlacementPolicy) -> Self {
+        Hierarchy {
+            nodes: NodeMap::new(p, cores_per_node.max(1), policy),
+            link: LinkModel::nominal(),
+        }
+    }
+
+    /// Replace the link model (builder style).
+    pub fn with_link(mut self, link: LinkModel) -> Self {
+        self.link = link;
+        self
+    }
+
+    /// True when everything is one node — the zero-overhead fast path.
+    pub fn is_flat(&self) -> bool {
+        self.nodes.node_count() <= 1
+    }
+
+    /// Modeled link seconds for a `bytes`-sized message between two world
+    /// ranks (zero intra-node).
+    pub fn link_cost(&self, src: usize, dst: usize, bytes: usize) -> f64 {
+        if self.nodes.same_node(src, dst) {
+            0.0
+        } else {
+            self.link.cost(bytes)
+        }
+    }
+
+    /// Resolve the topology from the process environment. Recognised:
+    ///
+    /// - `P3DFFT_CORES_PER_NODE=<n>` — explicit node size (wins);
+    /// - `P3DFFT_NODES=<n>` — node count, ranks spread as evenly as
+    ///   possible (`cores = ceil(p / n)`), the CI topology-matrix knob;
+    /// - `P3DFFT_NODE_POLICY=contiguous|roundrobin` — placement policy
+    ///   (default contiguous, the paper's default found optimal for cubic
+    ///   grids).
+    ///
+    /// Unset or empty variables mean flat.
+    pub fn from_env(p: usize) -> Self {
+        Self::from_env_vars(
+            p,
+            std::env::var("P3DFFT_CORES_PER_NODE").ok().as_deref(),
+            std::env::var("P3DFFT_NODES").ok().as_deref(),
+            std::env::var("P3DFFT_NODE_POLICY").ok().as_deref(),
+        )
+    }
+
+    /// Pure parsing backend of [`Self::from_env`] (testable without
+    /// touching the process environment). Malformed values fall back to
+    /// flat rather than panicking inside rank threads.
+    pub fn from_env_vars(
+        p: usize,
+        cores_per_node: Option<&str>,
+        nodes: Option<&str>,
+        policy: Option<&str>,
+    ) -> Self {
+        let parse = |s: Option<&str>| -> Option<usize> {
+            s.map(str::trim)
+                .filter(|s| !s.is_empty())
+                .and_then(|s| s.parse::<usize>().ok())
+                .filter(|&n| n >= 1)
+        };
+        let policy = match policy.map(str::trim) {
+            Some(s) if s.eq_ignore_ascii_case("roundrobin") => PlacementPolicy::RoundRobin,
+            _ => PlacementPolicy::Contiguous,
+        };
+        if let Some(cores) = parse(cores_per_node) {
+            return Self::two_level(p, cores, policy);
+        }
+        if let Some(n) = parse(nodes) {
+            if n > 1 {
+                return Self::two_level(p, p.div_ceil(n).max(1), policy);
+            }
+        }
+        Self::flat(p)
+    }
+}
+
+/// Intra-node-first visiting order over the pairwise offsets `0..p`.
+///
+/// Offset `s = 0` (the self block, a pure memcpy) always leads; offsets
+/// whose partner — as classified by `partner_is_intra(s)` — shares the
+/// caller's node come next in ascending order; inter-node offsets go last,
+/// also ascending. Used symmetrically for the send side (partner
+/// `(me + s) mod p`) and the drain side (partner `(me - s) mod p`): sends
+/// put intra-node data in peers' mailboxes first so their fast drains are
+/// never stalled, and drains block on intra-node peers first so modeled
+/// inter-node flight hides behind them.
+///
+/// The order is a permutation of `0..p`, so one post/drain round still
+/// exchanges with every peer exactly once (the pairwise-matching
+/// invariant); because the fabric addresses messages by
+/// `(src, dst, tag)` into disjoint displacement windows, *any* visiting
+/// order yields bit-identical payloads — ordering is purely a scheduling
+/// decision.
+pub fn intra_first_offsets(p: usize, partner_is_intra: impl Fn(usize) -> bool) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..p).collect();
+    order.sort_by_key(|&s| {
+        let group = if s == 0 {
+            0
+        } else if partner_is_intra(s) {
+            1
+        } else {
+            2
+        };
+        (group, s)
+    });
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_has_one_node_and_free_links() {
+        let h = Hierarchy::flat(8);
+        assert!(h.is_flat());
+        assert_eq!(h.nodes.node_count(), 1);
+        assert_eq!(h.link_cost(0, 7, 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn two_level_charges_only_inter_node() {
+        let h = Hierarchy::two_level(8, 4, PlacementPolicy::Contiguous);
+        assert!(!h.is_flat());
+        assert_eq!(h.link_cost(0, 3, 1024), 0.0, "same node");
+        let c = h.link_cost(0, 4, 1024);
+        assert!(c > 0.0);
+        assert_eq!(c, h.link.cost(1024));
+        // Bandwidth term scales with message size on top of fixed latency.
+        assert!(h.link_cost(0, 4, 1 << 20) > c);
+    }
+
+    #[test]
+    fn env_parsing_cores_wins_over_nodes() {
+        let h = Hierarchy::from_env_vars(8, Some("2"), Some("4"), None);
+        assert_eq!(h.nodes.cores_per_node, 2);
+        let h = Hierarchy::from_env_vars(8, None, Some("4"), None);
+        assert_eq!(h.nodes.cores_per_node, 2, "8 ranks / 4 nodes");
+        assert_eq!(h.nodes.node_count(), 4);
+    }
+
+    #[test]
+    fn env_parsing_falls_back_to_flat() {
+        assert!(Hierarchy::from_env_vars(8, None, None, None).is_flat());
+        assert!(Hierarchy::from_env_vars(8, Some(""), Some(""), None).is_flat());
+        assert!(Hierarchy::from_env_vars(8, Some("zero"), Some("-3"), None).is_flat());
+        assert!(Hierarchy::from_env_vars(8, None, Some("1"), None).is_flat());
+    }
+
+    #[test]
+    fn env_parsing_policy() {
+        let h = Hierarchy::from_env_vars(8, Some("4"), None, Some("roundrobin"));
+        assert_eq!(h.nodes.policy, PlacementPolicy::RoundRobin);
+        let h = Hierarchy::from_env_vars(8, Some("4"), None, Some("contiguous"));
+        assert_eq!(h.nodes.policy, PlacementPolicy::Contiguous);
+    }
+
+    #[test]
+    fn intra_first_is_a_permutation_with_self_leading() {
+        // 8 ranks, 2 nodes of 4, viewpoint of rank 1 (contiguous): send
+        // partner of offset s is (1 + s) % 8; intra iff partner in 0..4.
+        let me = 1usize;
+        let p = 8usize;
+        let nodes = NodeMap::new(p, 4, PlacementPolicy::Contiguous);
+        let order = intra_first_offsets(p, |s| nodes.same_node(me, (me + s) % p));
+        assert_eq!(order[0], 0, "self block first");
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..p).collect::<Vec<_>>(), "permutation of all offsets");
+        // Partners 2, 3 (offsets 1, 2) are intra for rank 1; then 0 via
+        // offset 7; everything else is inter-node.
+        let groups: Vec<bool> =
+            order[1..].iter().map(|&s| nodes.same_node(me, (me + s) % p)).collect();
+        let first_inter = groups.iter().position(|&g| !g).unwrap();
+        assert!(groups[..first_inter].iter().all(|&g| g));
+        assert!(groups[first_inter..].iter().all(|&g| !g), "no intra after first inter: {order:?}");
+    }
+}

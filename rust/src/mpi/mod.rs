@@ -15,9 +15,11 @@
 pub mod collectives;
 pub mod communicator;
 pub mod fabric;
+pub mod hierarchy;
 pub mod topology;
 
 pub use collectives::AlltoallAlgo;
 pub use communicator::{Comm, Universe};
 pub use fabric::Pod;
+pub use hierarchy::{Hierarchy, LinkModel};
 pub use topology::{NodeMap, PlacementPolicy};

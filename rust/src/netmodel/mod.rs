@@ -30,5 +30,8 @@ pub mod topo;
 pub use calibrate::Calibration;
 pub use fit::{fit_strong_scaling, FitResult};
 pub use machine::Machine;
-pub use model::{predict, predict_overlapped, CostBreakdown, ModelInput};
+pub use model::{
+    placement_fractions, predict, predict_overlapped, predict_two_level, CostBreakdown,
+    ModelInput, TopoPrediction,
+};
 pub use topo::Interconnect;

@@ -13,6 +13,8 @@
 //!   Fig. 10's single-transpose advantage falls out naturally.
 
 use super::machine::Machine;
+use crate::grid::ProcGrid;
+use crate::mpi::NodeMap;
 
 /// One scenario to price.
 #[derive(Debug, Clone)]
@@ -139,6 +141,85 @@ pub fn predict_overlapped(input: &ModelInput, chunks: usize) -> f64 {
     let e = c.row_exchange + c.col_exchange;
     let w = c.compute + c.memory;
     e / k + (k - 1.0) * (e / k).max(w / k) + w / k + k * c.latency
+}
+
+/// Average intra-node fraction of the ROW and COLUMN sub-communicators
+/// of an `m1 × m2` grid under `nodes` — the placement quantities the
+/// tuner reports for a candidate. Returns `(row_intra, col_intra)` in
+/// `[0, 1]`; with the library's rank convention (`rank = r1 + m1·r2`,
+/// contiguous placement) `row_intra == 1.0` iff each ROW sub-communicator
+/// fits inside one node.
+pub fn placement_fractions(m1: usize, m2: usize, nodes: &NodeMap) -> (f64, f64) {
+    let grid = ProcGrid::new(m1, m2);
+    let row: f64 = (0..m2)
+        .map(|r2| nodes.intra_node_fraction(&grid.row_ranks(grid.rank(0, r2))))
+        .sum::<f64>()
+        / m2 as f64;
+    let col: f64 = (0..m1)
+        .map(|r1| nodes.intra_node_fraction(&grid.col_ranks(grid.rank(r1, 0))))
+        .sum::<f64>()
+        / m1 as f64;
+    (row, col)
+}
+
+/// Two-level prediction of one forward transform under an explicit node
+/// map, for the flat and the topology-aware exchange schedules.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TopoPrediction {
+    /// Seconds with the flat schedule: intra- and inter-node traffic
+    /// serialize (every peer drained in rank order, the wire idle while
+    /// on-node copies run).
+    pub flat_s: f64,
+    /// Seconds with the intra-node-first schedule: on-node drains proceed
+    /// at memory bandwidth *while* inter-node chunks are in flight, so the
+    /// exchange term is `max(E_intra, E_inter)` instead of their sum.
+    pub aware_s: f64,
+    /// Average intra-node fraction of the ROW sub-communicators.
+    pub row_intra: f64,
+    /// Average intra-node fraction of the COLUMN sub-communicators.
+    pub col_intra: f64,
+}
+
+/// Price one forward transform under a two-level node map, splitting each
+/// exchange's volume into an intra-node share (memory-bandwidth priced)
+/// and an inter-node share (bisection priced) by the placement fractions
+/// of [`placement_fractions`]. Both schedules move identical bytes — the
+/// aware schedule only reorders peer drains, which is exactly what lets
+/// it overlap the two shares: `aware_s < flat_s` whenever both shares are
+/// nonzero, and `aware_s == flat_s` on a flat (single-node) map or when
+/// one share vanishes. Uses the same `k`-chunk pipeline law as
+/// [`predict_overlapped`]; existing single-level entry points are
+/// untouched.
+pub fn predict_two_level(input: &ModelInput, chunks: usize, nodes: &NodeMap) -> TopoPrediction {
+    let m = &input.machine;
+    let p = input.p() as f64;
+    let vol = input.elem_bytes * input.ntot();
+    let v_penalty = if input.use_even { 1.0 } else { m.alltoallv_penalty };
+
+    let (row_intra, col_intra) = placement_fractions(input.m1, input.m2, nodes);
+    let v_row = (input.m1 as f64 - 1.0) / input.m1 as f64 * vol;
+    let v_col = (input.m2 as f64 - 1.0) / input.m2 as f64 * vol;
+
+    // Intra-node share: both directions of the copy stream through node
+    // memory, per task. Inter-node share: halved across the bisection with
+    // the contention constant, like the single-level law at scale.
+    let intra_vol = v_row * row_intra + v_col * col_intra;
+    let inter_vol = v_row * (1.0 - row_intra) + v_col * (1.0 - col_intra);
+    let e_intra = 2.0 * intra_vol / (p * m.mem_bw_per_task) * v_penalty;
+    let e_inter =
+        m.c_contention * inter_vol / (2.0 * m.interconnect.bisection_bw(input.p())) * v_penalty;
+
+    let c = predict(input);
+    let w = c.compute + c.memory;
+    let k = chunks.max(1) as f64;
+    let pipe = |e: f64| e / k + (k - 1.0) * (e / k).max(w / k) + w / k + k * c.latency;
+
+    TopoPrediction {
+        flat_s: pipe(e_intra + e_inter),
+        aware_s: pipe(e_intra.max(e_inter)),
+        row_intra,
+        col_intra,
+    }
 }
 
 /// §2's transpose-vs-distributed comparison (Foster, Table 1): the
@@ -283,6 +364,70 @@ mod tests {
             .unwrap();
         assert!(best > 1, "overlap should pay at all on a comm-heavy run");
         assert!(best < 65536, "unbounded chunking must lose to latency");
+    }
+
+    #[test]
+    fn placement_fractions_follow_rank_convention() {
+        // rank = r1 + m1*r2, contiguous nodes of 4.
+        let nodes = NodeMap::new(64, 4, PlacementPolicy::Contiguous);
+        // 4x16: each ROW is exactly one node; COLUMNs stride across nodes.
+        let (r, c) = placement_fractions(4, 16, &nodes);
+        assert_eq!((r, c), (1.0, 0.0));
+        // 8x8: each ROW spans two nodes (24 of 56 ordered pairs intra).
+        let (r, c) = placement_fractions(8, 8, &nodes);
+        assert!((r - 24.0 / 56.0).abs() < 1e-12, "got {r}");
+        assert_eq!(c, 0.0);
+    }
+
+    /// A Clos machine whose inter-node bandwidth per node is 1/4 of the
+    /// node's aggregate memory bandwidth — the acceptance scenario.
+    fn two_level_machine(cpn: usize) -> Machine {
+        let mem_bw = 2.0e9;
+        Machine {
+            name: "two-level-test",
+            flops_per_core: 1.0e9,
+            mem_bw_per_task: mem_bw,
+            b_mem_accesses: 20.0,
+            c_contention: 1.0,
+            cores_per_node: cpn,
+            interconnect: crate::netmodel::topo::Interconnect::Clos {
+                port_bw: cpn as f64 * mem_bw / 4.0,
+                cores_per_node: cpn,
+            },
+            alltoallv_penalty: 1.0,
+            msg_latency: 2.0e-6,
+        }
+    }
+
+    #[test]
+    fn topology_aware_schedule_beats_flat_on_two_shapes() {
+        // With inter-node bw <= 1/4 intra-node, the intra-first schedule
+        // must strictly win wherever both traffic classes exist.
+        let nodes = NodeMap::new(64, 4, PlacementPolicy::Contiguous);
+        for (m1, m2) in [(4usize, 16usize), (8, 8)] {
+            for k in [1usize, 4] {
+                let mut inp = ModelInput::cubic(256, m1, m2, two_level_machine(4));
+                inp.elem_bytes = 16.0;
+                let t = predict_two_level(&inp, k, &nodes);
+                assert!(
+                    t.aware_s < t.flat_s,
+                    "{m1}x{m2} k={k}: aware {} !< flat {}",
+                    t.aware_s,
+                    t.flat_s
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn two_level_degenerates_on_one_node() {
+        // A flat map (every rank on one node) has no inter-node traffic,
+        // so reordering drains buys nothing: aware == flat exactly.
+        let nodes = NodeMap::new(64, 64, PlacementPolicy::Contiguous);
+        let inp = ModelInput::cubic(256, 8, 8, two_level_machine(64));
+        let t = predict_two_level(&inp, 4, &nodes);
+        assert_eq!(t.aware_s, t.flat_s);
+        assert_eq!((t.row_intra, t.col_intra), (1.0, 1.0));
     }
 
     #[test]

@@ -16,7 +16,11 @@ pub enum Interconnect {
         /// Cores per node (bisection counts nodes, not cores).
         cores_per_node: usize,
     },
-    /// Clos / fat-tree with full bisection: σ_bi(P) = port_bw · P / 2.
+    /// Clos / fat-tree with full bisection: σ_bi(P) = port_bw · n / 2
+    /// with `n = P / cores_per_node` nodes — half the nodes inject at
+    /// full port rate across the bisection. (Ports are per *node*, so the
+    /// law counts nodes, not cores; dividing cores by 2 would overstate
+    /// bisection by a factor of `cores_per_node`.)
     Clos {
         /// Per-node injection bandwidth, bytes/s.
         port_bw: f64,
@@ -80,6 +84,16 @@ mod tests {
         let t = Interconnect::Torus3D { link_bw: 9.6e9, cores_per_node: 12 };
         let b = t.bisection_bw(65536);
         assert!(b > 1.0e12 && b < 1.2e13, "got {b:.3e}");
+    }
+
+    #[test]
+    fn paper_ranger_bisection_counts_nodes_not_cores() {
+        // Ranger: 3936 nodes x 16 cores, ~1 GB/s injection per node. Half
+        // the nodes sending across the bisection gives ~1968 GB/s. Pricing
+        // cores instead of nodes would claim ~31.5 TB/s — 16x too high.
+        let c = Interconnect::Clos { port_bw: 1e9, cores_per_node: 16 };
+        let b = c.bisection_bw(62976); // 3936 nodes worth of cores
+        assert!(b > 1.5e12 && b < 2.5e12, "got {b:.3e}");
     }
 
     #[test]

@@ -61,6 +61,15 @@ pub struct TuneOptions {
     /// Price every candidate with exactly this `overlap_chunks`;
     /// `None` falls back to `explore_overlap`.
     pub pin_overlap_chunks: Option<usize>,
+    /// Topology-aware placement scoring: group the `nprocs` ranks into
+    /// contiguous nodes of this many cores and price every candidate with
+    /// the two-level, intra-node-first schedule model
+    /// ([`crate::netmodel::predict_two_level`]), recording each grid's
+    /// ROW/COLUMN intra-node fractions in the report. Rows are contiguous
+    /// rank blocks of `m1`, so the winner keeps ROW sub-communicators
+    /// on-node whenever a feasible `m1 <= cores_per_node` grid exists.
+    /// `None` (default) keeps the exact legacy single-level scoring.
+    pub cores_per_node: Option<usize>,
     /// Refine this many of the model's top candidates with short real
     /// pipeline runs (0 = model-only, fully deterministic).
     pub refine_top_k: usize,
@@ -79,6 +88,7 @@ impl Default for TuneOptions {
             explore_overlap: true,
             pin_use_even: None,
             pin_overlap_chunks: None,
+            cores_per_node: None,
             refine_top_k: 0,
             refine_iters: 1,
             seed: 0x5EED_CAFE,
@@ -121,12 +131,35 @@ pub fn autotune(dims: [usize; 3], nprocs: usize, opts: &TuneOptions) -> Result<T
             dims[0], dims[1], dims[2], nprocs
         )));
     }
+    let nodes = opts.cores_per_node.map(|c| {
+        crate::mpi::NodeMap::new(nprocs, c.max(1), crate::mpi::PlacementPolicy::Contiguous)
+    });
     let mut entries: Vec<TuneEntry> = cands
         .into_iter()
-        .map(|cand| TuneEntry {
-            cand,
-            model_s: score::model_seconds(dims, &cand, &opts.profile, opts.elem_bytes),
-            measured_s: None,
+        .map(|cand| match &nodes {
+            Some(nm) => {
+                let t = score::model_seconds_two_level(
+                    dims,
+                    &cand,
+                    &opts.profile,
+                    opts.elem_bytes,
+                    nm,
+                );
+                TuneEntry {
+                    cand,
+                    model_s: t.aware_s,
+                    measured_s: None,
+                    row_intra: Some(t.row_intra),
+                    col_intra: Some(t.col_intra),
+                }
+            }
+            None => TuneEntry {
+                cand,
+                model_s: score::model_seconds(dims, &cand, &opts.profile, opts.elem_bytes),
+                measured_s: None,
+                row_intra: None,
+                col_intra: None,
+            },
         })
         .collect();
     entries.sort_by(|a, b| {
@@ -252,6 +285,30 @@ mod tests {
             best.m1,
             best.m2
         );
+    }
+
+    #[test]
+    fn topology_scoring_keeps_rows_on_node_and_reports_placement() {
+        // 16 ranks on 4-core nodes: grids with m1 <= 4 keep every ROW
+        // sub-communicator inside one node, and the winner must be one of
+        // them (the two-level model prices cross-node rows at the slow
+        // inter-node bisection).
+        let opts = TuneOptions {
+            profile: MachineProfile::synthetic(Machine::ranger()),
+            cores_per_node: Some(4),
+            explore_use_even: false,
+            explore_overlap: false,
+            ..TuneOptions::default()
+        };
+        let r = autotune([256, 256, 256], 16, &opts).unwrap();
+        let best = r.best();
+        assert_eq!(best.row_intra, Some(1.0), "winner {:?}", best.cand);
+        assert!(best.cand.m1 <= 4, "winner {}x{}", best.cand.m1, best.cand.m2);
+        // Every entry carries placement fractions in the opt-in path.
+        assert!(r.entries.iter().all(|e| e.row_intra.is_some() && e.col_intra.is_some()));
+        // Legacy path stays placement-free.
+        let legacy = autotune([256, 256, 256], 16, &TuneOptions::default()).unwrap();
+        assert!(legacy.entries.iter().all(|e| e.row_intra.is_none()));
     }
 
     #[test]

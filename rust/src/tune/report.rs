@@ -12,11 +12,20 @@ use super::candidates::Candidate;
 #[derive(Debug, Clone)]
 pub struct TuneEntry {
     pub cand: Candidate,
-    /// Eq.-3 model prediction, seconds per forward transform.
+    /// Eq.-3 model prediction, seconds per forward transform. With
+    /// topology-aware scoring this is the two-level, intra-node-first
+    /// schedule prediction.
     pub model_s: f64,
     /// Measured seconds per forward+backward pair from the refinement
     /// runs (`None` when the candidate was ranked by model only).
     pub measured_s: Option<f64>,
+    /// Average intra-node fraction of the ROW sub-communicators under the
+    /// tuner's node map (`None` without topology-aware scoring). `1.0`
+    /// means every ROW exchange stays on a node — the placement the
+    /// tuner prefers whenever a feasible grid offers it.
+    pub row_intra: Option<f64>,
+    /// Average intra-node fraction of the COLUMN sub-communicators.
+    pub col_intra: Option<f64>,
 }
 
 /// The tuner's full output: candidates best-first.
@@ -69,6 +78,9 @@ impl TuneReport {
             if let Some(m) = e.measured_s {
                 row = row.col("measured_s", m);
             }
+            if let (Some(r), Some(c)) = (e.row_intra, e.col_intra) {
+                row = row.col("row_intra", r).col("col_intra", c);
+            }
             table.push(row);
         }
         table
@@ -84,7 +96,26 @@ mod tests {
             cand: Candidate { m1, m2, use_even: false, overlap_chunks: 1 },
             model_s,
             measured_s: None,
+            row_intra: None,
+            col_intra: None,
         }
+    }
+
+    #[test]
+    fn placement_columns_render_when_present() {
+        let mut e = entry(2, 2, 0.5);
+        e.row_intra = Some(1.0);
+        e.col_intra = Some(0.0);
+        let r = TuneReport {
+            dims: [32, 32, 32],
+            nprocs: 4,
+            profile: "test".into(),
+            seed: 0,
+            entries: vec![e],
+        };
+        let s = r.render();
+        assert!(s.contains("row_intra"), "{s}");
+        assert!(s.contains("col_intra"), "{s}");
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Model scoring: price one candidate with the Eq.-3 machine model.
 
-use crate::netmodel::{predict_overlapped, ModelInput};
+use crate::mpi::NodeMap;
+use crate::netmodel::{predict_overlapped, predict_two_level, ModelInput, TopoPrediction};
 
 use super::candidates::Candidate;
 use super::profile::MachineProfile;
@@ -27,6 +28,31 @@ pub fn model_seconds(
         machine: profile.machine.clone(),
     };
     predict_overlapped(&input, cand.overlap_chunks)
+}
+
+/// Price one candidate under an explicit node map, with the
+/// topology-aware (intra-node-first) exchange schedule the runtime now
+/// implements. Returns the full [`TopoPrediction`] so the tuner can
+/// surface the `(m1, m2)` placement fractions alongside the score. Only
+/// the opt-in topology path uses this; [`model_seconds`] is unchanged.
+pub fn model_seconds_two_level(
+    dims: [usize; 3],
+    cand: &Candidate,
+    profile: &MachineProfile,
+    elem_bytes: f64,
+    nodes: &NodeMap,
+) -> TopoPrediction {
+    let input = ModelInput {
+        nx: dims[0],
+        ny: dims[1],
+        nz: dims[2],
+        m1: cand.m1,
+        m2: cand.m2,
+        elem_bytes,
+        use_even: cand.use_even,
+        machine: profile.machine.clone(),
+    };
+    predict_two_level(&input, cand.overlap_chunks, nodes)
 }
 
 #[cfg(test)]

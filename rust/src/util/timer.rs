@@ -26,16 +26,23 @@ pub enum Stage {
     /// In-flight exchange time hidden behind pack/unpack/compute (chunked
     /// overlap executor only; concurrent with the other buckets).
     Overlap,
+    /// Modeled inter-node link time accrued by the two-level fabric
+    /// topology (zero on a flat fabric). Like [`Stage::Overlap`] it is not
+    /// measured wall time of this thread — it is the time the same sends
+    /// would occupy real inter-node links — so it is excluded from
+    /// [`StageTimer::total`].
+    Link,
     /// Everything else (setup, normalisation).
     Other,
 }
 
-pub const ALL_STAGES: [Stage; 6] = [
+pub const ALL_STAGES: [Stage; 7] = [
     Stage::Compute,
     Stage::Pack,
     Stage::Exchange,
     Stage::Unpack,
     Stage::Overlap,
+    Stage::Link,
     Stage::Other,
 ];
 
@@ -47,6 +54,7 @@ impl Stage {
             Stage::Exchange => "exchange",
             Stage::Unpack => "unpack",
             Stage::Overlap => "overlap",
+            Stage::Link => "link",
             Stage::Other => "other",
         }
     }
@@ -57,7 +65,8 @@ impl Stage {
             Stage::Exchange => 2,
             Stage::Unpack => 3,
             Stage::Overlap => 4,
-            Stage::Other => 5,
+            Stage::Link => 5,
+            Stage::Other => 6,
         }
     }
 }
@@ -65,7 +74,7 @@ impl Stage {
 /// Accumulates seconds per stage. Not thread-safe by design: one per rank.
 #[derive(Debug, Clone, Default)]
 pub struct StageTimer {
-    acc: [f64; 6],
+    acc: [f64; 7],
 }
 
 impl StageTimer {
@@ -91,11 +100,15 @@ impl StageTimer {
         self.acc[stage.index()]
     }
 
-    /// Total across all *sequential* stages. [`Stage::Overlap`] is
-    /// excluded: it measures in-flight time concurrent with the others,
-    /// so including it would double-count wall time.
+    /// Total across all *sequential* stages. [`Stage::Overlap`] and
+    /// [`Stage::Link`] are excluded: the former measures in-flight time
+    /// concurrent with the others (including it would double-count wall
+    /// time), and the latter is modeled link time that never elapsed on
+    /// this thread at all.
     pub fn total(&self) -> f64 {
-        self.acc.iter().sum::<f64>() - self.acc[Stage::Overlap.index()]
+        self.acc.iter().sum::<f64>()
+            - self.acc[Stage::Overlap.index()]
+            - self.acc[Stage::Link.index()]
     }
 
     /// Communication = pack + exchange + unpack (the paper's "comm time"
@@ -115,7 +128,7 @@ impl StageTimer {
 
     /// Reset all accumulators.
     pub fn reset(&mut self) {
-        self.acc = [0.0; 6];
+        self.acc = [0.0; 7];
     }
 }
 
@@ -156,6 +169,17 @@ mod tests {
         // Hidden time never inflates the sequential total or comm share.
         assert_eq!(t.total(), 5.0);
         assert_eq!(t.comm(), 1.0);
+    }
+
+    #[test]
+    fn link_is_modeled_not_elapsed() {
+        let mut t = StageTimer::new();
+        t.add(Stage::Exchange, 2.0);
+        t.add(Stage::Link, 1.5);
+        assert_eq!(t.get(Stage::Link), 1.5);
+        // Modeled link time inflates neither the sequential total nor comm.
+        assert_eq!(t.total(), 2.0);
+        assert_eq!(t.comm(), 2.0);
     }
 
     #[test]

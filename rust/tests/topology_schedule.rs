@@ -1,0 +1,215 @@
+//! Topology-schedule invariance: the two-level node map reorders the
+//! chunked exchange's peer service order (intra-node pairs drain first)
+//! and prices inter-node sends in the modeled `link` bucket — but it must
+//! never change a single payload bit. Covered: forward Z-pencil spectra
+//! and forward∘backward roundtrips across node maps {1×P, 2×P/2, 4×P/4}
+//! crossed with overlap_chunks ∈ {1, 4}, an uneven grid on a 2×3
+//! processor grid, the validity of the intra-node-first peer ordering as
+//! a pairwise matching, and the env-independent `topology.cores_per_node`
+//! spec knob.
+
+use p3dfft::bench::{sine_field, verify_roundtrip};
+use p3dfft::coordinator::{run_on_threads, PlanSpec};
+use p3dfft::fft::Complex;
+use p3dfft::grid::ProcGrid;
+use p3dfft::mpi::hierarchy::intra_first_offsets;
+use p3dfft::mpi::{Hierarchy, NodeMap, PlacementPolicy, Universe};
+
+/// Deterministic, rank-independent test field with no special symmetry.
+fn field(x: usize, y: usize, z: usize) -> f64 {
+    ((x * 37 + y * 101 + z * 13) as f64 * 0.7133).sin() + 0.25 * x as f64 - 0.125 * z as f64
+}
+
+/// Forward-transform `spec` and return every rank's Z-pencil verbatim.
+fn z_pencils(spec: &PlanSpec) -> Vec<Vec<Complex<f64>>> {
+    run_on_threads(spec, move |ctx| {
+        let input = ctx.make_real_input(field);
+        let mut out = ctx.alloc_output();
+        ctx.forward(&input, &mut out)?;
+        Ok(out)
+    })
+    .unwrap()
+    .per_rank
+}
+
+/// Forward+backward `spec` and return every rank's (unnormalised) real
+/// roundtrip output.
+fn roundtrip_backs(spec: &PlanSpec) -> Vec<Vec<f64>> {
+    run_on_threads(spec, move |ctx| {
+        let input = ctx.make_real_input(field);
+        let mut out = ctx.alloc_output();
+        let mut back = ctx.alloc_input();
+        ctx.forward(&input, &mut out)?;
+        ctx.backward(&out, &mut back)?;
+        Ok(back)
+    })
+    .unwrap()
+    .per_rank
+}
+
+fn spec_with_map(
+    dims: [usize; 3],
+    m1: usize,
+    m2: usize,
+    k: usize,
+    cores: Option<usize>,
+) -> PlanSpec {
+    PlanSpec::new(dims, ProcGrid::new(m1, m2))
+        .unwrap()
+        .with_overlap_chunks(k)
+        .unwrap()
+        .with_cores_per_node(cores)
+        .unwrap()
+}
+
+#[test]
+fn node_maps_bit_identical_z_pencils() {
+    // P = 4 as {1 node of 4, 2 nodes of 2, 4 nodes of 1}, with and
+    // without chunked overlap, on an uneven grid so the chunk tails and
+    // the peer reordering interact.
+    let dims = [10, 12, 14];
+    for k in [1usize, 4] {
+        let flat = z_pencils(&spec_with_map(dims, 2, 2, k, None));
+        for cores in [4usize, 2, 1] {
+            let mapped = z_pencils(&spec_with_map(dims, 2, 2, k, Some(cores)));
+            assert_eq!(
+                flat, mapped,
+                "k={k} cores_per_node={cores}: Z-pencils must be bit-identical to flat"
+            );
+        }
+    }
+}
+
+#[test]
+fn node_maps_bit_identical_backward() {
+    let dims = [10, 12, 14];
+    for k in [1usize, 4] {
+        let flat = roundtrip_backs(&spec_with_map(dims, 2, 2, k, None));
+        for cores in [4usize, 2, 1] {
+            assert_eq!(
+                flat,
+                roundtrip_backs(&spec_with_map(dims, 2, 2, k, Some(cores))),
+                "k={k} cores_per_node={cores}: backward must be bit-identical to flat"
+            );
+        }
+    }
+}
+
+#[test]
+fn node_maps_bit_identical_on_uneven_2x3_grid() {
+    // P = 6: nodes of 3 (ROW comms of size 2 stay on node only partially)
+    // and nodes of 2. Uneven dims exercise the non-uniform chunk counts.
+    let dims = [9, 15, 7];
+    let flat = z_pencils(&spec_with_map(dims, 2, 3, 4, None));
+    for cores in [6usize, 3, 2, 1] {
+        assert_eq!(
+            flat,
+            z_pencils(&spec_with_map(dims, 2, 3, 4, Some(cores))),
+            "cores_per_node={cores}: 2x3 grid must be bit-identical to flat"
+        );
+    }
+}
+
+#[test]
+fn node_maps_roundtrip_still_normalises() {
+    let dims = [16, 16, 16];
+    for cores in [2usize, 1] {
+        let spec = spec_with_map(dims, 2, 2, 4, Some(cores));
+        let report = run_on_threads(&spec, move |ctx| {
+            let input = ctx.make_real_input(sine_field::<f64>(16, 16, 16));
+            let mut out = ctx.alloc_output();
+            let mut back = ctx.alloc_input();
+            ctx.forward(&input, &mut out)?;
+            ctx.backward(&out, &mut back)?;
+            Ok(verify_roundtrip(&input, &back, ctx.plan.normalization()))
+        })
+        .unwrap();
+        for (rank, err) in report.per_rank.iter().enumerate() {
+            assert!(*err < 1e-10, "cores={cores} rank={rank}: err={err}");
+        }
+    }
+}
+
+#[test]
+fn multi_node_maps_accrue_link_time_flat_does_not() {
+    let dims = [16, 16, 16];
+    let run = |cores: Option<usize>| {
+        let spec = spec_with_map(dims, 2, 2, 1, cores);
+        run_on_threads(&spec, move |ctx| {
+            let input = ctx.make_real_input(sine_field::<f64>(16, 16, 16));
+            let mut out = ctx.alloc_output();
+            ctx.forward(&input, &mut out)?;
+            Ok(())
+        })
+        .unwrap()
+    };
+    // One node spanning all ranks: every link is intra-node and free.
+    assert_eq!(run(Some(4)).link(), 0.0, "single-node map must accrue no link time");
+    // Four singleton nodes: every exchange crosses the modeled wire.
+    assert!(run(Some(1)).link() > 0.0, "all-inter-node map must accrue link time");
+}
+
+/// The intra-node-first offset order must remain a *valid* pairwise
+/// schedule: per rank it is a permutation of all P offsets with self
+/// first, every intra-node partner strictly before every inter-node one,
+/// and globally every ordered (src, dst) pair is serviced exactly once.
+#[test]
+fn intra_first_ordering_is_a_valid_pairwise_matching() {
+    for (p, cpn) in [(4usize, 2usize), (6, 3), (6, 2), (8, 4), (8, 1), (5, 2)] {
+        let nodes = NodeMap::new(p, cpn, PlacementPolicy::Contiguous);
+        let mut pairs_seen = vec![false; p * p];
+        for me in 0..p {
+            let offsets = intra_first_offsets(p, |s| nodes.same_node(me, (me + s) % p));
+            // Permutation of 0..p.
+            let mut sorted = offsets.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..p).collect::<Vec<_>>(), "p={p} cpn={cpn} me={me}");
+            // Self-exchange leads.
+            assert_eq!(offsets[0], 0, "p={p} cpn={cpn} me={me}: self must come first");
+            // Intra strictly before inter.
+            let groups: Vec<bool> =
+                offsets[1..].iter().map(|&s| nodes.same_node(me, (me + s) % p)).collect();
+            let first_inter = groups.iter().position(|g| !*g).unwrap_or(groups.len());
+            assert!(
+                groups[first_inter..].iter().all(|g| !*g),
+                "p={p} cpn={cpn} me={me}: intra-node peers must all precede inter-node peers"
+            );
+            for &s in &offsets {
+                let dst = (me + s) % p;
+                assert!(!pairs_seen[me * p + dst], "p={p} cpn={cpn}: duplicate pair {me}->{dst}");
+                pairs_seen[me * p + dst] = true;
+            }
+        }
+        assert!(pairs_seen.iter().all(|&b| b), "p={p} cpn={cpn}: every ordered pair serviced");
+    }
+}
+
+/// The live `Comm` must hand the chunked exchange the same intra-first
+/// order the pure function promises, on both the send and recv side.
+#[test]
+fn comm_chunk_peer_offsets_follow_node_map() {
+    let p = 6;
+    let nodes = NodeMap::new(p, 2, PlacementPolicy::Contiguous);
+    let topo = Hierarchy::two_level(p, 2, PlacementPolicy::Contiguous);
+    let uni = Universe::with_topology(p, topo);
+    let orders = uni
+        .run(move |world| {
+            Ok((world.chunk_peer_offsets(false), world.chunk_peer_offsets(true)))
+        })
+        .unwrap();
+    for (me, (send, recv)) in orders.into_iter().enumerate() {
+        for (label, offsets, sign) in [("send", send, 1isize), ("recv", recv, -1)] {
+            assert_eq!(offsets[0], 0, "rank {me} {label}: self first");
+            let partner = |s: usize| {
+                (me as isize + sign * s as isize).rem_euclid(p as isize) as usize
+            };
+            let groups: Vec<bool> =
+                offsets[1..].iter().map(|&s| nodes.same_node(me, partner(s))).collect();
+            let first_inter = groups.iter().position(|g| !*g).unwrap_or(groups.len());
+            assert!(
+                groups[first_inter..].iter().all(|g| !*g),
+                "rank {me} {label}: intra-node peers must drain before inter-node peers"
+            );
+        }
+    }
+}
