@@ -1,0 +1,146 @@
+//! Pruned transforms + fused convolution: the wire-volume and stage-count
+//! wins the truncation machinery buys.
+//!
+//! Measured side 1 — exchange volume: forward transforms on a `1×P` grid,
+//! full vs 2/3-spherical truncation. With `M1 = 1` the X→Y transpose is a
+//! rank-local copy (no fabric traffic), so `report.bytes` isolates the
+//! Y→Z alltoallv the truncation prunes. With blocking exchanges the
+//! byte ratio is exactly `(h·ny) / retained_pairs` (the self-block is
+//! uncounted on both sides and the off-diagonal sum is symmetric), e.g.
+//! `544/169 ≈ 3.22` for 32³ under the 2/3 rule — comfortably above the
+//! ≥ 2.5× acceptance bar.
+//!
+//! Measured side 2 — fused convolution: `convolve` vs the unfused
+//! forward + forward + pointwise product + backward sequence on a `2×2`
+//! grid. The fused chain must execute exactly two fewer transpose stages
+//! (asserted from the stage-graph descriptions); wall times for both are
+//! reported.
+//!
+//! `--quick` / `P3DFFT_BENCH_QUICK=1` shrinks grids for the CI
+//! bench-smoke job; `P3DFFT_BENCH_JSON=PATH` appends the table.
+
+use p3dfft::bench::{emit_json, quick_mode, sine_field, FigureRow, Table};
+use p3dfft::coordinator::{run_on_threads, Engine, PlanSpec, RankPlan};
+use p3dfft::grid::ProcGrid;
+use p3dfft::{PruneRule, Truncation};
+
+fn main() {
+    let quick = quick_mode();
+    let n = if quick { 32usize } else { 64 };
+    let dims = [n, n, n];
+    let iterations = if quick { 1usize } else { 3 };
+
+    // ---- exchange volume: full vs 2/3-truncated forward -------------------
+    let p = 4usize;
+    let rule = PruneRule::new(dims, Truncation::Spherical23);
+    let predicted = (rule.h * rule.ny) as f64 / rule.retained_pairs() as f64;
+    let run_fwd = |trunc: Option<Truncation>| {
+        let mut spec = PlanSpec::new(dims, ProcGrid::new(1, p)).unwrap();
+        if let Some(t) = trunc {
+            spec = spec.with_truncation(t);
+        }
+        let (nx, ny, nz) = (dims[0], dims[1], dims[2]);
+        run_on_threads(&spec, move |ctx| {
+            let input = ctx.make_real_input(sine_field::<f64>(nx, ny, nz));
+            let mut out = ctx.alloc_output();
+            let t0 = std::time::Instant::now();
+            for _ in 0..iterations {
+                ctx.forward(&input, &mut out)?;
+            }
+            Ok(ctx.max_over_ranks(t0.elapsed().as_secs_f64() / iterations as f64))
+        })
+        .expect("fig_pruned forward run")
+    };
+    let full = run_fwd(None);
+    let pruned = run_fwd(Some(Truncation::Spherical23));
+    let ratio = full.bytes as f64 / pruned.bytes.max(1) as f64;
+
+    let mut table = Table::new(format!(
+        "fig_pruned: {n}^3 forward on 1x{p} ranks (Y->Z leg only), {iterations} iters"
+    ));
+    table.push(
+        FigureRow::new("forward/full", format!("N={n}"))
+            .col("bytes", full.bytes as f64)
+            .col("wall_s", full.per_rank[0]),
+    );
+    table.push(
+        FigureRow::new("forward/spherical23", format!("N={n}"))
+            .col("bytes", pruned.bytes as f64)
+            .col("wall_s", pruned.per_rank[0])
+            .col("byte_ratio", ratio)
+            .col("predicted_ratio", predicted),
+    );
+    assert!(
+        ratio >= 2.5,
+        "2/3-rule truncation must cut the Y->Z exchange bytes >= 2.5x \
+         (measured {ratio:.2}x, predicted {predicted:.2}x)"
+    );
+
+    // ---- fused convolution vs unfused sequence ----------------------------
+    let cdims = if quick { [32, 32, 32] } else { [64, 64, 64] };
+    let cspec = PlanSpec::new(cdims, ProcGrid::new(2, 2)).unwrap();
+    let mut probe = RankPlan::<f64>::new(&cspec, 0, Engine::Native).unwrap();
+    let transposes = |d: &str| {
+        d.split(" -> ").filter(|s| s.starts_with("xy-") || s.starts_with("yz-")).count()
+    };
+    let fused_stages = transposes(&probe.describe_convolve().expect("convolve graph"));
+    let unfused_stages =
+        2 * transposes(&probe.describe_forward()) + transposes(&probe.describe_backward());
+    assert_eq!(
+        fused_stages + 2,
+        unfused_stages,
+        "fused convolve must skip exactly two interior transpose stages"
+    );
+
+    let (nx, ny, nz) = (cdims[0], cdims[1], cdims[2]);
+    let fused = run_on_threads(&cspec, move |ctx| {
+        let sf = sine_field::<f64>(nx, ny, nz);
+        let a = ctx.make_real_input(&sf);
+        let b = ctx.make_real_input(|x, y, z| sf(z, x, y));
+        let mut out = ctx.alloc_input();
+        ctx.convolve(&a, &b, &mut out)?; // warmup
+        let t0 = std::time::Instant::now();
+        for _ in 0..iterations {
+            ctx.convolve(&a, &b, &mut out)?;
+        }
+        Ok(ctx.max_over_ranks(t0.elapsed().as_secs_f64() / iterations as f64))
+    })
+    .expect("fig_pruned fused run");
+    let unfused = run_on_threads(&cspec, move |ctx| {
+        let sf = sine_field::<f64>(nx, ny, nz);
+        let a = ctx.make_real_input(&sf);
+        let b = ctx.make_real_input(|x, y, z| sf(z, x, y));
+        let mut ah = ctx.alloc_output();
+        let mut bh = ctx.alloc_output();
+        let mut out = ctx.alloc_input();
+        ctx.forward(&a, &mut ah)?; // warmup
+        let t0 = std::time::Instant::now();
+        for _ in 0..iterations {
+            ctx.forward(&a, &mut ah)?;
+            ctx.forward(&b, &mut bh)?;
+            for (x, y) in ah.iter_mut().zip(&bh) {
+                *x = *x * *y;
+            }
+            ctx.backward(&ah, &mut out)?;
+        }
+        Ok(ctx.max_over_ranks(t0.elapsed().as_secs_f64() / iterations as f64))
+    })
+    .expect("fig_pruned unfused run");
+    table.push(
+        FigureRow::new("convolve/fused", format!("N={}", cdims[0]))
+            .col("wall_s", fused.per_rank[0])
+            .col("transpose_stages", fused_stages as f64),
+    );
+    table.push(
+        FigureRow::new("convolve/unfused", format!("N={}", cdims[0]))
+            .col("wall_s", unfused.per_rank[0])
+            .col("transpose_stages", unfused_stages as f64),
+    );
+
+    print!("{}", table.render());
+    emit_json("fig_pruned", &table);
+    println!(
+        "2/3-rule truncation cut Y->Z exchange bytes {ratio:.2}x (predicted {predicted:.2}x); \
+         fused convolve ran {fused_stages} transpose stages vs {unfused_stages} unfused"
+    );
+}

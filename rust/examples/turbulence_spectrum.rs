@@ -1,33 +1,26 @@
 //! Turbulence energy spectrum — the paper's motivating workload class
 //! (pseudospectral DNS; Donzis/Yeung-style analyses).
 //!
-//! Builds the Taylor-Green vortex velocity field (u, v, w), forward-
-//! transforms each component with the distributed pipeline, and
-//! accumulates the shell-summed kinetic-energy spectrum
-//! E(k) = ½ Σ_{|k'|∈shell k} |û|² + |v̂|² + |ŵ|², using conjugate-symmetry
-//! weights for the packed kx axis. Taylor-Green concentrates all energy
-//! in |k|² = 3 modes, giving an exact check.
+//! Builds the Taylor-Green vortex velocity field (u, v, w) and computes
+//! the shell-summed kinetic-energy spectrum twice with the distributed
+//! pipeline: once on the full grid, and once on a *truncated* plan
+//! (`with_truncation(Spherical23)`, the 2/3 dealiasing rule) whose
+//! exchanges ship only retained modes. Taylor-Green concentrates all
+//! energy in the |k|² = 3 shell — well inside the retained sphere — so
+//! the truncated spectrum must match the full-grid spectrum on every
+//! shell while moving measurably fewer bytes through the transposes.
 //!
 //! Run: `cargo run --release --example turbulence_spectrum`
 
 use p3dfft::coordinator::{run_on_threads, PlanSpec};
 use p3dfft::grid::ProcGrid;
+use p3dfft::util::spectrum::shell_energy;
+use p3dfft::Truncation;
 
-fn wavenumber(i: usize, n: usize) -> f64 {
-    if i <= n / 2 {
-        i as f64
-    } else {
-        i as f64 - n as f64
-    }
-}
-
-fn main() -> anyhow::Result<()> {
-    let n = 32usize;
-    let spec = PlanSpec::new([n, n, n], ProcGrid::new(2, 2))?;
-    println!("turbulence_spectrum: Taylor-Green vortex on {n}^3, 2x2 ranks");
-
-    let nshells = n / 2 + 1;
-    let report = run_on_threads(&spec, move |ctx| {
+/// Forward-transform the Taylor-Green components on `spec`'s pipeline and
+/// return the rank-reduced kinetic-energy spectrum `E(k)`.
+fn spectrum_of(spec: &PlanSpec, n: usize) -> anyhow::Result<(Vec<f64>, u64)> {
+    let report = run_on_threads(spec, move |ctx| {
         let h = 2.0 * std::f64::consts::PI / n as f64;
         // Taylor-Green: u = cos x sin y sin z, v = -sin x cos y sin z, w = 0.
         let fields: [Vec<f64>; 3] = [
@@ -39,48 +32,45 @@ fn main() -> anyhow::Result<()> {
             }),
             ctx.make_real_input(|_, _, _| 0.0),
         ];
+        let d = ctx.plan.decomp.clone();
         let mut shells = vec![0.0f64; n / 2 + 1];
-        let zp = ctx.plan.decomp.z_pencil(ctx.rank());
-        let norm = (n as f64).powi(3);
         for f in &fields {
             let mut fhat = ctx.alloc_output();
             ctx.forward(f, &mut fhat)?;
-            for xl in 0..zp.dims[0] {
-                let kxi = xl + zp.offsets[0];
-                let kx = wavenumber(kxi, n);
-                let w = if kxi == 0 || (n % 2 == 0 && kxi == n / 2) { 1.0 } else { 2.0 };
-                for yl in 0..zp.dims[1] {
-                    let ky = wavenumber(yl + zp.offsets[1], n);
-                    for z in 0..zp.dims[2] {
-                        let kz = wavenumber(z, n);
-                        let kmag = (kx * kx + ky * ky + kz * kz).sqrt();
-                        let shell = kmag.round() as usize;
-                        if shell < shells.len() {
-                            let c = fhat[(xl * zp.dims[1] + yl) * zp.dims[2] + z];
-                            shells[shell] += 0.5 * w * c.norm_sqr() / (norm * norm);
-                        }
-                    }
-                }
+            for (s, e) in shells.iter_mut().zip(shell_energy(&d, ctx.rank(), &fhat)) {
+                *s += e;
             }
         }
         // Reduce shells across ranks.
-        let mut reduced = vec![0.0f64; shells.len()];
-        for (i, s) in shells.iter().enumerate() {
-            reduced[i] = ctx.sum_over_ranks(*s);
-        }
+        let reduced: Vec<f64> = shells.iter().map(|s| ctx.sum_over_ranks(*s)).collect();
         Ok(reduced)
     })?;
+    Ok((report.per_rank[0].clone(), report.bytes))
+}
 
-    let spectrum = &report.per_rank[0];
-    println!("\n  k    E(k)");
+fn main() -> anyhow::Result<()> {
+    let n = 32usize;
+    let full_spec = PlanSpec::new([n, n, n], ProcGrid::new(2, 2))?;
+    let trunc_spec = full_spec.clone().with_truncation(Truncation::Spherical23);
+    println!("turbulence_spectrum: Taylor-Green vortex on {n}^3, 2x2 ranks");
+
+    let (full, full_bytes) = spectrum_of(&full_spec, n)?;
+    let (trunc, trunc_bytes) = spectrum_of(&trunc_spec, n)?;
+
+    println!("\n  k    E(k) full      E(k) spherical23");
     let mut total = 0.0;
-    for (k, e) in spectrum.iter().enumerate().take(nshells) {
-        if *e > 1e-15 {
-            println!("  {k:<4} {e:.6e}");
+    for (k, (f, t)) in full.iter().zip(&trunc).enumerate() {
+        if *f > 1e-15 || *t > 1e-15 {
+            println!("  {k:<4} {f:.6e}  {t:.6e}");
         }
-        total += e;
+        total += f;
     }
-    println!("total kinetic energy: {total:.6}");
+    println!("total kinetic energy (full grid): {total:.6}");
+    println!(
+        "exchange bytes: full {full_bytes}, truncated {trunc_bytes} \
+         ({:.2}x less on the wire)",
+        full_bytes as f64 / trunc_bytes.max(1) as f64
+    );
 
     // Taylor-Green analytic checks: all energy in the |k| = sqrt(3) shell
     // (rounds to 2); total KE = (1/V)∫ ½(u²+v²) = 1/8.
@@ -90,9 +80,24 @@ fn main() -> anyhow::Result<()> {
         "total KE {total} != {expected_total}"
     );
     anyhow::ensure!(
-        (spectrum[2] - expected_total).abs() < 1e-10,
+        (full[2] - expected_total).abs() < 1e-10,
         "energy not concentrated in the sqrt(3) shell"
     );
-    println!("turbulence_spectrum OK — all energy in the |k|=√3 shell, total = 1/8");
+    // The energy-carrying modes are well inside the retained sphere, so
+    // pruned exchanges must reproduce the spectrum shell for shell.
+    for (k, (f, t)) in full.iter().zip(&trunc).enumerate() {
+        anyhow::ensure!(
+            (f - t).abs() < 1e-12,
+            "truncated spectrum deviates on retained shell {k}: {f} vs {t}"
+        );
+    }
+    anyhow::ensure!(
+        trunc_bytes < full_bytes,
+        "pruned exchanges must move fewer bytes ({trunc_bytes} !< {full_bytes})"
+    );
+    println!(
+        "turbulence_spectrum OK — truncated plan reproduces E(k) on retained shells, \
+         total = 1/8"
+    );
     Ok(())
 }

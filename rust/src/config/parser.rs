@@ -170,11 +170,13 @@ fn parse_value(s: &str, line: usize) -> Result<Value> {
     if let Ok(f) = s.parse::<f64>() {
         return Ok(Value::Float(f));
     }
-    // Bare `auto` (no quotes) is accepted for the tuner-resolved keys
-    // (`grid.pgrid`, `options.overlap_chunks`), so `-o grid.pgrid=auto`
-    // works on the CLI. Any other bare word stays an error.
-    if s == "auto" {
-        return Ok(Value::Str("auto".to_string()));
+    // Bare keywords (no quotes) are accepted for the enumerated option
+    // keys so CLI overrides need no shell quoting: `auto` (tuner-resolved
+    // keys), `flat` (topology.cores_per_node), and `none` / `spherical23`
+    // / `lowpass:CX,CY,CZ` (options.truncation). Any other bare word
+    // stays an error.
+    if matches!(s, "auto" | "flat" | "none" | "spherical23") || s.starts_with("lowpass:") {
+        return Ok(Value::Str(s.to_string()));
     }
     Err(Error::Parse { line, msg: format!("unrecognised value {s:?}") })
 }
@@ -242,6 +244,14 @@ scale = 1.5
         let c = ParsedConfig::parse("pgrid = \"auto\"\n").unwrap();
         assert_eq!(c.get_str("pgrid", ""), "auto");
         assert!(ParsedConfig::parse("pgrid = automatic\n").is_err());
+        // The other enumerated keywords are bare-acceptable too.
+        let c = ParsedConfig::parse("a = flat\nb = none\nc = spherical23\nd = lowpass:3,4,5\n")
+            .unwrap();
+        assert_eq!(c.get_str("a", ""), "flat");
+        assert_eq!(c.get_str("b", ""), "none");
+        assert_eq!(c.get_str("c", ""), "spherical23");
+        assert_eq!(c.get_str("d", ""), "lowpass:3,4,5");
+        assert!(ParsedConfig::parse("x = lowpass\n").is_err());
     }
 
     #[test]

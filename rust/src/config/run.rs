@@ -3,7 +3,7 @@
 use std::path::PathBuf;
 
 use crate::coordinator::{EngineKind, PlanSpec, TransformKind};
-use crate::grid::ProcGrid;
+use crate::grid::{ProcGrid, Truncation};
 use crate::tune::{MachineProfile, TuneOptions};
 use crate::util::error::{Error, Result};
 
@@ -80,6 +80,13 @@ pub struct RunConfig {
     /// unset). Shapes fabric link accounting, exchange ordering, and —
     /// with `pgrid = "auto"` — the tuner's `(m1, m2)` placement scoring.
     pub cores_per_node: Option<usize>,
+    /// Spectral truncation (`options.truncation`): `"none"` (default),
+    /// `"spherical23"` (the 2/3 dealiasing rule), or
+    /// `"lowpass:CX,CY,CZ"` (axis cutoffs). A truncated plan prunes each
+    /// axis right after its 1D FFT, so the exchanges ship only retained
+    /// modes; with `pgrid = "auto"` the tuner prices that reduced wire
+    /// volume.
+    pub truncation: Option<Truncation>,
 }
 
 impl Default for RunConfig {
@@ -97,6 +104,37 @@ impl Default for RunConfig {
             artifacts_dir: "artifacts".into(),
             precision: "f64".into(),
             cores_per_node: None,
+            truncation: None,
+        }
+    }
+}
+
+/// Parse an `options.truncation` value: `none`, `spherical23`, or
+/// `lowpass:CX,CY,CZ`.
+fn parse_truncation(s: &str) -> Result<Option<Truncation>> {
+    const USAGE: &str = "options.truncation must be none|spherical23|lowpass:CX,CY,CZ";
+    match s {
+        "none" => Ok(None),
+        "spherical23" => Ok(Some(Truncation::Spherical23)),
+        other => {
+            let rest = other
+                .strip_prefix("lowpass:")
+                .ok_or_else(|| Error::InvalidConfig(format!("{USAGE}, got {other:?}")))?;
+            let parts: Vec<&str> = rest.split(',').map(str::trim).collect();
+            if parts.len() != 3 {
+                return Err(Error::InvalidConfig(format!(
+                    "{USAGE} (3 cutoffs), got {other:?}"
+                )));
+            }
+            let mut keep = [0usize; 3];
+            for (k, p) in keep.iter_mut().zip(&parts) {
+                *k = p.parse().map_err(|_| {
+                    Error::InvalidConfig(format!(
+                        "{USAGE}: cutoff {p:?} is not a non-negative integer"
+                    ))
+                })?;
+            }
+            Ok(Some(Truncation::LowPass { keep }))
         }
     }
 }
@@ -172,6 +210,14 @@ impl RunConfig {
         if rc.precision != "f64" && rc.precision != "f32" {
             return Err(Error::InvalidConfig("options.precision must be f32 or f64".into()));
         }
+        if let Some(v) = c.get("options.truncation") {
+            let s = v.as_str().ok_or_else(|| {
+                Error::InvalidConfig(
+                    "options.truncation must be none|spherical23|lowpass:CX,CY,CZ".into(),
+                )
+            })?;
+            rc.truncation = parse_truncation(s)?;
+        }
         if let Some(v) = c.get("topology.cores_per_node") {
             rc.cores_per_node = match (v.as_int(), v.as_str()) {
                 (Some(n), _) if n >= 1 => Some(n as usize),
@@ -208,6 +254,7 @@ impl RunConfig {
             "options.engine" => self.engine = tmp.engine,
             "options.artifacts_dir" => self.artifacts_dir = tmp.artifacts_dir,
             "options.precision" => self.precision = tmp.precision,
+            "options.truncation" => self.truncation = tmp.truncation,
             "topology.cores_per_node" => self.cores_per_node = tmp.cores_per_node,
             other => {
                 return Err(Error::InvalidConfig(format!("unknown config key {other:?}")));
@@ -295,6 +342,7 @@ impl RunConfig {
                     },
                     explore_overlap: matches!(self.overlap_chunks, ChunkSetting::Auto),
                     cores_per_node: self.cores_per_node,
+                    truncation: self.truncation,
                     ..TuneOptions::default()
                 };
                 let report = crate::tune::autotune(self.dims, nprocs, &opts)?;
@@ -306,13 +354,17 @@ impl RunConfig {
                 (best.m1, best.m2, chunks)
             }
         };
-        Ok(PlanSpec::new(self.dims, ProcGrid::new(m1, m2))?
+        let mut spec = PlanSpec::new(self.dims, ProcGrid::new(m1, m2))?
             .with_third(self.third)
             .with_use_even(self.use_even)
             .with_stride1(self.stride1)
             .with_overlap_chunks(chunks)?
             .with_cores_per_node(self.cores_per_node)?
-            .with_engine(engine))
+            .with_engine(engine);
+        if let Some(t) = self.truncation {
+            spec = spec.with_truncation(t);
+        }
+        Ok(spec)
     }
 }
 
@@ -415,6 +467,41 @@ precision = "f32"
         let mut rc = RunConfig::default();
         rc.apply_override("topology.cores_per_node", "4").unwrap();
         assert_eq!(rc.cores_per_node, Some(4));
+    }
+
+    #[test]
+    fn truncation_parses_and_plumbs() {
+        let c = ParsedConfig::parse("[options]\ntruncation = \"spherical23\"\n").unwrap();
+        let rc = RunConfig::from_parsed(&c).unwrap();
+        assert_eq!(rc.truncation, Some(Truncation::Spherical23));
+        let spec = rc.to_spec().unwrap();
+        assert_eq!(spec.opts.truncation, Some(Truncation::Spherical23));
+
+        let c = ParsedConfig::parse("[options]\ntruncation = \"lowpass:3, 4, 5\"\n").unwrap();
+        assert_eq!(
+            RunConfig::from_parsed(&c).unwrap().truncation,
+            Some(Truncation::LowPass { keep: [3, 4, 5] })
+        );
+
+        // Bare `none` parses as a string, like `auto` and `flat`.
+        let c = ParsedConfig::parse("[options]\ntruncation = none\n").unwrap();
+        assert_eq!(RunConfig::from_parsed(&c).unwrap().truncation, None);
+
+        for bad in [
+            "truncation = \"cube\"",
+            "truncation = \"lowpass:3,4\"",
+            "truncation = \"lowpass:a,b,c\"",
+            "truncation = 3",
+        ] {
+            let c = ParsedConfig::parse(&format!("[options]\n{bad}\n")).unwrap();
+            assert!(RunConfig::from_parsed(&c).is_err(), "{bad:?} must be rejected");
+        }
+
+        let mut rc = RunConfig::default();
+        rc.apply_override("options.truncation", "spherical23").unwrap();
+        assert_eq!(rc.truncation, Some(Truncation::Spherical23));
+        rc.apply_override("options.truncation", "none").unwrap();
+        assert_eq!(rc.truncation, None);
     }
 
     #[test]

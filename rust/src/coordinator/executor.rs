@@ -68,6 +68,14 @@ impl<T: Real + PjrtExec> RankContext<T> {
         self.plan.backward(&row, &col, input, output)
     }
 
+    /// Fused spectral convolution of two real X-pencil fields (see
+    /// [`RankPlan::convolve`]; unnormalised).
+    pub fn convolve(&mut self, a: &[T], b: &[T], out: &mut [T]) -> Result<()> {
+        let row = self.row.clone();
+        let col = self.col.clone();
+        self.plan.convolve(&row, &col, a, b, out)
+    }
+
     /// Max of `x` across all ranks (timing reduction helper).
     pub fn max_over_ranks(&self, x: f64) -> f64 {
         self.world.allreduce_max(x)

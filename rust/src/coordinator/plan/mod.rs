@@ -41,7 +41,7 @@ use crate::util::timer::StageTimer;
 use super::spec::{EngineKind, PlanSpec, TransformKind};
 
 pub use buffers::{BufferPool, PoolLayout, SlotId};
-pub use pipeline::{compile, Pipeline};
+pub use pipeline::{compile, compile_convolve, Pipeline};
 pub use stages::{PipelineStage, StageCtx, ThirdOp};
 
 /// Compute-stage engine (shared library handle for the PJRT case).
@@ -177,6 +177,11 @@ pub struct RankPlan<T: Real + PjrtExec> {
     fwd: Pipeline<T>,
     bwd: Pipeline<T>,
     pool: BufferPool<T>,
+    /// The fused convolution pipeline with its own buffer pool (both
+    /// operands need live pencils at every station), compiled lazily on
+    /// the first [`Self::convolve`] / [`Self::describe_convolve`] call so
+    /// plans that never convolve pay nothing.
+    convolve: Option<(Pipeline<T>, BufferPool<T>)>,
     real_scratch: Vec<T>,
     // Plane buffers for the PJRT engine (split/merge of interleaved data).
     plane_re: Vec<T>,
@@ -205,6 +210,7 @@ impl<T: Real + PjrtExec> RankPlan<T> {
             fwd,
             bwd,
             pool,
+            convolve: None,
             real_scratch: vec![T::zero(); spec.nz.max(spec.nx)],
             plane_re: Vec::new(),
             plane_im: Vec::new(),
@@ -277,6 +283,7 @@ impl<T: Real + PjrtExec> RankPlan<T> {
             plane_re: &mut self.plane_re,
             plane_im: &mut self.plane_im,
             real_in: Some(input),
+            real_in_b: None,
             real_out: None,
             cplx_in: None,
             cplx_out: Some(output),
@@ -317,12 +324,94 @@ impl<T: Real + PjrtExec> RankPlan<T> {
             plane_re: &mut self.plane_re,
             plane_im: &mut self.plane_im,
             real_in: None,
+            real_in_b: None,
             real_out: Some(output),
             cplx_in: Some(input),
             cplx_out: None,
             timer: &mut self.timer,
         };
         self.bwd.run(&mut ctx)
+    }
+
+    /// Lazily compile the fused convolution pipeline.
+    fn ensure_convolve(&mut self) -> Result<()> {
+        if self.convolve.is_none() {
+            self.convolve = Some(pipeline::compile_convolve::<T>(
+                &self.spec,
+                &self.decomp,
+                self.rank,
+                &self.engine,
+            )?);
+        }
+        Ok(())
+    }
+
+    /// The fused convolution stage order (compiles the pipeline on first
+    /// use; diagnostics).
+    pub fn describe_convolve(&mut self) -> Result<String> {
+        self.ensure_convolve()?;
+        Ok(self.convolve.as_ref().expect("just compiled").0.describe())
+    }
+
+    /// Fused spectral convolution: `out = F⁻¹(F(a) ⊙ F(b))`, all three
+    /// fields X-pencil real arrays of len [`Self::input_len`].
+    /// Unnormalised like [`Self::backward`] — dividing by
+    /// [`Self::normalization`] yields the circular convolution of `a` and
+    /// `b` (times the grid size, the usual spectral convention).
+    ///
+    /// Both forward transforms share one doubled-block exchange per
+    /// transpose and the product is formed in Z-pencils, so the fused
+    /// chain runs 4 transpose stages where forward(a) + forward(b) +
+    /// backward(product) through the caller would run 6. With
+    /// `options.truncation` set, pruned modes of the product are exact
+    /// zeros — the convolution comes out dealiased.
+    pub fn convolve(
+        &mut self,
+        row: &Comm,
+        col: &Comm,
+        a: &[T],
+        b: &[T],
+        out: &mut [T],
+    ) -> Result<()> {
+        if a.len() != self.input_len() {
+            return Err(Error::BadShape {
+                expected: self.input_len(),
+                got: a.len(),
+                what: "convolve input A (X-pencil)",
+            });
+        }
+        if b.len() != self.input_len() {
+            return Err(Error::BadShape {
+                expected: self.input_len(),
+                got: b.len(),
+                what: "convolve input B (X-pencil)",
+            });
+        }
+        if out.len() != self.input_len() {
+            return Err(Error::BadShape {
+                expected: self.input_len(),
+                got: out.len(),
+                what: "convolve output (X-pencil)",
+            });
+        }
+        self.ensure_convolve()?;
+        let (pipe, pool) = self.convolve.as_mut().expect("just compiled");
+        let mut ctx = StageCtx {
+            row,
+            col,
+            engine: &self.engine,
+            pool,
+            real_scratch: &mut self.real_scratch,
+            plane_re: &mut self.plane_re,
+            plane_im: &mut self.plane_im,
+            real_in: Some(a),
+            real_in_b: Some(b),
+            real_out: Some(out),
+            cplx_in: None,
+            cplx_out: None,
+            timer: &mut self.timer,
+        };
+        pipe.run(&mut ctx)
     }
 }
 

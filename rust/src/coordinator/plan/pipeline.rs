@@ -10,17 +10,53 @@
 //! `recv`, every FFT shares `scratch`).
 
 use crate::fft::{C2cPlan, C2rPlan, Direction, R2cPlan, Real};
-use crate::grid::Decomp;
+use crate::grid::{Decomp, PruneRule};
 use crate::transpose::{ExchangeOptions, TransposeXY, TransposeYZ};
 use crate::util::error::{Error, Result};
 
 use super::buffers::{BufferPool, PoolLayout};
 use super::stages::{
-    C2rStage, PipelineStage, R2cStage, StageCtx, ThirdOp, XyBwdStage, XyBwdXyzStage, XyFwdStage,
-    XyFwdXyzStage, YzBwdStage, YzBwdXyzStage, YzFwdStage, YzFwdXyzStage,
+    C2rStage, PipelineStage, R2cPairStage, R2cStage, StageCtx, ThirdOp, XyBwdStage, XyBwdXyzStage,
+    XyFwdPairStage, XyFwdStage, XyFwdXyzStage, YzBwdStage, YzBwdXyzStage, YzFwdPairStage,
+    YzFwdStage, YzFwdXyzStage, ZProductStage,
 };
 use super::{Engine, PjrtExec};
 use crate::coordinator::spec::{PlanSpec, TransformKind};
+
+/// Validate the truncation gates shared by `compile` and
+/// `compile_convolve`, and build the prune rule. Truncation changes what
+/// the transposes put on the wire, so it is restricted to the layout and
+/// engine whose pack/unpack kernels understand the pruned windows:
+/// STRIDE1, native engine, FFT third transform (the retained-mode
+/// semantics are spectral in all three axes).
+fn truncation_rule(
+    spec: &PlanSpec,
+    stride1: bool,
+    is_pjrt: bool,
+) -> Result<Option<PruneRule>> {
+    let t = match spec.opts.truncation {
+        Some(t) => t,
+        None => return Ok(None),
+    };
+    if !stride1 {
+        return Err(Error::InvalidConfig(
+            "options.truncation requires the STRIDE1 (ZYX) layout".into(),
+        ));
+    }
+    if is_pjrt {
+        return Err(Error::InvalidConfig(
+            "options.truncation requires the native engine (the AOT artifacts \
+             are lowered for full-pencil batch shapes)"
+                .into(),
+        ));
+    }
+    if spec.third != TransformKind::Fft {
+        return Err(Error::InvalidConfig(
+            "options.truncation requires an FFT third transform".into(),
+        ));
+    }
+    Ok(Some(PruneRule::new([spec.nx, spec.ny, spec.nz], t)))
+}
 
 /// An ordered list of stages; running it executes one transform direction.
 pub struct Pipeline<T: Real + PjrtExec> {
@@ -76,8 +112,19 @@ pub fn compile<T: Real + PjrtExec>(
         ));
     }
 
-    let txy = TransposeXY::new(decomp, rank);
-    let tyz = TransposeYZ::new(decomp, rank);
+    let rule = truncation_rule(spec, stride1, is_pjrt)?;
+
+    let xp = decomp.x_pencil_spec(rank);
+    let yp = decomp.y_pencil(rank);
+    let zp = decomp.z_pencil(rank);
+
+    let mut txy = TransposeXY::new(decomp, rank);
+    let mut tyz = TransposeYZ::new(decomp, rank);
+    if let Some(r) = &rule {
+        txy = txy.with_kx_keep(r.kx_keep());
+        tyz = tyz.with_prune(r, yp.offsets[1]);
+    }
+    let z_band = rule.as_ref().map(|r| r.z_prune_band());
     let xopts = ExchangeOptions { use_even: spec.opts.use_even };
     let k = spec.opts.overlap_chunks.max(1);
     // Chunked overlap requires contiguous invariant-axis slabs (STRIDE1)
@@ -85,9 +132,6 @@ pub fn compile<T: Real + PjrtExec>(
     // lowered for full-pencil batches).
     let overlap = k > 1 && stride1 && !is_pjrt;
 
-    let xp = decomp.x_pencil_spec(rank);
-    let yp = decomp.y_pencil(rank);
-    let zp = decomp.z_pencil(rank);
     let buf_len = txy.buf_len(xopts).max(tyz.buf_len(xopts));
 
     let r2c = R2cPlan::<T>::new(spec.nx);
@@ -163,6 +207,7 @@ pub fn compile<T: Real + PjrtExec>(
             opts: xopts,
             third: third_f.expect("stride1 builds the forward ThirdOp"),
             zplane,
+            z_band: z_band.clone(),
             overlap,
             ybuf,
             send,
@@ -175,6 +220,8 @@ pub fn compile<T: Real + PjrtExec>(
             opts: xopts,
             third: third_b.expect("stride1 builds the backward ThirdOp"),
             zplane,
+            z_band,
+            from_pool: false,
             overlap,
             zbuf,
             ybuf,
@@ -245,6 +292,149 @@ pub fn compile<T: Real + PjrtExec>(
     Ok((Pipeline { stages: fwd }, Pipeline { stages: bwd }, pool))
 }
 
+/// Compile the fused spectral-convolution pipeline for `rank`: both real
+/// operands transform forward sharing one doubled-block exchange per
+/// transpose, the pointwise product is formed in Z-pencils, and the
+/// ordinary backward chain runs straight off the product's pool slot —
+/// 7 stages with 4 transpose stages, versus 9 stages with 6 transpose
+/// stages for forward(a) + forward(b) + backward(product) through the
+/// caller. Blocking, STRIDE1, native engine, FFT third transform only;
+/// composes with `options.truncation` (pruned modes of the product are
+/// exact zeros, i.e. the convolution comes out dealiased).
+pub fn compile_convolve<T: Real + PjrtExec>(
+    spec: &PlanSpec,
+    decomp: &Decomp,
+    rank: usize,
+    engine: &Engine,
+) -> Result<(Pipeline<T>, BufferPool<T>)> {
+    if !spec.opts.stride1 {
+        return Err(Error::InvalidConfig("convolve requires the STRIDE1 (ZYX) layout".into()));
+    }
+    if matches!(engine, Engine::Pjrt(_)) {
+        return Err(Error::InvalidConfig(
+            "convolve requires the native engine (the AOT artifacts are \
+             lowered for single-field batch shapes)"
+                .into(),
+        ));
+    }
+    if spec.third != TransformKind::Fft {
+        return Err(Error::InvalidConfig(
+            "convolve requires an FFT third transform (the pointwise product \
+             is defined on fully spectral Z-pencils)"
+                .into(),
+        ));
+    }
+    let rule = truncation_rule(spec, true, false)?;
+
+    let xp = decomp.x_pencil_spec(rank);
+    let yp = decomp.y_pencil(rank);
+    let zp = decomp.z_pencil(rank);
+
+    let mut txy = TransposeXY::new(decomp, rank);
+    let mut tyz = TransposeYZ::new(decomp, rank);
+    if let Some(r) = &rule {
+        txy = txy.with_kx_keep(r.kx_keep());
+        tyz = tyz.with_prune(r, yp.offsets[1]);
+    }
+    let z_band = rule.as_ref().map(|r| r.z_prune_band());
+    let xopts = ExchangeOptions { use_even: spec.opts.use_even };
+    let buf_len = txy.buf_len(xopts).max(tyz.buf_len(xopts));
+
+    let r2c = R2cPlan::<T>::new(spec.nx);
+    let c2r = C2rPlan::<T>::new(spec.nx);
+    let fy_f = C2cPlan::<T>::new(spec.ny, Direction::Forward);
+    let fy_b = C2cPlan::<T>::new(spec.ny, Direction::Inverse);
+    let third_f = ThirdOp::<T>::new(spec.third, spec.nz);
+    let third_b = ThirdOp::<T>::new(spec.third, spec.nz);
+
+    let scratch_len = r2c
+        .scratch_len()
+        .max(c2r.scratch_len())
+        .max(fy_f.scratch_len())
+        .max(fy_b.scratch_len())
+        .max(third_f.scratch_len())
+        .max(third_b.scratch_len());
+
+    // Separate pool from the plain forward/backward pipelines: the pair
+    // stages need a B-side pencil at every station plus doubled exchange
+    // buffers (both fields of a pair ride one alltoall(v)).
+    let mut layout = PoolLayout::new();
+    let xspec = layout.request("xspec", xp.len());
+    let xspec_b = layout.request("xspec_b", xp.len());
+    let ybuf = layout.request("ybuf", yp.len());
+    let ybuf_b = layout.request("ybuf_b", yp.len());
+    let send = layout.request("send", 2 * buf_len);
+    let recv = layout.request("recv", 2 * buf_len);
+    let zbuf = layout.request("zbuf", zp.len());
+    let zbuf_b = layout.request("zbuf_b", zp.len());
+    let scratch = layout.request("scratch", scratch_len);
+    let pool = BufferPool::build(&layout);
+
+    let zplane = tyz.ny2_loc() * decomp.nz;
+
+    let mut stages: Vec<Box<dyn PipelineStage<T>>> = Vec::with_capacity(7);
+    stages.push(Box::new(R2cPairStage { plan: r2c, xspec, xspec_b, scratch }));
+    stages.push(Box::new(XyFwdPairStage {
+        txy: txy.clone(),
+        opts: xopts,
+        fy: fy_f,
+        ny: spec.ny,
+        xspec,
+        xspec_b,
+        ybuf,
+        ybuf_b,
+        send,
+        recv,
+        scratch,
+    }));
+    stages.push(Box::new(YzFwdPairStage {
+        tyz: tyz.clone(),
+        opts: xopts,
+        third: third_f,
+        z_band: z_band.clone(),
+        ybuf,
+        ybuf_b,
+        zbuf,
+        zbuf_b,
+        send,
+        recv,
+        scratch,
+    }));
+    stages.push(Box::new(ZProductStage { zbuf, zbuf_b }));
+    stages.push(Box::new(YzBwdStage {
+        tyz: tyz.clone(),
+        chunks: tyz.chunks_bwd(1),
+        opts: xopts,
+        third: third_b,
+        zplane,
+        z_band,
+        from_pool: true,
+        overlap: false,
+        zbuf,
+        ybuf,
+        send,
+        recv,
+        scratch,
+    }));
+    let xy_chunks = txy.chunks_bwd(1);
+    stages.push(Box::new(XyBwdStage {
+        txy,
+        chunks: xy_chunks,
+        opts: xopts,
+        fy: fy_b,
+        ny: spec.ny,
+        overlap: false,
+        ybuf,
+        xspec,
+        send,
+        recv,
+        scratch,
+    }));
+    stages.push(Box::new(C2rStage { plan: c2r, n: spec.nx, xspec, scratch }));
+
+    Ok((Pipeline { stages }, pool))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -280,6 +470,53 @@ mod tests {
             let d = s.decomp().unwrap();
             assert!(compile::<f64>(&s, &d, 0, &Engine::Native).is_err());
         }
+    }
+
+    #[test]
+    fn truncation_gates_reject_unsupported_configs() {
+        use crate::grid::Truncation;
+        let base = spec([8, 8, 8], 2, 2).with_truncation(Truncation::Spherical23);
+        let d = base.decomp().unwrap();
+        assert!(compile::<f64>(&base, &d, 0, &Engine::Native).is_ok());
+        let xyz = base.clone().with_stride1(false);
+        assert!(compile::<f64>(&xyz, &d, 0, &Engine::Native).is_err());
+        let cheby = base.clone().with_third(TransformKind::Cheby);
+        assert!(compile::<f64>(&cheby, &d, 0, &Engine::Native).is_err());
+    }
+
+    #[test]
+    fn convolve_pipeline_structure() {
+        let s = spec([8, 8, 8], 2, 2);
+        let d = s.decomp().unwrap();
+        let (conv, pool) = compile_convolve::<f64>(&s, &d, 0, &Engine::Native).unwrap();
+        assert_eq!(
+            conv.describe(),
+            "x-r2c-pair -> xy-fwd-pair+yfft -> yz-fwd-pair+third -> z-product -> \
+             yz-bwd+third -> xy-bwd+yfft -> x-c2r"
+        );
+        assert_eq!(conv.len(), 7);
+        assert_eq!(pool.slot_count(), 9, "A+B pencils, doubled send/recv, scratch");
+        // The whole point of the fusion: 4 transpose stages instead of the
+        // 6 that forward(a) + forward(b) + backward(product) would run.
+        let n_transpose = |desc: &str| {
+            desc.split(" -> ").filter(|n| n.starts_with("xy-") || n.starts_with("yz-")).count()
+        };
+        let (fwd, bwd, _) = compile::<f64>(&s, &d, 0, &Engine::Native).unwrap();
+        assert_eq!(n_transpose(&conv.describe()), 4);
+        assert_eq!(2 * n_transpose(&fwd.describe()) + n_transpose(&bwd.describe()), 6);
+    }
+
+    #[test]
+    fn convolve_rejects_unsupported_configs() {
+        let s = spec([8, 8, 8], 2, 2);
+        let d = s.decomp().unwrap();
+        let xyz = s.clone().with_stride1(false);
+        assert!(compile_convolve::<f64>(&xyz, &d, 0, &Engine::Native).is_err());
+        let cheby = s.clone().with_third(TransformKind::Cheby);
+        assert!(compile_convolve::<f64>(&cheby, &d, 0, &Engine::Native).is_err());
+        // Truncation composes instead of being rejected.
+        let trunc = s.with_truncation(crate::grid::Truncation::Spherical23);
+        assert!(compile_convolve::<f64>(&trunc, &d, 0, &Engine::Native).is_ok());
     }
 
     #[test]

@@ -30,7 +30,7 @@ use std::time::Instant;
 
 use crate::fft::{C2cPlan, C2rPlan, Complex, Dct1Plan, Direction, Dst1Plan, R2cPlan, Real};
 use crate::mpi::Comm;
-use crate::transpose::{ChunkPlan, ExchangeOptions, TransposeXY, TransposeYZ};
+use crate::transpose::{exchange_v, ChunkPlan, ExchangeOptions, TransposeXY, TransposeYZ};
 use crate::util::error::{Error, Result};
 use crate::util::timer::{Stage, StageTimer};
 
@@ -51,6 +51,9 @@ pub struct StageCtx<'a, T: Real> {
     pub plane_im: &'a mut Vec<T>,
     /// Forward input (real X-pencil).
     pub real_in: Option<&'a [T]>,
+    /// Second forward input for the fused convolve pipeline (`None`
+    /// everywhere else).
+    pub real_in_b: Option<&'a [T]>,
     /// Backward output (real X-pencil).
     pub real_out: Option<&'a mut [T]>,
     /// Backward input (complex Z-pencil).
@@ -86,6 +89,52 @@ fn credit_overlap(timer: &mut StageTimer, mark: PostMark) {
     let in_flight = mark.at.elapsed().as_secs_f64();
     let exposed_since = timer.get(Stage::Exchange) - mark.exch_acc;
     timer.add(Stage::Overlap, (in_flight - exposed_since).max(0.0));
+}
+
+/// Zero the pruned z-bin band in every z-line of `data` (z-lines are
+/// contiguous stride-1 runs of `nz` in both the Z-pencil and the
+/// copy-in `zbuf`). Truncated plans apply this right after the forward
+/// z FFT and right before the inverse one — the z axis never crosses a
+/// wire after it is transformed, so z truncation is a local mask, not
+/// a wire format.
+fn mask_z_band<T: Real>(data: &mut [Complex<T>], nz: usize, band: std::ops::Range<usize>) {
+    if band.is_empty() {
+        return;
+    }
+    for line in data.chunks_exact_mut(nz) {
+        line[band.clone()].fill(Complex::zero());
+    }
+}
+
+/// Native batched C2C over the Y-pencil's stride-1 y-lines. When `hk`
+/// is `Some` and a strict prefix of `h_loc`, only the retained x rows
+/// of each z-plane in `nz_range` are transformed — the pruned rows are
+/// never read downstream, and the blocked drivers apply bit-identical
+/// per-line arithmetic regardless of batch composition, so retained
+/// lines match the full-grid plan bit for bit.
+#[allow(clippy::too_many_arguments)]
+fn y_fft_native<T: Real>(
+    plan: &C2cPlan<T>,
+    nz_range: std::ops::Range<usize>,
+    h_loc: usize,
+    hk: Option<usize>,
+    ny: usize,
+    ybuf: &mut [Complex<T>],
+    scratch: &mut [Complex<T>],
+    timer: &mut StageTimer,
+) {
+    match hk {
+        Some(hk) if hk < h_loc => timer.time(Stage::Compute, || {
+            for z in nz_range {
+                let base = z * h_loc * ny;
+                plan.execute_batch(&mut ybuf[base..base + hk * ny], scratch);
+            }
+        }),
+        _ => {
+            let slab = &mut ybuf[nz_range.start * h_loc * ny..nz_range.end * h_loc * ny];
+            timer.time(Stage::Compute, || plan.execute_batch(slab, scratch));
+        }
+    }
 }
 
 /// Batched stride-1 C2C on `data` via the chosen engine.
@@ -436,8 +485,16 @@ impl<T: Real> XyFwdStage<T> {
                     );
                 }
             });
-            let slab = &mut ybuf[m.range.start * h_loc * self.ny..m.range.end * h_loc * self.ny];
-            timer.time(Stage::Compute, || self.fy.execute_batch(slab, scratch));
+            y_fft_native(
+                &self.fy,
+                m.range.clone(),
+                h_loc,
+                self.txy.is_pruned().then(|| self.txy.hk_loc()),
+                self.ny,
+                ybuf,
+                scratch,
+                timer,
+            );
         }
     }
 }
@@ -474,17 +531,33 @@ impl<T: Real + PjrtExec> PipelineStage<T> for XyFwdStage<T> {
                 self.opts,
                 ctx.timer,
             );
-            exec_c2c(
-                ctx.engine,
-                &self.fy,
-                false,
-                self.ny,
-                &mut ybuf,
-                &mut scratch,
-                ctx.plane_re,
-                ctx.plane_im,
-                ctx.timer,
-            )
+            if self.txy.is_pruned() {
+                // Truncation is gated to the native engine; transform only
+                // the retained x rows of each z-plane.
+                y_fft_native(
+                    &self.fy,
+                    0..self.txy.nz,
+                    self.txy.h_loc(),
+                    Some(self.txy.hk_loc()),
+                    self.ny,
+                    &mut ybuf,
+                    &mut scratch,
+                    ctx.timer,
+                );
+                Ok(())
+            } else {
+                exec_c2c(
+                    ctx.engine,
+                    &self.fy,
+                    false,
+                    self.ny,
+                    &mut ybuf,
+                    &mut scratch,
+                    ctx.plane_re,
+                    ctx.plane_im,
+                    ctx.timer,
+                )
+            }
         };
         ctx.pool.restore(self.xspec, xspec);
         ctx.pool.restore(self.ybuf, ybuf);
@@ -505,6 +578,9 @@ pub struct YzFwdStage<T: Real> {
     /// ny2_loc · nz_glob — elements per invariant-axis plane of the
     /// Z-pencil.
     pub zplane: usize,
+    /// Pruned z-bin band, zeroed in every z-line right after the forward
+    /// z FFT (`None` for untruncated plans).
+    pub z_band: Option<std::ops::Range<usize>>,
     pub overlap: bool,
     pub ybuf: SlotId,
     pub send: SlotId,
@@ -552,6 +628,12 @@ impl<T: Real> YzFwdStage<T> {
         scratch: &mut [Complex<T>],
     ) {
         let k = self.chunks.len();
+        if self.tyz.is_pruned() {
+            // The pruned unpack writes only retained (kx, ky) pairs; the
+            // blocking path zeroes inside `TransposeYZ::forward`, the
+            // chunked path pre-zeroes here.
+            timer.time(Stage::Unpack, || output.fill(Complex::zero()));
+        }
         let mut posted = Vec::with_capacity(k);
         posted.push(self.pack_and_post(0, col, timer, ybuf, send));
         for c in 0..k {
@@ -577,6 +659,9 @@ impl<T: Real> YzFwdStage<T> {
             });
             let slab = &mut output[m.range.start * self.zplane..m.range.end * self.zplane];
             self.third.apply_native(false, slab, scratch, real_scratch, timer);
+            if let Some(band) = &self.z_band {
+                timer.time(Stage::Other, || mask_z_band(slab, self.third.n, band.clone()));
+            }
         }
     }
 }
@@ -627,7 +712,12 @@ impl<T: Real + PjrtExec> PipelineStage<T> for YzFwdStage<T> {
                     ctx.plane_re,
                     ctx.plane_im,
                     ctx.timer,
-                )
+                )?;
+                if let Some(band) = &self.z_band {
+                    ctx.timer
+                        .time(Stage::Other, || mask_z_band(output, self.third.n, band.clone()));
+                }
+                Ok(())
             }
         })();
         ctx.pool.restore(self.ybuf, ybuf);
@@ -647,6 +737,16 @@ pub struct YzBwdStage<T: Real> {
     pub opts: ExchangeOptions,
     pub third: ThirdOp<T>,
     pub zplane: usize,
+    /// Pruned z-bin band, zeroed in every z-line right before the inverse
+    /// z FFT (`None` for untruncated plans). Re-masking on the way back
+    /// keeps `backward(forward(x))` well-defined even if the caller
+    /// scribbled into pruned slots of the spectral array.
+    pub z_band: Option<std::ops::Range<usize>>,
+    /// When `true` the stage's input is whatever an earlier stage left in
+    /// the `zbuf` pool slot (the fused convolve pipeline's z-product)
+    /// instead of the caller's `cplx_in` slice, and the copy-in is
+    /// skipped.
+    pub from_pool: bool,
     pub overlap: bool,
     pub zbuf: SlotId,
     pub ybuf: SlotId,
@@ -722,6 +822,10 @@ impl<T: Real> YzBwdStage<T> {
         scratch: &mut [Complex<T>],
     ) {
         let k = self.chunks.len();
+        if self.tyz.is_pruned() {
+            // The pruned unpack writes only retained (kx, ky) lines.
+            timer.time(Stage::Unpack, || ybuf.fill(Complex::zero()));
+        }
         let mut posted = Vec::with_capacity(k);
         for c in 0..k {
             let m = &self.chunks.chunks[c];
@@ -743,16 +847,33 @@ impl<T: Real + PjrtExec> PipelineStage<T> for YzBwdStage<T> {
     }
 
     fn run(&self, ctx: &mut StageCtx<'_, T>) -> Result<()> {
-        let input =
-            ctx.cplx_in.ok_or_else(|| Error::Runtime("yz-bwd stage needs complex input".into()))?;
+        let input = match (self.from_pool, ctx.cplx_in) {
+            (true, _) => None,
+            (false, Some(i)) => Some(i),
+            (false, None) => {
+                return Err(Error::Runtime("yz-bwd stage needs complex input".into()))
+            }
+        };
         let mut zbuf = ctx.pool.take(self.zbuf);
         let mut ybuf = ctx.pool.take(self.ybuf);
         let mut send = ctx.pool.take(self.send);
         let mut recv = ctx.pool.take(self.recv);
         let mut scratch = ctx.pool.take(self.scratch);
         // Work on a copy of the caller's spectral data (in-place semantics
-        // for the user's buffer are preserved).
-        ctx.timer.time(Stage::Other, || zbuf[..input.len()].copy_from_slice(input));
+        // for the user's buffer are preserved). The fused convolve
+        // pipeline's z-product already lives in the `zbuf` slot, so it
+        // skips the copy.
+        let zlen = match input {
+            Some(input) => {
+                ctx.timer.time(Stage::Other, || zbuf[..input.len()].copy_from_slice(input));
+                input.len()
+            }
+            None => zbuf.len(),
+        };
+        if let Some(band) = &self.z_band {
+            let data = &mut zbuf[..zlen];
+            ctx.timer.time(Stage::Other, || mask_z_band(data, self.third.n, band.clone()));
+        }
         let res = if self.overlap {
             self.run_overlapped(
                 ctx.col,
@@ -769,7 +890,7 @@ impl<T: Real + PjrtExec> PipelineStage<T> for YzBwdStage<T> {
             let r = self.third.apply(
                 ctx.engine,
                 true,
-                &mut zbuf[..input.len()],
+                &mut zbuf[..zlen],
                 &mut scratch,
                 ctx.real_scratch,
                 ctx.plane_re,
@@ -881,11 +1002,25 @@ impl<T: Real> XyBwdStage<T> {
     ) {
         let k = self.chunks.len();
         let h_loc = self.txy.h_loc();
+        if self.txy.is_pruned() {
+            // The pruned unpack writes only retained x lines; the blocking
+            // path zeroes inside `TransposeXY::backward`, the chunked path
+            // pre-zeroes here.
+            timer.time(Stage::Unpack, || xspec.fill(Complex::zero()));
+        }
         let mut posted = Vec::with_capacity(k);
         for c in 0..k {
             let m = &self.chunks.chunks[c];
-            let slab = &mut ybuf[m.range.start * h_loc * self.ny..m.range.end * h_loc * self.ny];
-            timer.time(Stage::Compute, || self.fy.execute_batch(slab, scratch));
+            y_fft_native(
+                &self.fy,
+                m.range.clone(),
+                h_loc,
+                self.txy.is_pruned().then(|| self.txy.hk_loc()),
+                self.ny,
+                ybuf,
+                scratch,
+                timer,
+            );
             let t = self.pack_and_post(c, row, timer, ybuf, send);
             posted.push(t);
             if c > 0 {
@@ -919,17 +1054,31 @@ impl<T: Real + PjrtExec> PipelineStage<T> for XyBwdStage<T> {
             );
             Ok(())
         } else {
-            let r = exec_c2c(
-                ctx.engine,
-                &self.fy,
-                true,
-                self.ny,
-                &mut ybuf,
-                &mut scratch,
-                ctx.plane_re,
-                ctx.plane_im,
-                ctx.timer,
-            );
+            let r = if self.txy.is_pruned() {
+                y_fft_native(
+                    &self.fy,
+                    0..self.txy.nz,
+                    self.txy.h_loc(),
+                    Some(self.txy.hk_loc()),
+                    self.ny,
+                    &mut ybuf,
+                    &mut scratch,
+                    ctx.timer,
+                );
+                Ok(())
+            } else {
+                exec_c2c(
+                    ctx.engine,
+                    &self.fy,
+                    true,
+                    self.ny,
+                    &mut ybuf,
+                    &mut scratch,
+                    ctx.plane_re,
+                    ctx.plane_im,
+                    ctx.timer,
+                )
+            };
             if r.is_ok() {
                 self.txy.backward(
                     ctx.row,
@@ -1172,6 +1321,266 @@ impl<T: Real + PjrtExec> PipelineStage<T> for XyBwdXyzStage<T> {
         ctx.pool.restore(self.send, send);
         ctx.pool.restore(self.recv, recv);
         ctx.pool.restore(self.scratch, scratch);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused spectral-convolution pair stages (STRIDE1, native engine, blocking).
+// Both operands of `RankPlan::convolve` ride the SAME alltoall(v): each
+// per-peer block of the ordinary forward metadata is doubled, field A at the
+// head of the doubled slot and field B right behind it. One exchange per
+// transpose instead of two, and the product is formed in Z-pencils so the
+// interior X↔Y / Y↔Z transposes of a round-trip through the caller never
+// happen.
+// ---------------------------------------------------------------------------
+
+/// Doubled-block exchange metadata for the pair stages. `sc`/`rc`/`sd2`/
+/// `rd2` etc. keep the single-field counts next to the doubled layout:
+/// field A of peer `j` occupies `[sd2[j], sd2[j] + sc[j])` of the send
+/// buffer, field B starts at `sd2[j] + s_off[j]` — `even_block` under
+/// USEEVEN (so both halves stay block-aligned inside the padded
+/// `alltoall` slot of `2 · even_block`), the true count otherwise (so the
+/// `alltoallv` payload stays dense).
+struct PairMeta {
+    sc: Vec<usize>,
+    rc: Vec<usize>,
+    sc2: Vec<usize>,
+    sd2: Vec<usize>,
+    rc2: Vec<usize>,
+    rd2: Vec<usize>,
+    s_off: Vec<usize>,
+    r_off: Vec<usize>,
+    even2: Option<usize>,
+}
+
+fn pair_meta(
+    (sc, sd, rc, rd): (Vec<usize>, Vec<usize>, Vec<usize>, Vec<usize>),
+    opts: ExchangeOptions,
+    even_block: usize,
+) -> PairMeta {
+    let p = sc.len();
+    let sc2 = sc.iter().map(|c| 2 * c).collect();
+    let rc2 = rc.iter().map(|c| 2 * c).collect();
+    let sd2 = sd.iter().map(|d| 2 * d).collect();
+    let rd2 = rd.iter().map(|d| 2 * d).collect();
+    let (s_off, r_off) = if opts.use_even {
+        (vec![even_block; p], vec![even_block; p])
+    } else {
+        (sc.clone(), rc.clone())
+    };
+    let even2 = opts.use_even.then(|| 2 * even_block);
+    PairMeta { sc, rc, sc2, sd2, rc2, rd2, s_off, r_off, even2 }
+}
+
+/// Convolve stage 1: batched R2C of BOTH real operands (`real_in`,
+/// `real_in_b`) into `xspec` / `xspec_b`.
+pub struct R2cPairStage<T: Real> {
+    pub plan: R2cPlan<T>,
+    pub xspec: SlotId,
+    pub xspec_b: SlotId,
+    pub scratch: SlotId,
+}
+
+impl<T: Real + PjrtExec> PipelineStage<T> for R2cPairStage<T> {
+    fn name(&self) -> &'static str {
+        "x-r2c-pair"
+    }
+
+    fn run(&self, ctx: &mut StageCtx<'_, T>) -> Result<()> {
+        let a =
+            ctx.real_in.ok_or_else(|| Error::Runtime("r2c pair stage needs real input A".into()))?;
+        let b = ctx
+            .real_in_b
+            .ok_or_else(|| Error::Runtime("r2c pair stage needs real input B".into()))?;
+        let mut xa = ctx.pool.take(self.xspec);
+        let mut xb = ctx.pool.take(self.xspec_b);
+        let mut scratch = ctx.pool.take(self.scratch);
+        ctx.timer.time(Stage::Compute, || {
+            self.plan.execute_batch(a, &mut xa, &mut scratch);
+            self.plan.execute_batch(b, &mut xb, &mut scratch);
+        });
+        ctx.pool.restore(self.xspec, xa);
+        ctx.pool.restore(self.xspec_b, xb);
+        ctx.pool.restore(self.scratch, scratch);
+        Ok(())
+    }
+}
+
+/// Convolve stage 2: ROW transpose of both spectral X-pencils in ONE
+/// doubled-block exchange, then the forward Y FFT on both Y-pencils.
+pub struct XyFwdPairStage<T: Real> {
+    pub txy: TransposeXY,
+    pub opts: ExchangeOptions,
+    pub fy: C2cPlan<T>,
+    pub ny: usize,
+    pub xspec: SlotId,
+    pub xspec_b: SlotId,
+    pub ybuf: SlotId,
+    pub ybuf_b: SlotId,
+    pub send: SlotId,
+    pub recv: SlotId,
+    pub scratch: SlotId,
+}
+
+impl<T: Real + PjrtExec> PipelineStage<T> for XyFwdPairStage<T> {
+    fn name(&self) -> &'static str {
+        "xy-fwd-pair+yfft"
+    }
+
+    fn run(&self, ctx: &mut StageCtx<'_, T>) -> Result<()> {
+        let xa = ctx.pool.take(self.xspec);
+        let xb = ctx.pool.take(self.xspec_b);
+        let mut ya = ctx.pool.take(self.ybuf);
+        let mut yb = ctx.pool.take(self.ybuf_b);
+        let mut send = ctx.pool.take(self.send);
+        let mut recv = ctx.pool.take(self.recv);
+        let mut scratch = ctx.pool.take(self.scratch);
+        let m = pair_meta(self.txy.meta_fwd(self.opts), self.opts, self.txy.even_block());
+        ctx.timer.time(Stage::Pack, || {
+            for j in 0..self.txy.m1 {
+                self.txy.pack_fwd_win(
+                    &xa,
+                    j,
+                    0,
+                    self.txy.nz,
+                    &mut send[m.sd2[j]..m.sd2[j] + m.sc[j]],
+                );
+                let b0 = m.sd2[j] + m.s_off[j];
+                self.txy.pack_fwd_win(&xb, j, 0, self.txy.nz, &mut send[b0..b0 + m.sc[j]]);
+            }
+        });
+        ctx.timer.time(Stage::Exchange, || {
+            exchange_v(ctx.row, &send, &mut recv, &m.sc2, &m.sd2, &m.rc2, &m.rd2, m.even2);
+        });
+        ctx.timer.time(Stage::Unpack, || {
+            for j in 0..self.txy.m1 {
+                self.txy.unpack_fwd_win(
+                    &recv[m.rd2[j]..m.rd2[j] + m.rc[j]],
+                    j,
+                    0,
+                    self.txy.nz,
+                    &mut ya,
+                );
+                let b0 = m.rd2[j] + m.r_off[j];
+                self.txy.unpack_fwd_win(&recv[b0..b0 + m.rc[j]], j, 0, self.txy.nz, &mut yb);
+            }
+        });
+        let hk = self.txy.is_pruned().then(|| self.txy.hk_loc());
+        let h_loc = self.txy.h_loc();
+        y_fft_native(&self.fy, 0..self.txy.nz, h_loc, hk, self.ny, &mut ya, &mut scratch, ctx.timer);
+        y_fft_native(&self.fy, 0..self.txy.nz, h_loc, hk, self.ny, &mut yb, &mut scratch, ctx.timer);
+        ctx.pool.restore(self.xspec, xa);
+        ctx.pool.restore(self.xspec_b, xb);
+        ctx.pool.restore(self.ybuf, ya);
+        ctx.pool.restore(self.ybuf_b, yb);
+        ctx.pool.restore(self.send, send);
+        ctx.pool.restore(self.recv, recv);
+        ctx.pool.restore(self.scratch, scratch);
+        Ok(())
+    }
+}
+
+/// Convolve stage 3: COLUMN transpose of both Y-pencils in ONE
+/// doubled-block exchange, then the forward z FFT on both Z-pencils
+/// (into the `zbuf` / `zbuf_b` pool slots — the product stage and the
+/// ordinary backward chain pick them up there).
+pub struct YzFwdPairStage<T: Real> {
+    pub tyz: TransposeYZ,
+    pub opts: ExchangeOptions,
+    pub third: ThirdOp<T>,
+    /// Pruned z-bin band (see [`YzFwdStage::z_band`]).
+    pub z_band: Option<std::ops::Range<usize>>,
+    pub ybuf: SlotId,
+    pub ybuf_b: SlotId,
+    pub zbuf: SlotId,
+    pub zbuf_b: SlotId,
+    pub send: SlotId,
+    pub recv: SlotId,
+    pub scratch: SlotId,
+}
+
+impl<T: Real + PjrtExec> PipelineStage<T> for YzFwdPairStage<T> {
+    fn name(&self) -> &'static str {
+        "yz-fwd-pair+third"
+    }
+
+    fn run(&self, ctx: &mut StageCtx<'_, T>) -> Result<()> {
+        let ya = ctx.pool.take(self.ybuf);
+        let yb = ctx.pool.take(self.ybuf_b);
+        let mut za = ctx.pool.take(self.zbuf);
+        let mut zb = ctx.pool.take(self.zbuf_b);
+        let mut send = ctx.pool.take(self.send);
+        let mut recv = ctx.pool.take(self.recv);
+        let mut scratch = ctx.pool.take(self.scratch);
+        let m = pair_meta(self.tyz.meta_fwd(self.opts), self.opts, self.tyz.even_block());
+        let h = self.tyz.h_loc;
+        ctx.timer.time(Stage::Pack, || {
+            for j in 0..self.tyz.m2 {
+                self.tyz.pack_fwd_win(&ya, j, 0, h, &mut send[m.sd2[j]..m.sd2[j] + m.sc[j]]);
+                let b0 = m.sd2[j] + m.s_off[j];
+                self.tyz.pack_fwd_win(&yb, j, 0, h, &mut send[b0..b0 + m.sc[j]]);
+            }
+        });
+        ctx.timer.time(Stage::Exchange, || {
+            exchange_v(ctx.col, &send, &mut recv, &m.sc2, &m.sd2, &m.rc2, &m.rd2, m.even2);
+        });
+        if self.tyz.is_pruned() {
+            ctx.timer.time(Stage::Unpack, || {
+                za.fill(Complex::zero());
+                zb.fill(Complex::zero());
+            });
+        }
+        ctx.timer.time(Stage::Unpack, || {
+            for j in 0..self.tyz.m2 {
+                self.tyz.unpack_fwd_win(&recv[m.rd2[j]..m.rd2[j] + m.rc[j]], j, 0, h, &mut za);
+                let b0 = m.rd2[j] + m.r_off[j];
+                self.tyz.unpack_fwd_win(&recv[b0..b0 + m.rc[j]], j, 0, h, &mut zb);
+            }
+        });
+        self.third.apply_native(false, &mut za, &mut scratch, ctx.real_scratch, ctx.timer);
+        self.third.apply_native(false, &mut zb, &mut scratch, ctx.real_scratch, ctx.timer);
+        if let Some(band) = &self.z_band {
+            ctx.timer.time(Stage::Other, || {
+                mask_z_band(&mut za, self.third.n, band.clone());
+                mask_z_band(&mut zb, self.third.n, band.clone());
+            });
+        }
+        ctx.pool.restore(self.ybuf, ya);
+        ctx.pool.restore(self.ybuf_b, yb);
+        ctx.pool.restore(self.zbuf, za);
+        ctx.pool.restore(self.zbuf_b, zb);
+        ctx.pool.restore(self.send, send);
+        ctx.pool.restore(self.recv, recv);
+        ctx.pool.restore(self.scratch, scratch);
+        Ok(())
+    }
+}
+
+/// Convolve stage 4: pointwise spectral product in Z-pencils,
+/// `zbuf[i] *= zbuf_b[i]`. The product stays in the `zbuf` slot, where
+/// the from-pool [`YzBwdStage`] expects its input — no transpose, no
+/// exchange, no copy out to the caller.
+pub struct ZProductStage {
+    pub zbuf: SlotId,
+    pub zbuf_b: SlotId,
+}
+
+impl<T: Real + PjrtExec> PipelineStage<T> for ZProductStage {
+    fn name(&self) -> &'static str {
+        "z-product"
+    }
+
+    fn run(&self, ctx: &mut StageCtx<'_, T>) -> Result<()> {
+        let mut za = ctx.pool.take(self.zbuf);
+        let zb = ctx.pool.take(self.zbuf_b);
+        ctx.timer.time(Stage::Compute, || {
+            for (a, b) in za.iter_mut().zip(zb.iter()) {
+                *a *= *b;
+            }
+        });
+        ctx.pool.restore(self.zbuf, za);
+        ctx.pool.restore(self.zbuf_b, zb);
         Ok(())
     }
 }

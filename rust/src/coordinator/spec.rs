@@ -3,7 +3,7 @@
 
 use std::path::PathBuf;
 
-use crate::grid::{Decomp, ProcGrid};
+use crate::grid::{Decomp, ProcGrid, Truncation};
 use crate::tune::{TuneOptions, TuneReport};
 use crate::util::error::{Error, Result};
 
@@ -61,6 +61,15 @@ pub struct Options {
     /// environment (flat when unset). Payloads are bit-identical either
     /// way — the topology only affects ordering and accounting.
     pub cores_per_node: Option<usize>,
+    /// Spectral truncation: prune each axis right after its 1D FFT so
+    /// the transposes pack and ship only the retained modes (the X→Y
+    /// exchange clamps the x-axis to its retained prefix; the Y→Z
+    /// exchange masks transverse (kx, ky) pairs). The output Z-pencil
+    /// keeps the full-grid shape with zeros in every pruned slot, and
+    /// retained modes are bit-identical to the untruncated plan.
+    /// Requires STRIDE1 layout, the native engine, and an FFT third
+    /// transform. `None` (default) transports the full grid.
+    pub truncation: Option<Truncation>,
 }
 
 impl Default for Options {
@@ -71,6 +80,7 @@ impl Default for Options {
             overlap_chunks: 1,
             engine: EngineKind::Native,
             cores_per_node: None,
+            truncation: None,
         }
     }
 }
@@ -151,6 +161,14 @@ impl PlanSpec {
         Ok(self)
     }
 
+    /// Builder: spectral truncation (`None` transports the full grid).
+    /// Validated at compile time: truncation requires STRIDE1 layout,
+    /// the native engine, and an FFT third transform.
+    pub fn with_truncation(mut self, truncation: Truncation) -> Self {
+        self.opts.truncation = Some(truncation);
+        self
+    }
+
     /// Plan-time autotune: enumerate every Eq.-2-feasible `(m1, m2)`
     /// factorization of `nprocs` (crossed with `use_even` and
     /// `overlap_chunks` candidates), score them on `opts.profile`'s
@@ -211,6 +229,17 @@ mod tests {
         assert_eq!(o.overlap_chunks, 1, "blocking pipeline is the default");
         assert_eq!(o.engine, EngineKind::Native);
         assert_eq!(o.cores_per_node, None, "topology defers to the environment");
+        assert_eq!(o.truncation, None, "full-grid transport is the default");
+    }
+
+    #[test]
+    fn truncation_builder_sets_option() {
+        let s = PlanSpec::new([32, 32, 32], ProcGrid::new(2, 2))
+            .unwrap()
+            .with_truncation(Truncation::Spherical23);
+        assert_eq!(s.opts.truncation, Some(Truncation::Spherical23));
+        let s = s.with_truncation(Truncation::LowPass { keep: [4, 4, 4] });
+        assert_eq!(s.opts.truncation, Some(Truncation::LowPass { keep: [4, 4, 4] }));
     }
 
     #[test]

@@ -7,7 +7,9 @@
 pub mod decompose;
 pub mod layout;
 pub mod pencil;
+pub mod truncation;
 
 pub use decompose::{block_offset, block_range, block_size, block_sizes};
 pub use layout::{StorageOrder, local_dims_table1};
 pub use pencil::{Decomp, Pencil, PencilKind, ProcGrid};
+pub use truncation::{PruneRule, Truncation};

@@ -1,0 +1,260 @@
+//! Spectral truncation rules for pruned transforms.
+//!
+//! A pseudospectral production step rarely wants the full spectrum: the
+//! 2/3-rule dealiases a convolution by discarding every mode with
+//! wavenumber above `n/3` on each axis, and diagnostic pipelines often
+//! keep an even smaller low-pass box. Pruning is applied *after* each
+//! axis' 1D FFT, so the mode set that travels through the X→Y and Y→Z
+//! exchanges shrinks to the retained set — the transpose volume falls by
+//! the retained fraction while every retained mode stays bit-identical
+//! to the full-grid plan (the same FFT arithmetic runs on the same
+//! lines; only the wire format and the zero-filled destination slots
+//! change).
+//!
+//! [`Truncation`] is the user-facing knob
+//! ([`crate::coordinator::PlanSpec::with_truncation`]);
+//! [`PruneRule`] is its compiled form: integer-arithmetic keep
+//! predicates over the R2C mode grid that the transposes, stages, and
+//! the network model all consult.
+
+use std::ops::Range;
+
+/// Which modes a pruned plan retains.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Truncation {
+    /// The turbulence 2/3-dealiasing rule: keep `|k_i| <= n_i/3` on each
+    /// axis, intersected with the spherical (elliptical, for anisotropic
+    /// grids) shell `(kx/cx)^2 + (ky/cy)^2 <= 1` in the transverse
+    /// plane. This is the classic pseudospectral DNS truncation; it
+    /// retains roughly `1/3` of the (kx, ky) pairs the Y→Z exchange
+    /// would otherwise ship.
+    Spherical23,
+    /// An axis-aligned low-pass box: keep `|k_i| <= keep[i]`.
+    LowPass { keep: [usize; 3] },
+}
+
+/// Signed wavenumber of FFT bin `idx` on an axis of length `n`
+/// (`0..=n/2` then negative frequencies).
+#[inline]
+pub fn wavenumber(idx: usize, n: usize) -> i64 {
+    if idx <= n / 2 {
+        idx as i64
+    } else {
+        idx as i64 - n as i64
+    }
+}
+
+/// A [`Truncation`] compiled against one grid: per-axis cutoffs plus the
+/// keep predicates the transposes and stages evaluate. All arithmetic is
+/// integer, so every rank derives the identical retained set.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PruneRule {
+    /// R2C x-extent (`nx/2 + 1`).
+    pub h: usize,
+    pub ny: usize,
+    pub nz: usize,
+    /// Per-axis cutoffs: a mode is boxed in iff `|k_i| <= c_i`.
+    pub cx: usize,
+    pub cy: usize,
+    pub cz: usize,
+    /// Apply the transverse elliptical shell on top of the box.
+    pub spherical: bool,
+}
+
+impl PruneRule {
+    /// Compile `t` against a `[nx, ny, nz]` grid.
+    pub fn new(dims: [usize; 3], t: Truncation) -> Self {
+        let [nx, ny, nz] = dims;
+        let h = nx / 2 + 1;
+        match t {
+            Truncation::Spherical23 => PruneRule {
+                h,
+                ny,
+                nz,
+                cx: nx / 3,
+                cy: ny / 3,
+                cz: nz / 3,
+                spherical: true,
+            },
+            Truncation::LowPass { keep } => PruneRule {
+                h,
+                ny,
+                nz,
+                cx: keep[0],
+                cy: keep[1],
+                cz: keep[2],
+                spherical: false,
+            },
+        }
+    }
+
+    /// Number of retained x-modes. The R2C x-axis holds only `kx >= 0`,
+    /// so the retained set is the contiguous prefix `0..kx_keep()` —
+    /// which is what lets the X→Y exchange prune by simply clamping its
+    /// x-ranges.
+    pub fn kx_keep(&self) -> usize {
+        (self.cx + 1).min(self.h)
+    }
+
+    /// Is x-mode `kx` (a global R2C index, i.e. the wavenumber itself)
+    /// retained?
+    pub fn keep_x(&self, kx: usize) -> bool {
+        kx <= self.cx
+    }
+
+    /// Is the transverse pair (x-mode `kx`, y-bin `y_idx`) retained?
+    /// This is the Y→Z wire predicate: both pencils around that exchange
+    /// have already transformed x and y, so the full 2D keep set is
+    /// known on both sides.
+    pub fn keep_pair(&self, kx: usize, y_idx: usize) -> bool {
+        let ky = wavenumber(y_idx, self.ny);
+        if !(self.keep_x(kx) && ky.unsigned_abs() as usize <= self.cy) {
+            return false;
+        }
+        if !self.spherical {
+            return true;
+        }
+        // Elliptical shell, cross-multiplied to integers:
+        // (kx/cx)^2 + (ky/cy)^2 <= 1  ⇔  (kx·cy)^2 + (ky·cx)^2 <= (cx·cy)^2.
+        // The box test above already handles the degenerate cx == 0 /
+        // cy == 0 axes, where the cross-multiplied form loses one term.
+        let (kx, ky) = (kx as i64, ky);
+        let (cx, cy) = (self.cx as i64, self.cy as i64);
+        (kx * cy).pow(2) + (ky * cx).pow(2) <= (cx * cy).pow(2)
+    }
+
+    /// Is z-bin `z_idx` retained? (Evaluated locally after the z FFT —
+    /// the z-axis never crosses a wire after it is transformed, so z
+    /// truncation is a mask, not a wire format.)
+    pub fn keep_z(&self, z_idx: usize) -> bool {
+        wavenumber(z_idx, self.nz).unsigned_abs() as usize <= self.cz
+    }
+
+    /// The contiguous z-bin band `(cz+1)..(nz-cz)` that `keep_z`
+    /// rejects; empty when the cutoff retains everything.
+    pub fn z_prune_band(&self) -> Range<usize> {
+        let lo = (self.cz + 1).min(self.nz);
+        let hi = self.nz.saturating_sub(self.cz).max(lo);
+        lo..hi
+    }
+
+    /// Total retained (kx, y) pairs over the global `h × ny` transverse
+    /// mode grid.
+    pub fn retained_pairs(&self) -> usize {
+        let mut n = 0;
+        for kx in 0..self.h {
+            for y in 0..self.ny {
+                if self.keep_pair(kx, y) {
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+
+    /// Retained fraction of the X→Y exchange volume (the x-axis prefix
+    /// clamp).
+    pub fn row_fraction(&self) -> f64 {
+        self.kx_keep() as f64 / self.h as f64
+    }
+
+    /// Retained fraction of the Y→Z exchange volume (the transverse pair
+    /// mask).
+    pub fn col_fraction(&self) -> f64 {
+        self.retained_pairs() as f64 / (self.h * self.ny) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wavenumber_wraps_negative_frequencies() {
+        assert_eq!(wavenumber(0, 8), 0);
+        assert_eq!(wavenumber(4, 8), 4);
+        assert_eq!(wavenumber(5, 8), -3);
+        assert_eq!(wavenumber(7, 8), -1);
+        assert_eq!(wavenumber(3, 7), 3);
+        assert_eq!(wavenumber(4, 7), -3);
+    }
+
+    #[test]
+    fn spherical23_counts_at_n32() {
+        // The fig_pruned acceptance ratio rests on this exact count:
+        // 544 = 17·32 transverse pairs, 169 retained by the 2/3 rule.
+        let r = PruneRule::new([32, 32, 32], Truncation::Spherical23);
+        assert_eq!((r.cx, r.cy, r.cz), (10, 10, 10));
+        assert_eq!(r.kx_keep(), 11);
+        assert_eq!(r.h * r.ny, 544);
+        assert_eq!(r.retained_pairs(), 169);
+        // Distribution over the four y-quarters a 4-rank COL split sees
+        // (positive low, positive high, negative high, negative low).
+        let count = |ys: std::ops::Range<usize>| -> usize {
+            ys.flat_map(|y| (0..r.h).map(move |kx| (kx, y)))
+                .filter(|&(kx, y)| r.keep_pair(kx, y))
+                .count()
+        };
+        assert_eq!(count(0..8), 77);
+        assert_eq!(count(8..16), 13);
+        assert_eq!(count(16..24), 6);
+        assert_eq!(count(24..32), 73);
+    }
+
+    #[test]
+    fn spherical23_z_band() {
+        let r = PruneRule::new([32, 32, 32], Truncation::Spherical23);
+        assert_eq!(r.z_prune_band(), 11..22);
+        assert!(r.keep_z(10));
+        assert!(!r.keep_z(11));
+        assert!(!r.keep_z(21));
+        assert!(r.keep_z(22)); // wavenumber(22, 32) = -10
+    }
+
+    #[test]
+    fn lowpass_is_a_box() {
+        let r = PruneRule::new([16, 12, 10], Truncation::LowPass { keep: [3, 2, 4] });
+        assert_eq!(r.kx_keep(), 4);
+        assert!(r.keep_pair(3, 2));
+        assert!(!r.keep_pair(4, 0));
+        assert!(r.keep_pair(0, 10)); // ky = -2
+        assert!(!r.keep_pair(0, 3)); // ky = 3 > 2
+        assert_eq!(r.z_prune_band(), 5..6); // nz=10, cz=4: only bin 5 (k=5=-5)
+    }
+
+    #[test]
+    fn lowpass_keep_everything_band_is_empty() {
+        let r = PruneRule::new([8, 8, 8], Truncation::LowPass { keep: [8, 8, 8] });
+        assert_eq!(r.kx_keep(), 5); // clamped to h
+        assert!(r.z_prune_band().is_empty());
+        assert_eq!(r.retained_pairs(), 5 * 8);
+        assert_eq!(r.row_fraction(), 1.0);
+        assert_eq!(r.col_fraction(), 1.0);
+    }
+
+    #[test]
+    fn fractions_match_counts() {
+        let r = PruneRule::new([32, 32, 32], Truncation::Spherical23);
+        assert!((r.row_fraction() - 11.0 / 17.0).abs() < 1e-15);
+        assert!((r.col_fraction() - 169.0 / 544.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn uneven_grid_predicates_are_consistent() {
+        let r = PruneRule::new([10, 12, 14], Truncation::Spherical23);
+        assert_eq!((r.cx, r.cy, r.cz), (3, 4, 4));
+        // Every pair the ellipse keeps is inside the box.
+        for kx in 0..r.h {
+            for y in 0..r.ny {
+                if r.keep_pair(kx, y) {
+                    assert!(r.keep_x(kx));
+                    assert!(wavenumber(y, r.ny).unsigned_abs() as usize <= r.cy);
+                }
+            }
+        }
+        // z band complements keep_z exactly.
+        for z in 0..r.nz {
+            assert_eq!(r.keep_z(z), !r.z_prune_band().contains(&z));
+        }
+    }
+}

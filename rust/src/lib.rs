@@ -55,5 +55,5 @@ pub mod util;
 
 pub use coordinator::{PlanSpec, TransformKind};
 pub use fft::Complex;
-pub use grid::ProcGrid;
+pub use grid::{ProcGrid, PruneRule, Truncation};
 pub use util::error::{Error, Result};

@@ -64,6 +64,7 @@ fn print_help() {
            run   [--config FILE] [-o key=value ...]   forward+backward loop + verify\n\
            tune  [--config FILE] [--p P] [--machine host|cray_xt5|ranger]\n\
                  [--refine K] [--top N] [--cores-per-node C]\n\
+                 [--truncation none|spherical23|lowpass:CX,CY,CZ]\n\
                  \x20                                    rank (m1,m2)/chunk candidates\n\
            sweep [--config FILE] [--p P]              aspect-ratio sweep (Fig. 3)\n\
            model [--machine cray_xt5|ranger] [--n N] [--m1 M1] [--m2 M2] [--useeven]\n\
@@ -77,6 +78,8 @@ fn print_help() {
            options.overlap_chunks=K|auto (chunked comm/compute overlap; 1 = blocking)\n\
            options.third=\"fft|cheby|empty\" options.engine=\"native|pjrt\"\n\
            options.artifacts_dir=\"artifacts\" options.precision=\"f32|f64\"\n\
+           options.truncation=\"none|spherical23|lowpass:CX,CY,CZ\" (pruned transforms:\n\
+           exchanges ship only retained modes; the tuner prices the reduced volume)\n\
            topology.cores_per_node=C|flat (two-level node map; also via\n\
            P3DFFT_NODES / P3DFFT_CORES_PER_NODE env; unset = flat fabric)"
     );
@@ -179,8 +182,10 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
 }
 
 fn cmd_tune(args: &[String]) -> anyhow::Result<()> {
-    let (rc, extras) =
-        load_config(args, &["--p", "--machine", "--refine", "--top", "--cores-per-node"])?;
+    let (rc, extras) = load_config(
+        args,
+        &["--p", "--machine", "--refine", "--top", "--cores-per-node", "--truncation"],
+    )?;
     let p = match extras.get("--p") {
         Some(v) => v.parse::<usize>()?,
         None => rc.resolved_nprocs()?,
@@ -198,12 +203,23 @@ fn cmd_tune(args: &[String]) -> anyhow::Result<()> {
         Some(v) => Some(v.parse::<usize>()?),
         None => rc.cores_per_node,
     };
+    // --truncation wins over the config file's options.truncation; route
+    // the flag through the config parser so both spell values identically.
+    let truncation = match extras.get("--truncation") {
+        Some(v) => {
+            let mut t = rc.clone();
+            t.apply_override("options.truncation", v)?;
+            t.truncation
+        }
+        None => rc.truncation,
+    };
     let opts = TuneOptions {
         profile,
         elem_bytes: rc.elem_bytes(),
         refine_top_k: refine,
         refine_iters: rc.iterations,
         cores_per_node,
+        truncation,
         ..TuneOptions::default()
     };
     let (spec, mut report) = PlanSpec::autotune(rc.dims, p, &opts)?;

@@ -31,7 +31,7 @@ pub use calibrate::Calibration;
 pub use fit::{fit_strong_scaling, FitResult};
 pub use machine::Machine;
 pub use model::{
-    placement_fractions, predict, predict_overlapped, predict_two_level, CostBreakdown,
-    ModelInput, TopoPrediction,
+    placement_fractions, predict, predict_overlapped, predict_pruned, predict_pruned_overlapped,
+    predict_pruned_two_level, predict_two_level, CostBreakdown, ModelInput, TopoPrediction,
 };
 pub use topo::Interconnect;

@@ -136,7 +136,19 @@ pub fn predict(input: &ModelInput) -> CostBreakdown {
 /// [`CostBreakdown::total`] exactly, mirroring the executor's blocking
 /// fallback.
 pub fn predict_overlapped(input: &ModelInput, chunks: usize) -> f64 {
-    let c = predict(input);
+    predict_pruned_overlapped(input, chunks, 1.0, 1.0)
+}
+
+/// [`predict_overlapped`] with pruned-volume exchange pricing (see
+/// [`predict_pruned`]). Fractions of exactly `1.0` reproduce it bit for
+/// bit.
+pub fn predict_pruned_overlapped(
+    input: &ModelInput,
+    chunks: usize,
+    row_keep: f64,
+    col_keep: f64,
+) -> f64 {
+    let c = predict_pruned(input, row_keep, col_keep);
     let k = chunks.max(1) as f64;
     let e = c.row_exchange + c.col_exchange;
     let w = c.compute + c.memory;
@@ -191,14 +203,33 @@ pub struct TopoPrediction {
 /// [`predict_overlapped`]; existing single-level entry points are
 /// untouched.
 pub fn predict_two_level(input: &ModelInput, chunks: usize, nodes: &NodeMap) -> TopoPrediction {
+    predict_pruned_two_level(input, chunks, nodes, 1.0, 1.0)
+}
+
+/// [`predict_two_level`] with pruned-volume pricing for truncated plans:
+/// the ROW exchange ships only the retained x prefix (`row_keep` =
+/// [`crate::grid::PruneRule::row_fraction`]) and the COLUMN exchange only
+/// the retained transverse (kx, ky) pairs (`col_keep` =
+/// [`crate::grid::PruneRule::col_fraction`]). Compute/memory terms stay at
+/// full-grid cost — deliberately conservative: the pruned Y/Z FFT
+/// prefixes save less time than the wire does, and the tuner only needs
+/// the exchange ordering to be right. Fractions of exactly `1.0`
+/// reproduce [`predict_two_level`] bit for bit.
+pub fn predict_pruned_two_level(
+    input: &ModelInput,
+    chunks: usize,
+    nodes: &NodeMap,
+    row_keep: f64,
+    col_keep: f64,
+) -> TopoPrediction {
     let m = &input.machine;
     let p = input.p() as f64;
     let vol = input.elem_bytes * input.ntot();
     let v_penalty = if input.use_even { 1.0 } else { m.alltoallv_penalty };
 
     let (row_intra, col_intra) = placement_fractions(input.m1, input.m2, nodes);
-    let v_row = (input.m1 as f64 - 1.0) / input.m1 as f64 * vol;
-    let v_col = (input.m2 as f64 - 1.0) / input.m2 as f64 * vol;
+    let v_row = (input.m1 as f64 - 1.0) / input.m1 as f64 * vol * row_keep;
+    let v_col = (input.m2 as f64 - 1.0) / input.m2 as f64 * vol * col_keep;
 
     // Intra-node share: both directions of the copy stream through node
     // memory, per task. Inter-node share: halved across the bisection with
@@ -219,6 +250,20 @@ pub fn predict_two_level(input: &ModelInput, chunks: usize, nodes: &NodeMap) -> 
         aware_s: pipe(e_intra.max(e_inter)),
         row_intra,
         col_intra,
+    }
+}
+
+/// Single-level pruned-volume pricing: [`predict`] with the ROW exchange
+/// scaled by the retained x-prefix fraction and the COLUMN exchange by
+/// the retained transverse-pair fraction. Compute/memory/latency stay at
+/// full-grid cost (see [`predict_pruned_two_level`] for why). Fractions
+/// of exactly `1.0` reproduce [`predict`] bit for bit.
+pub fn predict_pruned(input: &ModelInput, row_keep: f64, col_keep: f64) -> CostBreakdown {
+    let c = predict(input);
+    CostBreakdown {
+        row_exchange: c.row_exchange * row_keep,
+        col_exchange: c.col_exchange * col_keep,
+        ..c
     }
 }
 
@@ -428,6 +473,43 @@ mod tests {
         let t = predict_two_level(&inp, 4, &nodes);
         assert_eq!(t.aware_s, t.flat_s);
         assert_eq!((t.row_intra, t.col_intra), (1.0, 1.0));
+    }
+
+    #[test]
+    fn pruned_pricing_scales_exchange_only() {
+        let inp = ModelInput::cubic(256, 8, 8, two_level_machine(4));
+        let full = predict(&inp);
+        // Unit fractions reproduce the full-grid model bit for bit.
+        let same = predict_pruned(&inp, 1.0, 1.0);
+        assert_eq!(same.total(), full.total());
+        // 2/3-rule-ish fractions cut only the wire terms.
+        let pruned = predict_pruned(&inp, 0.34, 0.31);
+        assert_eq!(pruned.compute, full.compute);
+        assert_eq!(pruned.memory, full.memory);
+        assert_eq!(pruned.latency, full.latency);
+        assert_eq!(pruned.row_exchange, full.row_exchange * 0.34);
+        assert_eq!(pruned.col_exchange, full.col_exchange * 0.31);
+        assert!(pruned.total() < full.total());
+    }
+
+    #[test]
+    fn pruned_two_level_monotone_and_exact_at_one() {
+        let nodes = NodeMap::new(64, 4, PlacementPolicy::Contiguous);
+        let mut inp = ModelInput::cubic(256, 8, 8, two_level_machine(4));
+        inp.elem_bytes = 16.0;
+        for k in [1usize, 4] {
+            let full = predict_two_level(&inp, k, &nodes);
+            let unit = predict_pruned_two_level(&inp, k, &nodes, 1.0, 1.0);
+            assert_eq!(unit.flat_s, full.flat_s);
+            assert_eq!(unit.aware_s, full.aware_s);
+            // Shipping fewer retained modes can only speed up the schedule,
+            // and more aggressive truncation is monotonically faster.
+            let mild = predict_pruned_two_level(&inp, k, &nodes, 0.6, 0.5);
+            let aggressive = predict_pruned_two_level(&inp, k, &nodes, 0.34, 0.31);
+            assert!(mild.flat_s < full.flat_s && mild.aware_s < full.aware_s);
+            assert!(aggressive.flat_s < mild.flat_s);
+            assert!(aggressive.aware_s < mild.aware_s);
+        }
     }
 
     #[test]

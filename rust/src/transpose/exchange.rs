@@ -17,6 +17,7 @@
 //! every node map.
 
 use crate::fft::{Complex, Real};
+use crate::grid::truncation::PruneRule;
 use crate::grid::{block_range, Decomp};
 use crate::mpi::Comm;
 use crate::util::timer::{Stage, StageTimer};
@@ -49,6 +50,11 @@ pub struct TransposeXY {
     pub x_ranges: Vec<std::ops::Range<usize>>,
     /// Global y ranges per row peer.
     pub y_ranges: Vec<std::ops::Range<usize>>,
+    /// Truncation: retained spectral-x prefix. When `Some(k)`, every
+    /// peer's x range is clamped to `[start, min(end, k))` on the wire;
+    /// buffer and pencil shapes are unchanged (pruned destination rows
+    /// are simply never written — the backward unpack pre-zeroes them).
+    pub kx_keep: Option<usize>,
 }
 
 impl TransposeXY {
@@ -65,6 +71,27 @@ impl TransposeXY {
             ny_glob: decomp.ny,
             x_ranges: (0..m1).map(|j| block_range(decomp.h(), m1, j)).collect(),
             y_ranges: (0..m1).map(|j| block_range(decomp.ny, m1, j)).collect(),
+            kx_keep: None,
+        }
+    }
+
+    /// Truncated variant: only the retained prefix `0..kx_keep` of the
+    /// R2C spectral-x axis travels through the exchange.
+    pub fn with_kx_keep(mut self, kx_keep: usize) -> Self {
+        self.kx_keep = Some(kx_keep.min(self.h));
+        self
+    }
+
+    pub fn is_pruned(&self) -> bool {
+        self.kx_keep.is_some()
+    }
+
+    /// Peer `j`'s spectral-x range, clamped to the retained prefix.
+    pub fn x_keep(&self, j: usize) -> std::ops::Range<usize> {
+        let r = &self.x_ranges[j];
+        match self.kx_keep {
+            Some(k) => r.start..r.end.min(k).max(r.start),
+            None => r.clone(),
         }
     }
 
@@ -77,19 +104,28 @@ impl TransposeXY {
         self.x_ranges[self.r1].len()
     }
 
+    /// Retained x rows of my Y-pencil — a prefix of `h_loc` (equals
+    /// `h_loc` when unpruned, since the retained x set is a prefix of
+    /// the global axis and x ranges are contiguous blocks).
+    pub fn hk_loc(&self) -> usize {
+        self.x_keep(self.r1).len()
+    }
+
     /// Elements sent to row peer `j` in the forward direction.
     pub fn scount_fwd(&self, j: usize) -> usize {
-        self.nz * self.ny_loc() * self.x_ranges[j].len()
+        self.nz * self.ny_loc() * self.x_keep(j).len()
     }
 
     /// Elements received from row peer `j` in the forward direction.
     pub fn rcount_fwd(&self, j: usize) -> usize {
-        self.nz * self.h_loc() * self.y_ranges[j].len()
+        self.nz * self.hk_loc() * self.y_ranges[j].len()
     }
 
-    /// Uniform padded block for USEEVEN (max over all row pairs).
+    /// Uniform padded block for USEEVEN (max over all row pairs). Row
+    /// uniform even when pruned: every row rank sees the same global
+    /// clamped ranges.
     pub fn even_block(&self) -> usize {
-        let max_x = self.x_ranges.iter().map(|r| r.len()).max().unwrap_or(0);
+        let max_x = (0..self.m1).map(|j| self.x_keep(j).len()).max().unwrap_or(0);
         let max_y = self.y_ranges.iter().map(|r| r.len()).max().unwrap_or(0);
         self.nz * max_x * max_y
     }
@@ -124,7 +160,9 @@ impl TransposeXY {
         let (scounts, sdispls, rcounts, rdispls) = self.meta_fwd(opts);
         timer.time(Stage::Pack, || {
             for j in 0..self.m1 {
-                let r = &self.x_ranges[j];
+                // Clamped to the retained prefix when pruned (no-op
+                // clamp on the full-grid path).
+                let r = self.x_keep(j);
                 pack::pack_x_to_y(
                     input,
                     self.nz,
@@ -142,13 +180,19 @@ impl TransposeXY {
         timer.time(Stage::Unpack, || {
             for j in 0..self.m1 {
                 let r = &self.y_ranges[j];
-                pack::unpack_x_to_y(
+                // Wire blocks carry hk_loc x-rows per z-plane; they land
+                // in the prefix rows of the h_loc-strided Y-pencil
+                // (identical to unpack_x_to_y when hk_loc == h_loc).
+                pack::unpack_x_to_y_pruned_win(
                     &recvbuf[rdispls[j]..rdispls[j] + self.rcount_fwd(j)],
                     self.nz,
+                    self.hk_loc(),
                     self.h_loc(),
                     self.ny_glob,
                     r.start,
                     r.end,
+                    0,
+                    self.nz,
                     output,
                 );
             }
@@ -173,13 +217,18 @@ impl TransposeXY {
         timer.time(Stage::Pack, || {
             for j in 0..self.m1 {
                 let r = &self.y_ranges[j];
-                pack::pack_y_to_x(
+                // Only the retained prefix rows of the Y-pencil travel
+                // back (all rows when unpruned).
+                pack::pack_y_to_x_pruned_win(
                     input,
                     self.nz,
+                    self.hk_loc(),
                     self.h_loc(),
                     self.ny_glob,
                     r.start,
                     r.end,
+                    0,
+                    self.nz,
                     &mut sendbuf[sdispls[j]..sdispls[j] + self.rcount_fwd(j)],
                 );
             }
@@ -188,8 +237,13 @@ impl TransposeXY {
             self.do_exchange(row, sendbuf, recvbuf, &scounts, &sdispls, &rcounts, &rdispls, opts);
         });
         timer.time(Stage::Unpack, || {
+            // Pruned x slots are never written by the unpack below —
+            // define them as zero so the X-pencil is fully specified.
+            if self.is_pruned() {
+                output.fill(Complex::zero());
+            }
             for j in 0..self.m1 {
-                let r = &self.x_ranges[j];
+                let r = self.x_keep(j);
                 pack::unpack_y_to_x(
                     &recvbuf[rdispls[j]..rdispls[j] + self.scount_fwd(j)],
                     self.nz,
@@ -218,6 +272,8 @@ impl TransposeXY {
         opts: ExchangeOptions,
         timer: &mut StageTimer,
     ) {
+        // Truncation is gated to the STRIDE1 layout at plan compile time.
+        debug_assert!(!self.is_pruned(), "XYZ layout does not support truncation");
         let (scounts, sdispls, rcounts, rdispls) = self.meta_fwd(opts);
         timer.time(Stage::Pack, || {
             for j in 0..self.m1 {
@@ -265,6 +321,7 @@ impl TransposeXY {
         opts: ExchangeOptions,
         timer: &mut StageTimer,
     ) {
+        debug_assert!(!self.is_pruned(), "XYZ layout does not support truncation");
         let (rc, rd, sc, sd) = self.meta_fwd(opts);
         let (scounts, sdispls, rcounts, rdispls) = (sc, sd, rc, rd);
         timer.time(Stage::Pack, || {
@@ -300,8 +357,12 @@ impl TransposeXY {
         });
     }
 
-    /// counts/displs for the forward direction under `opts`.
-    fn meta_fwd(&self, opts: ExchangeOptions) -> (Vec<usize>, Vec<usize>, Vec<usize>, Vec<usize>) {
+    /// counts/displs for the forward direction under `opts`. Exposed to
+    /// the crate so fused pair stages (convolve) can double the blocks.
+    pub(crate) fn meta_fwd(
+        &self,
+        opts: ExchangeOptions,
+    ) -> (Vec<usize>, Vec<usize>, Vec<usize>, Vec<usize>) {
         meta(
             self.m1,
             opts,
@@ -323,15 +384,8 @@ impl TransposeXY {
         rdispls: &[usize],
         opts: ExchangeOptions,
     ) {
-        let p = self.m1;
-        if opts.use_even {
-            let len = self.even_block() * p;
-            comm.alltoall(&sendbuf[..len], &mut recvbuf[..len], self.even_block());
-        } else {
-            let slen = sdispls[p - 1] + scounts[p - 1];
-            let rlen = rdispls[p - 1] + rcounts[p - 1];
-            comm.alltoallv(&sendbuf[..slen], scounts, sdispls, &mut recvbuf[..rlen], rcounts, rdispls);
-        }
+        let even = opts.use_even.then(|| self.even_block());
+        exchange_v(comm, sendbuf, recvbuf, scounts, sdispls, rcounts, rdispls, even);
     }
 }
 
@@ -351,6 +405,26 @@ pub struct TransposeYZ {
     pub y_ranges: Vec<std::ops::Range<usize>>,
     /// Global z ranges per column peer.
     pub z_ranges: Vec<std::ops::Range<usize>>,
+    /// Truncation: retained transverse (kx, ky) pairs. Both pencils
+    /// around this exchange have already transformed x and y, so every
+    /// column rank derives the identical mask and only retained pairs'
+    /// z-runs travel. Pencil shapes are unchanged; pruned destination
+    /// slots are pre-zeroed on unpack.
+    pub prune: Option<YzPrune>,
+}
+
+/// Compiled prune metadata for a truncated Y↔Z exchange.
+#[derive(Debug, Clone)]
+pub struct YzPrune {
+    /// `keep[x * ny_glob + y]` — retained pairs, sender view (global y;
+    /// x is the local spectral row of this column's x block).
+    pub keep: Vec<bool>,
+    /// `keep_own[x * ny2_loc + yl]` — the same mask windowed to my own
+    /// y range (receiver view).
+    pub keep_own: Vec<bool>,
+    /// `cnt[x * m2 + j]` — retained pairs in peer `j`'s y range for
+    /// local x row `x` (the per-plane counts the chunk planner needs).
+    pub cnt: Vec<usize>,
 }
 
 impl TransposeYZ {
@@ -366,7 +440,41 @@ impl TransposeYZ {
             nz_glob: decomp.nz,
             y_ranges: (0..m2).map(|j| block_range(decomp.ny, m2, j)).collect(),
             z_ranges: (0..m2).map(|j| block_range(decomp.nz, m2, j)).collect(),
+            prune: None,
         }
+    }
+
+    /// Truncated variant: compile `rule` into per-pair keep masks for
+    /// this column's spectral-x block, whose global offset is `x0_glob`
+    /// (`y_pencil(rank).offsets[1]`).
+    pub fn with_prune(mut self, rule: &PruneRule, x0_glob: usize) -> Self {
+        let (h_loc, ny, m2) = (self.h_loc, self.ny_glob, self.m2);
+        let mut keep = vec![false; h_loc * ny];
+        let mut cnt = vec![0usize; h_loc * m2];
+        for x in 0..h_loc {
+            for (j, yr) in self.y_ranges.iter().enumerate() {
+                for y in yr.clone() {
+                    if rule.keep_pair(x0_glob + x, y) {
+                        keep[x * ny + y] = true;
+                        cnt[x * m2 + j] += 1;
+                    }
+                }
+            }
+        }
+        let own = self.y_ranges[self.r2].clone();
+        let ny2 = own.len();
+        let mut keep_own = vec![false; h_loc * ny2];
+        for x in 0..h_loc {
+            for (yl, y) in own.clone().enumerate() {
+                keep_own[x * ny2 + yl] = keep[x * ny + y];
+            }
+        }
+        self.prune = Some(YzPrune { keep, keep_own, cnt });
+        self
+    }
+
+    pub fn is_pruned(&self) -> bool {
+        self.prune.is_some()
     }
 
     pub fn nz_loc(&self) -> usize {
@@ -377,18 +485,39 @@ impl TransposeYZ {
         self.y_ranges[self.r2].len()
     }
 
+    /// Retained (x, y) pairs for local x row `x` going to peer `j`.
+    fn pairs_at(&self, x: usize, j: usize) -> usize {
+        match &self.prune {
+            Some(p) => p.cnt[x * self.m2 + j],
+            None => self.y_ranges[j].len(),
+        }
+    }
+
+    /// Total retained pairs shipped to peer `j` (all pairs when
+    /// unpruned).
+    pub fn pairs_to(&self, j: usize) -> usize {
+        match &self.prune {
+            Some(p) => (0..self.h_loc).map(|x| p.cnt[x * self.m2 + j]).sum(),
+            None => self.h_loc * self.y_ranges[j].len(),
+        }
+    }
+
     pub fn scount_fwd(&self, j: usize) -> usize {
-        self.h_loc * self.y_ranges[j].len() * self.nz_loc()
+        self.pairs_to(j) * self.nz_loc()
     }
 
     pub fn rcount_fwd(&self, j: usize) -> usize {
-        self.h_loc * self.ny2_loc() * self.z_ranges[j].len()
+        // Peer j holds the same x block and the same mask, so the pairs
+        // it retains for *my* y range equal pairs_to(r2).
+        self.pairs_to(self.r2) * self.z_ranges[j].len()
     }
 
+    /// Uniform padded block for USEEVEN. Column uniform even when
+    /// pruned: every column rank computes the identical mask.
     pub fn even_block(&self) -> usize {
-        let max_y = self.y_ranges.iter().map(|r| r.len()).max().unwrap_or(0);
+        let max_pairs = (0..self.m2).map(|j| self.pairs_to(j)).max().unwrap_or(0);
         let max_z = self.z_ranges.iter().map(|r| r.len()).max().unwrap_or(0);
-        self.h_loc * max_y * max_z
+        max_pairs * max_z
     }
 
     pub fn buf_len(&self, opts: ExchangeOptions) -> usize {
@@ -419,32 +548,67 @@ impl TransposeYZ {
         timer.time(Stage::Pack, || {
             for j in 0..self.m2 {
                 let r = &self.y_ranges[j];
-                pack::pack_y_to_z(
-                    input,
-                    self.nz_loc(),
-                    self.h_loc,
-                    self.ny_glob,
-                    r.start,
-                    r.end,
-                    &mut sendbuf[sdispls[j]..sdispls[j] + self.scount_fwd(j)],
-                );
+                let dst = &mut sendbuf[sdispls[j]..sdispls[j] + self.scount_fwd(j)];
+                match &self.prune {
+                    Some(pr) => pack::pack_y_to_z_pruned_win(
+                        input,
+                        self.nz_loc(),
+                        self.h_loc,
+                        self.ny_glob,
+                        r.start,
+                        r.end,
+                        0,
+                        self.h_loc,
+                        &pr.keep,
+                        dst,
+                    ),
+                    None => pack::pack_y_to_z(
+                        input,
+                        self.nz_loc(),
+                        self.h_loc,
+                        self.ny_glob,
+                        r.start,
+                        r.end,
+                        dst,
+                    ),
+                }
             }
         });
         timer.time(Stage::Exchange, || {
             self.do_exchange(col, sendbuf, recvbuf, &scounts, &sdispls, &rcounts, &rdispls, opts);
         });
         timer.time(Stage::Unpack, || {
+            // Pruned pairs are never written below — define the whole
+            // Z-pencil so their slots hold exact zeros.
+            if self.is_pruned() {
+                output.fill(Complex::zero());
+            }
             for j in 0..self.m2 {
                 let r = &self.z_ranges[j];
-                pack::unpack_y_to_z(
-                    &recvbuf[rdispls[j]..rdispls[j] + self.rcount_fwd(j)],
-                    self.h_loc,
-                    self.ny2_loc(),
-                    self.nz_glob,
-                    r.start,
-                    r.end,
-                    output,
-                );
+                let buf = &recvbuf[rdispls[j]..rdispls[j] + self.rcount_fwd(j)];
+                match &self.prune {
+                    Some(pr) => pack::unpack_y_to_z_pruned_win(
+                        buf,
+                        self.h_loc,
+                        self.ny2_loc(),
+                        self.nz_glob,
+                        r.start,
+                        r.end,
+                        0,
+                        self.h_loc,
+                        &pr.keep_own,
+                        output,
+                    ),
+                    None => pack::unpack_y_to_z(
+                        buf,
+                        self.h_loc,
+                        self.ny2_loc(),
+                        self.nz_glob,
+                        r.start,
+                        r.end,
+                        output,
+                    ),
+                }
             }
         });
     }
@@ -466,32 +630,65 @@ impl TransposeYZ {
         timer.time(Stage::Pack, || {
             for j in 0..self.m2 {
                 let r = &self.z_ranges[j];
-                pack::pack_z_to_y(
-                    input,
-                    self.h_loc,
-                    self.ny2_loc(),
-                    self.nz_glob,
-                    r.start,
-                    r.end,
-                    &mut sendbuf[sdispls[j]..sdispls[j] + self.rcount_fwd(j)],
-                );
+                let dst = &mut sendbuf[sdispls[j]..sdispls[j] + self.rcount_fwd(j)];
+                match &self.prune {
+                    Some(pr) => pack::pack_z_to_y_pruned_win(
+                        input,
+                        self.h_loc,
+                        self.ny2_loc(),
+                        self.nz_glob,
+                        r.start,
+                        r.end,
+                        0,
+                        self.h_loc,
+                        &pr.keep_own,
+                        dst,
+                    ),
+                    None => pack::pack_z_to_y(
+                        input,
+                        self.h_loc,
+                        self.ny2_loc(),
+                        self.nz_glob,
+                        r.start,
+                        r.end,
+                        dst,
+                    ),
+                }
             }
         });
         timer.time(Stage::Exchange, || {
             self.do_exchange(col, sendbuf, recvbuf, &scounts, &sdispls, &rcounts, &rdispls, opts);
         });
         timer.time(Stage::Unpack, || {
+            if self.is_pruned() {
+                output.fill(Complex::zero());
+            }
             for j in 0..self.m2 {
                 let r = &self.y_ranges[j];
-                pack::unpack_z_to_y(
-                    &recvbuf[rdispls[j]..rdispls[j] + self.scount_fwd(j)],
-                    self.nz_loc(),
-                    self.h_loc,
-                    self.ny_glob,
-                    r.start,
-                    r.end,
-                    output,
-                );
+                let buf = &recvbuf[rdispls[j]..rdispls[j] + self.scount_fwd(j)];
+                match &self.prune {
+                    Some(pr) => pack::unpack_z_to_y_pruned_win(
+                        buf,
+                        self.nz_loc(),
+                        self.h_loc,
+                        self.ny_glob,
+                        r.start,
+                        r.end,
+                        0,
+                        self.h_loc,
+                        &pr.keep,
+                        output,
+                    ),
+                    None => pack::unpack_z_to_y(
+                        buf,
+                        self.nz_loc(),
+                        self.h_loc,
+                        self.ny_glob,
+                        r.start,
+                        r.end,
+                        output,
+                    ),
+                }
             }
         });
     }
@@ -510,6 +707,7 @@ impl TransposeYZ {
         opts: ExchangeOptions,
         timer: &mut StageTimer,
     ) {
+        debug_assert!(!self.is_pruned(), "XYZ layout does not support truncation");
         let (scounts, sdispls, rcounts, rdispls) = self.meta_fwd(opts);
         timer.time(Stage::Pack, || {
             for j in 0..self.m2 {
@@ -556,6 +754,7 @@ impl TransposeYZ {
         opts: ExchangeOptions,
         timer: &mut StageTimer,
     ) {
+        debug_assert!(!self.is_pruned(), "XYZ layout does not support truncation");
         let (rc, rd, sc, sd) = self.meta_fwd(opts);
         let (scounts, sdispls, rcounts, rdispls) = (sc, sd, rc, rd);
         timer.time(Stage::Pack, || {
@@ -591,7 +790,10 @@ impl TransposeYZ {
         });
     }
 
-    fn meta_fwd(&self, opts: ExchangeOptions) -> (Vec<usize>, Vec<usize>, Vec<usize>, Vec<usize>) {
+    pub(crate) fn meta_fwd(
+        &self,
+        opts: ExchangeOptions,
+    ) -> (Vec<usize>, Vec<usize>, Vec<usize>, Vec<usize>) {
         meta(
             self.m2,
             opts,
@@ -613,14 +815,45 @@ impl TransposeYZ {
         rdispls: &[usize],
         opts: ExchangeOptions,
     ) {
-        let p = self.m2;
-        if opts.use_even {
-            let len = self.even_block() * p;
-            comm.alltoall(&sendbuf[..len], &mut recvbuf[..len], self.even_block());
-        } else {
+        let even = opts.use_even.then(|| self.even_block());
+        exchange_v(comm, sendbuf, recvbuf, scounts, sdispls, rcounts, rdispls, even);
+    }
+}
+
+/// One blocking all-to-all exchange leg over explicit counts and
+/// absolute displacements: the padded `alltoall` when `even_block` is
+/// `Some` (USEEVEN), `alltoallv` otherwise. This is the body both
+/// transposes share, exposed so stages that fuse two fields into one
+/// exchange (the convolve pair stages) can drive it with doubled
+/// blocks.
+#[allow(clippy::too_many_arguments)]
+pub fn exchange_v<T: Real>(
+    comm: &Comm,
+    sendbuf: &[Complex<T>],
+    recvbuf: &mut [Complex<T>],
+    scounts: &[usize],
+    sdispls: &[usize],
+    rcounts: &[usize],
+    rdispls: &[usize],
+    even_block: Option<usize>,
+) {
+    let p = scounts.len();
+    match even_block {
+        Some(b) => {
+            let len = b * p;
+            comm.alltoall(&sendbuf[..len], &mut recvbuf[..len], b);
+        }
+        None => {
             let slen = sdispls[p - 1] + scounts[p - 1];
             let rlen = rdispls[p - 1] + rcounts[p - 1];
-            comm.alltoallv(&sendbuf[..slen], scounts, sdispls, &mut recvbuf[..rlen], rcounts, rdispls);
+            comm.alltoallv(
+                &sendbuf[..slen],
+                scounts,
+                sdispls,
+                &mut recvbuf[..rlen],
+                rcounts,
+                rdispls,
+            );
         }
     }
 }
@@ -660,29 +893,31 @@ impl ChunkPlan {
 }
 
 /// Build a chunk plan from per-peer counts *per invariant-axis plane*.
+/// The closures receive `(plane, peer)` — pruned Y↔Z exchanges have
+/// genuinely non-uniform planes (each spectral-x row retains a
+/// different number of (kx, ky) pairs), so displacements are running
+/// prefix sums over planes; for plane-uniform closures this reproduces
+/// the `range.start * plane_total` arithmetic exactly.
 fn chunk_plan(
     axis_len: usize,
     k: usize,
     p: usize,
-    s_unit: impl Fn(usize) -> usize,
-    r_unit: impl Fn(usize) -> usize,
+    s_unit: impl Fn(usize, usize) -> usize,
+    r_unit: impl Fn(usize, usize) -> usize,
 ) -> ChunkPlan {
     let k = k.clamp(1, axis_len.max(1));
-    let s_plane: usize = (0..p).map(&s_unit).sum();
-    let r_plane: usize = (0..p).map(&r_unit).sum();
     let mut chunks = Vec::with_capacity(k);
+    let (mut soff0, mut roff0) = (0usize, 0usize);
     for c in 0..k {
         let range = block_range(axis_len, k, c);
-        let len = range.len();
         let mut scounts = Vec::with_capacity(p);
         let mut sdispls = Vec::with_capacity(p);
         let mut rcounts = Vec::with_capacity(p);
         let mut rdispls = Vec::with_capacity(p);
-        let mut soff = range.start * s_plane;
-        let mut roff = range.start * r_plane;
+        let (mut soff, mut roff) = (soff0, roff0);
         for j in 0..p {
-            let sc = len * s_unit(j);
-            let rc = len * r_unit(j);
+            let sc: usize = range.clone().map(|plane| s_unit(plane, j)).sum();
+            let rc: usize = range.clone().map(|plane| r_unit(plane, j)).sum();
             scounts.push(sc);
             sdispls.push(soff);
             soff += sc;
@@ -690,6 +925,7 @@ fn chunk_plan(
             rdispls.push(roff);
             roff += rc;
         }
+        (soff0, roff0) = (soff, roff);
         chunks.push(ChunkMeta { range, scounts, sdispls, rcounts, rdispls });
     }
     ChunkPlan { chunks }
@@ -702,8 +938,8 @@ impl TransposeXY {
             self.nz,
             k,
             self.m1,
-            |j| self.ny_loc() * self.x_ranges[j].len(),
-            |j| self.h_loc() * self.y_ranges[j].len(),
+            |_z, j| self.ny_loc() * self.x_keep(j).len(),
+            |_z, j| self.hk_loc() * self.y_ranges[j].len(),
         )
     }
 
@@ -713,8 +949,8 @@ impl TransposeXY {
             self.nz,
             k,
             self.m1,
-            |j| self.h_loc() * self.y_ranges[j].len(),
-            |j| self.ny_loc() * self.x_ranges[j].len(),
+            |_z, j| self.hk_loc() * self.y_ranges[j].len(),
+            |_z, j| self.ny_loc() * self.x_keep(j).len(),
         )
     }
 
@@ -727,7 +963,7 @@ impl TransposeXY {
         zb: usize,
         out: &mut [Complex<T>],
     ) {
-        let r = &self.x_ranges[j];
+        let r = self.x_keep(j);
         pack::pack_x_to_y_win(input, self.nz, self.ny_loc(), self.h, r.start, r.end, za, zb, out);
     }
 
@@ -741,9 +977,10 @@ impl TransposeXY {
         output: &mut [Complex<T>],
     ) {
         let r = &self.y_ranges[j];
-        pack::unpack_x_to_y_win(
+        pack::unpack_x_to_y_pruned_win(
             buf,
             self.nz,
+            self.hk_loc(),
             self.h_loc(),
             self.ny_glob,
             r.start,
@@ -764,9 +1001,10 @@ impl TransposeXY {
         out: &mut [Complex<T>],
     ) {
         let r = &self.y_ranges[j];
-        pack::pack_y_to_x_win(
+        pack::pack_y_to_x_pruned_win(
             input,
             self.nz,
+            self.hk_loc(),
             self.h_loc(),
             self.ny_glob,
             r.start,
@@ -778,6 +1016,8 @@ impl TransposeXY {
     }
 
     /// Unpack the backward recv block from row peer `j`, z-window `[za, zb)`.
+    /// When pruned, the caller pre-zeroes the X-pencil: only the
+    /// retained x prefix is written back.
     pub fn unpack_bwd_win<T: Real>(
         &self,
         buf: &[Complex<T>],
@@ -786,20 +1026,22 @@ impl TransposeXY {
         zb: usize,
         output: &mut [Complex<T>],
     ) {
-        let r = &self.x_ranges[j];
+        let r = self.x_keep(j);
         pack::unpack_y_to_x_win(buf, self.nz, self.ny_loc(), self.h, r.start, r.end, za, zb, output);
     }
 }
 
 impl TransposeYZ {
-    /// Chunked forward view: spectral-x slabs.
+    /// Chunked forward view: spectral-x slabs. Pruned plans have
+    /// genuinely per-plane counts (each x row retains a different pair
+    /// set), which the generalized planner accumulates exactly.
     pub fn chunks_fwd(&self, k: usize) -> ChunkPlan {
         chunk_plan(
             self.h_loc,
             k,
             self.m2,
-            |j| self.y_ranges[j].len() * self.nz_loc(),
-            |j| self.ny2_loc() * self.z_ranges[j].len(),
+            |x, j| self.pairs_at(x, j) * self.nz_loc(),
+            |x, j| self.pairs_at(x, self.r2) * self.z_ranges[j].len(),
         )
     }
 
@@ -809,8 +1051,8 @@ impl TransposeYZ {
             self.h_loc,
             k,
             self.m2,
-            |j| self.ny2_loc() * self.z_ranges[j].len(),
-            |j| self.y_ranges[j].len() * self.nz_loc(),
+            |x, j| self.pairs_at(x, self.r2) * self.z_ranges[j].len(),
+            |x, j| self.pairs_at(x, j) * self.nz_loc(),
         )
     }
 
@@ -824,20 +1066,36 @@ impl TransposeYZ {
         out: &mut [Complex<T>],
     ) {
         let r = &self.y_ranges[j];
-        pack::pack_y_to_z_win(
-            input,
-            self.nz_loc(),
-            self.h_loc,
-            self.ny_glob,
-            r.start,
-            r.end,
-            xa,
-            xb,
-            out,
-        );
+        match &self.prune {
+            Some(pr) => pack::pack_y_to_z_pruned_win(
+                input,
+                self.nz_loc(),
+                self.h_loc,
+                self.ny_glob,
+                r.start,
+                r.end,
+                xa,
+                xb,
+                &pr.keep,
+                out,
+            ),
+            None => pack::pack_y_to_z_win(
+                input,
+                self.nz_loc(),
+                self.h_loc,
+                self.ny_glob,
+                r.start,
+                r.end,
+                xa,
+                xb,
+                out,
+            ),
+        }
     }
 
     /// Unpack the forward recv block from column peer `j`, x-window `[xa, xb)`.
+    /// When pruned, the caller pre-zeroes the Z-pencil: only retained
+    /// pairs are written.
     pub fn unpack_fwd_win<T: Real>(
         &self,
         buf: &[Complex<T>],
@@ -847,17 +1105,31 @@ impl TransposeYZ {
         output: &mut [Complex<T>],
     ) {
         let r = &self.z_ranges[j];
-        pack::unpack_y_to_z_win(
-            buf,
-            self.h_loc,
-            self.ny2_loc(),
-            self.nz_glob,
-            r.start,
-            r.end,
-            xa,
-            xb,
-            output,
-        );
+        match &self.prune {
+            Some(pr) => pack::unpack_y_to_z_pruned_win(
+                buf,
+                self.h_loc,
+                self.ny2_loc(),
+                self.nz_glob,
+                r.start,
+                r.end,
+                xa,
+                xb,
+                &pr.keep_own,
+                output,
+            ),
+            None => pack::unpack_y_to_z_win(
+                buf,
+                self.h_loc,
+                self.ny2_loc(),
+                self.nz_glob,
+                r.start,
+                r.end,
+                xa,
+                xb,
+                output,
+            ),
+        }
     }
 
     /// Pack the backward send block for column peer `j`, x-window `[xa, xb)`.
@@ -870,20 +1142,35 @@ impl TransposeYZ {
         out: &mut [Complex<T>],
     ) {
         let r = &self.z_ranges[j];
-        pack::pack_z_to_y_win(
-            input,
-            self.h_loc,
-            self.ny2_loc(),
-            self.nz_glob,
-            r.start,
-            r.end,
-            xa,
-            xb,
-            out,
-        );
+        match &self.prune {
+            Some(pr) => pack::pack_z_to_y_pruned_win(
+                input,
+                self.h_loc,
+                self.ny2_loc(),
+                self.nz_glob,
+                r.start,
+                r.end,
+                xa,
+                xb,
+                &pr.keep_own,
+                out,
+            ),
+            None => pack::pack_z_to_y_win(
+                input,
+                self.h_loc,
+                self.ny2_loc(),
+                self.nz_glob,
+                r.start,
+                r.end,
+                xa,
+                xb,
+                out,
+            ),
+        }
     }
 
     /// Unpack the backward recv block from column peer `j`, x-window `[xa, xb)`.
+    /// When pruned, the caller pre-zeroes the Y-pencil.
     pub fn unpack_bwd_win<T: Real>(
         &self,
         buf: &[Complex<T>],
@@ -893,17 +1180,31 @@ impl TransposeYZ {
         output: &mut [Complex<T>],
     ) {
         let r = &self.y_ranges[j];
-        pack::unpack_z_to_y_win(
-            buf,
-            self.nz_loc(),
-            self.h_loc,
-            self.ny_glob,
-            r.start,
-            r.end,
-            xa,
-            xb,
-            output,
-        );
+        match &self.prune {
+            Some(pr) => pack::unpack_z_to_y_pruned_win(
+                buf,
+                self.nz_loc(),
+                self.h_loc,
+                self.ny_glob,
+                r.start,
+                r.end,
+                xa,
+                xb,
+                &pr.keep,
+                output,
+            ),
+            None => pack::unpack_z_to_y_win(
+                buf,
+                self.nz_loc(),
+                self.h_loc,
+                self.ny_glob,
+                r.start,
+                r.end,
+                xa,
+                xb,
+                output,
+            ),
+        }
     }
 }
 
@@ -1178,5 +1479,271 @@ mod tests {
         // padding must never leak into the data.
         roundtrip_case(12, 10, 9, 3, 3, true);
         roundtrip_case(12, 10, 9, 3, 3, false);
+    }
+
+    use crate::grid::truncation::Truncation;
+
+    fn pruned_pair(decomp: &Decomp, rule: &PruneRule, rank: usize) -> (TransposeXY, TransposeYZ) {
+        let txy = TransposeXY::new(decomp, rank).with_kx_keep(rule.kx_keep());
+        let yp = decomp.y_pencil(rank);
+        let tyz = TransposeYZ::new(decomp, rank).with_prune(rule, yp.offsets[1]);
+        (txy, tyz)
+    }
+
+    #[test]
+    fn pruned_counts_are_symmetric_and_sum_to_retained_totals() {
+        let decomp = Decomp::new(10, 12, 14, ProcGrid::new(2, 3)).unwrap();
+        let rule = PruneRule::new([10, 12, 14], Truncation::Spherical23);
+        let plans: Vec<_> = (0..decomp.p()).map(|r| pruned_pair(&decomp, &rule, r)).collect();
+
+        // Cross-rank symmetry: what i sends to j, j expects from i.
+        for a in 0..decomp.p() {
+            for b in 0..decomp.p() {
+                let (ra1, ra2) = decomp.pgrid.coords(a);
+                let (rb1, rb2) = decomp.pgrid.coords(b);
+                if ra2 == rb2 {
+                    assert_eq!(
+                        plans[a].0.scount_fwd(rb1),
+                        plans[b].0.rcount_fwd(ra1),
+                        "XY {a}->{b}"
+                    );
+                }
+                if ra1 == rb1 {
+                    assert_eq!(
+                        plans[a].1.scount_fwd(rb2),
+                        plans[b].1.rcount_fwd(ra2),
+                        "YZ {a}->{b}"
+                    );
+                }
+            }
+        }
+
+        // Grid-wide Y→Z send volume == retained pairs × nz (columns
+        // partition the x axis; each column's ranks tile nz).
+        let total: usize = plans
+            .iter()
+            .map(|(_, tyz)| (0..tyz.m2).map(|j| tyz.scount_fwd(j)).sum::<usize>())
+            .sum();
+        assert_eq!(total, rule.retained_pairs() * 14);
+        // Recv side agrees.
+        let rtotal: usize = plans
+            .iter()
+            .map(|(_, tyz)| (0..tyz.m2).map(|j| tyz.rcount_fwd(j)).sum::<usize>())
+            .sum();
+        assert_eq!(rtotal, total);
+    }
+
+    #[test]
+    fn pruned_chunk_plans_partition_the_pruned_exchange() {
+        // Pruned Y↔Z planes are non-uniform (each x row keeps a
+        // different pair count) — chunk sums must still reproduce the
+        // blocking counts exactly, for every chunking.
+        let decomp = Decomp::new(10, 12, 14, ProcGrid::new(2, 3)).unwrap();
+        let rule = PruneRule::new([10, 12, 14], Truncation::Spherical23);
+        let opts = ExchangeOptions { use_even: false };
+        fn check(
+            cp: &ChunkPlan,
+            m: usize,
+            sc: impl Fn(usize) -> usize,
+            rc: impl Fn(usize) -> usize,
+            buf: usize,
+            tag: &str,
+        ) {
+            for j in 0..m {
+                let s: usize = cp.chunks.iter().map(|c| c.scounts[j]).sum();
+                assert_eq!(s, sc(j), "{tag} peer {j}");
+                let r: usize = cp.chunks.iter().map(|c| c.rcounts[j]).sum();
+                assert_eq!(r, rc(j), "{tag} peer {j}");
+            }
+            for c in &cp.chunks {
+                for j in 0..m {
+                    assert!(c.sdispls[j] + c.scounts[j] <= buf, "{tag}");
+                    assert!(c.rdispls[j] + c.rcounts[j] <= buf, "{tag}");
+                }
+            }
+        }
+        for rank in 0..decomp.p() {
+            let (txy, tyz) = pruned_pair(&decomp, &rule, rank);
+            for k in [1usize, 2, 3, 7, 16] {
+                let tag = format!("rank {rank} k {k}");
+                check(
+                    &txy.chunks_fwd(k),
+                    txy.m1,
+                    |j| txy.scount_fwd(j),
+                    |j| txy.rcount_fwd(j),
+                    txy.buf_len(opts),
+                    &format!("XY {tag}"),
+                );
+                check(
+                    &tyz.chunks_fwd(k),
+                    tyz.m2,
+                    |j| tyz.scount_fwd(j),
+                    |j| tyz.rcount_fwd(j),
+                    tyz.buf_len(opts),
+                    &format!("YZ {tag}"),
+                );
+                // Backward views swap roles exactly.
+                let (f, b) = (tyz.chunks_fwd(k), tyz.chunks_bwd(k));
+                for (fc, bc) in f.chunks.iter().zip(&b.chunks) {
+                    assert_eq!(fc.range, bc.range);
+                    assert_eq!(fc.scounts, bc.rcounts);
+                    assert_eq!(fc.rcounts, bc.scounts);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pruned_exchange_matches_full_on_retained_modes() {
+        // Distributed X→Y→Z with truncation: retained modes must equal
+        // the full-grid transpose chain bit for bit, pruned slots must
+        // be exact zeros, and the backward chain must restore the
+        // retained modes (zero elsewhere).
+        let decomp = Decomp::new(10, 12, 14, ProcGrid::new(2, 3)).unwrap();
+        let rule = PruneRule::new([10, 12, 14], Truncation::Spherical23);
+        let opts = ExchangeOptions { use_even: false };
+        let u = Universe::new(decomp.p());
+        let checks = u
+            .run(move |c| {
+                let rank = c.rank();
+                let (row, col) = c.cart_2d(decomp.pgrid)?;
+                let txy = TransposeXY::new(&decomp, rank);
+                let tyz = TransposeYZ::new(&decomp, rank);
+                let (pxy, pyz) = pruned_pair(&decomp, &rule, rank);
+                let xp = decomp.x_pencil_spec(rank);
+                let yp = decomp.y_pencil(rank);
+                let zp = decomp.z_pencil(rank);
+                let mut timer = StageTimer::new();
+
+                let mut xdata = vec![Complex::zero(); xp.len()];
+                for z in 0..xp.dims[0] {
+                    for y in 0..xp.dims[1] {
+                        for x in 0..decomp.h() {
+                            xdata[(z * xp.dims[1] + y) * decomp.h() + x] =
+                                enc(x, y + xp.offsets[1], z + xp.offsets[0]);
+                        }
+                    }
+                }
+
+                let blen = txy.buf_len(opts).max(tyz.buf_len(opts));
+                let mut sb = vec![Complex::zero(); blen];
+                let mut rb = vec![Complex::zero(); blen];
+
+                // Full-grid reference chain.
+                let mut yref = vec![Complex::zero(); yp.len()];
+                txy.forward(&row, &xdata, &mut yref, &mut sb, &mut rb, opts, &mut timer);
+                let mut zref = vec![Complex::zero(); zp.len()];
+                tyz.forward(&col, &yref, &mut zref, &mut sb, &mut rb, opts, &mut timer);
+
+                // Pruned chain (smaller wire volume, same buffers).
+                let mut ydata = vec![Complex::zero(); yp.len()];
+                pxy.forward(&row, &xdata, &mut ydata, &mut sb, &mut rb, opts, &mut timer);
+                let mut zdata = vec![Complex::zero(); zp.len()];
+                pyz.forward(&col, &ydata, &mut zdata, &mut sb, &mut rb, opts, &mut timer);
+
+                let pr = pyz.prune.as_ref().unwrap();
+                let ny2 = zp.dims[1];
+                for xl in 0..zp.dims[0] {
+                    for yl in 0..ny2 {
+                        let kept = pr.keep_own[xl * ny2 + yl];
+                        for z in 0..decomp.nz {
+                            let got = zdata[(xl * ny2 + yl) * decomp.nz + z];
+                            let want =
+                                if kept { zref[(xl * ny2 + yl) * decomp.nz + z] } else { Complex::zero() };
+                            if got != want {
+                                return Err(crate::Error::Mpi(format!(
+                                    "rank {rank} pruned zpencil mismatch at x={xl} y={yl} z={z} (kept={kept}): {got} != {want}"
+                                )));
+                            }
+                        }
+                    }
+                }
+
+                // Backward: retained modes return, everything else zero.
+                let mut yback = vec![Complex::zero(); yp.len()];
+                pyz.backward(&col, &zdata, &mut yback, &mut sb, &mut rb, opts, &mut timer);
+                for z in 0..yp.dims[0] {
+                    for xl in 0..yp.dims[1] {
+                        for y in 0..decomp.ny {
+                            let got = yback[(z * yp.dims[1] + xl) * decomp.ny + y];
+                            let kept = pr.keep[xl * decomp.ny + y];
+                            let want = if kept {
+                                yref[(z * yp.dims[1] + xl) * decomp.ny + y]
+                            } else {
+                                Complex::zero()
+                            };
+                            if got != want {
+                                return Err(crate::Error::Mpi(format!(
+                                    "rank {rank} pruned yback mismatch at z={z} x={xl} y={y}: {got} != {want}"
+                                )));
+                            }
+                        }
+                    }
+                }
+
+                let mut xback = vec![Complex::zero(); xp.len()];
+                pxy.backward(&row, &yback, &mut xback, &mut sb, &mut rb, opts, &mut timer);
+                for z in 0..xp.dims[0] {
+                    for y in 0..xp.dims[1] {
+                        for x in 0..decomp.h() {
+                            let got = xback[(z * xp.dims[1] + y) * decomp.h() + x];
+                            let kept = rule.keep_pair(x, y + xp.offsets[1]);
+                            let want = if kept {
+                                xdata[(z * xp.dims[1] + y) * decomp.h() + x]
+                            } else {
+                                Complex::zero()
+                            };
+                            if got != want {
+                                return Err(crate::Error::Mpi(format!(
+                                    "rank {rank} pruned xback mismatch at z={z} y={y} x={x}: {got} != {want}"
+                                )));
+                            }
+                        }
+                    }
+                }
+                Ok(true)
+            })
+            .unwrap();
+        assert!(checks.into_iter().all(|b| b));
+    }
+
+    #[test]
+    fn pruned_useeven_matches_pruned_alltoallv() {
+        // USEEVEN padding composes with pruning: both transports must
+        // land identical Z-pencils.
+        let decomp = Decomp::new(12, 12, 12, ProcGrid::new(2, 2)).unwrap();
+        let rule = PruneRule::new([12, 12, 12], Truncation::Spherical23);
+        let run = |use_even: bool| {
+            let opts = ExchangeOptions { use_even };
+            let u = Universe::new(decomp.p());
+            u.run(move |c| {
+                let rank = c.rank();
+                let (row, col) = c.cart_2d(decomp.pgrid)?;
+                let (pxy, pyz) = pruned_pair(&decomp, &rule, rank);
+                let xp = decomp.x_pencil_spec(rank);
+                let yp = decomp.y_pencil(rank);
+                let zp = decomp.z_pencil(rank);
+                let mut timer = StageTimer::new();
+                let mut xdata = vec![Complex::zero(); xp.len()];
+                for z in 0..xp.dims[0] {
+                    for y in 0..xp.dims[1] {
+                        for x in 0..decomp.h() {
+                            xdata[(z * xp.dims[1] + y) * decomp.h() + x] =
+                                enc(x, y + xp.offsets[1], z + xp.offsets[0]);
+                        }
+                    }
+                }
+                let blen = pxy.buf_len(opts).max(pyz.buf_len(opts));
+                let mut sb = vec![Complex::zero(); blen];
+                let mut rb = vec![Complex::zero(); blen];
+                let mut ydata = vec![Complex::zero(); yp.len()];
+                pxy.forward(&row, &xdata, &mut ydata, &mut sb, &mut rb, opts, &mut timer);
+                let mut zdata = vec![Complex::zero(); zp.len()];
+                pyz.forward(&col, &ydata, &mut zdata, &mut sb, &mut rb, opts, &mut timer);
+                Ok(zdata)
+            })
+            .unwrap()
+        };
+        assert_eq!(run(true), run(false), "padding must never leak into pruned data");
     }
 }

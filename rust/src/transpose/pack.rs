@@ -417,6 +417,218 @@ pub fn unpack_z_to_y_win<T: Real>(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Pruned (truncated-spectrum) kernels: same wire formats as above,
+// restricted to the retained mode set. X↔Y prunes by clamping the
+// spectral-x range — the retained x set is a contiguous prefix of the
+// R2C axis, so the tiled pack/unpack kernels work unchanged with clamped
+// `[x0, x1)` bounds, and only the side whose local x extent is the
+// buffer stride needs a variant (`x_lines` retained rows inside an
+// `h_loc`-strided pencil). Y↔Z prunes by a per-(x, y) keep mask: pack
+// and unpack walk the mask in the same ascending (x, then y) order, so
+// the wire is a dense stream of retained z-runs with no per-element
+// header.
+// ---------------------------------------------------------------------------
+
+/// Pruned forward X→Y unpack: like [`unpack_x_to_y_win`], but the peer
+/// clamped its x range to the retained prefix, so the buffer holds only
+/// `x_lines <= h_loc` x-rows per z-plane. They land in the (local)
+/// prefix rows of the `h_loc`-strided Y-pencil; rows `x_lines..h_loc`
+/// are untouched (they hold pruned modes nothing downstream reads).
+#[allow(clippy::too_many_arguments)]
+pub fn unpack_x_to_y_pruned_win<T: Real>(
+    buf: &[Complex<T>],
+    nz: usize,
+    x_lines: usize,
+    h_loc: usize,
+    ny_glob: usize,
+    y0: usize,
+    y1: usize,
+    za: usize,
+    zb: usize,
+    out: &mut [Complex<T>],
+) {
+    let w = y1 - y0;
+    debug_assert!(x_lines <= h_loc);
+    debug_assert!(za <= zb && zb <= nz);
+    debug_assert_eq!(buf.len(), (zb - za) * x_lines * w);
+    debug_assert_eq!(out.len(), nz * h_loc * ny_glob);
+    for z in za..zb {
+        for x in 0..x_lines {
+            let src_base = ((z - za) * x_lines + x) * w;
+            let dst_base = (z * h_loc + x) * ny_glob + y0;
+            out[dst_base..dst_base + w].copy_from_slice(&buf[src_base..src_base + w]);
+        }
+    }
+}
+
+/// Pruned backward Y→X pack: mirror of [`unpack_x_to_y_pruned_win`] —
+/// read only the retained prefix rows `0..x_lines` of each z-plane of
+/// the `h_loc`-strided Y-pencil.
+#[allow(clippy::too_many_arguments)]
+pub fn pack_y_to_x_pruned_win<T: Real>(
+    input: &[Complex<T>],
+    nz: usize,
+    x_lines: usize,
+    h_loc: usize,
+    ny_glob: usize,
+    y0: usize,
+    y1: usize,
+    za: usize,
+    zb: usize,
+    out: &mut [Complex<T>],
+) {
+    let w = y1 - y0;
+    debug_assert!(x_lines <= h_loc);
+    debug_assert!(za <= zb && zb <= nz);
+    debug_assert_eq!(input.len(), nz * h_loc * ny_glob);
+    debug_assert_eq!(out.len(), (zb - za) * x_lines * w);
+    for z in za..zb {
+        for x in 0..x_lines {
+            let src_base = (z * h_loc + x) * ny_glob + y0;
+            let dst_base = ((z - za) * x_lines + x) * w;
+            out[dst_base..dst_base + w].copy_from_slice(&input[src_base..src_base + w]);
+        }
+    }
+}
+
+/// Pruned Y→Z pack for a COLUMN peer owning global y `[y0, y1)`: ship
+/// only (x, y) pairs with `keep[x * ny_glob + y]` set. The output is a
+/// dense stream of `nz`-long z-runs in ascending (x, then y) order —
+/// the exact order [`unpack_y_to_z_pruned_win`] consumes.
+#[allow(clippy::too_many_arguments)]
+pub fn pack_y_to_z_pruned_win<T: Real>(
+    input: &[Complex<T>],
+    nz: usize,
+    h_loc: usize,
+    ny_glob: usize,
+    y0: usize,
+    y1: usize,
+    xa: usize,
+    xb: usize,
+    keep: &[bool],
+    out: &mut [Complex<T>],
+) {
+    debug_assert_eq!(input.len(), nz * h_loc * ny_glob);
+    debug_assert_eq!(keep.len(), h_loc * ny_glob);
+    debug_assert!(xa <= xb && xb <= h_loc);
+    let mut off = 0;
+    for x in xa..xb {
+        for y in y0..y1 {
+            if !keep[x * ny_glob + y] {
+                continue;
+            }
+            let run = &mut out[off..off + nz];
+            for (z, slot) in run.iter_mut().enumerate() {
+                *slot = input[(z * h_loc + x) * ny_glob + y];
+            }
+            off += nz;
+        }
+    }
+    debug_assert_eq!(off, out.len());
+}
+
+/// Pruned Y→Z unpack from a COLUMN peer owning global z `[z0, z1)`:
+/// land the dense retained stream into the full-shape Z-pencil.
+/// `keep_own` indexes the receiver's local y range (`h_loc * ny2`);
+/// pruned destination slots are untouched (the stage pre-zeroes them).
+#[allow(clippy::too_many_arguments)]
+pub fn unpack_y_to_z_pruned_win<T: Real>(
+    buf: &[Complex<T>],
+    h_loc: usize,
+    ny2: usize,
+    nz_glob: usize,
+    z0: usize,
+    z1: usize,
+    xa: usize,
+    xb: usize,
+    keep_own: &[bool],
+    out: &mut [Complex<T>],
+) {
+    let w = z1 - z0;
+    debug_assert_eq!(keep_own.len(), h_loc * ny2);
+    debug_assert!(xa <= xb && xb <= h_loc);
+    debug_assert_eq!(out.len(), h_loc * ny2 * nz_glob);
+    let mut off = 0;
+    for x in xa..xb {
+        for y in 0..ny2 {
+            if !keep_own[x * ny2 + y] {
+                continue;
+            }
+            let dst_base = (x * ny2 + y) * nz_glob + z0;
+            out[dst_base..dst_base + w].copy_from_slice(&buf[off..off + w]);
+            off += w;
+        }
+    }
+    debug_assert_eq!(off, buf.len());
+}
+
+/// Pruned backward Z→Y pack: contiguous retained z-runs out of the
+/// Z-pencil, same (x, then y) order as the forward unpack.
+#[allow(clippy::too_many_arguments)]
+pub fn pack_z_to_y_pruned_win<T: Real>(
+    input: &[Complex<T>],
+    h_loc: usize,
+    ny2: usize,
+    nz_glob: usize,
+    z0: usize,
+    z1: usize,
+    xa: usize,
+    xb: usize,
+    keep_own: &[bool],
+    out: &mut [Complex<T>],
+) {
+    let w = z1 - z0;
+    debug_assert_eq!(input.len(), h_loc * ny2 * nz_glob);
+    debug_assert_eq!(keep_own.len(), h_loc * ny2);
+    debug_assert!(xa <= xb && xb <= h_loc);
+    let mut off = 0;
+    for x in xa..xb {
+        for y in 0..ny2 {
+            if !keep_own[x * ny2 + y] {
+                continue;
+            }
+            let src_base = (x * ny2 + y) * nz_glob + z0;
+            out[off..off + w].copy_from_slice(&input[src_base..src_base + w]);
+            off += w;
+        }
+    }
+    debug_assert_eq!(off, out.len());
+}
+
+/// Pruned backward Z→Y unpack: scatter the dense retained stream back
+/// into the Y-pencil. Pruned (x, y) slots are untouched (pre-zeroed by
+/// the stage).
+#[allow(clippy::too_many_arguments)]
+pub fn unpack_z_to_y_pruned_win<T: Real>(
+    buf: &[Complex<T>],
+    nz: usize,
+    h_loc: usize,
+    ny_glob: usize,
+    y0: usize,
+    y1: usize,
+    xa: usize,
+    xb: usize,
+    keep: &[bool],
+    out: &mut [Complex<T>],
+) {
+    debug_assert_eq!(keep.len(), h_loc * ny_glob);
+    debug_assert_eq!(out.len(), nz * h_loc * ny_glob);
+    let mut off = 0;
+    for x in xa..xb {
+        for y in y0..y1 {
+            if !keep[x * ny_glob + y] {
+                continue;
+            }
+            for z in 0..nz {
+                out[(z * h_loc + x) * ny_glob + y] = buf[off + z];
+            }
+            off += nz;
+        }
+    }
+    debug_assert_eq!(off, buf.len());
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -619,6 +831,161 @@ mod tests {
         let mut back = vec![Complex::zero(); ny * h];
         unpack_y_to_x(&buf, nz, ny, h, 0, h, &mut back);
         assert_eq!(input, back);
+    }
+
+    #[test]
+    fn pruned_x_to_y_lands_prefix_rows_only() {
+        let (nz, h_loc, ny) = (3, 5, 4);
+        let x_lines = 2; // retained prefix of the local x rows
+        // Wire buffer for z-planes [1, 3): [z][x][y] with x_lines rows.
+        let (za, zb) = (1usize, 3usize);
+        let mut buf = vec![Complex::zero(); (zb - za) * x_lines * ny];
+        for z in za..zb {
+            for x in 0..x_lines {
+                for y in 0..ny {
+                    buf[((z - za) * x_lines + x) * ny + y] = enc(x, y, z);
+                }
+            }
+        }
+        let mut out = vec![Complex::zero(); nz * h_loc * ny];
+        unpack_x_to_y_pruned_win(&buf, nz, x_lines, h_loc, ny, 0, ny, za, zb, &mut out);
+        for z in 0..nz {
+            for x in 0..h_loc {
+                for y in 0..ny {
+                    let got = out[(z * h_loc + x) * ny + y];
+                    if (za..zb).contains(&z) && x < x_lines {
+                        assert_eq!(got, enc(x, y, z));
+                    } else {
+                        assert_eq!(got, Complex::zero());
+                    }
+                }
+            }
+        }
+        // Backward mirror: pack the prefix rows back out and compare to
+        // the wire buffer.
+        let mut repacked = vec![Complex::zero(); buf.len()];
+        pack_y_to_x_pruned_win(&out, nz, x_lines, h_loc, ny, 0, ny, za, zb, &mut repacked);
+        assert_eq!(buf, repacked);
+    }
+
+    #[test]
+    fn pruned_y_to_z_ships_only_kept_pairs_in_order() {
+        let (nz, h_loc, ny) = (4, 3, 6);
+        let mut ypen = vec![Complex::zero(); nz * h_loc * ny];
+        for z in 0..nz {
+            for x in 0..h_loc {
+                for y in 0..ny {
+                    ypen[(z * h_loc + x) * ny + y] = enc(x, y, z);
+                }
+            }
+        }
+        // An irregular keep mask over the full (x, y) grid.
+        let mut keep = vec![false; h_loc * ny];
+        for x in 0..h_loc {
+            for y in 0..ny {
+                keep[x * ny + y] = (x + y) % 3 != 1;
+            }
+        }
+        let (y0, y1) = (1, 5);
+        let kept: Vec<(usize, usize)> = (0..h_loc)
+            .flat_map(|x| (y0..y1).map(move |y| (x, y)))
+            .filter(|&(x, y)| keep[x * ny + y])
+            .collect();
+        let mut buf = vec![Complex::zero(); kept.len() * nz];
+        pack_y_to_z_pruned_win(&ypen, nz, h_loc, ny, y0, y1, 0, h_loc, &keep, &mut buf);
+        // Dense stream in ascending (x, y) order, z-runs contiguous.
+        for (i, &(x, y)) in kept.iter().enumerate() {
+            for z in 0..nz {
+                assert_eq!(buf[i * nz + z], enc(x, y, z));
+            }
+        }
+        // Receiver: ny2 = y1 - y0, z range = the whole sender nz; its
+        // keep_own mask is the same mask windowed to [y0, y1).
+        let ny2 = y1 - y0;
+        let mut keep_own = vec![false; h_loc * ny2];
+        for x in 0..h_loc {
+            for yl in 0..ny2 {
+                keep_own[x * ny2 + yl] = keep[x * ny + y0 + yl];
+            }
+        }
+        let mut zpen = vec![Complex::zero(); h_loc * ny2 * nz];
+        unpack_y_to_z_pruned_win(&buf, h_loc, ny2, nz, 0, nz, 0, h_loc, &keep_own, &mut zpen);
+        for x in 0..h_loc {
+            for yl in 0..ny2 {
+                for z in 0..nz {
+                    let got = zpen[(x * ny2 + yl) * nz + z];
+                    if keep_own[x * ny2 + yl] {
+                        assert_eq!(got, enc(x, y0 + yl, z));
+                    } else {
+                        assert_eq!(got, Complex::zero());
+                    }
+                }
+            }
+        }
+        // Backward mirrors: Z→Y pack reproduces the wire stream; Z→Y
+        // unpack scatters it back onto the retained Y-pencil slots.
+        let mut bwd_buf = vec![Complex::zero(); buf.len()];
+        pack_z_to_y_pruned_win(&zpen, h_loc, ny2, nz, 0, nz, 0, h_loc, &keep_own, &mut bwd_buf);
+        assert_eq!(buf, bwd_buf);
+        let mut yback = vec![Complex::zero(); nz * h_loc * ny];
+        unpack_z_to_y_pruned_win(&bwd_buf, nz, h_loc, ny, y0, y1, 0, h_loc, &keep, &mut yback);
+        for z in 0..nz {
+            for x in 0..h_loc {
+                for y in 0..ny {
+                    let got = yback[(z * h_loc + x) * ny + y];
+                    if (y0..y1).contains(&y) && keep[x * ny + y] {
+                        assert_eq!(got, enc(x, y, z));
+                    } else {
+                        assert_eq!(got, Complex::zero());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pruned_y_to_z_x_windows_partition_the_full_pack() {
+        let (nz, h_loc, ny) = (3, 5, 4);
+        let mut ypen = vec![Complex::zero(); nz * h_loc * ny];
+        for z in 0..nz {
+            for x in 0..h_loc {
+                for y in 0..ny {
+                    ypen[(z * h_loc + x) * ny + y] = enc(x, y, z);
+                }
+            }
+        }
+        let mut keep = vec![false; h_loc * ny];
+        for (i, k) in keep.iter_mut().enumerate() {
+            *k = i % 4 != 2;
+        }
+        let (y0, y1) = (0, ny);
+        let count = |xa: usize, xb: usize| -> usize {
+            (xa..xb)
+                .flat_map(|x| (y0..y1).map(move |y| (x, y)))
+                .filter(|&(x, y)| keep[x * ny + y])
+                .count()
+        };
+        let mut full = vec![Complex::zero(); count(0, h_loc) * nz];
+        pack_y_to_z_pruned_win(&ypen, nz, h_loc, ny, y0, y1, 0, h_loc, &keep, &mut full);
+        let mut chunked = vec![Complex::zero(); full.len()];
+        let mut base = 0;
+        for (xa, xb) in [(0usize, 2usize), (2, 3), (3, 5)] {
+            let len = count(xa, xb) * nz;
+            pack_y_to_z_pruned_win(
+                &ypen,
+                nz,
+                h_loc,
+                ny,
+                y0,
+                y1,
+                xa,
+                xb,
+                &keep,
+                &mut chunked[base..base + len],
+            );
+            base += len;
+        }
+        assert_eq!(full, chunked);
     }
 }
 

@@ -70,6 +70,14 @@ pub struct TuneOptions {
     /// on-node whenever a feasible `m1 <= cores_per_node` grid exists.
     /// `None` (default) keeps the exact legacy single-level scoring.
     pub cores_per_node: Option<usize>,
+    /// Price candidates for a *truncated* (pruned) run: the exchanges
+    /// ship only retained modes, so each wire term is scaled by its
+    /// retained fraction ([`crate::grid::PruneRule`]) before pipelining.
+    /// This lets the tuner score `(m1, m2)` × truncation jointly — a
+    /// pruned Y→Z exchange shifts the aspect-ratio optimum toward taller
+    /// grids. `None` (default) prices the full-grid transform and is
+    /// bit-identical to the pre-truncation tuner.
+    pub truncation: Option<crate::grid::Truncation>,
     /// Refine this many of the model's top candidates with short real
     /// pipeline runs (0 = model-only, fully deterministic).
     pub refine_top_k: usize,
@@ -89,6 +97,7 @@ impl Default for TuneOptions {
             pin_use_even: None,
             pin_overlap_chunks: None,
             cores_per_node: None,
+            truncation: None,
             refine_top_k: 0,
             refine_iters: 1,
             seed: 0x5EED_CAFE,
@@ -134,16 +143,20 @@ pub fn autotune(dims: [usize; 3], nprocs: usize, opts: &TuneOptions) -> Result<T
     let nodes = opts.cores_per_node.map(|c| {
         crate::mpi::NodeMap::new(nprocs, c.max(1), crate::mpi::PlacementPolicy::Contiguous)
     });
+    // (1.0, 1.0) for a full-grid run, so the untruncated ranking is
+    // bit-identical to the pre-truncation tuner.
+    let keep = score::keep_fractions(dims, opts.truncation);
     let mut entries: Vec<TuneEntry> = cands
         .into_iter()
         .map(|cand| match &nodes {
             Some(nm) => {
-                let t = score::model_seconds_two_level(
+                let t = score::model_seconds_pruned_two_level(
                     dims,
                     &cand,
                     &opts.profile,
                     opts.elem_bytes,
                     nm,
+                    keep,
                 );
                 TuneEntry {
                     cand,
@@ -155,7 +168,13 @@ pub fn autotune(dims: [usize; 3], nprocs: usize, opts: &TuneOptions) -> Result<T
             }
             None => TuneEntry {
                 cand,
-                model_s: score::model_seconds(dims, &cand, &opts.profile, opts.elem_bytes),
+                model_s: score::model_seconds_pruned(
+                    dims,
+                    &cand,
+                    &opts.profile,
+                    opts.elem_bytes,
+                    keep,
+                ),
                 measured_s: None,
                 row_intra: None,
                 col_intra: None,
@@ -309,6 +328,33 @@ mod tests {
         // Legacy path stays placement-free.
         let legacy = autotune([256, 256, 256], 16, &TuneOptions::default()).unwrap();
         assert!(legacy.entries.iter().all(|e| e.row_intra.is_none()));
+    }
+
+    #[test]
+    fn truncation_scoring_lowers_every_candidate_score() {
+        let base = TuneOptions {
+            explore_use_even: false,
+            explore_overlap: false,
+            ..TuneOptions::default()
+        };
+        let full = autotune([64, 64, 64], 8, &base).unwrap();
+        let pruned = autotune(
+            [64, 64, 64],
+            8,
+            &TuneOptions { truncation: Some(crate::grid::Truncation::Spherical23), ..base },
+        )
+        .unwrap();
+        assert_eq!(full.entries.len(), pruned.entries.len());
+        // Same candidate set; every feasible grid at P=8 has wire traffic
+        // on at least one axis, so pruning strictly lowers every score.
+        for e in &pruned.entries {
+            let f = full
+                .entries
+                .iter()
+                .find(|x| x.cand == e.cand)
+                .expect("candidate sets must match");
+            assert!(e.model_s < f.model_s, "{:?}: {} !< {}", e.cand, e.model_s, f.model_s);
+        }
     }
 
     #[test]

@@ -1,10 +1,45 @@
 //! Model scoring: price one candidate with the Eq.-3 machine model.
 
+use crate::grid::{PruneRule, Truncation};
 use crate::mpi::NodeMap;
-use crate::netmodel::{predict_overlapped, predict_two_level, ModelInput, TopoPrediction};
+use crate::netmodel::{
+    predict_pruned_overlapped, predict_pruned_two_level, ModelInput, TopoPrediction,
+};
 
 use super::candidates::Candidate;
 use super::profile::MachineProfile;
+
+/// `(row_keep, col_keep)` wire fractions for a truncated run of `dims`:
+/// the share of each exchange's full-grid volume that still crosses the
+/// wire once pruned packing ships only retained modes. `None` is the
+/// full-grid transform, `(1.0, 1.0)`.
+pub fn keep_fractions(dims: [usize; 3], truncation: Option<Truncation>) -> (f64, f64) {
+    match truncation {
+        Some(t) => {
+            let r = PruneRule::new(dims, t);
+            (r.row_fraction(), r.col_fraction())
+        }
+        None => (1.0, 1.0),
+    }
+}
+
+fn input_of(
+    dims: [usize; 3],
+    cand: &Candidate,
+    profile: &MachineProfile,
+    elem_bytes: f64,
+) -> ModelInput {
+    ModelInput {
+        nx: dims[0],
+        ny: dims[1],
+        nz: dims[2],
+        m1: cand.m1,
+        m2: cand.m2,
+        elem_bytes,
+        use_even: cand.use_even,
+        machine: profile.machine.clone(),
+    }
+}
 
 /// Predicted seconds for one forward transform of `dims` under `cand` on
 /// `profile`'s machine. `overlap_chunks = 1` reproduces the blocking
@@ -17,17 +52,22 @@ pub fn model_seconds(
     profile: &MachineProfile,
     elem_bytes: f64,
 ) -> f64 {
-    let input = ModelInput {
-        nx: dims[0],
-        ny: dims[1],
-        nz: dims[2],
-        m1: cand.m1,
-        m2: cand.m2,
-        elem_bytes,
-        use_even: cand.use_even,
-        machine: profile.machine.clone(),
-    };
-    predict_overlapped(&input, cand.overlap_chunks)
+    model_seconds_pruned(dims, cand, profile, elem_bytes, (1.0, 1.0))
+}
+
+/// [`model_seconds`] with pruned-volume wire pricing: each exchange term
+/// is scaled by its [`keep_fractions`] share before pipelining. `keep =
+/// (1.0, 1.0)` reproduces [`model_seconds`] bit for bit, so the untruncated
+/// tuner ranking is unchanged.
+pub fn model_seconds_pruned(
+    dims: [usize; 3],
+    cand: &Candidate,
+    profile: &MachineProfile,
+    elem_bytes: f64,
+    keep: (f64, f64),
+) -> f64 {
+    let input = input_of(dims, cand, profile, elem_bytes);
+    predict_pruned_overlapped(&input, cand.overlap_chunks, keep.0, keep.1)
 }
 
 /// Price one candidate under an explicit node map, with the
@@ -42,17 +82,21 @@ pub fn model_seconds_two_level(
     elem_bytes: f64,
     nodes: &NodeMap,
 ) -> TopoPrediction {
-    let input = ModelInput {
-        nx: dims[0],
-        ny: dims[1],
-        nz: dims[2],
-        m1: cand.m1,
-        m2: cand.m2,
-        elem_bytes,
-        use_even: cand.use_even,
-        machine: profile.machine.clone(),
-    };
-    predict_two_level(&input, cand.overlap_chunks, nodes)
+    model_seconds_pruned_two_level(dims, cand, profile, elem_bytes, nodes, (1.0, 1.0))
+}
+
+/// [`model_seconds_two_level`] with pruned-volume wire pricing (see
+/// [`model_seconds_pruned`]).
+pub fn model_seconds_pruned_two_level(
+    dims: [usize; 3],
+    cand: &Candidate,
+    profile: &MachineProfile,
+    elem_bytes: f64,
+    nodes: &NodeMap,
+    keep: (f64, f64),
+) -> TopoPrediction {
+    let input = input_of(dims, cand, profile, elem_bytes);
+    predict_pruned_two_level(&input, cand.overlap_chunks, nodes, keep.0, keep.1)
 }
 
 #[cfg(test)]
@@ -81,6 +125,23 @@ mod tests {
         };
         let total = predict(&input).total();
         assert!((s - total).abs() < 1e-12 * total);
+    }
+
+    #[test]
+    fn pruned_keep_fractions_and_scoring() {
+        // 2/3-rule sphere on a cube keeps ~2/3 of the x prefix and ~1/3
+        // of (kx, ky) pairs — both wire terms shrink, nothing else moves.
+        let dims = [64, 64, 64];
+        let (r, c) = keep_fractions(dims, Some(Truncation::Spherical23));
+        assert!(r > 0.6 && r < 0.7, "row keep {r}");
+        assert!(c > 0.2 && c < 0.4, "col keep {c}");
+        assert_eq!(keep_fractions(dims, None), (1.0, 1.0));
+
+        let profile = MachineProfile::synthetic(Machine::cray_xt5());
+        let cd = cand(4, 8, false, 1);
+        let full = model_seconds(dims, &cd, &profile, 16.0);
+        assert_eq!(model_seconds_pruned(dims, &cd, &profile, 16.0, (1.0, 1.0)), full);
+        assert!(model_seconds_pruned(dims, &cd, &profile, 16.0, (r, c)) < full);
     }
 
     #[test]

@@ -5,6 +5,7 @@
 pub mod error;
 pub mod prng;
 pub mod quickprop;
+pub mod spectrum;
 pub mod stats;
 pub mod timer;
 

@@ -1,0 +1,104 @@
+//! Spectrum post-processing shared by the example programs: rank-0
+//! assembly of a distributed Z-pencil spectrum, and the conjugate-
+//! symmetry-weighted shell sum a pseudospectral energy spectrum needs.
+//!
+//! Both helpers follow the library's STRIDE1 Z-pencil convention: the
+//! local spectrum is `[h_loc][ny2_loc][nz]` (z fastest) at the pencil's
+//! global offsets, with the packed R2C x-axis holding only `kx >= 0`.
+
+use crate::fft::{Complex, Real};
+use crate::grid::Decomp;
+use crate::mpi::Comm;
+
+/// Signed wavenumber of FFT bin `i` on an axis of length `n`.
+fn wavenumber(i: usize, n: usize) -> f64 {
+    if i <= n / 2 {
+        i as f64
+    } else {
+        i as f64 - n as f64
+    }
+}
+
+/// Gather every rank's Z-pencil spectrum onto rank 0 of `world` and
+/// assemble the global packed-axis grid, indexed `[kx][ky][kz]` with
+/// extents `[nx/2 + 1][ny][nz]`. Returns `None` on every other rank.
+/// Geometry comes from `decomp` (ranks gather in world order, which is
+/// the decomposition's rank convention), so no in-band headers travel
+/// with the data.
+pub fn gather_spectrum<T: Real>(
+    world: &Comm,
+    decomp: &Decomp,
+    local: &[Complex<T>],
+) -> Option<Vec<Complex<T>>> {
+    let parts = world.gatherv(local, 0)?;
+    let h = decomp.nx / 2 + 1;
+    let (ny, nz) = (decomp.ny, decomp.nz);
+    let mut global = vec![Complex::<T>::zero(); h * ny * nz];
+    for (rank, part) in parts.iter().enumerate() {
+        let zp = decomp.z_pencil(rank);
+        let [d0, d1, d2] = zp.dims;
+        let [o0, o1, _] = zp.offsets;
+        for a in 0..d0 {
+            for b in 0..d1 {
+                for c in 0..d2 {
+                    global[((a + o0) * ny + (b + o1)) * nz + c] =
+                        part[(a * d1 + b) * d2 + c];
+                }
+            }
+        }
+    }
+    Some(global)
+}
+
+/// This rank's contribution to the shell-summed kinetic-energy spectrum
+/// of one velocity component: for every local mode,
+/// `shells[round(|k|)] += ½ · w · |ĉ|² / N²` with `N = nx·ny·nz` the
+/// unnormalized-transform scaling and `w` the conjugate-symmetry weight
+/// of the packed kx axis (1 on the self-conjugate `kx = 0` / Nyquist
+/// bins, 2 elsewhere — each packed mode stands for itself and its
+/// reflection). Sum the returned vector across ranks (and field
+/// components) to get `E(k)`; its length is `max(n)/2 + 1` shells.
+pub fn shell_energy<T: Real>(decomp: &Decomp, rank: usize, fhat: &[Complex<T>]) -> Vec<f64> {
+    let (nx, ny, nz) = (decomp.nx, decomp.ny, decomp.nz);
+    let zp = decomp.z_pencil(rank);
+    let norm = (nx * ny * nz) as f64;
+    let mut shells = vec![0.0f64; nx.max(ny).max(nz) / 2 + 1];
+    for xl in 0..zp.dims[0] {
+        let kxi = xl + zp.offsets[0];
+        let kx = wavenumber(kxi, nx);
+        let w = if kxi == 0 || (nx % 2 == 0 && kxi == nx / 2) { 1.0 } else { 2.0 };
+        for yl in 0..zp.dims[1] {
+            let ky = wavenumber(yl + zp.offsets[1], ny);
+            for z in 0..zp.dims[2] {
+                let kz = wavenumber(z, nz);
+                let shell = (kx * kx + ky * ky + kz * kz).sqrt().round() as usize;
+                if shell < shells.len() {
+                    let c = fhat[(xl * zp.dims[1] + yl) * zp.dims[2] + z];
+                    let e = c.norm_sqr().to_f64().unwrap_or(0.0);
+                    shells[shell] += 0.5 * w * e / (norm * norm);
+                }
+            }
+        }
+    }
+    shells
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::ProcGrid;
+
+    #[test]
+    fn shell_energy_places_single_mode() {
+        // One rank, 8^3: a unit amplitude at (kx, ky, kz) = (1, 2, 2)
+        // lands in shell round(3) = 3 with conjugate weight 2.
+        let d = Decomp::new(8, 8, 8, ProcGrid::new(1, 1)).unwrap();
+        let zp = d.z_pencil(0);
+        let mut fhat = vec![Complex::<f64>::zero(); zp.len()];
+        fhat[(1 * zp.dims[1] + 2) * zp.dims[2] + 2] = Complex::new(512.0, 0.0);
+        let shells = shell_energy(&d, 0, &fhat);
+        let expect = 0.5 * 2.0 * (512.0f64 * 512.0) / (512.0f64 * 512.0);
+        assert!((shells[3] - expect).abs() < 1e-12, "{shells:?}");
+        assert_eq!(shells.iter().sum::<f64>(), shells[3]);
+    }
+}

@@ -1,0 +1,280 @@
+//! Pruned-transform integration tests: truncated plans must be
+//! *bit-identical* to the full-grid plan on every retained mode — the
+//! same FFT arithmetic runs on the same lines; only the wire format and
+//! the zero-filled destination slots change — across overlap chunking,
+//! node topology, uneven grids, and both precisions. The fused convolve
+//! entry point must reproduce the unfused forward/forward/product/
+//! backward sequence, and the pruned exchange counts must sum to the
+//! retained-mode totals on both sides of each transpose.
+
+use p3dfft::coordinator::{run_on_threads, run_on_threads_with, PlanSpec};
+use p3dfft::fft::Complex;
+use p3dfft::grid::{Decomp, ProcGrid};
+use p3dfft::transpose::{TransposeXY, TransposeYZ};
+use p3dfft::util::quickprop::{check, Config};
+use p3dfft::util::SplitMix64;
+use p3dfft::{PruneRule, Truncation};
+
+/// Deterministic pseudo-random field of the global coordinates, so the
+/// full and truncated runs transform bit-identical inputs.
+fn field64(x: usize, y: usize, z: usize) -> f64 {
+    let h = (x.wrapping_mul(73_856_093) ^ y.wrapping_mul(19_349_663) ^ z.wrapping_mul(83_492_791))
+        as u32;
+    h as f64 / u32::MAX as f64 - 0.5
+}
+
+/// Forward-transform `field64` on every rank of `spec`; outputs in rank
+/// order.
+fn forward_outputs(spec: &PlanSpec) -> Vec<Vec<Complex<f64>>> {
+    run_on_threads(spec, |ctx| {
+        let input = ctx.make_real_input(field64);
+        let mut out = ctx.alloc_output();
+        ctx.forward(&input, &mut out)?;
+        Ok(out)
+    })
+    .unwrap()
+    .per_rank
+}
+
+/// Retained modes must match the full-grid spectrum bit for bit; pruned
+/// slots must be exact zeros.
+fn assert_retained_bits_match(
+    dims: [usize; 3],
+    pgrid: ProcGrid,
+    rule: &PruneRule,
+    full: &[Vec<Complex<f64>>],
+    pruned: &[Vec<Complex<f64>>],
+    label: &str,
+) {
+    let d = Decomp::new(dims[0], dims[1], dims[2], pgrid).unwrap();
+    for r in 0..d.p() {
+        let zp = d.z_pencil(r);
+        for xl in 0..zp.dims[0] {
+            let kx = xl + zp.offsets[0];
+            for yl in 0..zp.dims[1] {
+                let y = yl + zp.offsets[1];
+                for z in 0..zp.dims[2] {
+                    let i = (xl * zp.dims[1] + yl) * zp.dims[2] + z;
+                    let (f, p) = (full[r][i], pruned[r][i]);
+                    if rule.keep_pair(kx, y) && rule.keep_z(z) {
+                        assert!(
+                            f.re.to_bits() == p.re.to_bits() && f.im.to_bits() == p.im.to_bits(),
+                            "{label}: retained mode (kx={kx}, ky_bin={y}, kz_bin={z}) \
+                             on rank {r} differs: full {f:?} vs pruned {p:?}"
+                        );
+                    } else {
+                        assert!(
+                            p.re == 0.0 && p.im == 0.0,
+                            "{label}: pruned slot (kx={kx}, ky_bin={y}, kz_bin={z}) \
+                             on rank {r} is nonzero: {p:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn retained_modes_bit_identical_across_chunks_topology_and_grids() {
+    let cases: [([usize; 3], ProcGrid, Truncation); 3] = [
+        ([32, 32, 32], ProcGrid::new(2, 2), Truncation::Spherical23),
+        ([10, 12, 14], ProcGrid::new(2, 3), Truncation::Spherical23),
+        ([16, 12, 10], ProcGrid::new(2, 2), Truncation::LowPass { keep: [3, 2, 4] }),
+    ];
+    for (dims, pgrid, trunc) in cases {
+        let rule = PruneRule::new(dims, trunc);
+        for chunks in [1usize, 4] {
+            for cores in [None, Some(pgrid.p() / 2)] {
+                let base = PlanSpec::new(dims, pgrid)
+                    .unwrap()
+                    .with_overlap_chunks(chunks)
+                    .unwrap()
+                    .with_cores_per_node(cores)
+                    .unwrap();
+                let full = forward_outputs(&base);
+                let pruned = forward_outputs(&base.clone().with_truncation(trunc));
+                let label = format!("{dims:?} {trunc:?} chunks={chunks} cores={cores:?}");
+                assert_retained_bits_match(dims, pgrid, &rule, &full, &pruned, &label);
+            }
+        }
+    }
+}
+
+#[test]
+fn retained_modes_bit_identical_f32() {
+    let dims = [32, 32, 32];
+    let pgrid = ProcGrid::new(2, 2);
+    let trunc = Truncation::Spherical23;
+    let rule = PruneRule::new(dims, trunc);
+    let run = |spec: &PlanSpec| {
+        run_on_threads_with::<f32, Vec<Complex<f32>>>(spec, |ctx| {
+            let input = ctx.make_real_input(|x, y, z| field64(x, y, z) as f32);
+            let mut out = ctx.alloc_output();
+            ctx.forward(&input, &mut out)?;
+            Ok(out)
+        })
+        .unwrap()
+        .per_rank
+    };
+    let base = PlanSpec::new(dims, pgrid).unwrap();
+    let full = run(&base);
+    let pruned = run(&base.clone().with_truncation(trunc));
+    let d = Decomp::new(dims[0], dims[1], dims[2], pgrid).unwrap();
+    for r in 0..d.p() {
+        let zp = d.z_pencil(r);
+        for xl in 0..zp.dims[0] {
+            for yl in 0..zp.dims[1] {
+                for z in 0..zp.dims[2] {
+                    let (kx, y) = (xl + zp.offsets[0], yl + zp.offsets[1]);
+                    let i = (xl * zp.dims[1] + yl) * zp.dims[2] + z;
+                    let (f, p) = (full[r][i], pruned[r][i]);
+                    if rule.keep_pair(kx, y) && rule.keep_z(z) {
+                        assert!(
+                            f.re.to_bits() == p.re.to_bits() && f.im.to_bits() == p.im.to_bits(),
+                            "f32 retained mode (kx={kx}, y={y}, z={z}) rank {r}: {f:?} vs {p:?}"
+                        );
+                    } else {
+                        assert!(p.re == 0.0 && p.im == 0.0, "f32 pruned slot nonzero: {p:?}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_convolve_matches_unfused_sequence() {
+    let n = 12usize;
+    let spec = PlanSpec::new([n, n, n], ProcGrid::new(2, 2)).unwrap();
+    let report = run_on_threads(&spec, |ctx| {
+        let f = ctx.make_real_input(field64);
+        let g = ctx.make_real_input(|x, y, z| field64(x + 5, y + 3, z + 1));
+        let mut fused = ctx.alloc_input();
+        ctx.convolve(&f, &g, &mut fused)?;
+        // Unfused reference: two forwards, pointwise product in
+        // Z-pencils, one backward (two extra interior transposes).
+        let mut fh = ctx.alloc_output();
+        let mut gh = ctx.alloc_output();
+        ctx.forward(&f, &mut fh)?;
+        ctx.forward(&g, &mut gh)?;
+        let ph: Vec<Complex<f64>> = fh.iter().zip(&gh).map(|(a, b)| *a * *b).collect();
+        let mut unfused = ctx.alloc_input();
+        ctx.backward(&ph, &mut unfused)?;
+        let mut maxd = 0.0f64;
+        let mut maxv = 0.0f64;
+        for (a, b) in fused.iter().zip(&unfused) {
+            maxd = maxd.max((a - b).abs());
+            maxv = maxv.max(b.abs());
+        }
+        Ok((ctx.max_over_ranks(maxd), ctx.max_over_ranks(maxv)))
+    })
+    .unwrap();
+    let (maxd, maxv) = report.per_rank[0];
+    assert!(maxv > 0.0, "degenerate reference");
+    assert!(
+        maxd <= 1e-12 * maxv,
+        "fused convolve deviates from unfused sequence: max diff {maxd} at scale {maxv}"
+    );
+}
+
+/// Random (grid, truncation) case for the exchange-count property.
+fn rand_case(rng: &mut SplitMix64) -> Option<(Decomp, PruneRule)> {
+    let nx = 2 * rng.next_range(2, 10) as usize; // even, 4..20
+    let ny = rng.next_range(3, 14) as usize;
+    let nz = rng.next_range(3, 14) as usize;
+    let m1 = rng.next_range(1, 3) as usize;
+    let m2 = rng.next_range(1, 3) as usize;
+    let d = Decomp::new(nx, ny, nz, ProcGrid::new(m1, m2)).ok()?;
+    let t = if rng.next_u64() % 2 == 0 {
+        Truncation::Spherical23
+    } else {
+        Truncation::LowPass {
+            keep: [
+                rng.next_range(0, (nx / 2) as u64) as usize,
+                rng.next_range(0, ny as u64) as usize,
+                rng.next_range(0, nz as u64) as usize,
+            ],
+        }
+    };
+    Some((d, PruneRule::new([nx, ny, nz], t)))
+}
+
+#[test]
+fn prop_pruned_exchange_counts_sum_to_retained_totals() {
+    check(&Config { cases: 48, base_seed: 0x9D }, "pruned exchange counts", |rng| {
+        let (d, rule) = match rand_case(rng) {
+            Some(c) => c,
+            None => return Ok(()),
+        };
+        let (m1, m2) = (d.pgrid.m1, d.pgrid.m2);
+
+        // X→Y: the wire clamps the spectral-x axis to its retained prefix.
+        let mut xy_total = 0usize;
+        for r in 0..d.p() {
+            let t = TransposeXY::new(&d, r).with_kx_keep(rule.kx_keep());
+            let send: usize = (0..m1).map(|j| t.scount_fwd(j)).sum();
+            let recv: usize = (0..m1).map(|j| t.rcount_fwd(j)).sum();
+            // Sender side: retained modes of my own spectral X-pencil.
+            let xp = d.x_pencil_spec(r);
+            let want_send = xp.dims[0] * xp.dims[1] * rule.kx_keep();
+            if send != want_send {
+                return Err(format!("XY send {send} != retained {want_send} (rank {r})"));
+            }
+            // Receiver side: my Y-pencil's retained x rows times full y.
+            let yp = d.y_pencil(r);
+            let keep_rows = (0..yp.dims[1]).filter(|&x| rule.keep_x(yp.offsets[1] + x)).count();
+            let want_recv = yp.dims[0] * keep_rows * d.ny;
+            if recv != want_recv {
+                return Err(format!("XY recv {recv} != retained {want_recv} (rank {r})"));
+            }
+            xy_total += send;
+        }
+        let want = d.nz * d.ny * rule.kx_keep();
+        if xy_total != want {
+            return Err(format!("XY global send {xy_total} != retained grid {want}"));
+        }
+
+        // Y→Z: the wire masks transverse (kx, ky) pairs.
+        let mut yz_total = 0usize;
+        for r in 0..d.p() {
+            let yp = d.y_pencil(r);
+            let t = TransposeYZ::new(&d, r).with_prune(&rule, yp.offsets[1]);
+            let send: usize = (0..m2).map(|j| t.scount_fwd(j)).sum();
+            let recv: usize = (0..m2).map(|j| t.rcount_fwd(j)).sum();
+            // Sender side: retained pairs of my x block × my z slab.
+            let pairs_block: usize = (0..yp.dims[1])
+                .map(|x| (0..d.ny).filter(|&y| rule.keep_pair(yp.offsets[1] + x, y)).count())
+                .sum();
+            if send != pairs_block * yp.dims[0] {
+                return Err(format!(
+                    "YZ send {send} != retained {} (rank {r})",
+                    pairs_block * yp.dims[0]
+                ));
+            }
+            // Receiver side: my Z-pencil's retained pairs × full z.
+            let zp = d.z_pencil(r);
+            let pairs_own: usize = (0..zp.dims[0])
+                .map(|xl| {
+                    (0..zp.dims[1])
+                        .filter(|&yl| rule.keep_pair(xl + zp.offsets[0], yl + zp.offsets[1]))
+                        .count()
+                })
+                .sum();
+            if recv != pairs_own * d.nz {
+                return Err(format!(
+                    "YZ recv {recv} != retained {} (rank {r})",
+                    pairs_own * d.nz
+                ));
+            }
+            yz_total += send;
+        }
+        // Columns partition the x axis, so the global send total is the
+        // full retained transverse set times nz.
+        let want = rule.retained_pairs() * d.nz;
+        if yz_total != want {
+            return Err(format!("YZ global send {yz_total} != retained set {want}"));
+        }
+        Ok(())
+    });
+}
