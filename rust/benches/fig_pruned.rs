@@ -79,7 +79,7 @@ fn main() {
     // ---- fused convolution vs unfused sequence ----------------------------
     let cdims = if quick { [32, 32, 32] } else { [64, 64, 64] };
     let cspec = PlanSpec::new(cdims, ProcGrid::new(2, 2)).unwrap();
-    let mut probe = RankPlan::<f64>::new(&cspec, 0, Engine::Native).unwrap();
+    let probe = RankPlan::<f64>::new(&cspec, 0, Engine::Native).unwrap();
     let transposes = |d: &str| {
         d.split(" -> ").filter(|s| s.starts_with("xy-") || s.starts_with("yz-")).count()
     };

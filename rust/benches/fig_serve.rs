@@ -1,0 +1,128 @@
+//! Transform-as-a-service benchmark: plan-cache and request-coalescing
+//! wins over the dedicated-plan baseline.
+//!
+//! Two figures:
+//! * cold plan build vs cache-hit acquire — a hit is a lookup plus an
+//!   `Arc` clone and must be >= 10x cheaper than compiling every rank's
+//!   plan (asserted);
+//! * coalesced widths {1, 4, 8} vs serial per-request dispatch — a
+//!   width-8 group runs one rank universe, one tile pass and one
+//!   exchange schedule per stage for all eight requests, and must be
+//!   >= 2x the serial per-field throughput (asserted).
+//!
+//! The serve counters (cache hits/misses/evictions, coalesce-width
+//! histogram, arena traffic, rank-0 pool bytes) ride along in the JSON
+//! rows. `--quick` / `P3DFFT_BENCH_QUICK=1` shrinks the grid for the CI
+//! bench-smoke job; `P3DFFT_BENCH_JSON=PATH` appends the tables.
+
+use std::time::Instant;
+
+use p3dfft::bench::{emit_json, quick_mode, FigureRow, Table};
+use p3dfft::coordinator::PlanSpec;
+use p3dfft::grid::ProcGrid;
+use p3dfft::serve::{TransformService, MAX_COALESCE};
+
+fn field(spec: &PlanSpec, seed: usize) -> Vec<f64> {
+    let n = spec.nx * spec.ny * spec.nz;
+    (0..n).map(|i| ((i * 31 + seed * 17 + 5) % 97) as f64 / 13.0 - 3.0).collect()
+}
+
+fn main() {
+    let quick = quick_mode();
+    let dims = if quick { [32, 32, 32] } else { [64, 64, 64] };
+    let spec = PlanSpec::new(dims, ProcGrid::new(2, 2)).unwrap();
+    let svc = TransformService::with_defaults();
+
+    // ---- plan cache: cold build vs hit ------------------------------------
+    let t0 = Instant::now();
+    let cached = svc.acquire::<f64>(&spec).unwrap();
+    let cold_s = t0.elapsed().as_secs_f64();
+    let hit_iters = 200;
+    let t0 = Instant::now();
+    for _ in 0..hit_iters {
+        svc.acquire::<f64>(&spec).unwrap();
+    }
+    let hit_s = t0.elapsed().as_secs_f64() / hit_iters as f64;
+    let cache_ratio = cold_s / hit_s.max(1e-12);
+    let pool_bytes = cached.plans[0].memory_report().total_bytes;
+    let mut table = Table::new(format!(
+        "fig_serve (plan cache): {}x{}x{} on 2x2, cold compile vs {hit_iters} hits",
+        dims[0], dims[1], dims[2]
+    ));
+    table.push(FigureRow::new("cache", "cold").col("acquire_s", cold_s));
+    table.push(
+        FigureRow::new("cache", "hit")
+            .col("acquire_s", hit_s)
+            .col("speedup", cache_ratio)
+            .col("rank0_pool_bytes", pool_bytes as f64),
+    );
+    print!("{}", table.render());
+    emit_json("fig_serve", &table);
+    assert!(
+        cache_ratio >= 10.0,
+        "cache hit must be >= 10x cheaper than a cold plan build \
+         (cold {cold_s:.6}s vs hit {hit_s:.9}s = {cache_ratio:.1}x)"
+    );
+
+    // ---- request coalescing: widths {1, 4, 8} vs serial dispatch ----------
+    let fields: Vec<Vec<f64>> = (0..MAX_COALESCE).map(|s| field(&spec, s)).collect();
+    let refs: Vec<&[f64]> = fields.iter().map(|v| v.as_slice()).collect();
+    // Warm the arena and pin correctness once before timing.
+    let warm = svc.forward_batch(&spec, &refs).unwrap();
+    let check = svc.forward(&spec, &fields[0]).unwrap();
+    assert_eq!(warm[0], check, "coalesced output must match serial bit for bit");
+
+    let reps = if quick { 2 } else { 5 };
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        for f in &fields {
+            svc.forward(&spec, f).unwrap();
+        }
+    }
+    let serial_per_field = t0.elapsed().as_secs_f64() / (reps * fields.len()) as f64;
+
+    let mut table = Table::new(format!(
+        "fig_serve (coalescing): {}x{}x{} on 2x2, {reps} reps, vs serial \
+         {serial_per_field:.6}s/field",
+        dims[0], dims[1], dims[2]
+    ));
+    let mut width8_per_field = f64::INFINITY;
+    for w in [1usize, 4, 8] {
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            svc.forward_batch(&spec, &refs[..w]).unwrap();
+        }
+        let per_field = t0.elapsed().as_secs_f64() / (reps * w) as f64;
+        if w == 8 {
+            width8_per_field = per_field;
+        }
+        table.push(
+            FigureRow::new("coalesce", format!("w={w}"))
+                .col("per_field_s", per_field)
+                .col("speedup_vs_serial", serial_per_field / per_field.max(1e-12)),
+        );
+    }
+    let stats = svc.stats();
+    table.push(
+        FigureRow::new("serve_stats", "counters")
+            .col("cache_hits", stats.cache_hits as f64)
+            .col("cache_misses", stats.cache_misses as f64)
+            .col("cache_evictions", stats.cache_evictions as f64)
+            .col("groups_w1", stats.widths[0] as f64)
+            .col("groups_w4", stats.widths[3] as f64)
+            .col("groups_w8", stats.widths[7] as f64)
+            .col("arena_leases", stats.arena.leases as f64)
+            .col("arena_reuses", stats.arena.reuses as f64)
+            .col("arena_held_bytes", stats.arena.held_bytes as f64),
+    );
+    print!("{}", table.render());
+    emit_json("fig_serve", &table);
+    println!("serve stats:\n{}", stats.render());
+    let coalesce_ratio = serial_per_field / width8_per_field.max(1e-12);
+    assert!(
+        coalesce_ratio >= 2.0,
+        "width-8 coalescing must be >= 2x serial per-field throughput \
+         (serial {serial_per_field:.6}s vs coalesced {width8_per_field:.6}s \
+         = {coalesce_ratio:.2}x)"
+    );
+}

@@ -56,7 +56,7 @@ fn main() {
                 // Warmup.
                 ctx.forward(&input, &mut out)?;
                 ctx.backward(&out, &mut back)?;
-                ctx.plan.timer.reset();
+                ctx.state.timer.reset();
                 let t0 = std::time::Instant::now();
                 let mut worst = 0.0f64;
                 for _ in 0..iterations {

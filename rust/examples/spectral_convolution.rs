@@ -43,7 +43,7 @@ fn main() -> anyhow::Result<()> {
 
     // The fused chain must save exactly two transpose stages over the
     // unfused forward + forward + product + backward sequence.
-    let mut probe = RankPlan::<f64>::new(&spec, 0, Engine::Native)?;
+    let probe = RankPlan::<f64>::new(&spec, 0, Engine::Native)?;
     let transposes = |d: &str| {
         d.split(" -> ").filter(|s| s.starts_with("xy-") || s.starts_with("yz-")).count()
     };

@@ -87,6 +87,14 @@ pub struct RunConfig {
     /// modes; with `pgrid = "auto"` the tuner prices that reduced wire
     /// volume.
     pub truncation: Option<Truncation>,
+    /// LRU plan-cache capacity of the transform service
+    /// (`service.plan_cache_entries`), in interned (spec, precision)
+    /// entries. `0` is rejected, matching the `overlap_chunks`
+    /// convention.
+    pub plan_cache_entries: usize,
+    /// Soft byte cap on the transform service's shared buffer arena
+    /// (`service.arena_bytes`). `0` is rejected.
+    pub arena_bytes: usize,
 }
 
 impl Default for RunConfig {
@@ -105,6 +113,8 @@ impl Default for RunConfig {
             precision: "f64".into(),
             cores_per_node: None,
             truncation: None,
+            plan_cache_entries: 16,
+            arena_bytes: 256 << 20,
         }
     }
 }
@@ -218,6 +228,26 @@ impl RunConfig {
             })?;
             rc.truncation = parse_truncation(s)?;
         }
+        if let Some(v) = c.get("service.plan_cache_entries") {
+            rc.plan_cache_entries = match v.as_int() {
+                Some(n) if n >= 1 => n as usize,
+                _ => {
+                    return Err(Error::InvalidConfig(
+                        "service.plan_cache_entries must be an int >= 1".into(),
+                    ))
+                }
+            };
+        }
+        if let Some(v) = c.get("service.arena_bytes") {
+            rc.arena_bytes = match v.as_int() {
+                Some(n) if n >= 1 => n as usize,
+                _ => {
+                    return Err(Error::InvalidConfig(
+                        "service.arena_bytes must be an int >= 1".into(),
+                    ))
+                }
+            };
+        }
         if let Some(v) = c.get("topology.cores_per_node") {
             rc.cores_per_node = match (v.as_int(), v.as_str()) {
                 (Some(n), _) if n >= 1 => Some(n as usize),
@@ -256,6 +286,8 @@ impl RunConfig {
             "options.precision" => self.precision = tmp.precision,
             "options.truncation" => self.truncation = tmp.truncation,
             "topology.cores_per_node" => self.cores_per_node = tmp.cores_per_node,
+            "service.plan_cache_entries" => self.plan_cache_entries = tmp.plan_cache_entries,
+            "service.arena_bytes" => self.arena_bytes = tmp.arena_bytes,
             other => {
                 return Err(Error::InvalidConfig(format!("unknown config key {other:?}")));
             }
@@ -296,6 +328,16 @@ impl RunConfig {
             8.0
         } else {
             16.0
+        }
+    }
+
+    /// The transform-service knobs as a [`crate::serve::ServiceConfig`]
+    /// (poison mode still comes from `P3DFFT_POISON`).
+    pub fn service_config(&self) -> crate::serve::ServiceConfig {
+        crate::serve::ServiceConfig {
+            plan_cache_entries: self.plan_cache_entries,
+            arena_bytes: self.arena_bytes,
+            ..crate::serve::ServiceConfig::default()
         }
     }
 
@@ -502,6 +544,34 @@ precision = "f32"
         assert_eq!(rc.truncation, Some(Truncation::Spherical23));
         rc.apply_override("options.truncation", "none").unwrap();
         assert_eq!(rc.truncation, None);
+    }
+
+    #[test]
+    fn service_keys_parse_and_validate() {
+        let rc = RunConfig::default();
+        assert_eq!(rc.plan_cache_entries, 16);
+        assert_eq!(rc.arena_bytes, 256 << 20);
+
+        let c = ParsedConfig::parse("[service]\nplan_cache_entries = 4\narena_bytes = 1024\n")
+            .unwrap();
+        let rc = RunConfig::from_parsed(&c).unwrap();
+        assert_eq!(rc.plan_cache_entries, 4);
+        assert_eq!(rc.arena_bytes, 1024);
+        let sc = rc.service_config();
+        assert_eq!(sc.plan_cache_entries, 4);
+        assert_eq!(sc.arena_bytes, 1024);
+
+        // 0 is rejected like options.overlap_chunks, not clamped.
+        for bad in ["plan_cache_entries = 0", "arena_bytes = 0", "plan_cache_entries = auto"] {
+            let c = ParsedConfig::parse(&format!("[service]\n{bad}\n")).unwrap();
+            assert!(RunConfig::from_parsed(&c).is_err(), "{bad:?} must be rejected");
+        }
+
+        let mut rc = RunConfig::default();
+        rc.apply_override("service.plan_cache_entries", "2").unwrap();
+        rc.apply_override("service.arena_bytes", "4096").unwrap();
+        assert_eq!(rc.plan_cache_entries, 2);
+        assert_eq!(rc.arena_bytes, 4096);
     }
 
     #[test]

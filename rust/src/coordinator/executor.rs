@@ -8,17 +8,19 @@ use crate::mpi::{Comm, Hierarchy, PlacementPolicy, Universe};
 use crate::util::error::Result;
 use crate::util::timer::{Stage, StageTimer};
 
-use super::plan::{Engine, PjrtExec, RankPlan};
+use super::plan::{Engine, ExecState, PjrtExec, RankPlan};
 use super::metrics::RunReport;
 use super::spec::PlanSpec;
 
 /// Everything one rank needs inside the user closure: its communicators,
-/// its compiled plan, and input/output helpers.
+/// its compiled (shared, immutable) plan, the per-rank execution state,
+/// and input/output helpers.
 pub struct RankContext<T: Real + PjrtExec> {
     pub world: Comm,
     pub row: Comm,
     pub col: Comm,
-    pub plan: RankPlan<T>,
+    pub plan: Arc<RankPlan<T>>,
+    pub state: ExecState<T>,
 }
 
 impl<T: Real + PjrtExec> RankContext<T> {
@@ -58,22 +60,22 @@ impl<T: Real + PjrtExec> RankContext<T> {
     pub fn forward(&mut self, input: &[T], output: &mut [Complex<T>]) -> Result<()> {
         let row = self.row.clone();
         let col = self.col.clone();
-        self.plan.forward(&row, &col, input, output)
+        self.plan.forward_with(&mut self.state, &row, &col, input, output)
     }
 
     /// Backward transform (C2R; unnormalised).
     pub fn backward(&mut self, input: &[Complex<T>], output: &mut [T]) -> Result<()> {
         let row = self.row.clone();
         let col = self.col.clone();
-        self.plan.backward(&row, &col, input, output)
+        self.plan.backward_with(&mut self.state, &row, &col, input, output)
     }
 
     /// Fused spectral convolution of two real X-pencil fields (see
-    /// [`RankPlan::convolve`]; unnormalised).
+    /// [`RankPlan::convolve_with`]; unnormalised).
     pub fn convolve(&mut self, a: &[T], b: &[T], out: &mut [T]) -> Result<()> {
         let row = self.row.clone();
         let col = self.col.clone();
-        self.plan.convolve(&row, &col, a, b, out)
+        self.plan.convolve_with(&mut self.state, &row, &col, a, b, out)
     }
 
     /// Max of `x` across all ranks (timing reduction helper).
@@ -124,16 +126,17 @@ where
     let t0 = std::time::Instant::now();
     let results = universe.run(move |world| {
         let (row, col) = world.cart_2d(spec.pgrid)?;
-        let plan = RankPlan::<T>::new(&spec, world.rank(), engine.clone())?;
-        let mut ctx = RankContext { world, row, col, plan };
+        let plan = Arc::new(RankPlan::<T>::new(&spec, world.rank(), engine.clone())?);
+        let state = plan.make_state();
+        let mut ctx = RankContext { world, row, col, plan, state };
         let r = f(&mut ctx)?;
         // Fold the fabric's modeled inter-node link time for this rank's
         // sends into the timer (its own bucket, excluded from totals).
         let link_s = ctx.world.fabric().link_seconds_by(ctx.world.world_rank());
         if link_s > 0.0 {
-            ctx.plan.timer.add(Stage::Link, link_s);
+            ctx.state.timer.add(Stage::Link, link_s);
         }
-        Ok((r, ctx.plan.timer.clone()))
+        Ok((r, ctx.state.timer.clone()))
     })?;
     let wall = t0.elapsed().as_secs_f64();
     let mut timer = StageTimer::new();

@@ -32,5 +32,5 @@ pub mod spec;
 
 pub use executor::{run_on_threads, run_on_threads_with, RankContext};
 pub use metrics::RunReport;
-pub use plan::{Engine, Pipeline, RankPlan};
+pub use plan::{Engine, ExecState, MemoryReport, Pipeline, PoolLayout, RankPlan};
 pub use spec::{EngineKind, Options, PlanSpec, TransformKind};

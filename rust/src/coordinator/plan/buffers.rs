@@ -21,8 +21,11 @@ use crate::fft::{Complex, Real};
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SlotId(usize);
 
-/// Compile-time buffer plan: named slots with max-merged lengths.
-#[derive(Debug, Default)]
+/// Compile-time buffer plan: named slots with max-merged lengths. Also
+/// the *lease descriptor* of the serve layer's size-class arena
+/// ([`crate::serve::Arena`]): a plan keeps its layout and each request
+/// context builds (or leases) a pool from it.
+#[derive(Debug, Default, Clone)]
 pub struct PoolLayout {
     slots: Vec<(&'static str, usize)>,
 }
@@ -52,6 +55,11 @@ impl PoolLayout {
     /// Total elements the built pool will hold (arena footprint).
     pub fn total_len(&self) -> usize {
         self.slots.iter().map(|(_, l)| *l).sum()
+    }
+
+    /// The named slots, in registration order: `(name, elements)`.
+    pub fn slots(&self) -> impl Iterator<Item = (&'static str, usize)> + '_ {
+        self.slots.iter().copied()
     }
 }
 
@@ -92,6 +100,27 @@ impl<T: Real> BufferPool<T> {
 
     pub fn slot_count(&self) -> usize {
         self.bufs.len()
+    }
+
+    /// Assemble a pool from pre-leased buffers (the arena path). Each
+    /// buffer must already be sized to its slot's layout length; the
+    /// caller (the arena) owns (re)initialisation semantics.
+    pub fn from_buffers(layout: &PoolLayout, bufs: Vec<Vec<Complex<T>>>) -> Self {
+        debug_assert_eq!(bufs.len(), layout.slot_count());
+        debug_assert!(layout.slots().zip(bufs.iter()).all(|((_, len), b)| b.len() == len));
+        BufferPool {
+            bufs: bufs.into_iter().map(Some).collect(),
+            names: layout.slots().map(|(n, _)| n).collect(),
+        }
+    }
+
+    /// Drain every present buffer out of the pool (slot order), leaving
+    /// the pool empty. Used when returning leased slabs to the arena. A
+    /// slot that is still taken (a stage errored mid-run) is skipped —
+    /// its slab is leaked rather than double-freed, and this runs from
+    /// `ExecState::drop` where panicking could abort.
+    pub fn drain_buffers(&mut self) -> Vec<Vec<Complex<T>>> {
+        self.bufs.iter_mut().filter_map(|b| b.take()).collect()
     }
 }
 

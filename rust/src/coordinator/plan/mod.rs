@@ -29,12 +29,13 @@ pub mod buffers;
 pub mod pipeline;
 pub mod stages;
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::fft::{Complex, Real};
 use crate::grid::Decomp;
 use crate::mpi::Comm;
 use crate::runtime::StageLibrary;
+use crate::serve::Arena;
 use crate::util::error::{Error, Result};
 use crate::util::timer::StageTimer;
 
@@ -167,8 +168,11 @@ impl PjrtExec for f32 {
     }
 }
 
-/// One rank's plan: geometry, the compiled forward/backward stage graphs,
-/// and the shared buffer pool.
+/// One rank's plan: geometry and the compiled forward/backward stage
+/// graphs. **Immutable once built** — execution state (pooled buffers,
+/// PJRT marshalling planes, timers) lives in a per-caller [`ExecState`],
+/// so one plan can be shared across threads behind an `Arc` (the serve
+/// layer's plan cache does exactly that).
 pub struct RankPlan<T: Real + PjrtExec> {
     pub spec: PlanSpec,
     pub rank: usize,
@@ -176,18 +180,74 @@ pub struct RankPlan<T: Real + PjrtExec> {
     engine: Engine,
     fwd: Pipeline<T>,
     bwd: Pipeline<T>,
+    /// Lease descriptor for the shared buffer pool; each [`ExecState`]
+    /// builds (or arena-leases) its own pool from this.
+    layout: PoolLayout,
+    /// The fused convolution pipeline with its own buffer layout (both
+    /// operands need live pencils at every station), compiled lazily
+    /// under a mutex on the first [`Self::convolve_with`] /
+    /// [`Self::describe_convolve`] call so plans that never convolve pay
+    /// nothing — and so the lazy init stays `&self`.
+    convolve: Mutex<Option<Arc<(Pipeline<T>, PoolLayout)>>>,
+}
+
+/// Per-caller execution state for a shared [`RankPlan`]: the pooled
+/// buffers, real/plane scratch, and the per-stage timer. Build one with
+/// [`RankPlan::make_state`] (owned allocation) or
+/// [`RankPlan::make_state_in`] (slabs leased from a serve-layer arena,
+/// returned on drop).
+pub struct ExecState<T: Real> {
     pool: BufferPool<T>,
-    /// The fused convolution pipeline with its own buffer pool (both
-    /// operands need live pencils at every station), compiled lazily on
-    /// the first [`Self::convolve`] / [`Self::describe_convolve`] call so
-    /// plans that never convolve pay nothing.
-    convolve: Option<(Pipeline<T>, BufferPool<T>)>,
+    /// Pool for the convolve pipeline, built lazily on first convolve.
+    convolve_pool: Option<BufferPool<T>>,
     real_scratch: Vec<T>,
     // Plane buffers for the PJRT engine (split/merge of interleaved data).
     plane_re: Vec<T>,
     plane_im: Vec<T>,
-    /// Per-stage wall-clock accounting for this rank.
+    /// Per-stage wall-clock accounting for this caller.
     pub timer: StageTimer,
+    /// When leased from an arena, slabs go back there on drop.
+    arena: Option<Arc<Arena>>,
+}
+
+impl<T: Real> Drop for ExecState<T> {
+    fn drop(&mut self) {
+        if let Some(arena) = self.arena.take() {
+            arena.reclaim_pool(&mut self.pool);
+            if let Some(mut cp) = self.convolve_pool.take() {
+                arena.reclaim_pool(&mut cp);
+            }
+        }
+    }
+}
+
+/// Byte-level footprint of a plan's pooled buffers (one row per
+/// [`PoolLayout`] slot, registration order).
+#[derive(Debug, Clone)]
+pub struct MemoryReport {
+    pub precision: &'static str,
+    /// Bytes per pooled element (`size_of::<Complex<T>>()`).
+    pub elem_bytes: usize,
+    /// `(slot name, elements, bytes)`.
+    pub slots: Vec<(&'static str, usize, usize)>,
+    pub total_bytes: usize,
+}
+
+impl std::fmt::Display for MemoryReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "pool footprint ({}, {} B/elem): {} slots, {} B total",
+            self.precision,
+            self.elem_bytes,
+            self.slots.len(),
+            self.total_bytes
+        )?;
+        for (name, elems, bytes) in &self.slots {
+            writeln!(f, "  {name:<10} {elems:>12} elems {bytes:>14} B")?;
+        }
+        Ok(())
+    }
 }
 
 impl<T: Real + PjrtExec> RankPlan<T> {
@@ -201,7 +261,7 @@ impl<T: Real + PjrtExec> RankPlan<T> {
                 decomp.p()
             )));
         }
-        let (fwd, bwd, pool) = pipeline::compile::<T>(spec, &decomp, rank, &engine)?;
+        let (fwd, bwd, layout) = pipeline::compile::<T>(spec, &decomp, rank, &engine)?;
         Ok(RankPlan {
             spec: spec.clone(),
             rank,
@@ -209,13 +269,56 @@ impl<T: Real + PjrtExec> RankPlan<T> {
             engine,
             fwd,
             bwd,
-            pool,
-            convolve: None,
-            real_scratch: vec![T::zero(); spec.nz.max(spec.nx)],
-            plane_re: Vec::new(),
-            plane_im: Vec::new(),
-            timer: StageTimer::new(),
+            layout,
+            convolve: Mutex::new(None),
         })
+    }
+
+    /// The buffer layout this plan's execution states are built from.
+    pub fn layout(&self) -> &PoolLayout {
+        &self.layout
+    }
+
+    /// Bytes per pooled slot, from the compiled [`PoolLayout`].
+    pub fn memory_report(&self) -> MemoryReport {
+        let elem_bytes = std::mem::size_of::<Complex<T>>();
+        let slots: Vec<_> =
+            self.layout.slots().map(|(n, l)| (n, l, l * elem_bytes)).collect();
+        let total_bytes = slots.iter().map(|&(_, _, b)| b).sum();
+        MemoryReport { precision: T::DTYPE, elem_bytes, slots, total_bytes }
+    }
+
+    fn state_parts(&self) -> (Vec<T>, Vec<T>, Vec<T>) {
+        (vec![T::zero(); self.spec.nz.max(self.spec.nx)], Vec::new(), Vec::new())
+    }
+
+    /// Build an owned execution state (zero-initialised pool).
+    pub fn make_state(&self) -> ExecState<T> {
+        let (real_scratch, plane_re, plane_im) = self.state_parts();
+        ExecState {
+            pool: BufferPool::build(&self.layout),
+            convolve_pool: None,
+            real_scratch,
+            plane_re,
+            plane_im,
+            timer: StageTimer::new(),
+            arena: None,
+        }
+    }
+
+    /// Build an execution state whose pool slabs are leased from `arena`
+    /// (returned there when the state drops).
+    pub fn make_state_in(&self, arena: &Arc<Arena>) -> ExecState<T> {
+        let (real_scratch, plane_re, plane_im) = self.state_parts();
+        ExecState {
+            pool: arena.lease_pool(&self.layout),
+            convolve_pool: None,
+            real_scratch,
+            plane_re,
+            plane_im,
+            timer: StageTimer::new(),
+            arena: Some(arena.clone()),
+        }
     }
 
     /// Length of this rank's real input (X-pencil).
@@ -252,9 +355,11 @@ impl<T: Real + PjrtExec> RankPlan<T> {
     }
 
     /// Forward R2C transform: `input` X-pencil (real, len `input_len`) →
-    /// `output` Z-pencil (complex, len `output_len`).
-    pub fn forward(
-        &mut self,
+    /// `output` Z-pencil (complex, len `output_len`). The plan itself is
+    /// untouched; all mutation happens in `state`.
+    pub fn forward_with(
+        &self,
+        state: &mut ExecState<T>,
         row: &Comm,
         col: &Comm,
         input: &[T],
@@ -278,24 +383,25 @@ impl<T: Real + PjrtExec> RankPlan<T> {
             row,
             col,
             engine: &self.engine,
-            pool: &mut self.pool,
-            real_scratch: &mut self.real_scratch,
-            plane_re: &mut self.plane_re,
-            plane_im: &mut self.plane_im,
+            pool: &mut state.pool,
+            real_scratch: &mut state.real_scratch,
+            plane_re: &mut state.plane_re,
+            plane_im: &mut state.plane_im,
             real_in: Some(input),
             real_in_b: None,
             real_out: None,
             cplx_in: None,
             cplx_out: Some(output),
-            timer: &mut self.timer,
+            timer: &mut state.timer,
         };
         self.fwd.run(&mut ctx)
     }
 
     /// Backward C2R transform: `input` Z-pencil → `output` X-pencil (real).
     /// Unnormalised; divide by [`Self::normalization`] to invert exactly.
-    pub fn backward(
-        &mut self,
+    pub fn backward_with(
+        &self,
+        state: &mut ExecState<T>,
         row: &Comm,
         col: &Comm,
         input: &[Complex<T>],
@@ -319,38 +425,39 @@ impl<T: Real + PjrtExec> RankPlan<T> {
             row,
             col,
             engine: &self.engine,
-            pool: &mut self.pool,
-            real_scratch: &mut self.real_scratch,
-            plane_re: &mut self.plane_re,
-            plane_im: &mut self.plane_im,
+            pool: &mut state.pool,
+            real_scratch: &mut state.real_scratch,
+            plane_re: &mut state.plane_re,
+            plane_im: &mut state.plane_im,
             real_in: None,
             real_in_b: None,
             real_out: Some(output),
             cplx_in: Some(input),
             cplx_out: None,
-            timer: &mut self.timer,
+            timer: &mut state.timer,
         };
         self.bwd.run(&mut ctx)
     }
 
-    /// Lazily compile the fused convolution pipeline.
-    fn ensure_convolve(&mut self) -> Result<()> {
-        if self.convolve.is_none() {
-            self.convolve = Some(pipeline::compile_convolve::<T>(
+    /// Lazily compile the fused convolution pipeline (shared across all
+    /// execution states of this plan).
+    fn convolve_pipeline(&self) -> Result<Arc<(Pipeline<T>, PoolLayout)>> {
+        let mut guard = self.convolve.lock().expect("convolve lock poisoned");
+        if guard.is_none() {
+            *guard = Some(Arc::new(pipeline::compile_convolve::<T>(
                 &self.spec,
                 &self.decomp,
                 self.rank,
                 &self.engine,
-            )?);
+            )?));
         }
-        Ok(())
+        Ok(guard.as_ref().expect("just compiled").clone())
     }
 
     /// The fused convolution stage order (compiles the pipeline on first
     /// use; diagnostics).
-    pub fn describe_convolve(&mut self) -> Result<String> {
-        self.ensure_convolve()?;
-        Ok(self.convolve.as_ref().expect("just compiled").0.describe())
+    pub fn describe_convolve(&self) -> Result<String> {
+        Ok(self.convolve_pipeline()?.0.describe())
     }
 
     /// Fused spectral convolution: `out = F⁻¹(F(a) ⊙ F(b))`, all three
@@ -365,8 +472,9 @@ impl<T: Real + PjrtExec> RankPlan<T> {
     /// backward(product) through the caller would run 6. With
     /// `options.truncation` set, pruned modes of the product are exact
     /// zeros — the convolution comes out dealiased.
-    pub fn convolve(
-        &mut self,
+    pub fn convolve_with(
+        &self,
+        state: &mut ExecState<T>,
         row: &Comm,
         col: &Comm,
         a: &[T],
@@ -394,24 +502,30 @@ impl<T: Real + PjrtExec> RankPlan<T> {
                 what: "convolve output (X-pencil)",
             });
         }
-        self.ensure_convolve()?;
-        let (pipe, pool) = self.convolve.as_mut().expect("just compiled");
+        let conv = self.convolve_pipeline()?;
+        if state.convolve_pool.is_none() {
+            state.convolve_pool = Some(match &state.arena {
+                Some(arena) => arena.lease_pool(&conv.1),
+                None => BufferPool::build(&conv.1),
+            });
+        }
+        let pool = state.convolve_pool.as_mut().expect("just built");
         let mut ctx = StageCtx {
             row,
             col,
             engine: &self.engine,
             pool,
-            real_scratch: &mut self.real_scratch,
-            plane_re: &mut self.plane_re,
-            plane_im: &mut self.plane_im,
+            real_scratch: &mut state.real_scratch,
+            plane_re: &mut state.plane_re,
+            plane_im: &mut state.plane_im,
             real_in: Some(a),
             real_in_b: Some(b),
             real_out: Some(out),
             cplx_in: None,
             cplx_out: None,
-            timer: &mut self.timer,
+            timer: &mut state.timer,
         };
-        pipe.run(&mut ctx)
+        conv.0.run(&mut ctx)
     }
 }
 
@@ -503,12 +617,32 @@ mod tests {
         let spec2 = spec.clone();
         let r = u.run(move |c| {
             let (row, col) = c.cart_2d(spec2.pgrid)?;
-            let mut plan = RankPlan::<f64>::new(&spec2, 0, Engine::Native)?;
+            let plan = RankPlan::<f64>::new(&spec2, 0, Engine::Native)?;
+            let mut state = plan.make_state();
             let bad_in = vec![0.0f64; 3];
             let mut out = vec![Complex::zero(); plan.output_len()];
-            let e = plan.forward(&row, &col, &bad_in, &mut out).unwrap_err();
+            let e = plan.forward_with(&mut state, &row, &col, &bad_in, &mut out).unwrap_err();
             Ok(matches!(e, Error::BadShape { .. }))
         });
         assert!(r.unwrap()[0]);
+    }
+
+    #[test]
+    fn rank_plan_is_shareable_and_reports_memory() {
+        use crate::grid::ProcGrid;
+        fn assert_send_sync<S: Send + Sync>(_: &S) {}
+        let spec = PlanSpec::new([8, 8, 8], ProcGrid::new(2, 2)).unwrap();
+        let plan = Arc::new(RankPlan::<f64>::new(&spec, 0, Engine::Native).unwrap());
+        assert_send_sync(&plan);
+        let report = plan.memory_report();
+        assert_eq!(report.precision, "f64");
+        assert_eq!(report.elem_bytes, 16);
+        assert_eq!(report.slots.len(), plan.layout().slot_count());
+        assert_eq!(
+            report.total_bytes,
+            plan.layout().total_len() * 16,
+            "report totals the layout exactly"
+        );
+        assert!(report.to_string().contains("scratch"));
     }
 }

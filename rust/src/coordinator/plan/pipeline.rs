@@ -1,6 +1,9 @@
 //! Pipeline compilation: a [`crate::coordinator::PlanSpec`] becomes two
 //! ordered stage lists (forward and backward) over one shared,
-//! size-deduplicated [`BufferPool`].
+//! size-deduplicated [`PoolLayout`]. The layout is a *descriptor*: each
+//! execution context builds its own [`super::BufferPool`] from it (or
+//! leases one from the serve layer's arena), so the compiled pipelines
+//! stay immutable and shareable across threads.
 //!
 //! Compilation decides, once, everything the hot path must not re-decide:
 //! layout mode (STRIDE1 vs XYZ), engine validity, whether the chunked
@@ -14,7 +17,7 @@ use crate::grid::{Decomp, PruneRule};
 use crate::transpose::{ExchangeOptions, TransposeXY, TransposeYZ};
 use crate::util::error::{Error, Result};
 
-use super::buffers::{BufferPool, PoolLayout};
+use super::buffers::PoolLayout;
 use super::stages::{
     C2rStage, PipelineStage, R2cPairStage, R2cStage, StageCtx, ThirdOp, XyBwdStage, XyBwdXyzStage,
     XyFwdPairStage, XyFwdStage, XyFwdXyzStage, YzBwdStage, YzBwdXyzStage, YzFwdPairStage,
@@ -87,13 +90,13 @@ impl<T: Real + PjrtExec> Pipeline<T> {
 }
 
 /// Compile `spec` for `rank` into (forward pipeline, backward pipeline,
-/// buffer pool).
+/// buffer layout).
 pub fn compile<T: Real + PjrtExec>(
     spec: &PlanSpec,
     decomp: &Decomp,
     rank: usize,
     engine: &Engine,
-) -> Result<(Pipeline<T>, Pipeline<T>, BufferPool<T>)> {
+) -> Result<(Pipeline<T>, Pipeline<T>, PoolLayout)> {
     let stride1 = spec.opts.stride1;
     let is_pjrt = matches!(engine, Engine::Pjrt(_));
     if is_pjrt && !stride1 {
@@ -177,7 +180,6 @@ pub fn compile<T: Real + PjrtExec>(
     let recv = layout.request("recv", buf_len);
     let zbuf = layout.request("zbuf", zp.len());
     let scratch = layout.request("scratch", scratch_len);
-    let pool = BufferPool::build(&layout);
 
     // Geometry constants the stages need.
     let zplane = tyz.ny2_loc() * decomp.nz; // stride1 Z-pencil, per x
@@ -289,7 +291,7 @@ pub fn compile<T: Real + PjrtExec>(
     }
     bwd.push(Box::new(C2rStage { plan: c2r, n: spec.nx, xspec, scratch }));
 
-    Ok((Pipeline { stages: fwd }, Pipeline { stages: bwd }, pool))
+    Ok((Pipeline { stages: fwd }, Pipeline { stages: bwd }, layout))
 }
 
 /// Compile the fused spectral-convolution pipeline for `rank`: both real
@@ -306,7 +308,7 @@ pub fn compile_convolve<T: Real + PjrtExec>(
     decomp: &Decomp,
     rank: usize,
     engine: &Engine,
-) -> Result<(Pipeline<T>, BufferPool<T>)> {
+) -> Result<(Pipeline<T>, PoolLayout)> {
     if !spec.opts.stride1 {
         return Err(Error::InvalidConfig("convolve requires the STRIDE1 (ZYX) layout".into()));
     }
@@ -368,7 +370,6 @@ pub fn compile_convolve<T: Real + PjrtExec>(
     let zbuf = layout.request("zbuf", zp.len());
     let zbuf_b = layout.request("zbuf_b", zp.len());
     let scratch = layout.request("scratch", scratch_len);
-    let pool = BufferPool::build(&layout);
 
     let zplane = tyz.ny2_loc() * decomp.nz;
 
@@ -432,7 +433,7 @@ pub fn compile_convolve<T: Real + PjrtExec>(
     }));
     stages.push(Box::new(C2rStage { plan: c2r, n: spec.nx, xspec, scratch }));
 
-    Ok((Pipeline { stages }, pool))
+    Ok((Pipeline { stages }, layout))
 }
 
 #[cfg(test)]
@@ -448,10 +449,10 @@ mod tests {
     fn stride1_pipeline_structure() {
         let s = spec([8, 8, 8], 2, 2);
         let d = s.decomp().unwrap();
-        let (fwd, bwd, pool) = compile::<f64>(&s, &d, 0, &Engine::Native).unwrap();
+        let (fwd, bwd, layout) = compile::<f64>(&s, &d, 0, &Engine::Native).unwrap();
         assert_eq!(fwd.describe(), "x-r2c -> xy-fwd+yfft -> yz-fwd+third");
         assert_eq!(bwd.describe(), "yz-bwd+third -> xy-bwd+yfft -> x-c2r");
-        assert_eq!(pool.slot_count(), 6, "xspec ybuf send recv zbuf scratch");
+        assert_eq!(layout.slot_count(), 6, "xspec ybuf send recv zbuf scratch");
     }
 
     #[test]
@@ -488,14 +489,14 @@ mod tests {
     fn convolve_pipeline_structure() {
         let s = spec([8, 8, 8], 2, 2);
         let d = s.decomp().unwrap();
-        let (conv, pool) = compile_convolve::<f64>(&s, &d, 0, &Engine::Native).unwrap();
+        let (conv, layout) = compile_convolve::<f64>(&s, &d, 0, &Engine::Native).unwrap();
         assert_eq!(
             conv.describe(),
             "x-r2c-pair -> xy-fwd-pair+yfft -> yz-fwd-pair+third -> z-product -> \
              yz-bwd+third -> xy-bwd+yfft -> x-c2r"
         );
         assert_eq!(conv.len(), 7);
-        assert_eq!(pool.slot_count(), 9, "A+B pencils, doubled send/recv, scratch");
+        assert_eq!(layout.slot_count(), 9, "A+B pencils, doubled send/recv, scratch");
         // The whole point of the fusion: 4 transpose stages instead of the
         // 6 that forward(a) + forward(b) + backward(product) would run.
         let n_transpose = |desc: &str| {

@@ -30,7 +30,7 @@ use std::time::Instant;
 
 use crate::fft::{C2cPlan, C2rPlan, Complex, Dct1Plan, Direction, Dst1Plan, R2cPlan, Real};
 use crate::mpi::Comm;
-use crate::transpose::{exchange_v, ChunkPlan, ExchangeOptions, TransposeXY, TransposeYZ};
+use crate::transpose::{ChunkPlan, ExchangeOptions, TransposeXY, TransposeYZ};
 use crate::util::error::{Error, Result};
 use crate::util::timer::{Stage, StageTimer};
 
@@ -63,8 +63,11 @@ pub struct StageCtx<'a, T: Real> {
     pub timer: &'a mut StageTimer,
 }
 
-/// One node of the compiled stage graph.
-pub trait PipelineStage<T: Real + PjrtExec> {
+/// One node of the compiled stage graph. `Send + Sync` is a supertrait
+/// so a compiled [`super::Pipeline`] can live inside an
+/// `Arc<RankPlan>` shared across rank threads and service callers —
+/// every stage is plan geometry plus FFT twiddle tables, all owned data.
+pub trait PipelineStage<T: Real + PjrtExec>: Send + Sync {
     fn name(&self) -> &'static str;
     fn run(&self, ctx: &mut StageCtx<'_, T>) -> Result<()>;
 }
@@ -97,7 +100,11 @@ fn credit_overlap(timer: &mut StageTimer, mark: PostMark) {
 /// z FFT and right before the inverse one — the z axis never crosses a
 /// wire after it is transformed, so z truncation is a local mask, not
 /// a wire format.
-fn mask_z_band<T: Real>(data: &mut [Complex<T>], nz: usize, band: std::ops::Range<usize>) {
+pub(crate) fn mask_z_band<T: Real>(
+    data: &mut [Complex<T>],
+    nz: usize,
+    band: std::ops::Range<usize>,
+) {
     if band.is_empty() {
         return;
     }
@@ -113,7 +120,7 @@ fn mask_z_band<T: Real>(data: &mut [Complex<T>], nz: usize, band: std::ops::Rang
 /// per-line arithmetic regardless of batch composition, so retained
 /// lines match the full-grid plan bit for bit.
 #[allow(clippy::too_many_arguments)]
-fn y_fft_native<T: Real>(
+pub(crate) fn y_fft_native<T: Real>(
     plan: &C2cPlan<T>,
     nz_range: std::ops::Range<usize>,
     h_loc: usize,
@@ -1335,44 +1342,6 @@ impl<T: Real + PjrtExec> PipelineStage<T> for XyBwdXyzStage<T> {
 // happen.
 // ---------------------------------------------------------------------------
 
-/// Doubled-block exchange metadata for the pair stages. `sc`/`rc`/`sd2`/
-/// `rd2` etc. keep the single-field counts next to the doubled layout:
-/// field A of peer `j` occupies `[sd2[j], sd2[j] + sc[j])` of the send
-/// buffer, field B starts at `sd2[j] + s_off[j]` — `even_block` under
-/// USEEVEN (so both halves stay block-aligned inside the padded
-/// `alltoall` slot of `2 · even_block`), the true count otherwise (so the
-/// `alltoallv` payload stays dense).
-struct PairMeta {
-    sc: Vec<usize>,
-    rc: Vec<usize>,
-    sc2: Vec<usize>,
-    sd2: Vec<usize>,
-    rc2: Vec<usize>,
-    rd2: Vec<usize>,
-    s_off: Vec<usize>,
-    r_off: Vec<usize>,
-    even2: Option<usize>,
-}
-
-fn pair_meta(
-    (sc, sd, rc, rd): (Vec<usize>, Vec<usize>, Vec<usize>, Vec<usize>),
-    opts: ExchangeOptions,
-    even_block: usize,
-) -> PairMeta {
-    let p = sc.len();
-    let sc2 = sc.iter().map(|c| 2 * c).collect();
-    let rc2 = rc.iter().map(|c| 2 * c).collect();
-    let sd2 = sd.iter().map(|d| 2 * d).collect();
-    let rd2 = rd.iter().map(|d| 2 * d).collect();
-    let (s_off, r_off) = if opts.use_even {
-        (vec![even_block; p], vec![even_block; p])
-    } else {
-        (sc.clone(), rc.clone())
-    };
-    let even2 = opts.use_even.then(|| 2 * even_block);
-    PairMeta { sc, rc, sc2, sd2, rc2, rd2, s_off, r_off, even2 }
-}
-
 /// Convolve stage 1: batched R2C of BOTH real operands (`real_in`,
 /// `real_in_b`) into `xspec` / `xspec_b`.
 pub struct R2cPairStage<T: Real> {
@@ -1436,34 +1405,20 @@ impl<T: Real + PjrtExec> PipelineStage<T> for XyFwdPairStage<T> {
         let mut send = ctx.pool.take(self.send);
         let mut recv = ctx.pool.take(self.recv);
         let mut scratch = ctx.pool.take(self.scratch);
-        let m = pair_meta(self.txy.meta_fwd(self.opts), self.opts, self.txy.even_block());
+        let m = self.txy.efield_meta_fwd(self.opts, 2);
         ctx.timer.time(Stage::Pack, || {
             for j in 0..self.txy.m1 {
-                self.txy.pack_fwd_win(
-                    &xa,
-                    j,
-                    0,
-                    self.txy.nz,
-                    &mut send[m.sd2[j]..m.sd2[j] + m.sc[j]],
-                );
-                let b0 = m.sd2[j] + m.s_off[j];
-                self.txy.pack_fwd_win(&xb, j, 0, self.txy.nz, &mut send[b0..b0 + m.sc[j]]);
+                self.txy.pack_fwd_win(&xa, j, 0, self.txy.nz, &mut send[m.send_range(j, 0)]);
+                self.txy.pack_fwd_win(&xb, j, 0, self.txy.nz, &mut send[m.send_range(j, 1)]);
             }
         });
         ctx.timer.time(Stage::Exchange, || {
-            exchange_v(ctx.row, &send, &mut recv, &m.sc2, &m.sd2, &m.rc2, &m.rd2, m.even2);
+            m.exchange(ctx.row, &send, &mut recv);
         });
         ctx.timer.time(Stage::Unpack, || {
             for j in 0..self.txy.m1 {
-                self.txy.unpack_fwd_win(
-                    &recv[m.rd2[j]..m.rd2[j] + m.rc[j]],
-                    j,
-                    0,
-                    self.txy.nz,
-                    &mut ya,
-                );
-                let b0 = m.rd2[j] + m.r_off[j];
-                self.txy.unpack_fwd_win(&recv[b0..b0 + m.rc[j]], j, 0, self.txy.nz, &mut yb);
+                self.txy.unpack_fwd_win(&recv[m.recv_range(j, 0)], j, 0, self.txy.nz, &mut ya);
+                self.txy.unpack_fwd_win(&recv[m.recv_range(j, 1)], j, 0, self.txy.nz, &mut yb);
             }
         });
         let hk = self.txy.is_pruned().then(|| self.txy.hk_loc());
@@ -1513,17 +1468,16 @@ impl<T: Real + PjrtExec> PipelineStage<T> for YzFwdPairStage<T> {
         let mut send = ctx.pool.take(self.send);
         let mut recv = ctx.pool.take(self.recv);
         let mut scratch = ctx.pool.take(self.scratch);
-        let m = pair_meta(self.tyz.meta_fwd(self.opts), self.opts, self.tyz.even_block());
+        let m = self.tyz.efield_meta_fwd(self.opts, 2);
         let h = self.tyz.h_loc;
         ctx.timer.time(Stage::Pack, || {
             for j in 0..self.tyz.m2 {
-                self.tyz.pack_fwd_win(&ya, j, 0, h, &mut send[m.sd2[j]..m.sd2[j] + m.sc[j]]);
-                let b0 = m.sd2[j] + m.s_off[j];
-                self.tyz.pack_fwd_win(&yb, j, 0, h, &mut send[b0..b0 + m.sc[j]]);
+                self.tyz.pack_fwd_win(&ya, j, 0, h, &mut send[m.send_range(j, 0)]);
+                self.tyz.pack_fwd_win(&yb, j, 0, h, &mut send[m.send_range(j, 1)]);
             }
         });
         ctx.timer.time(Stage::Exchange, || {
-            exchange_v(ctx.col, &send, &mut recv, &m.sc2, &m.sd2, &m.rc2, &m.rd2, m.even2);
+            m.exchange(ctx.col, &send, &mut recv);
         });
         if self.tyz.is_pruned() {
             ctx.timer.time(Stage::Unpack, || {
@@ -1533,9 +1487,8 @@ impl<T: Real + PjrtExec> PipelineStage<T> for YzFwdPairStage<T> {
         }
         ctx.timer.time(Stage::Unpack, || {
             for j in 0..self.tyz.m2 {
-                self.tyz.unpack_fwd_win(&recv[m.rd2[j]..m.rd2[j] + m.rc[j]], j, 0, h, &mut za);
-                let b0 = m.rd2[j] + m.r_off[j];
-                self.tyz.unpack_fwd_win(&recv[b0..b0 + m.rc[j]], j, 0, h, &mut zb);
+                self.tyz.unpack_fwd_win(&recv[m.recv_range(j, 0)], j, 0, h, &mut za);
+                self.tyz.unpack_fwd_win(&recv[m.recv_range(j, 1)], j, 0, h, &mut zb);
             }
         });
         self.third.apply_native(false, &mut za, &mut scratch, ctx.real_scratch, ctx.timer);

@@ -10,7 +10,7 @@ use crate::util::error::{Error, Result};
 /// Third-dimension transform selection (§3.1: "sine/cosine (Chebyshev)
 /// transforms, as well as an empty transform which allows the user to
 /// substitute a custom transform of their own choice").
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum TransformKind {
     /// Standard Fourier transform in Z.
     Fft,

@@ -40,6 +40,15 @@ const _: () = assert!(
     "CACHE_TILE must be a multiple of TILE_LANES (strided gathers copy whole lane rows per strip)"
 );
 
+/// The lane width `W` of the blocked kernels, as a callable entry point
+/// for layers that size work to it (the serve layer's
+/// [`crate::serve::MAX_COALESCE`] matches the default width of 8, and is
+/// deliberately a fixed constant: `tile-lanes-*` features change
+/// [`TILE_LANES`] but not the service's wire format).
+pub const fn lane_width() -> usize {
+    TILE_LANES
+}
+
 /// Gather [`TILE_LANES`] full contiguous lines of length `n` (line `b0 +
 /// lane` starts at `src[(b0 + lane) * n]`) into the `[n][W]` tile.
 ///

@@ -20,7 +20,7 @@
 use std::ops::Range;
 
 /// Which modes a pruned plan retains.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Truncation {
     /// The turbulence 2/3-dealiasing rule: keep `|k_i| <= n_i/3` on each
     /// axis, intersected with the spherical (elliptical, for anisotropic

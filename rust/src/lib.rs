@@ -48,6 +48,7 @@ pub mod grid;
 pub mod mpi;
 pub mod netmodel;
 pub mod runtime;
+pub mod serve;
 pub mod tile;
 pub mod transpose;
 pub mod tune;

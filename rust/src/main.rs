@@ -61,7 +61,10 @@ fn print_help() {
          USAGE: p3dfft <command> [args]\n\
          \n\
          COMMANDS:\n\
-           run   [--config FILE] [-o key=value ...]   forward+backward loop + verify\n\
+           run   [--config FILE] [-o key=value ...] [--verbose]\n\
+                 \x20                                    forward+backward loop + verify\n\
+                 \x20                                    (--verbose: pool memory report +\n\
+                 \x20                                    transform-service cache/arena stats)\n\
            tune  [--config FILE] [--p P] [--machine host|cray_xt5|ranger]\n\
                  [--refine K] [--top N] [--cores-per-node C]\n\
                  [--truncation none|spherical23|lowpass:CX,CY,CZ]\n\
@@ -81,7 +84,10 @@ fn print_help() {
            options.truncation=\"none|spherical23|lowpass:CX,CY,CZ\" (pruned transforms:\n\
            exchanges ship only retained modes; the tuner prices the reduced volume)\n\
            topology.cores_per_node=C|flat (two-level node map; also via\n\
-           P3DFFT_NODES / P3DFFT_CORES_PER_NODE env; unset = flat fabric)"
+           P3DFFT_NODES / P3DFFT_CORES_PER_NODE env; unset = flat fabric)\n\
+           service.plan_cache_entries=N (>= 1; transform-service LRU plan cache)\n\
+           service.arena_bytes=B (>= 1; shared buffer arena byte cap;\n\
+           P3DFFT_POISON=1 NaN-fills every leased buffer for debugging)"
     );
 }
 
@@ -119,7 +125,9 @@ fn load_config(
 }
 
 fn cmd_run(args: &[String]) -> anyhow::Result<()> {
-    let (rc, _) = load_config(args, &[])?;
+    let verbose = args.iter().any(|a| a == "--verbose");
+    let args: Vec<String> = args.iter().filter(|a| *a != "--verbose").cloned().collect();
+    let (rc, _) = load_config(&args, &[])?;
     let spec = rc.to_spec()?;
     println!(
         "p3dfft run: grid {}x{}x{} on {}x{} = {} ranks, engine={}, third={:?}, \
@@ -178,6 +186,29 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
         return Err(anyhow::anyhow!("roundtrip verification FAILED (err = {err:.3e})"));
     }
     println!("verification OK");
+    if verbose {
+        let plan =
+            p3dfft::coordinator::RankPlan::<f64>::new(&spec, 0, p3dfft::coordinator::Engine::Native)?;
+        print!("rank-0 {}", plan.memory_report());
+        // The transform service runs the native engine + STRIDE1 only;
+        // demonstrate one cached request there when the spec qualifies.
+        if spec.opts.engine == EngineKind::Native && spec.opts.stride1 {
+            let svc = p3dfft::serve::TransformService::new(&rc.service_config())?;
+            let f = sine_field::<f64>(nx, ny, nz);
+            let mut field = vec![0.0f64; nx * ny * nz];
+            for z in 0..nz {
+                for y in 0..ny {
+                    for x in 0..nx {
+                        field[(z * ny + y) * nx + x] = f(x, y, z);
+                    }
+                }
+            }
+            svc.forward(&spec, &field)?;
+            svc.forward(&spec, &field)?; // second request hits the plan cache
+            println!("serve stats (2 requests through the transform service):");
+            println!("{}", svc.stats().render());
+        }
+    }
     Ok(())
 }
 

@@ -1,0 +1,241 @@
+//! Shared size-class buffer arena: leased slabs replace per-plan buffer
+//! allocation on the serve path.
+//!
+//! A [`crate::coordinator::PoolLayout`] describes what a plan needs; the
+//! arena hands out one slab per slot ([`Arena::lease_pool`]) and files
+//! them back into power-of-two size classes when the execution state
+//! drops ([`Arena::reclaim_pool`]). Slabs are keyed by `(element type,
+//! size class)`, so plans of similar footprint — any shape whose slot
+//! rounds to the same power of two — reuse each other's allocations
+//! instead of hitting the allocator per request.
+//!
+//! Every leased slab is re-initialised before use: zero-filled normally,
+//! NaN-filled under poison mode (`P3DFFT_POISON=1` or
+//! `ServiceConfig::poison`). Poison turns any stage that silently relies
+//! on fresh-allocation zeroing into a loud NaN in the output; the
+//! pipeline's pruned paths pre-zero their destinations explicitly, so a
+//! poisoned run must stay bit-identical to a zeroed one.
+
+use std::any::{Any, TypeId};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::plan::{BufferPool, PoolLayout};
+use crate::fft::{Complex, Real};
+
+/// Counter snapshot (see [`Arena::stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Slabs handed out.
+    pub leases: u64,
+    /// Leases served from a free list (no allocation).
+    pub reuses: u64,
+    /// Leases that had to allocate.
+    pub fresh: u64,
+    /// Slabs filed back into a free list.
+    pub returned: u64,
+    /// Slabs dropped at return because the arena was at capacity.
+    pub dropped: u64,
+    /// Bytes currently held in free lists.
+    pub held_bytes: usize,
+}
+
+/// The arena. Thread-safe; the serve layer holds one in an `Arc` shared
+/// by every request.
+pub struct Arena {
+    /// Free lists keyed by `(element TypeId, power-of-two size class)`.
+    /// Slabs are type-erased `Vec<Complex<T>>`s.
+    classes: Mutex<HashMap<(TypeId, usize), Vec<Box<dyn Any + Send>>>>,
+    /// Soft cap on `held_bytes`: returns beyond it drop the slab.
+    capacity_bytes: usize,
+    poison: bool,
+    held_bytes: AtomicUsize,
+    leases: AtomicU64,
+    reuses: AtomicU64,
+    fresh: AtomicU64,
+    returned: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl std::fmt::Debug for Arena {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Arena")
+            .field("capacity_bytes", &self.capacity_bytes)
+            .field("poison", &self.poison)
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+impl Arena {
+    pub fn new(capacity_bytes: usize, poison: bool) -> Self {
+        Arena {
+            classes: Mutex::new(HashMap::new()),
+            capacity_bytes,
+            poison,
+            held_bytes: AtomicUsize::new(0),
+            leases: AtomicU64::new(0),
+            reuses: AtomicU64::new(0),
+            fresh: AtomicU64::new(0),
+            returned: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn poison(&self) -> bool {
+        self.poison
+    }
+
+    pub fn stats(&self) -> ArenaStats {
+        ArenaStats {
+            leases: self.leases.load(Ordering::Relaxed),
+            reuses: self.reuses.load(Ordering::Relaxed),
+            fresh: self.fresh.load(Ordering::Relaxed),
+            returned: self.returned.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
+            held_bytes: self.held_bytes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Lease one slab of `len` elements: reused from the matching size
+    /// class when available, freshly allocated otherwise. Always
+    /// re-initialised (zeros, or NaN under poison).
+    pub fn lease<T: Real>(&self, len: usize) -> Vec<Complex<T>> {
+        self.leases.fetch_add(1, Ordering::Relaxed);
+        let class = len.next_power_of_two().max(1);
+        let slab = self
+            .classes
+            .lock()
+            .expect("arena lock poisoned")
+            .get_mut(&(TypeId::of::<T>(), class))
+            .and_then(|list| list.pop());
+        let fill = if self.poison {
+            let nan = T::from_f64(f64::NAN).expect("NaN representable");
+            Complex::new(nan, nan)
+        } else {
+            Complex::zero()
+        };
+        match slab {
+            Some(any) => {
+                let mut buf = *any
+                    .downcast::<Vec<Complex<T>>>()
+                    .expect("size class keyed by TypeId holds one concrete type");
+                let bytes = buf.capacity() * std::mem::size_of::<Complex<T>>();
+                self.held_bytes.fetch_sub(bytes, Ordering::Relaxed);
+                self.reuses.fetch_add(1, Ordering::Relaxed);
+                buf.clear();
+                buf.resize(len, fill);
+                buf
+            }
+            None => {
+                self.fresh.fetch_add(1, Ordering::Relaxed);
+                // Allocate the full class up front so one slab serves
+                // every length that rounds to this class.
+                let mut buf = Vec::with_capacity(class);
+                buf.resize(len, fill);
+                buf
+            }
+        }
+    }
+
+    /// File a slab back into its size class, or drop it if the arena's
+    /// byte capacity is reached.
+    pub fn give_back<T: Real>(&self, buf: Vec<Complex<T>>) {
+        let bytes = buf.capacity() * std::mem::size_of::<Complex<T>>();
+        if self.held_bytes.load(Ordering::Relaxed) + bytes > self.capacity_bytes {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let class = buf.capacity().next_power_of_two().max(1);
+        self.held_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.returned.fetch_add(1, Ordering::Relaxed);
+        self.classes
+            .lock()
+            .expect("arena lock poisoned")
+            .entry((TypeId::of::<T>(), class))
+            .or_default()
+            .push(Box::new(buf));
+    }
+
+    /// Lease a whole pool: one slab per layout slot.
+    pub fn lease_pool<T: Real>(&self, layout: &PoolLayout) -> BufferPool<T> {
+        let bufs = layout.slots().map(|(_, len)| self.lease::<T>(len)).collect();
+        BufferPool::from_buffers(layout, bufs)
+    }
+
+    /// Return every slab of a leased pool.
+    pub fn reclaim_pool<T: Real>(&self, pool: &mut BufferPool<T>) {
+        for buf in pool.drain_buffers() {
+            self.give_back(buf);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lease_reuses_allocations_within_a_size_class() {
+        let arena = Arena::new(1 << 20, false);
+        let mut a: Vec<Complex<f64>> = arena.lease(100);
+        a[0] = Complex::new(1.0, 2.0);
+        let ptr = a.as_ptr();
+        arena.give_back(a);
+        // 120 rounds to the same class (128) — same allocation comes back,
+        // re-zeroed.
+        let b: Vec<Complex<f64>> = arena.lease(120);
+        assert_eq!(b.as_ptr(), ptr, "slab reused from the free list");
+        assert_eq!(b.len(), 120);
+        assert!(b.iter().all(|c| *c == Complex::zero()), "lease re-initialises");
+        let s = arena.stats();
+        assert_eq!((s.leases, s.reuses, s.fresh, s.returned), (2, 1, 1, 1));
+    }
+
+    #[test]
+    fn capacity_cap_drops_returns() {
+        let arena = Arena::new(48, false); // room for one 32-byte slab
+        let a: Vec<Complex<f64>> = arena.lease(2);
+        let b: Vec<Complex<f64>> = arena.lease(2);
+        arena.give_back(a); // held 32 <= 48: filed
+        arena.give_back(b); // 32 + 32 > 48: dropped
+        let s = arena.stats();
+        assert_eq!(s.returned, 1);
+        assert_eq!(s.dropped, 1);
+        assert!(s.held_bytes <= 48);
+    }
+
+    #[test]
+    fn poison_mode_nan_fills_leases() {
+        let arena = Arena::new(1 << 20, true);
+        let a: Vec<Complex<f32>> = arena.lease(8);
+        assert!(a.iter().all(|c| c.re.is_nan() && c.im.is_nan()));
+    }
+
+    #[test]
+    fn pool_roundtrip_through_layout() {
+        let mut layout = PoolLayout::new();
+        let send = layout.request("send", 16);
+        layout.request("recv", 8);
+        let arena = Arena::new(1 << 20, false);
+        let mut pool = arena.lease_pool::<f64>(&layout);
+        assert_eq!(pool.len_of(send), 16);
+        arena.reclaim_pool(&mut pool);
+        assert_eq!(arena.stats().returned, 2);
+        // A second lease of the same layout reuses both slabs.
+        let mut pool2 = arena.lease_pool::<f64>(&layout);
+        assert_eq!(arena.stats().reuses, 2);
+        arena.reclaim_pool(&mut pool2);
+    }
+
+    #[test]
+    fn classes_are_per_precision() {
+        let arena = Arena::new(1 << 20, false);
+        let a: Vec<Complex<f64>> = arena.lease(8);
+        arena.give_back(a);
+        // f32 lease of the same class must not pick up the f64 slab.
+        let _b: Vec<Complex<f32>> = arena.lease(8);
+        assert_eq!(arena.stats().fresh, 2);
+    }
+}

@@ -1,0 +1,200 @@
+//! LRU plan cache: compiled per-rank plans interned by shape.
+//!
+//! [`PlanKey`] captures everything plan compilation depends on — grid
+//! dims, processor grid, precision, layout/exchange options, truncation,
+//! overlap chunking, topology — so two requests with equal keys can share
+//! one compiled `Arc<RankPlan>` set. Values are stored type-erased
+//! (`Arc<dyn Any>`) because the cache spans precisions; the precision is
+//! part of the key, so a downcast on hit cannot fail in practice.
+
+use std::any::Any;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::{PlanSpec, TransformKind};
+use crate::fft::Real;
+use crate::grid::Truncation;
+use crate::util::error::Result;
+
+/// Everything that distinguishes one compiled plan set from another.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub dims: [usize; 3],
+    pub pgrid: (usize, usize),
+    /// `T::DTYPE` of the requested precision.
+    pub precision: &'static str,
+    pub third: TransformKind,
+    pub stride1: bool,
+    pub use_even: bool,
+    pub overlap_chunks: usize,
+    pub cores_per_node: Option<usize>,
+    pub truncation: Option<Truncation>,
+}
+
+impl PlanKey {
+    pub fn of<T: Real>(spec: &PlanSpec) -> Self {
+        PlanKey {
+            dims: [spec.nx, spec.ny, spec.nz],
+            pgrid: (spec.pgrid.m1, spec.pgrid.m2),
+            precision: T::DTYPE,
+            third: spec.third,
+            stride1: spec.opts.stride1,
+            use_even: spec.opts.use_even,
+            overlap_chunks: spec.opts.overlap_chunks,
+            cores_per_node: spec.opts.cores_per_node,
+            truncation: spec.opts.truncation,
+        }
+    }
+}
+
+struct Entry {
+    key: PlanKey,
+    /// Last-touched logical time; the minimum is the LRU victim.
+    tick: u64,
+    value: Arc<dyn Any + Send + Sync>,
+}
+
+struct Inner {
+    cap: usize,
+    tick: u64,
+    entries: Vec<Entry>,
+}
+
+/// The LRU cache. Builds happen outside the lock, so a slow compile
+/// never blocks hits on other shapes; two racing misses on one key both
+/// build and the later insert wins (plans are interchangeable).
+pub struct PlanCache {
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl PlanCache {
+    /// `cap` entries (clamped to at least 1; the config layer rejects 0).
+    pub fn new(cap: usize) -> Self {
+        PlanCache {
+            inner: Mutex::new(Inner { cap: cap.max(1), tick: 0, entries: Vec::new() }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("cache lock poisoned").entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Fetch the value for `key`, building (and interning) it on miss.
+    pub fn get_or_build<V, F>(&self, key: PlanKey, build: F) -> Result<Arc<V>>
+    where
+        V: Any + Send + Sync,
+        F: FnOnce() -> Result<Arc<V>>,
+    {
+        if let Some(v) = self.lookup::<V>(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(v);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let value = build()?;
+        self.insert(key, value.clone() as Arc<dyn Any + Send + Sync>);
+        Ok(value)
+    }
+
+    fn lookup<V: Any + Send + Sync>(&self, key: &PlanKey) -> Option<Arc<V>> {
+        let mut inner = self.inner.lock().expect("cache lock poisoned");
+        inner.tick += 1;
+        let tick = inner.tick;
+        let entry = inner.entries.iter_mut().find(|e| e.key == *key)?;
+        entry.tick = tick;
+        entry.value.clone().downcast::<V>().ok()
+    }
+
+    fn insert(&self, key: PlanKey, value: Arc<dyn Any + Send + Sync>) {
+        let mut inner = self.inner.lock().expect("cache lock poisoned");
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(e) = inner.entries.iter_mut().find(|e| e.key == key) {
+            // A racing miss built the same key; keep the newer value.
+            e.tick = tick;
+            e.value = value;
+            return;
+        }
+        if inner.entries.len() >= inner.cap {
+            let victim = inner
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.tick)
+                .map(|(i, _)| i)
+                .expect("cap >= 1 so a full cache is non-empty");
+            inner.entries.swap_remove(victim);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        inner.entries.push(Entry { key, tick, value });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::ProcGrid;
+
+    fn key(n: usize) -> PlanKey {
+        let spec = PlanSpec::new([n, n, n], ProcGrid::new(1, 1)).unwrap();
+        PlanKey::of::<f64>(&spec)
+    }
+
+    #[test]
+    fn hit_returns_interned_value() {
+        let cache = PlanCache::new(4);
+        let a = cache.get_or_build(key(8), || Ok(Arc::new(42usize))).unwrap();
+        let b = cache.get_or_build(key(8), || panic!("must not rebuild")).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+    }
+
+    #[test]
+    fn precision_is_part_of_the_key() {
+        let spec = PlanSpec::new([8, 8, 8], ProcGrid::new(1, 1)).unwrap();
+        assert_ne!(PlanKey::of::<f64>(&spec), PlanKey::of::<f32>(&spec));
+    }
+
+    #[test]
+    fn lru_evicts_the_least_recently_touched() {
+        let cache = PlanCache::new(2);
+        cache.get_or_build(key(8), || Ok(Arc::new(8usize))).unwrap();
+        cache.get_or_build(key(16), || Ok(Arc::new(16usize))).unwrap();
+        // Touch 8 so 16 becomes the LRU victim.
+        cache.get_or_build(key(8), || panic!("hit expected")).unwrap();
+        cache.get_or_build(key(32), || Ok(Arc::new(32usize))).unwrap();
+        assert_eq!(cache.evictions(), 1);
+        assert_eq!(cache.len(), 2);
+        // 8 survived; 16 was evicted and must rebuild.
+        cache.get_or_build(key(8), || panic!("8 must have survived")).unwrap();
+        let rebuilt = std::cell::Cell::new(false);
+        cache
+            .get_or_build(key(16), || {
+                rebuilt.set(true);
+                Ok(Arc::new(16usize))
+            })
+            .unwrap();
+        assert!(rebuilt.get(), "evicted key must rebuild");
+    }
+}

@@ -1,0 +1,296 @@
+//! Request coalescing: up to [`MAX_COALESCE`](super::MAX_COALESCE)
+//! same-shape forward transforms packed into one pipeline pass.
+//!
+//! The E concatenated fields ride the blocked kernels' batch dimension
+//! (one `execute_batch` over the E-field slab instead of E calls) and a
+//! single E-field exchange window per transpose
+//! ([`crate::transpose::EFieldMeta`] — the same wire format the fused
+//! convolution uses at E = 2, generalised: field `f` of peer `j` lands
+//! at `sd[j]·E + f·s_off[j]`). Eight requests therefore cost one tile
+//! pass and one exchange schedule per stage, not eight.
+//!
+//! Bit-identity: the blocked drivers apply identical per-line arithmetic
+//! regardless of batch composition (the invariant the overlap tests
+//! pin), and each field's wire blocks are byte-identical to its
+//! single-field exchange, so every coalesced output equals the output of
+//! a dedicated [`crate::coordinator::RankPlan`] run bit for bit.
+
+use std::ops::Range;
+
+use crate::coordinator::plan::stages::{mask_z_band, y_fft_native};
+use crate::coordinator::plan::{BufferPool, PoolLayout, SlotId, ThirdOp};
+use crate::coordinator::{PlanSpec, TransformKind};
+use crate::fft::{C2cPlan, Complex, Direction, R2cPlan, Real};
+use crate::grid::{Decomp, PruneRule};
+use crate::mpi::Comm;
+use crate::transpose::{ExchangeOptions, TransposeXY, TransposeYZ};
+use crate::util::error::{Error, Result};
+use crate::util::timer::{Stage, StageTimer};
+
+use super::MAX_COALESCE;
+
+/// One rank's coalesced forward pipeline: shared, immutable plan
+/// geometry sized for up to [`MAX_COALESCE`] fields. Built alongside the
+/// rank's [`crate::coordinator::RankPlan`] by the service's plan cache.
+pub struct Coalescer<T: Real> {
+    txy: TransposeXY,
+    tyz: TransposeYZ,
+    opts: ExchangeOptions,
+    r2c: R2cPlan<T>,
+    fy: C2cPlan<T>,
+    third: ThirdOp<T>,
+    z_band: Option<Range<usize>>,
+    ny: usize,
+    /// Per-field pencil lengths (slab stride of field `e`).
+    in_len: usize,
+    xlen: usize,
+    ylen: usize,
+    zlen: usize,
+    layout: PoolLayout,
+    xspec: SlotId,
+    ybuf: SlotId,
+    zbuf: SlotId,
+    send: SlotId,
+    recv: SlotId,
+    scratch: SlotId,
+}
+
+impl<T: Real> Coalescer<T> {
+    /// Mirror of the plan compiler's STRIDE1 forward geometry, with every
+    /// working slot widened to `MAX_COALESCE` fields.
+    pub fn new(spec: &PlanSpec, decomp: &Decomp, rank: usize) -> Result<Self> {
+        if !spec.opts.stride1 {
+            return Err(Error::InvalidConfig(
+                "request coalescing requires the STRIDE1 (ZYX) layout".into(),
+            ));
+        }
+        let rule = match spec.opts.truncation {
+            Some(t) => {
+                if spec.third != TransformKind::Fft {
+                    return Err(Error::InvalidConfig(
+                        "options.truncation requires an FFT third transform".into(),
+                    ));
+                }
+                Some(PruneRule::new([spec.nx, spec.ny, spec.nz], t))
+            }
+            None => None,
+        };
+
+        let xp = decomp.x_pencil_spec(rank);
+        let yp = decomp.y_pencil(rank);
+        let zp = decomp.z_pencil(rank);
+
+        let mut txy = TransposeXY::new(decomp, rank);
+        let mut tyz = TransposeYZ::new(decomp, rank);
+        if let Some(r) = &rule {
+            txy = txy.with_kx_keep(r.kx_keep());
+            tyz = tyz.with_prune(r, yp.offsets[1]);
+        }
+        let z_band = rule.as_ref().map(|r| r.z_prune_band());
+        let opts = ExchangeOptions { use_even: spec.opts.use_even };
+
+        let w = MAX_COALESCE;
+        let buf_len = txy
+            .efield_meta_fwd(opts, w)
+            .buf_len()
+            .max(tyz.efield_meta_fwd(opts, w).buf_len());
+
+        let r2c = R2cPlan::<T>::new(spec.nx);
+        let fy = C2cPlan::<T>::new(spec.ny, Direction::Forward);
+        let third = ThirdOp::<T>::new(spec.third, spec.nz);
+        let scratch_len =
+            r2c.scratch_len().max(fy.scratch_len()).max(third.scratch_len());
+
+        let mut layout = PoolLayout::new();
+        let xspec = layout.request("xspec_w", w * xp.len());
+        let ybuf = layout.request("ybuf_w", w * yp.len());
+        let send = layout.request("send_w", buf_len);
+        let recv = layout.request("recv_w", buf_len);
+        let zbuf = layout.request("zbuf_w", w * zp.len());
+        let scratch = layout.request("scratch", scratch_len);
+
+        Ok(Coalescer {
+            txy,
+            tyz,
+            opts,
+            r2c,
+            fy,
+            third,
+            z_band,
+            ny: spec.ny,
+            in_len: decomp.x_pencil(rank).len(),
+            xlen: xp.len(),
+            ylen: yp.len(),
+            zlen: zp.len(),
+            layout,
+            xspec,
+            ybuf,
+            zbuf,
+            send,
+            recv,
+            scratch,
+        })
+    }
+
+    /// The lease descriptor for this coalescer's working buffers.
+    pub fn layout(&self) -> &PoolLayout {
+        &self.layout
+    }
+
+    /// Per-field X-pencil input length.
+    pub fn input_len(&self) -> usize {
+        self.in_len
+    }
+
+    /// Per-field Z-pencil output length.
+    pub fn output_len(&self) -> usize {
+        self.zlen
+    }
+
+    /// Coalesced forward: `inputs[e]` is this rank's real X-pencil of
+    /// field `e`, `outputs[e]` receives its Z-pencil spectrum. All
+    /// fields run one R2C slab, one E-field exchange per transpose, one
+    /// Y-FFT slab, and one third-transform slab.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_batch(
+        &self,
+        row: &Comm,
+        col: &Comm,
+        pool: &mut BufferPool<T>,
+        real_scratch: &mut [T],
+        timer: &mut StageTimer,
+        inputs: &[&[T]],
+        outputs: &mut [Vec<Complex<T>>],
+    ) -> Result<()> {
+        let e_count = inputs.len();
+        if e_count == 0 || e_count > MAX_COALESCE {
+            return Err(Error::InvalidConfig(format!(
+                "coalesce width must be 1..={MAX_COALESCE}, got {e_count}"
+            )));
+        }
+        if outputs.len() != e_count {
+            return Err(Error::InvalidConfig(format!(
+                "coalesce: {e_count} inputs but {} outputs",
+                outputs.len()
+            )));
+        }
+        for f in inputs {
+            if f.len() != self.in_len {
+                return Err(Error::BadShape {
+                    expected: self.in_len,
+                    got: f.len(),
+                    what: "coalesced input (X-pencil)",
+                });
+            }
+        }
+        for o in outputs.iter() {
+            if o.len() != self.zlen {
+                return Err(Error::BadShape {
+                    expected: self.zlen,
+                    got: o.len(),
+                    what: "coalesced output (Z-pencil)",
+                });
+            }
+        }
+
+        let mut xall = pool.take(self.xspec);
+        let mut yall = pool.take(self.ybuf);
+        let mut zall = pool.take(self.zbuf);
+        let mut send = pool.take(self.send);
+        let mut recv = pool.take(self.recv);
+        let mut scratch = pool.take(self.scratch);
+
+        // Stage 1: batched R2C per field into the concatenated slab.
+        timer.time(Stage::Compute, || {
+            for (e, f) in inputs.iter().enumerate() {
+                let dst = &mut xall[e * self.xlen..(e + 1) * self.xlen];
+                self.r2c.execute_batch(f, dst, &mut scratch);
+            }
+        });
+
+        // Stage 2: ROW transpose, all fields in one E-field exchange.
+        let m = self.txy.efield_meta_fwd(self.opts, e_count);
+        timer.time(Stage::Pack, || {
+            for j in 0..self.txy.m1 {
+                for (e, x) in xall.chunks_exact(self.xlen).take(e_count).enumerate() {
+                    self.txy.pack_fwd_win(x, j, 0, self.txy.nz, &mut send[m.send_range(j, e)]);
+                }
+            }
+        });
+        timer.time(Stage::Exchange, || m.exchange(row, &send, &mut recv));
+        timer.time(Stage::Unpack, || {
+            for j in 0..self.txy.m1 {
+                for (e, y) in yall.chunks_exact_mut(self.ylen).take(e_count).enumerate() {
+                    self.txy.unpack_fwd_win(&recv[m.recv_range(j, e)], j, 0, self.txy.nz, y);
+                }
+            }
+        });
+
+        // Stage 3: one Y-FFT pass over the E-field slab (the concatenated
+        // fields look like `e_count * nz` z-planes to the batched driver).
+        let hk = self.txy.is_pruned().then(|| self.txy.hk_loc());
+        y_fft_native(
+            &self.fy,
+            0..e_count * self.txy.nz,
+            self.txy.h_loc(),
+            hk,
+            self.ny,
+            &mut yall[..e_count * self.ylen],
+            &mut scratch,
+            timer,
+        );
+
+        // Stage 4: COLUMN transpose, again one E-field exchange.
+        let m2 = self.tyz.efield_meta_fwd(self.opts, e_count);
+        let h = self.tyz.h_loc;
+        timer.time(Stage::Pack, || {
+            for j in 0..self.tyz.m2 {
+                for (e, y) in yall.chunks_exact(self.ylen).take(e_count).enumerate() {
+                    self.tyz.pack_fwd_win(y, j, 0, h, &mut send[m2.send_range(j, e)]);
+                }
+            }
+        });
+        timer.time(Stage::Exchange, || m2.exchange(col, &send, &mut recv));
+        if self.tyz.is_pruned() {
+            // Pruned unpack writes retained pairs only; pre-zero the used
+            // prefix so pruned slots are exact zeros (and NaN-free under
+            // arena poison).
+            timer.time(Stage::Unpack, || {
+                zall[..e_count * self.zlen].fill(Complex::zero())
+            });
+        }
+        timer.time(Stage::Unpack, || {
+            for j in 0..self.tyz.m2 {
+                for (e, z) in zall.chunks_exact_mut(self.zlen).take(e_count).enumerate() {
+                    self.tyz.unpack_fwd_win(&recv[m2.recv_range(j, e)], j, 0, h, z);
+                }
+            }
+        });
+
+        // Stage 5: one third-transform pass over the E-field slab.
+        self.third.apply_native(
+            false,
+            &mut zall[..e_count * self.zlen],
+            &mut scratch,
+            real_scratch,
+            timer,
+        );
+        if let Some(band) = &self.z_band {
+            timer.time(Stage::Other, || {
+                mask_z_band(&mut zall[..e_count * self.zlen], self.third.n, band.clone())
+            });
+        }
+
+        for (e, out) in outputs.iter_mut().enumerate() {
+            out.copy_from_slice(&zall[e * self.zlen..(e + 1) * self.zlen]);
+        }
+
+        pool.restore(self.xspec, xall);
+        pool.restore(self.ybuf, yall);
+        pool.restore(self.zbuf, zall);
+        pool.restore(self.send, send);
+        pool.restore(self.recv, recv);
+        pool.restore(self.scratch, scratch);
+        Ok(())
+    }
+}

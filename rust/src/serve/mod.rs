@@ -1,0 +1,424 @@
+//! Transform-as-a-service: a concurrent executor that interns compiled
+//! plans, leases working memory from a shared arena, and coalesces
+//! same-shape requests into the blocked kernels' batch dimension.
+//!
+//! Three pieces:
+//! * [`cache`] — an LRU plan cache keyed by
+//!   `(dims, precision, layout, pgrid, truncation, overlap_chunks, …)`:
+//!   repeated shapes skip plan compilation entirely and share one
+//!   `Arc<RankPlan>` set across caller threads;
+//! * [`arena`] — a size-class buffer arena replacing per-plan buffer
+//!   allocation: each request leases slabs described by the plan's
+//!   `PoolLayout` and returns them on drop, so plans of similar
+//!   footprint reuse allocations across shapes and precisions;
+//! * [`coalesce`] — a request coalescer packing up to [`MAX_COALESCE`]
+//!   same-shape fields into one pipeline pass: one tile pass and one
+//!   E-field exchange schedule per stage instead of E.
+//!
+//! [`TransformService::forward_batch`] takes *global* real fields
+//! (`[nz][ny][nx]`, x fastest) and returns *global* packed spectra
+//! (`[nx/2+1][ny][nz]`, z fastest — the STRIDE1 Z-pencil convention of
+//! [`crate::util::spectrum::gather_spectrum`]). Scatter/gather runs on
+//! the host side of one rank-threaded run per request batch. Outputs are
+//! bit-identical to a dedicated single-caller
+//! [`crate::coordinator::RankPlan`] at every coalesce width.
+//!
+//! The service runs the native engine and STRIDE1 layout (the shared
+//! plans and the coalescer's wire format are STRIDE1); other specs are
+//! rejected with `InvalidConfig`.
+
+pub mod arena;
+pub mod cache;
+pub mod coalesce;
+
+pub use arena::{Arena, ArenaStats};
+pub use cache::{PlanCache, PlanKey};
+pub use coalesce::Coalescer;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::plan::PjrtExec;
+use crate::coordinator::{Engine, EngineKind, PlanSpec, RankPlan};
+use crate::fft::{Complex, Real};
+use crate::grid::Decomp;
+use crate::mpi::{Hierarchy, PlacementPolicy, Universe};
+use crate::util::error::{Error, Result};
+use crate::util::timer::StageTimer;
+
+/// Widest request group one coalesced pass carries. Matches the default
+/// blocked-kernel lane width ([`crate::fft::block::lane_width`]): a full
+/// window fills every lane of a tile pass exactly once per line set.
+pub const MAX_COALESCE: usize = 8;
+
+/// Service construction knobs (config keys `service.plan_cache_entries`
+/// and `service.arena_bytes`; both reject 0 at the config layer and
+/// here).
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// LRU plan-cache capacity, in interned (spec, precision) entries.
+    pub plan_cache_entries: usize,
+    /// Soft cap on bytes the arena holds in free lists.
+    pub arena_bytes: usize,
+    /// Debug poison: NaN-fill every leased slab (`P3DFFT_POISON=1` sets
+    /// the default) to flag stages that rely on zero-initialised
+    /// buffers. Output must stay bit-identical.
+    pub poison: bool,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            plan_cache_entries: 16,
+            arena_bytes: 256 << 20,
+            poison: std::env::var("P3DFFT_POISON").map(|v| v == "1").unwrap_or(false),
+        }
+    }
+}
+
+/// The cache value for one `(spec, precision)`: every rank's shared plan
+/// plus its request coalescer, in rank order.
+pub struct CachedPlans<T: Real + PjrtExec> {
+    pub plans: Vec<Arc<RankPlan<T>>>,
+    pub coalescers: Vec<Arc<Coalescer<T>>>,
+}
+
+/// Counter snapshot (see [`TransformService::stats`]).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
+    /// `widths[w - 1]` = dispatched request groups of coalesce width `w`.
+    pub widths: [u64; MAX_COALESCE],
+    pub arena: ArenaStats,
+}
+
+impl ServeStats {
+    /// Human-readable multi-line summary (the CLI's `--verbose` block).
+    pub fn render(&self) -> String {
+        let mut widths = String::new();
+        for (i, n) in self.widths.iter().enumerate() {
+            if *n > 0 {
+                widths.push_str(&format!(" w{}:{}", i + 1, n));
+            }
+        }
+        if widths.is_empty() {
+            widths.push_str(" none");
+        }
+        format!(
+            "plan cache: {} hits, {} misses, {} evictions\n\
+             coalesce widths:{}\n\
+             arena: {} leases ({} reused, {} fresh), {} returned, {} dropped, {} B held",
+            self.cache_hits,
+            self.cache_misses,
+            self.cache_evictions,
+            widths,
+            self.arena.leases,
+            self.arena.reuses,
+            self.arena.fresh,
+            self.arena.returned,
+            self.arena.dropped,
+            self.arena.held_bytes,
+        )
+    }
+}
+
+/// The concurrent transform executor. Share one instance (behind an
+/// `Arc`) across caller threads; every method takes `&self`.
+pub struct TransformService {
+    cache: PlanCache,
+    arena: Arc<Arena>,
+    widths: [AtomicU64; MAX_COALESCE],
+}
+
+impl TransformService {
+    pub fn new(cfg: &ServiceConfig) -> Result<Self> {
+        if cfg.plan_cache_entries == 0 {
+            return Err(Error::InvalidConfig(
+                "service.plan_cache_entries must be >= 1".into(),
+            ));
+        }
+        if cfg.arena_bytes == 0 {
+            return Err(Error::InvalidConfig("service.arena_bytes must be >= 1".into()));
+        }
+        Ok(TransformService {
+            cache: PlanCache::new(cfg.plan_cache_entries),
+            arena: Arc::new(Arena::new(cfg.arena_bytes, cfg.poison)),
+            widths: Default::default(),
+        })
+    }
+
+    pub fn with_defaults() -> Self {
+        Self::new(&ServiceConfig::default()).expect("defaults are valid")
+    }
+
+    /// The shared arena (leased-slab source for execution states).
+    pub fn arena(&self) -> &Arc<Arena> {
+        &self.arena
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        let mut widths = [0u64; MAX_COALESCE];
+        for (w, c) in widths.iter_mut().zip(&self.widths) {
+            *w = c.load(Ordering::Relaxed);
+        }
+        ServeStats {
+            cache_hits: self.cache.hits(),
+            cache_misses: self.cache.misses(),
+            cache_evictions: self.cache.evictions(),
+            widths,
+            arena: self.arena.stats(),
+        }
+    }
+
+    fn validate(spec: &PlanSpec) -> Result<()> {
+        if spec.opts.engine != EngineKind::Native {
+            return Err(Error::InvalidConfig(
+                "the transform service runs the native engine only (plans are \
+                 shared immutable artifacts across caller threads)"
+                    .into(),
+            ));
+        }
+        if !spec.opts.stride1 {
+            return Err(Error::InvalidConfig(
+                "the transform service requires the STRIDE1 (ZYX) layout (its \
+                 global-spectrum convention and request coalescer are STRIDE1)"
+                    .into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Intern (or fetch) the compiled per-rank plans and coalescers for
+    /// `spec`. This is the cache boundary the benches time: a hit is a
+    /// lookup + `Arc` clone, a miss compiles every rank's plan.
+    pub fn acquire<T: Real + PjrtExec>(
+        &self,
+        spec: &PlanSpec,
+    ) -> Result<Arc<CachedPlans<T>>> {
+        Self::validate(spec)?;
+        self.cache.get_or_build(PlanKey::of::<T>(spec), || {
+            let decomp = spec.decomp()?;
+            let p = spec.p();
+            let mut plans = Vec::with_capacity(p);
+            let mut coalescers = Vec::with_capacity(p);
+            for r in 0..p {
+                plans.push(Arc::new(RankPlan::<T>::new(spec, r, Engine::Native)?));
+                coalescers.push(Arc::new(Coalescer::<T>::new(spec, &decomp, r)?));
+            }
+            Ok(Arc::new(CachedPlans { plans, coalescers }))
+        })
+    }
+
+    /// Forward-transform one global real field (`[nz][ny][nx]`, x
+    /// fastest) into its global packed spectrum (`[nx/2+1][ny][nz]`, z
+    /// fastest).
+    pub fn forward<T: Real + PjrtExec>(
+        &self,
+        spec: &PlanSpec,
+        field: &[T],
+    ) -> Result<Vec<Complex<T>>> {
+        let mut out = self.forward_batch(spec, &[field])?;
+        Ok(out.pop().expect("one field in, one spectrum out"))
+    }
+
+    /// Forward-transform a batch of same-shape global real fields.
+    /// Requests are grouped into windows of up to [`MAX_COALESCE`]; each
+    /// window of width > 1 runs the coalesced pipeline (one tile pass and
+    /// one exchange schedule for the whole window), width-1 remainders
+    /// run the ordinary per-field pipeline. Outputs are bit-identical to
+    /// per-field [`Self::forward`] calls either way.
+    pub fn forward_batch<T: Real + PjrtExec>(
+        &self,
+        spec: &PlanSpec,
+        fields: &[&[T]],
+    ) -> Result<Vec<Vec<Complex<T>>>> {
+        Self::validate(spec)?;
+        if fields.is_empty() {
+            return Ok(Vec::new());
+        }
+        let n_glob = spec.nx * spec.ny * spec.nz;
+        for f in fields {
+            if f.len() != n_glob {
+                return Err(Error::BadShape {
+                    expected: n_glob,
+                    got: f.len(),
+                    what: "service input (global [nz][ny][nx] real field)",
+                });
+            }
+        }
+        let cached = self.acquire::<T>(spec)?;
+        let decomp = spec.decomp()?;
+        let p = spec.p();
+
+        // Host-side scatter into per-rank X-pencils (rank-major).
+        let locals: Arc<Vec<Vec<Vec<T>>>> = Arc::new(
+            (0..p)
+                .map(|r| fields.iter().map(|f| scatter_x_pencil(f, &decomp, r)).collect())
+                .collect(),
+        );
+
+        // Coalescing windows over the request list.
+        let groups: Vec<(usize, usize)> = (0..fields.len())
+            .step_by(MAX_COALESCE)
+            .map(|a| (a, (a + MAX_COALESCE).min(fields.len())))
+            .collect();
+        for &(a, b) in &groups {
+            self.widths[b - a - 1].fetch_add(1, Ordering::Relaxed);
+        }
+        let groups = Arc::new(groups);
+
+        let universe = match spec.opts.cores_per_node {
+            Some(cores) => Universe::with_topology(
+                p,
+                Hierarchy::two_level(p, cores, PlacementPolicy::Contiguous),
+            ),
+            None => Universe::new(p),
+        };
+        let arena = self.arena.clone();
+        let spec2 = spec.clone();
+        let scratch_len = spec.nz.max(spec.nx);
+        let results = universe.run(move |world| {
+            let (row, col) = world.cart_2d(spec2.pgrid)?;
+            let r = world.rank();
+            let plan = &cached.plans[r];
+            let mine = &locals[r];
+            let mut outs: Vec<Vec<Complex<T>>> =
+                (0..mine.len()).map(|_| vec![Complex::zero(); plan.output_len()]).collect();
+            let mut serial_state = None;
+            for &(a, b) in groups.iter() {
+                if b - a > 1 {
+                    let coal = &cached.coalescers[r];
+                    let mut pool = arena.lease_pool::<T>(coal.layout());
+                    let mut real_scratch = vec![T::zero(); scratch_len];
+                    let mut timer = StageTimer::new();
+                    let ins: Vec<&[T]> = mine[a..b].iter().map(|v| v.as_slice()).collect();
+                    let res = coal.forward_batch(
+                        &row,
+                        &col,
+                        &mut pool,
+                        &mut real_scratch,
+                        &mut timer,
+                        &ins,
+                        &mut outs[a..b],
+                    );
+                    arena.reclaim_pool(&mut pool);
+                    res?;
+                } else {
+                    let state =
+                        serial_state.get_or_insert_with(|| plan.make_state_in(&arena));
+                    plan.forward_with(state, &row, &col, &mine[a], &mut outs[a])?;
+                }
+            }
+            Ok(outs)
+        })?;
+
+        // Host-side gather into global spectra (the gather_spectrum
+        // indexing, one field at a time).
+        let h = spec.nx / 2 + 1;
+        let (ny, nz) = (spec.ny, spec.nz);
+        let mut globals = vec![vec![Complex::<T>::zero(); h * ny * nz]; fields.len()];
+        for (r, parts) in results.into_iter().enumerate() {
+            let zp = decomp.z_pencil(r);
+            let [d0, d1, d2] = zp.dims;
+            let [o0, o1, _] = zp.offsets;
+            for (g, part) in globals.iter_mut().zip(parts) {
+                for a in 0..d0 {
+                    for b in 0..d1 {
+                        let base = ((a + o0) * ny + (b + o1)) * nz;
+                        let l = (a * d1 + b) * d2;
+                        g[base..base + d2].copy_from_slice(&part[l..l + d2]);
+                    }
+                }
+            }
+        }
+        Ok(globals)
+    }
+}
+
+/// Slice one rank's X-pencil out of a global `[nz][ny][nx]` real field.
+fn scatter_x_pencil<T: Real>(global: &[T], decomp: &Decomp, rank: usize) -> Vec<T> {
+    let xp = decomp.x_pencil(rank);
+    let [nzl, nyl, nx] = xp.dims;
+    let ny = decomp.ny;
+    let mut out = vec![T::zero(); xp.len()];
+    for z in 0..nzl {
+        for y in 0..nyl {
+            let g = ((z + xp.offsets[0]) * ny + (y + xp.offsets[1])) * nx;
+            let l = (z * nyl + y) * nx;
+            out[l..l + nx].copy_from_slice(&global[g..g + nx]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::ProcGrid;
+
+    fn field(spec: &PlanSpec, seed: usize) -> Vec<f64> {
+        let n = spec.nx * spec.ny * spec.nz;
+        (0..n).map(|i| ((i * 31 + seed * 17) % 97) as f64 / 13.0 - 3.0).collect()
+    }
+
+    #[test]
+    fn constant_field_concentrates_at_k0() {
+        let spec = PlanSpec::new([8, 8, 8], ProcGrid::new(2, 2)).unwrap();
+        let svc = TransformService::with_defaults();
+        let f = vec![1.0f64; 8 * 8 * 8];
+        let spectrum = svc.forward(&spec, &f).unwrap();
+        assert_eq!(spectrum.len(), 5 * 8 * 8);
+        assert_eq!(spectrum[0], Complex::new(512.0, 0.0));
+        assert!(spectrum[1..].iter().all(|c| c.norm_sqr() < 1e-18));
+    }
+
+    #[test]
+    fn batch_is_bit_identical_to_serial_calls() {
+        let spec = PlanSpec::new([8, 8, 8], ProcGrid::new(2, 2)).unwrap();
+        let svc = TransformService::with_defaults();
+        let fields: Vec<Vec<f64>> = (0..3).map(|s| field(&spec, s)).collect();
+        let refs: Vec<&[f64]> = fields.iter().map(|f| f.as_slice()).collect();
+        let batched = svc.forward_batch(&spec, &refs).unwrap();
+        for (f, b) in refs.iter().zip(&batched) {
+            let serial = svc.forward(&spec, f).unwrap();
+            assert_eq!(&serial, b, "coalesced width 3 must match serial bit for bit");
+        }
+        let stats = svc.stats();
+        assert_eq!(stats.widths[2], 1, "one width-3 group dispatched");
+        assert_eq!(stats.widths[0], 3, "three serial follow-ups");
+        assert_eq!(stats.cache_misses, 1, "one shape, one compile");
+        assert!(stats.cache_hits >= 3);
+        assert!(stats.arena.reuses > 0, "later requests reuse arena slabs");
+    }
+
+    #[test]
+    fn service_rejects_non_native_and_bad_shapes() {
+        use crate::coordinator::EngineKind;
+        let spec = PlanSpec::new([8, 8, 8], ProcGrid::new(1, 1)).unwrap();
+        let svc = TransformService::with_defaults();
+        let short = vec![0.0f64; 7];
+        assert!(matches!(
+            svc.forward(&spec, &short).unwrap_err(),
+            Error::BadShape { .. }
+        ));
+        let pjrt = spec
+            .clone()
+            .with_engine(EngineKind::Pjrt { artifacts_dir: "/tmp".into() });
+        let f = vec![0.0f64; 512];
+        assert!(svc.forward(&pjrt, &f).is_err());
+        let xyz = spec.with_stride1(false);
+        assert!(svc.forward(&xyz, &f).is_err());
+    }
+
+    #[test]
+    fn config_rejects_zero() {
+        let mut cfg = ServiceConfig::default();
+        cfg.plan_cache_entries = 0;
+        assert!(TransformService::new(&cfg).is_err());
+        let mut cfg = ServiceConfig::default();
+        cfg.arena_bytes = 0;
+        assert!(TransformService::new(&cfg).is_err());
+    }
+}

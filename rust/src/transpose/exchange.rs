@@ -858,6 +858,108 @@ pub fn exchange_v<T: Real>(
     }
 }
 
+/// Exchange metadata for `E` same-shape fields fused into ONE
+/// `alltoall(v)`: every per-peer block of the single-field forward
+/// metadata is stacked `E` times, field `f` of peer `j` occupying
+/// `[sde[j] + f·s_off[j], sde[j] + f·s_off[j] + sc[j])` of the send
+/// buffer. The per-field stride `s_off[j]` is `even_block` under USEEVEN
+/// (every field stays block-aligned inside the padded `alltoall` slot of
+/// `E·even_block`) and the true count otherwise (the `alltoallv` payload
+/// stays dense). `E == 2` reproduces the convolve pair-block wire format
+/// exactly; the serve-layer coalescer drives it at the lane width.
+#[derive(Debug, Clone)]
+pub struct EFieldMeta {
+    /// Fields fused per exchange window.
+    pub e: usize,
+    /// Single-field per-peer counts (one field's block length).
+    pub sc: Vec<usize>,
+    pub rc: Vec<usize>,
+    /// E-field wire counts/displacements handed to [`exchange_v`].
+    pub sce: Vec<usize>,
+    pub sde: Vec<usize>,
+    pub rce: Vec<usize>,
+    pub rde: Vec<usize>,
+    /// Per-field displacement stride inside one peer's fused block.
+    pub s_off: Vec<usize>,
+    pub r_off: Vec<usize>,
+    /// E-field padded block for the USEEVEN `alltoall`.
+    pub evene: Option<usize>,
+}
+
+impl EFieldMeta {
+    /// Fuse the single-field metadata tuple `(sc, sd, rc, rd)` (as
+    /// returned by the transposes' `meta_fwd`) into `e`-field blocks.
+    pub fn new(
+        (sc, sd, rc, rd): (Vec<usize>, Vec<usize>, Vec<usize>, Vec<usize>),
+        opts: ExchangeOptions,
+        even_block: usize,
+        e: usize,
+    ) -> Self {
+        let p = sc.len();
+        let sce = sc.iter().map(|c| e * c).collect();
+        let rce = rc.iter().map(|c| e * c).collect();
+        let sde = sd.iter().map(|d| e * d).collect();
+        let rde = rd.iter().map(|d| e * d).collect();
+        let (s_off, r_off) = if opts.use_even {
+            (vec![even_block; p], vec![even_block; p])
+        } else {
+            (sc.clone(), rc.clone())
+        };
+        let evene = opts.use_even.then(|| e * even_block);
+        EFieldMeta { e, sc, rc, sce, sde, rce, rde, s_off, r_off, evene }
+    }
+
+    /// Send-buffer range of field `f`'s block for peer `j`.
+    pub fn send_range(&self, j: usize, f: usize) -> std::ops::Range<usize> {
+        debug_assert!(f < self.e);
+        let b = self.sde[j] + f * self.s_off[j];
+        b..b + self.sc[j]
+    }
+
+    /// Recv-buffer range of field `f`'s block from peer `j`.
+    pub fn recv_range(&self, j: usize, f: usize) -> std::ops::Range<usize> {
+        debug_assert!(f < self.e);
+        let b = self.rde[j] + f * self.r_off[j];
+        b..b + self.rc[j]
+    }
+
+    /// Send/recv buffer length (elements) the fused exchange needs.
+    pub fn buf_len(&self) -> usize {
+        match self.evene {
+            Some(b) => b * self.sc.len(),
+            None => {
+                let s: usize = self.sce.iter().sum();
+                let r: usize = self.rce.iter().sum();
+                s.max(r)
+            }
+        }
+    }
+
+    /// Execute the fused exchange over `comm`.
+    pub fn exchange<T: Real>(
+        &self,
+        comm: &Comm,
+        sendbuf: &[Complex<T>],
+        recvbuf: &mut [Complex<T>],
+    ) {
+        exchange_v(comm, sendbuf, recvbuf, &self.sce, &self.sde, &self.rce, &self.rde, self.evene);
+    }
+}
+
+impl TransposeXY {
+    /// Forward E-field fused metadata (see [`EFieldMeta`]).
+    pub fn efield_meta_fwd(&self, opts: ExchangeOptions, e: usize) -> EFieldMeta {
+        EFieldMeta::new(self.meta_fwd(opts), opts, self.even_block(), e)
+    }
+}
+
+impl TransposeYZ {
+    /// Forward E-field fused metadata (see [`EFieldMeta`]).
+    pub fn efield_meta_fwd(&self, opts: ExchangeOptions, e: usize) -> EFieldMeta {
+        EFieldMeta::new(self.meta_fwd(opts), opts, self.even_block(), e)
+    }
+}
+
 /// Per-chunk exchange metadata for the overlap executor: one
 /// invariant-axis window plus per-peer counts with *absolute*
 /// displacements into the full-transpose send/recv buffers. Chunk windows

@@ -16,4 +16,6 @@
 pub mod exchange;
 pub mod pack;
 
-pub use exchange::{ChunkMeta, ChunkPlan, ExchangeOptions, TransposeXY, TransposeYZ};
+pub use exchange::{
+    exchange_v, ChunkMeta, ChunkPlan, EFieldMeta, ExchangeOptions, TransposeXY, TransposeYZ,
+};

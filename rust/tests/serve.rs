@@ -1,0 +1,217 @@
+//! Concurrent stress tests for the transform service: many caller
+//! threads, mixed shapes and precisions, one shared service — every
+//! response must be bit-identical to a dedicated single-caller
+//! `RankPlan` run, at every coalesce width, through cache evictions,
+//! and with the arena's poison mode on.
+//!
+//! Thread count comes from `P3DFFT_STRESS_THREADS` (default 4); CI runs
+//! the matrix {2, 8}.
+
+use std::sync::Arc;
+
+use p3dfft::coordinator::plan::PjrtExec;
+use p3dfft::coordinator::{Engine, PlanSpec, RankPlan};
+use p3dfft::fft::{Complex, Real};
+use p3dfft::grid::{Decomp, ProcGrid, Truncation};
+use p3dfft::mpi::Universe;
+use p3dfft::serve::{ServiceConfig, TransformService, MAX_COALESCE};
+
+fn stress_threads() -> usize {
+    std::env::var("P3DFFT_STRESS_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(4)
+}
+
+/// Deterministic non-trivial global field, distinct per seed.
+fn field<T: Real>(spec: &PlanSpec, seed: usize) -> Vec<T> {
+    let n = spec.nx * spec.ny * spec.nz;
+    (0..n)
+        .map(|i| {
+            let v = ((i * 31 + seed * 17 + 5) % 97) as f64 / 13.0 - 3.0;
+            T::from_f64(v).unwrap()
+        })
+        .collect()
+}
+
+fn scatter<T: Real>(global: &[T], decomp: &Decomp, rank: usize) -> Vec<T> {
+    let xp = decomp.x_pencil(rank);
+    let [nzl, nyl, nx] = xp.dims;
+    let mut out = vec![T::zero(); xp.len()];
+    for z in 0..nzl {
+        for y in 0..nyl {
+            let g = ((z + xp.offsets[0]) * decomp.ny + (y + xp.offsets[1])) * nx;
+            let l = (z * nyl + y) * nx;
+            out[l..l + nx].copy_from_slice(&global[g..g + nx]);
+        }
+    }
+    out
+}
+
+/// The dedicated single-caller path the service must match bit for bit:
+/// a fresh universe, a fresh per-rank `RankPlan` with owned (non-arena)
+/// state, and the same global-spectrum assembly.
+fn reference_forward<T: Real + PjrtExec>(spec: &PlanSpec, global: &[T]) -> Vec<Complex<T>> {
+    let decomp = spec.decomp().unwrap();
+    let p = spec.p();
+    let locals: Arc<Vec<Vec<T>>> =
+        Arc::new((0..p).map(|r| scatter(global, &decomp, r)).collect());
+    let spec2 = spec.clone();
+    let parts = Universe::new(p)
+        .run(move |world| {
+            let (row, col) = world.cart_2d(spec2.pgrid)?;
+            let plan = RankPlan::<T>::new(&spec2, world.rank(), Engine::Native)?;
+            let mut state = plan.make_state();
+            let mut out = vec![Complex::zero(); plan.output_len()];
+            plan.forward_with(&mut state, &row, &col, &locals[world.rank()], &mut out)?;
+            Ok(out)
+        })
+        .unwrap();
+    let (h, ny, nz) = (spec.nx / 2 + 1, spec.ny, spec.nz);
+    let mut global_out = vec![Complex::<T>::zero(); h * ny * nz];
+    for (r, part) in parts.into_iter().enumerate() {
+        let zp = decomp.z_pencil(r);
+        let [d0, d1, d2] = zp.dims;
+        let [o0, o1, _] = zp.offsets;
+        for a in 0..d0 {
+            for b in 0..d1 {
+                let base = ((a + o0) * ny + (b + o1)) * nz;
+                let l = (a * d1 + b) * d2;
+                global_out[base..base + d2].copy_from_slice(&part[l..l + d2]);
+            }
+        }
+    }
+    global_out
+}
+
+type Job<T> = (PlanSpec, Vec<T>, Vec<Complex<T>>);
+
+fn jobs<T: Real + PjrtExec>(specs: &[PlanSpec]) -> Vec<Job<T>> {
+    specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let f = field::<T>(s, i);
+            let want = reference_forward::<T>(s, &f);
+            (s.clone(), f, want)
+        })
+        .collect()
+}
+
+#[test]
+fn concurrent_mixed_shapes_and_precisions_bit_identical() {
+    let specs: Vec<PlanSpec> = [[8, 8, 8], [16, 16, 16], [12, 12, 12]]
+        .into_iter()
+        .map(|d| PlanSpec::new(d, ProcGrid::new(2, 2)).unwrap())
+        .collect();
+    let jobs64 = jobs::<f64>(&specs);
+    let jobs32 = jobs::<f32>(&specs[..2]);
+    let svc = Arc::new(TransformService::with_defaults());
+    std::thread::scope(|sc| {
+        for t in 0..stress_threads() {
+            let svc = Arc::clone(&svc);
+            let jobs64 = &jobs64;
+            let jobs32 = &jobs32;
+            sc.spawn(move || {
+                for round in 0..2 {
+                    for (spec, f, want) in jobs64 {
+                        let got = svc.forward(spec, f).unwrap();
+                        assert_eq!(&got, want, "f64 thread {t} round {round}");
+                    }
+                    for (spec, f, want) in jobs32 {
+                        let got = svc.forward(spec, f).unwrap();
+                        assert_eq!(&got, want, "f32 thread {t} round {round}");
+                    }
+                }
+            });
+        }
+    });
+    let stats = svc.stats();
+    // 5 (spec, precision) keys total; every later request must hit.
+    assert!(stats.cache_misses >= 5, "stats: {stats:?}");
+    assert!(stats.cache_hits > 0, "stats: {stats:?}");
+    assert_eq!(stats.cache_evictions, 0, "default cache holds all 5 keys");
+    assert!(stats.arena.reuses > 0, "repeat requests must reuse arena slabs");
+}
+
+#[test]
+fn coalesced_widths_1_through_8_bit_identical() {
+    let spec = PlanSpec::new([8, 8, 8], ProcGrid::new(2, 2)).unwrap();
+    let fields: Vec<Vec<f64>> = (0..MAX_COALESCE).map(|s| field(&spec, s)).collect();
+    let want: Vec<_> = fields.iter().map(|f| reference_forward::<f64>(&spec, f)).collect();
+    let svc = TransformService::with_defaults();
+    for w in 1..=MAX_COALESCE {
+        let ins: Vec<&[f64]> = fields[..w].iter().map(|v| v.as_slice()).collect();
+        let outs = svc.forward_batch(&spec, &ins).unwrap();
+        for (i, out) in outs.iter().enumerate() {
+            assert_eq!(out, &want[i], "coalesce width {w}, field {i}");
+        }
+    }
+    let stats = svc.stats();
+    for (i, n) in stats.widths.iter().enumerate() {
+        assert_eq!(*n, 1, "exactly one group of width {}", i + 1);
+    }
+}
+
+#[test]
+fn cache_evictions_mid_flight_stay_correct() {
+    let specs: Vec<PlanSpec> = [[8, 8, 8], [16, 16, 16], [12, 12, 12]]
+        .into_iter()
+        .map(|d| PlanSpec::new(d, ProcGrid::new(2, 2)).unwrap())
+        .collect();
+    let jobs64 = jobs::<f64>(&specs);
+    // Three shapes through a two-entry cache: every round evicts.
+    let cfg = ServiceConfig { plan_cache_entries: 2, ..ServiceConfig::default() };
+    let svc = Arc::new(TransformService::new(&cfg).unwrap());
+    std::thread::scope(|sc| {
+        for t in 0..stress_threads().max(2) {
+            let svc = Arc::clone(&svc);
+            let jobs64 = &jobs64;
+            sc.spawn(move || {
+                for round in 0..3 {
+                    // Stagger the cycle per thread so evictions interleave
+                    // with other threads' in-flight requests.
+                    for k in 0..jobs64.len() {
+                        let (spec, f, want) = &jobs64[(k + t) % jobs64.len()];
+                        let got = svc.forward(spec, f).unwrap();
+                        assert_eq!(&got, want, "thread {t} round {round}");
+                    }
+                }
+            });
+        }
+    });
+    let stats = svc.stats();
+    assert!(stats.cache_evictions > 0, "3 shapes through cap 2 must evict: {stats:?}");
+}
+
+#[test]
+fn poisoned_arena_stays_bit_identical() {
+    // NaN-poisoned leases must not leak into any output: plain spec and a
+    // truncated spec (whose pruned unpack relies on an explicit pre-zero,
+    // not on fresh-allocation zeroing).
+    let plain = PlanSpec::new([8, 8, 8], ProcGrid::new(2, 2)).unwrap();
+    let pruned = PlanSpec::new([16, 16, 16], ProcGrid::new(2, 2))
+        .unwrap()
+        .with_truncation(Truncation::Spherical23);
+    let cfg = ServiceConfig { poison: true, ..ServiceConfig::default() };
+    let svc = TransformService::new(&cfg).unwrap();
+    assert!(svc.arena().poison());
+    for spec in [&plain, &pruned] {
+        let fields: Vec<Vec<f64>> = (0..4).map(|s| field(spec, s)).collect();
+        let want: Vec<_> = fields.iter().map(|f| reference_forward::<f64>(spec, f)).collect();
+        // Width 4 (coalesced) and width 1 (serial, arena-leased state).
+        let ins: Vec<&[f64]> = fields.iter().map(|v| v.as_slice()).collect();
+        let outs = svc.forward_batch(spec, &ins).unwrap();
+        for (i, out) in outs.iter().enumerate() {
+            assert_eq!(out, &want[i], "poisoned coalesced field {i}");
+            let serial = svc.forward(spec, &fields[i]).unwrap();
+            assert_eq!(&serial, &want[i], "poisoned serial field {i}");
+            assert!(
+                out.iter().all(|c| !c.re.is_nan() && !c.im.is_nan()),
+                "poison leaked into output {i}"
+            );
+        }
+    }
+    assert!(svc.stats().arena.leases > 0);
+}
