@@ -4,6 +4,7 @@ use std::path::PathBuf;
 
 use crate::coordinator::{EngineKind, PlanSpec, TransformKind};
 use crate::grid::{ProcGrid, Truncation};
+use crate::mpi::CopyMode;
 use crate::tune::{MachineProfile, TuneOptions};
 use crate::util::error::{Error, Result};
 
@@ -87,6 +88,11 @@ pub struct RunConfig {
     /// modes; with `pgrid = "auto"` the tuner prices that reduced wire
     /// volume.
     pub truncation: Option<Truncation>,
+    /// Exchange copy discipline (`options.copy_path`): `"single-copy"`
+    /// routes intra-node blocks through pre-registered receive windows,
+    /// `"mailbox"` forces the tagged-mailbox path, `"env"` (default)
+    /// defers to `P3DFFT_COPY` (single-copy when unset).
+    pub copy_path: Option<CopyMode>,
     /// LRU plan-cache capacity of the transform service
     /// (`service.plan_cache_entries`), in interned (spec, precision)
     /// entries. `0` is rejected, matching the `overlap_chunks`
@@ -113,6 +119,7 @@ impl Default for RunConfig {
             precision: "f64".into(),
             cores_per_node: None,
             truncation: None,
+            copy_path: None,
             plan_cache_entries: 16,
             arena_bytes: 256 << 20,
         }
@@ -228,6 +235,18 @@ impl RunConfig {
             })?;
             rc.truncation = parse_truncation(s)?;
         }
+        if let Some(v) = c.get("options.copy_path") {
+            rc.copy_path = match v.as_str() {
+                Some("single-copy") | Some("single_copy") => Some(CopyMode::SingleCopy),
+                Some("mailbox") => Some(CopyMode::Mailbox),
+                Some("env") => None,
+                _ => {
+                    return Err(Error::InvalidConfig(
+                        "options.copy_path must be single-copy|mailbox|env".into(),
+                    ))
+                }
+            };
+        }
         if let Some(v) = c.get("service.plan_cache_entries") {
             rc.plan_cache_entries = match v.as_int() {
                 Some(n) if n >= 1 => n as usize,
@@ -285,6 +304,7 @@ impl RunConfig {
             "options.artifacts_dir" => self.artifacts_dir = tmp.artifacts_dir,
             "options.precision" => self.precision = tmp.precision,
             "options.truncation" => self.truncation = tmp.truncation,
+            "options.copy_path" => self.copy_path = tmp.copy_path,
             "topology.cores_per_node" => self.cores_per_node = tmp.cores_per_node,
             "service.plan_cache_entries" => self.plan_cache_entries = tmp.plan_cache_entries,
             "service.arena_bytes" => self.arena_bytes = tmp.arena_bytes,
@@ -385,6 +405,7 @@ impl RunConfig {
                     explore_overlap: matches!(self.overlap_chunks, ChunkSetting::Auto),
                     cores_per_node: self.cores_per_node,
                     truncation: self.truncation,
+                    copy: self.copy_path.unwrap_or_else(CopyMode::from_env),
                     ..TuneOptions::default()
                 };
                 let report = crate::tune::autotune(self.dims, nprocs, &opts)?;
@@ -402,7 +423,8 @@ impl RunConfig {
             .with_stride1(self.stride1)
             .with_overlap_chunks(chunks)?
             .with_cores_per_node(self.cores_per_node)?
-            .with_engine(engine);
+            .with_engine(engine)
+            .with_copy_path(self.copy_path);
         if let Some(t) = self.truncation {
             spec = spec.with_truncation(t);
         }
@@ -544,6 +566,34 @@ precision = "f32"
         assert_eq!(rc.truncation, Some(Truncation::Spherical23));
         rc.apply_override("options.truncation", "none").unwrap();
         assert_eq!(rc.truncation, None);
+    }
+
+    #[test]
+    fn copy_path_parses_and_plumbs() {
+        let c = ParsedConfig::parse("[options]\ncopy_path = \"mailbox\"\n").unwrap();
+        let rc = RunConfig::from_parsed(&c).unwrap();
+        assert_eq!(rc.copy_path, Some(CopyMode::Mailbox));
+        let spec = rc.to_spec().unwrap();
+        assert_eq!(spec.opts.copy_path, Some(CopyMode::Mailbox));
+
+        let c = ParsedConfig::parse("[options]\ncopy_path = \"single-copy\"\n").unwrap();
+        assert_eq!(RunConfig::from_parsed(&c).unwrap().copy_path, Some(CopyMode::SingleCopy));
+
+        // `env` defers to P3DFFT_COPY, matching the default.
+        let c = ParsedConfig::parse("[options]\ncopy_path = \"env\"\n").unwrap();
+        assert_eq!(RunConfig::from_parsed(&c).unwrap().copy_path, None);
+        assert_eq!(RunConfig::default().copy_path, None);
+
+        for bad in ["copy_path = \"zerocopy\"", "copy_path = 3"] {
+            let c = ParsedConfig::parse(&format!("[options]\n{bad}\n")).unwrap();
+            assert!(RunConfig::from_parsed(&c).is_err(), "{bad:?} must be rejected");
+        }
+
+        let mut rc = RunConfig::default();
+        rc.apply_override("options.copy_path", "mailbox").unwrap();
+        assert_eq!(rc.copy_path, Some(CopyMode::Mailbox));
+        rc.apply_override("options.copy_path", "env").unwrap();
+        assert_eq!(rc.copy_path, None);
     }
 
     #[test]

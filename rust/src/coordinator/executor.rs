@@ -145,7 +145,14 @@ where
         timer.max_merge(&t);
         per_rank.push(r);
     }
-    Ok(RunReport { per_rank, timer, wall, bytes: fabric.bytes_total() })
+    Ok(RunReport {
+        per_rank,
+        timer,
+        wall,
+        bytes: fabric.bytes_total(),
+        bytes_copied: fabric.bytes_copied_total(),
+        copies_elided: fabric.copies_elided_total(),
+    })
 }
 
 #[cfg(test)]

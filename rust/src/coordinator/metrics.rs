@@ -15,6 +15,14 @@ pub struct RunReport<R> {
     pub wall: f64,
     /// Total bytes pushed through the fabric.
     pub bytes: u64,
+    /// Total payload bytes memcpy'd while moving messages (pack writes,
+    /// mailbox insert/extract, window fills). The wire volume [`Self::bytes`]
+    /// is identical across copy modes; this is the number the single-copy
+    /// exchange shrinks.
+    pub bytes_copied: u64,
+    /// Bytes of copying the single-copy exchange elided relative to the
+    /// mailbox path (zero when running with `P3DFFT_COPY=mailbox`).
+    pub copies_elided: u64,
 }
 
 impl<R> RunReport<R> {
@@ -68,7 +76,14 @@ mod tests {
         t.add(Stage::Exchange, 1.0);
         t.add(Stage::Overlap, 0.5);
         t.add(Stage::Link, 0.25);
-        let r = RunReport { per_rank: vec![(), ()], timer: t, wall: 3.5, bytes: 100 };
+        let r = RunReport {
+            per_rank: vec![(), ()],
+            timer: t,
+            wall: 3.5,
+            bytes: 100,
+            bytes_copied: 300,
+            copies_elided: 0,
+        };
         assert_eq!(r.compute(), 2.0);
         assert_eq!(r.comm(), 1.0, "hidden overlap time must not count as comm");
         assert_eq!(r.overlap(), 0.5);

@@ -13,6 +13,13 @@
 //! `Vec` move, no copy), works on it, and [`BufferPool::restore`]s it.
 //! Taking a slot that is already out is a pipeline-construction bug and
 //! panics with the slot name.
+//!
+//! Stages that receive in place on the single-copy exchange path (the
+//! Y→Z+XYZ forward stage registers the final Z-pencil output itself as
+//! the receive window) still *request* their `recv` slot at compile time
+//! — the layout is copy-mode-independent, so one pool serves both
+//! disciplines — but skip taking it at run time, leaving the slot's
+//! allocation untouched in the pool.
 
 use crate::fft::{Complex, Real};
 

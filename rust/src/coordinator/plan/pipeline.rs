@@ -14,6 +14,7 @@
 
 use crate::fft::{C2cPlan, C2rPlan, Direction, R2cPlan, Real};
 use crate::grid::{Decomp, PruneRule};
+use crate::mpi::CopyMode;
 use crate::transpose::{ExchangeOptions, TransposeXY, TransposeYZ};
 use crate::util::error::{Error, Result};
 
@@ -128,7 +129,10 @@ pub fn compile<T: Real + PjrtExec>(
         tyz = tyz.with_prune(r, yp.offsets[1]);
     }
     let z_band = rule.as_ref().map(|r| r.z_prune_band());
-    let xopts = ExchangeOptions { use_even: spec.opts.use_even };
+    // Copy discipline is resolved once at compile time: an explicit
+    // options.copy_path wins, else the P3DFFT_COPY environment default.
+    let copy = spec.opts.copy_path.unwrap_or_else(CopyMode::from_env);
+    let xopts = ExchangeOptions { use_even: spec.opts.use_even, copy };
     let k = spec.opts.overlap_chunks.max(1);
     // Chunked overlap requires contiguous invariant-axis slabs (STRIDE1)
     // and per-chunk batch shapes (native engine: the PJRT artifacts are
@@ -339,7 +343,8 @@ pub fn compile_convolve<T: Real + PjrtExec>(
         tyz = tyz.with_prune(r, yp.offsets[1]);
     }
     let z_band = rule.as_ref().map(|r| r.z_prune_band());
-    let xopts = ExchangeOptions { use_even: spec.opts.use_even };
+    let copy = spec.opts.copy_path.unwrap_or_else(CopyMode::from_env);
+    let xopts = ExchangeOptions { use_even: spec.opts.use_even, copy };
     let buf_len = txy.buf_len(xopts).max(tyz.buf_len(xopts));
 
     let r2c = R2cPlan::<T>::new(spec.nx);

@@ -29,8 +29,9 @@
 use std::time::Instant;
 
 use crate::fft::{C2cPlan, C2rPlan, Complex, Dct1Plan, Direction, Dst1Plan, R2cPlan, Real};
-use crate::mpi::Comm;
-use crate::transpose::{ChunkPlan, ExchangeOptions, TransposeXY, TransposeYZ};
+use crate::mpi::collectives::WinRecv;
+use crate::mpi::{Comm, CopyMode};
+use crate::transpose::{ChunkMeta, ChunkPlan, ExchangeOptions, TransposeXY, TransposeYZ};
 use crate::util::error::{Error, Result};
 use crate::util::timer::{Stage, StageTimer};
 
@@ -92,6 +93,73 @@ fn credit_overlap(timer: &mut StageTimer, mark: PostMark) {
     let in_flight = mark.at.elapsed().as_secs_f64();
     let exposed_since = timer.get(Stage::Exchange) - mark.exch_acc;
     timer.add(Stage::Overlap, (in_flight - exposed_since).max(0.0));
+}
+
+/// Charge one chunk's pack writes to `bytes_copied` (the mailbox chunked
+/// path; the windowed path accounts per peer inside
+/// [`pack_and_post_chunk_win`]).
+fn note_pack_copies<T: Real>(comm: &Comm, scounts: &[usize]) {
+    let total: usize = scounts.iter().sum();
+    comm.note_copied((total * std::mem::size_of::<Complex<T>>()) as u64);
+}
+
+/// Single-copy counterpart of the stages' `pack_and_post`: inter-node
+/// blocks are packed into `send` and posted through the mailbox first
+/// (buffered, never blocks — remote drains are never stalled behind our
+/// window fills), then every intra-node block *including self* is packed
+/// straight into the peer's pre-registered chunk window — one copy where
+/// the mailbox pays pack + insert + extract. `pack(j, dst)` is the
+/// stage's pack kernel for peer `j`; `salt` is the chunk index.
+#[allow(clippy::too_many_arguments)]
+fn pack_and_post_chunk_win<T: Real>(
+    comm: &Comm,
+    m: &ChunkMeta,
+    peers: usize,
+    salt: u64,
+    timer: &mut StageTimer,
+    send: &mut [Complex<T>],
+    mut pack: impl FnMut(usize, &mut [Complex<T>]),
+) -> PostMark {
+    let elem = std::mem::size_of::<Complex<T>>() as u64;
+    timer.time(Stage::Pack, || {
+        for j in 0..peers {
+            if !comm.peer_is_intra(j) {
+                let n = m.scounts[j];
+                pack(j, &mut send[m.sdispls[j]..m.sdispls[j] + n]);
+                comm.note_copied(n as u64 * elem);
+            }
+        }
+    });
+    timer.time(Stage::Exchange, || {
+        comm.post_chunk_sends_inter(salt, send, &m.scounts, &m.sdispls);
+    });
+    timer.time(Stage::Pack, || {
+        for j in 0..peers {
+            if comm.peer_is_intra(j) {
+                let n = m.scounts[j];
+                comm.fill_window_with(j, salt, n, |w: &mut [Complex<T>]| pack(j, w));
+                comm.note_elided(2 * n as u64 * elem);
+            }
+        }
+    });
+    mark_post(timer)
+}
+
+/// Single-copy counterpart of the stages' drain: await the intra window
+/// fills and land inter mailboxes through the guard, crediting hidden
+/// in-flight time exactly as the mailbox drain does.
+fn drain_chunk_win<T: Real>(
+    comm: &Comm,
+    m: &ChunkMeta,
+    salt: u64,
+    timer: &mut StageTimer,
+    posted: PostMark,
+    win: &mut WinRecv<'_, Complex<T>>,
+) {
+    credit_overlap(timer, posted);
+    timer.time(Stage::Exchange, || {
+        comm.drain_chunk_recvs_win(salt, win, &m.rcounts, &m.rdispls);
+    });
 }
 
 /// Zero the pruned z-bin band in every z-line of `data` (z-lines are
@@ -450,10 +518,79 @@ impl<T: Real> XyFwdStage<T> {
                 );
             }
         });
+        note_pack_copies::<T>(row, &m.scounts);
         timer.time(Stage::Exchange, || {
             row.post_chunk_sends(c as u64, send, &m.scounts, &m.sdispls);
         });
         mark_post(timer)
+    }
+
+    fn pack_and_post_win(
+        &self,
+        c: usize,
+        row: &Comm,
+        timer: &mut StageTimer,
+        xspec: &[Complex<T>],
+        send: &mut [Complex<T>],
+    ) -> PostMark {
+        let m = &self.chunks.chunks[c];
+        pack_and_post_chunk_win(row, m, self.txy.m1, c as u64, timer, send, |j, dst| {
+            self.txy.pack_fwd_win(xspec, j, m.range.start, m.range.end, dst)
+        })
+    }
+
+    /// Chunked overlap on the single-copy path: every chunk's intra-node
+    /// receive windows are registered up front, senders pack straight
+    /// into them, and the drain awaits fills instead of draining
+    /// mailboxes. Same chunk schedule, same unpack, bit-identical output.
+    #[allow(clippy::too_many_arguments)]
+    fn run_overlapped_win(
+        &self,
+        row: &Comm,
+        timer: &mut StageTimer,
+        xspec: &[Complex<T>],
+        ybuf: &mut [Complex<T>],
+        send: &mut [Complex<T>],
+        recv: &mut [Complex<T>],
+        scratch: &mut [Complex<T>],
+    ) {
+        let k = self.chunks.len();
+        let h_loc = self.txy.h_loc();
+        let mut win = WinRecv::new(row, recv);
+        for (c, m) in self.chunks.chunks.iter().enumerate() {
+            row.register_chunk_windows(c as u64, &mut win, &m.rcounts, &m.rdispls);
+        }
+        let mut posted = Vec::with_capacity(k);
+        posted.push(self.pack_and_post_win(0, row, timer, xspec, send));
+        for c in 0..k {
+            if c + 1 < k {
+                let t = self.pack_and_post_win(c + 1, row, timer, xspec, send);
+                posted.push(t);
+            }
+            let m = &self.chunks.chunks[c];
+            drain_chunk_win(row, m, c as u64, timer, posted[c], &mut win);
+            timer.time(Stage::Unpack, || {
+                for j in 0..self.txy.m1 {
+                    self.txy.unpack_fwd_win(
+                        win.slice(m.rdispls[j], m.rcounts[j]),
+                        j,
+                        m.range.start,
+                        m.range.end,
+                        ybuf,
+                    );
+                }
+            });
+            y_fft_native(
+                &self.fy,
+                m.range.clone(),
+                h_loc,
+                self.txy.is_pruned().then(|| self.txy.hk_loc()),
+                self.ny,
+                ybuf,
+                scratch,
+                timer,
+            );
+        }
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -467,6 +604,9 @@ impl<T: Real> XyFwdStage<T> {
         recv: &mut [Complex<T>],
         scratch: &mut [Complex<T>],
     ) {
+        if self.opts.copy == CopyMode::SingleCopy {
+            return self.run_overlapped_win(row, timer, xspec, ybuf, send, recv, scratch);
+        }
         let k = self.chunks.len();
         let h_loc = self.txy.h_loc();
         let mut posted = Vec::with_capacity(k);
@@ -616,10 +756,74 @@ impl<T: Real> YzFwdStage<T> {
                 );
             }
         });
+        note_pack_copies::<T>(col, &m.scounts);
         timer.time(Stage::Exchange, || {
             col.post_chunk_sends(c as u64, send, &m.scounts, &m.sdispls);
         });
         mark_post(timer)
+    }
+
+    fn pack_and_post_win(
+        &self,
+        c: usize,
+        col: &Comm,
+        timer: &mut StageTimer,
+        ybuf: &[Complex<T>],
+        send: &mut [Complex<T>],
+    ) -> PostMark {
+        let m = &self.chunks.chunks[c];
+        pack_and_post_chunk_win(col, m, self.tyz.m2, c as u64, timer, send, |j, dst| {
+            self.tyz.pack_fwd_win(ybuf, j, m.range.start, m.range.end, dst)
+        })
+    }
+
+    /// Single-copy chunked overlap (see [`XyFwdStage::run_overlapped_win`]).
+    #[allow(clippy::too_many_arguments)]
+    fn run_overlapped_win(
+        &self,
+        col: &Comm,
+        timer: &mut StageTimer,
+        real_scratch: &mut [T],
+        ybuf: &[Complex<T>],
+        output: &mut [Complex<T>],
+        send: &mut [Complex<T>],
+        recv: &mut [Complex<T>],
+        scratch: &mut [Complex<T>],
+    ) {
+        let k = self.chunks.len();
+        if self.tyz.is_pruned() {
+            timer.time(Stage::Unpack, || output.fill(Complex::zero()));
+        }
+        let mut win = WinRecv::new(col, recv);
+        for (c, m) in self.chunks.chunks.iter().enumerate() {
+            col.register_chunk_windows(c as u64, &mut win, &m.rcounts, &m.rdispls);
+        }
+        let mut posted = Vec::with_capacity(k);
+        posted.push(self.pack_and_post_win(0, col, timer, ybuf, send));
+        for c in 0..k {
+            if c + 1 < k {
+                let t = self.pack_and_post_win(c + 1, col, timer, ybuf, send);
+                posted.push(t);
+            }
+            let m = &self.chunks.chunks[c];
+            drain_chunk_win(col, m, c as u64, timer, posted[c], &mut win);
+            timer.time(Stage::Unpack, || {
+                for j in 0..self.tyz.m2 {
+                    self.tyz.unpack_fwd_win(
+                        win.slice(m.rdispls[j], m.rcounts[j]),
+                        j,
+                        m.range.start,
+                        m.range.end,
+                        output,
+                    );
+                }
+            });
+            let slab = &mut output[m.range.start * self.zplane..m.range.end * self.zplane];
+            self.third.apply_native(false, slab, scratch, real_scratch, timer);
+            if let Some(band) = &self.z_band {
+                timer.time(Stage::Other, || mask_z_band(slab, self.third.n, band.clone()));
+            }
+        }
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -634,6 +838,18 @@ impl<T: Real> YzFwdStage<T> {
         recv: &mut [Complex<T>],
         scratch: &mut [Complex<T>],
     ) {
+        if self.opts.copy == CopyMode::SingleCopy {
+            return self.run_overlapped_win(
+                col,
+                timer,
+                real_scratch,
+                ybuf,
+                output,
+                send,
+                recv,
+                scratch,
+            );
+        }
         let k = self.chunks.len();
         if self.tyz.is_pruned() {
             // The pruned unpack writes only retained (kx, ky) pairs; the
@@ -783,10 +999,25 @@ impl<T: Real> YzBwdStage<T> {
                 );
             }
         });
+        note_pack_copies::<T>(col, &m.scounts);
         timer.time(Stage::Exchange, || {
             col.post_chunk_sends(c as u64, send, &m.scounts, &m.sdispls);
         });
         mark_post(timer)
+    }
+
+    fn pack_and_post_win(
+        &self,
+        c: usize,
+        col: &Comm,
+        timer: &mut StageTimer,
+        zbuf: &[Complex<T>],
+        send: &mut [Complex<T>],
+    ) -> PostMark {
+        let m = &self.chunks.chunks[c];
+        pack_and_post_chunk_win(col, m, self.tyz.m2, c as u64, timer, send, |j, dst| {
+            self.tyz.pack_bwd_win(zbuf, j, m.range.start, m.range.end, dst)
+        })
     }
 
     fn drain_and_unpack(
@@ -816,6 +1047,65 @@ impl<T: Real> YzBwdStage<T> {
         });
     }
 
+    fn drain_and_unpack_win(
+        &self,
+        c: usize,
+        col: &Comm,
+        timer: &mut StageTimer,
+        posted: &[PostMark],
+        win: &mut WinRecv<'_, Complex<T>>,
+        ybuf: &mut [Complex<T>],
+    ) {
+        let m = &self.chunks.chunks[c];
+        drain_chunk_win(col, m, c as u64, timer, posted[c], win);
+        timer.time(Stage::Unpack, || {
+            for j in 0..self.tyz.m2 {
+                self.tyz.unpack_bwd_win(
+                    win.slice(m.rdispls[j], m.rcounts[j]),
+                    j,
+                    m.range.start,
+                    m.range.end,
+                    ybuf,
+                );
+            }
+        });
+    }
+
+    /// Single-copy chunked overlap (see [`XyFwdStage::run_overlapped_win`]).
+    #[allow(clippy::too_many_arguments)]
+    fn run_overlapped_win(
+        &self,
+        col: &Comm,
+        timer: &mut StageTimer,
+        real_scratch: &mut [T],
+        zbuf: &mut [Complex<T>],
+        ybuf: &mut [Complex<T>],
+        send: &mut [Complex<T>],
+        recv: &mut [Complex<T>],
+        scratch: &mut [Complex<T>],
+    ) {
+        let k = self.chunks.len();
+        if self.tyz.is_pruned() {
+            timer.time(Stage::Unpack, || ybuf.fill(Complex::zero()));
+        }
+        let mut win = WinRecv::new(col, recv);
+        for (c, m) in self.chunks.chunks.iter().enumerate() {
+            col.register_chunk_windows(c as u64, &mut win, &m.rcounts, &m.rdispls);
+        }
+        let mut posted = Vec::with_capacity(k);
+        for c in 0..k {
+            let m = &self.chunks.chunks[c];
+            let slab = &mut zbuf[m.range.start * self.zplane..m.range.end * self.zplane];
+            self.third.apply_native(true, slab, scratch, real_scratch, timer);
+            let t = self.pack_and_post_win(c, col, timer, zbuf, send);
+            posted.push(t);
+            if c > 0 {
+                self.drain_and_unpack_win(c - 1, col, timer, &posted, &mut win, ybuf);
+            }
+        }
+        self.drain_and_unpack_win(k - 1, col, timer, &posted, &mut win, ybuf);
+    }
+
     #[allow(clippy::too_many_arguments)]
     fn run_overlapped(
         &self,
@@ -828,6 +1118,10 @@ impl<T: Real> YzBwdStage<T> {
         recv: &mut [Complex<T>],
         scratch: &mut [Complex<T>],
     ) {
+        if self.opts.copy == CopyMode::SingleCopy {
+            return self
+                .run_overlapped_win(col, timer, real_scratch, zbuf, ybuf, send, recv, scratch);
+        }
         let k = self.chunks.len();
         if self.tyz.is_pruned() {
             // The pruned unpack writes only retained (kx, ky) lines.
@@ -963,10 +1257,25 @@ impl<T: Real> XyBwdStage<T> {
                 );
             }
         });
+        note_pack_copies::<T>(row, &m.scounts);
         timer.time(Stage::Exchange, || {
             row.post_chunk_sends(c as u64, send, &m.scounts, &m.sdispls);
         });
         mark_post(timer)
+    }
+
+    fn pack_and_post_win(
+        &self,
+        c: usize,
+        row: &Comm,
+        timer: &mut StageTimer,
+        ybuf: &[Complex<T>],
+        send: &mut [Complex<T>],
+    ) -> PostMark {
+        let m = &self.chunks.chunks[c];
+        pack_and_post_chunk_win(row, m, self.txy.m1, c as u64, timer, send, |j, dst| {
+            self.txy.pack_bwd_win(ybuf, j, m.range.start, m.range.end, dst)
+        })
     }
 
     fn drain_and_unpack(
@@ -996,6 +1305,73 @@ impl<T: Real> XyBwdStage<T> {
         });
     }
 
+    fn drain_and_unpack_win(
+        &self,
+        c: usize,
+        row: &Comm,
+        timer: &mut StageTimer,
+        posted: &[PostMark],
+        win: &mut WinRecv<'_, Complex<T>>,
+        xspec: &mut [Complex<T>],
+    ) {
+        let m = &self.chunks.chunks[c];
+        drain_chunk_win(row, m, c as u64, timer, posted[c], win);
+        timer.time(Stage::Unpack, || {
+            for j in 0..self.txy.m1 {
+                self.txy.unpack_bwd_win(
+                    win.slice(m.rdispls[j], m.rcounts[j]),
+                    j,
+                    m.range.start,
+                    m.range.end,
+                    xspec,
+                );
+            }
+        });
+    }
+
+    /// Single-copy chunked overlap (see [`XyFwdStage::run_overlapped_win`]).
+    #[allow(clippy::too_many_arguments)]
+    fn run_overlapped_win(
+        &self,
+        row: &Comm,
+        timer: &mut StageTimer,
+        ybuf: &mut [Complex<T>],
+        xspec: &mut [Complex<T>],
+        send: &mut [Complex<T>],
+        recv: &mut [Complex<T>],
+        scratch: &mut [Complex<T>],
+    ) {
+        let k = self.chunks.len();
+        let h_loc = self.txy.h_loc();
+        if self.txy.is_pruned() {
+            timer.time(Stage::Unpack, || xspec.fill(Complex::zero()));
+        }
+        let mut win = WinRecv::new(row, recv);
+        for (c, m) in self.chunks.chunks.iter().enumerate() {
+            row.register_chunk_windows(c as u64, &mut win, &m.rcounts, &m.rdispls);
+        }
+        let mut posted = Vec::with_capacity(k);
+        for c in 0..k {
+            let m = &self.chunks.chunks[c];
+            y_fft_native(
+                &self.fy,
+                m.range.clone(),
+                h_loc,
+                self.txy.is_pruned().then(|| self.txy.hk_loc()),
+                self.ny,
+                ybuf,
+                scratch,
+                timer,
+            );
+            let t = self.pack_and_post_win(c, row, timer, ybuf, send);
+            posted.push(t);
+            if c > 0 {
+                self.drain_and_unpack_win(c - 1, row, timer, &posted, &mut win, xspec);
+            }
+        }
+        self.drain_and_unpack_win(k - 1, row, timer, &posted, &mut win, xspec);
+    }
+
     #[allow(clippy::too_many_arguments)]
     fn run_overlapped(
         &self,
@@ -1007,6 +1383,9 @@ impl<T: Real> XyBwdStage<T> {
         recv: &mut [Complex<T>],
         scratch: &mut [Complex<T>],
     ) {
+        if self.opts.copy == CopyMode::SingleCopy {
+            return self.run_overlapped_win(row, timer, ybuf, xspec, send, recv, scratch);
+        }
         let k = self.chunks.len();
         let h_loc = self.txy.h_loc();
         if self.txy.is_pruned() {
@@ -1194,7 +1573,12 @@ impl<T: Real + PjrtExec> PipelineStage<T> for YzFwdXyzStage<T> {
     fn run(&self, ctx: &mut StageCtx<'_, T>) -> Result<()> {
         let ybuf = ctx.pool.take(self.ybuf);
         let mut send = ctx.pool.take(self.send);
-        let mut recv = ctx.pool.take(self.recv);
+        // On the single-copy path `forward_xyz` registers its receive
+        // windows directly over the Z-pencil output (the unpack is one
+        // contiguous slab copy per peer, so data lands in place) and never
+        // touches the scratch recv buffer — skip the pool slot entirely.
+        let windowed = self.opts.copy == CopyMode::SingleCopy;
+        let mut recv = if windowed { Vec::new() } else { ctx.pool.take(self.recv) };
         let mut scratch = ctx.pool.take(self.scratch);
         let res = (|| -> Result<()> {
             let output = ctx
@@ -1220,7 +1604,9 @@ impl<T: Real + PjrtExec> PipelineStage<T> for YzFwdXyzStage<T> {
         })();
         ctx.pool.restore(self.ybuf, ybuf);
         ctx.pool.restore(self.send, send);
-        ctx.pool.restore(self.recv, recv);
+        if !windowed {
+            ctx.pool.restore(self.recv, recv);
+        }
         ctx.pool.restore(self.scratch, scratch);
         res
     }

@@ -4,6 +4,7 @@
 use std::path::PathBuf;
 
 use crate::grid::{Decomp, ProcGrid, Truncation};
+use crate::mpi::CopyMode;
 use crate::tune::{TuneOptions, TuneReport};
 use crate::util::error::{Error, Result};
 
@@ -70,6 +71,14 @@ pub struct Options {
     /// Requires STRIDE1 layout, the native engine, and an FFT third
     /// transform. `None` (default) transports the full grid.
     pub truncation: Option<Truncation>,
+    /// Exchange copy discipline: `Some(CopyMode::SingleCopy)` routes
+    /// intra-node blocks through pre-registered receive windows (one copy
+    /// instead of the mailbox's pack + insert + extract);
+    /// `Some(CopyMode::Mailbox)` forces the tagged-mailbox path
+    /// everywhere. `None` (default) defers to the `P3DFFT_COPY`
+    /// environment (single-copy when unset). Payloads are bit-identical
+    /// in both modes.
+    pub copy_path: Option<CopyMode>,
 }
 
 impl Default for Options {
@@ -81,6 +90,7 @@ impl Default for Options {
             engine: EngineKind::Native,
             cores_per_node: None,
             truncation: None,
+            copy_path: None,
         }
     }
 }
@@ -169,6 +179,13 @@ impl PlanSpec {
         self
     }
 
+    /// Builder: exchange copy discipline (`None` defers to the
+    /// `P3DFFT_COPY` environment; single-copy when unset).
+    pub fn with_copy_path(mut self, copy: Option<CopyMode>) -> Self {
+        self.opts.copy_path = copy;
+        self
+    }
+
     /// Plan-time autotune: enumerate every Eq.-2-feasible `(m1, m2)`
     /// factorization of `nprocs` (crossed with `use_even` and
     /// `overlap_chunks` candidates), score them on `opts.profile`'s
@@ -230,6 +247,17 @@ mod tests {
         assert_eq!(o.engine, EngineKind::Native);
         assert_eq!(o.cores_per_node, None, "topology defers to the environment");
         assert_eq!(o.truncation, None, "full-grid transport is the default");
+        assert_eq!(o.copy_path, None, "copy discipline defers to the environment");
+    }
+
+    #[test]
+    fn copy_path_builder_sets_option() {
+        let s = PlanSpec::new([8, 8, 8], ProcGrid::new(2, 2))
+            .unwrap()
+            .with_copy_path(Some(CopyMode::Mailbox));
+        assert_eq!(s.opts.copy_path, Some(CopyMode::Mailbox));
+        let s = s.with_copy_path(None);
+        assert_eq!(s.opts.copy_path, None);
     }
 
     #[test]

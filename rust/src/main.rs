@@ -176,6 +176,13 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
         report.bytes as f64 / (1024.0 * 1024.0),
         100.0 * report.timer.get(Stage::Exchange) / report.timer.total().max(1e-12)
     );
+    if verbose {
+        println!(
+            "copy traffic: {:.2} MiB memcpy'd, {:.2} MiB elided by single-copy windows",
+            report.bytes_copied as f64 / (1024.0 * 1024.0),
+            report.copies_elided as f64 / (1024.0 * 1024.0)
+        );
+    }
     if report.timer.get(Stage::Overlap) > 0.0 {
         println!(
             "overlapped exchange (in flight while packing/computing): {:.4}s",
@@ -251,6 +258,7 @@ fn cmd_tune(args: &[String]) -> anyhow::Result<()> {
         refine_iters: rc.iterations,
         cores_per_node,
         truncation,
+        copy: rc.copy_path.unwrap_or_else(p3dfft::mpi::CopyMode::from_env),
         ..TuneOptions::default()
     };
     let (spec, mut report) = PlanSpec::autotune(rc.dims, p, &opts)?;

@@ -42,6 +42,15 @@ const COLL_TAG_BASE: u64 = 1 << 40;
 /// salt because the fabric's mailboxes are FIFO per (src, dst, tag).
 const CHUNK_TAG_BASE: u64 = 1 << 41;
 
+/// Tag namespace for single-copy receive windows (the fabric's window
+/// registry, not a mailbox). Salted like the chunk tags: blocking
+/// exchanges use salt 0, the chunked overlap path salts by chunk index so
+/// every in-flight chunk keeps a distinct key. Successive exchanges may
+/// reuse a salt: a fill claims only an *unfilled* registration, and the
+/// receiver retires each key (await) before registering it again, so the
+/// rendezvous is FIFO per (src, dst, tag) just like the mailboxes.
+pub(crate) const WIN_TAG_BASE: u64 = 1 << 42;
+
 impl Comm {
     /// Peer-visiting order (as pairwise offsets `0..p`) for this
     /// communicator's exchanges: identity on a flat fabric, intra-node
@@ -95,6 +104,7 @@ impl Comm {
         // all posted before any receive, any order is deadlock-free and
         // payload-identical.
         recv[me * block..(me + 1) * block].copy_from_slice(&send[me * block..(me + 1) * block]);
+        self.note_copied((block * std::mem::size_of::<T>()) as u64);
         for s in self.chunk_peer_offsets(false) {
             let j = (me + s) % p;
             if j != me {
@@ -128,6 +138,7 @@ impl Comm {
         debug_assert_eq!(scounts[me], rcounts[me], "self block must be symmetric");
         recv[rdispls[me]..rdispls[me] + rcounts[me]]
             .copy_from_slice(&send[sdispls[me]..sdispls[me] + scounts[me]]);
+        self.note_copied((rcounts[me] * std::mem::size_of::<T>()) as u64);
         for s in self.chunk_peer_offsets(false) {
             let j = (me + s) % p;
             if j != me {
@@ -154,6 +165,7 @@ impl Comm {
         let me = self.rank();
         let tag = COLL_TAG_BASE + 7;
         recv[me * block..(me + 1) * block].copy_from_slice(&send[me * block..(me + 1) * block]);
+        self.note_copied((block * std::mem::size_of::<T>()) as u64);
         for s in 1..p {
             let to = (me + s) % p;
             let from = (me + p - s) % p;
@@ -183,6 +195,7 @@ impl Comm {
         let tag = COLL_TAG_BASE + 8;
         recv[rdispls[me]..rdispls[me] + rcounts[me]]
             .copy_from_slice(&send[sdispls[me]..sdispls[me] + scounts[me]]);
+        self.note_copied((rcounts[me] * std::mem::size_of::<T>()) as u64);
         for s in 1..p {
             let to = (me + s) % p;
             let from = (me + p - s) % p;
@@ -251,6 +264,75 @@ impl Comm {
         for s in self.chunk_peer_offsets(true) {
             let from = (me + p - s) % p;
             self.recv_into(from, tag, &mut recv[rdispls[from]..rdispls[from] + rcounts[from]]);
+        }
+    }
+
+    /// Single-copy counterpart of the chunked trio: register one chunk's
+    /// receive windows (every intra-node peer *including self* — the
+    /// mailbox chunked path routes the self block through the mailbox, so
+    /// on this path it rides a window too). `salt` is the chunk index;
+    /// distinct chunks get distinct window tags, so all of a transpose's
+    /// chunks can be registered up front before any pack begins — the
+    /// no-deadlock invariant (fills wait only on registration, and
+    /// registration never blocks).
+    pub(crate) fn register_chunk_windows<T: Pod>(
+        &self,
+        salt: u64,
+        win: &mut WinRecv<'_, T>,
+        rcounts: &[usize],
+        rdispls: &[usize],
+    ) {
+        let p = self.size();
+        let me = self.rank();
+        for s in self.chunk_peer_offsets(true) {
+            let from = (me + p - s) % p;
+            if self.peer_is_intra(from) {
+                win.register(from, salt, rdispls[from], rcounts[from]);
+            }
+        }
+    }
+
+    /// [`Self::post_chunk_sends`] restricted to inter-node peers — the
+    /// intra-node blocks travel by window fill instead (the caller packs
+    /// straight into the peer's registered window under the same salt).
+    pub(crate) fn post_chunk_sends_inter<T: Pod>(
+        &self,
+        salt: u64,
+        send: &[T],
+        scounts: &[usize],
+        sdispls: &[usize],
+    ) {
+        let p = self.size();
+        let me = self.rank();
+        let tag = CHUNK_TAG_BASE + salt;
+        for s in self.chunk_peer_offsets(false) {
+            let to = (me + s) % p;
+            if !self.peer_is_intra(to) {
+                self.send(to, tag, &send[sdispls[to]..sdispls[to] + scounts[to]]);
+            }
+        }
+    }
+
+    /// [`Self::drain_chunk_recvs`] on the single-copy path: await the
+    /// intra-node window fills, drain inter-node mailboxes into the
+    /// guarded buffer. Same mirrored intra-first peer order, same absence
+    /// of a barrier — the chunk data dependency orders the exchange.
+    pub(crate) fn drain_chunk_recvs_win<T: Pod>(
+        &self,
+        salt: u64,
+        win: &mut WinRecv<'_, T>,
+        rcounts: &[usize],
+        rdispls: &[usize],
+    ) {
+        let p = self.size();
+        let me = self.rank();
+        for s in self.chunk_peer_offsets(true) {
+            let from = (me + p - s) % p;
+            if self.peer_is_intra(from) {
+                win.await_win(from, salt);
+            } else {
+                win.recv_into(from, CHUNK_TAG_BASE + salt, rdispls[from], rcounts[from]);
+            }
         }
     }
 
@@ -335,6 +417,141 @@ impl Comm {
         }
     }
 
+    /// Whether local rank `r` shares a node with this rank (always true
+    /// on a flat fabric) — the eligibility test for the single-copy path.
+    pub fn peer_is_intra(&self, r: usize) -> bool {
+        self.fabric().same_node(self.world_rank(), self.world_rank_of(r))
+    }
+
+    /// Charge `bytes` of pack/self-copy memcpy to this rank's
+    /// `bytes_copied` counter. Mailbox insert/extract and window fills
+    /// are counted inside the fabric; the layers that pack or memcpy
+    /// outside it note their own writes through this.
+    pub(crate) fn note_copied(&self, bytes: u64) {
+        self.fabric().note_copied(self.world_rank(), bytes);
+    }
+
+    /// Record `bytes` of copying the single-copy path elided relative to
+    /// the mailbox discipline.
+    pub(crate) fn note_elided(&self, bytes: u64) {
+        self.fabric().note_elided(self.world_rank(), bytes);
+    }
+
+    /// Rendezvous-fill local rank `dst`'s registered window (same `salt`
+    /// as the registration), handing the sender's closure a `&mut [T]`
+    /// view of `count` elements of the *receiver's own buffer* — the one
+    /// copy of the single-copy path; pack kernels run against it
+    /// unchanged. Blocks until the peer registers; registration is the
+    /// first thing every rank does in a windowed exchange and never
+    /// blocks, so the rendezvous cannot deadlock.
+    pub(crate) fn fill_window_with<T: Pod>(
+        &self,
+        dst: usize,
+        salt: u64,
+        count: usize,
+        f: impl FnOnce(&mut [T]),
+    ) {
+        let tag = self.tag(WIN_TAG_BASE + salt);
+        self.fabric().fill_window_with(
+            self.world_rank(),
+            self.world_rank_of(dst),
+            tag,
+            count * std::mem::size_of::<T>(),
+            |ptr, len| {
+                // Safety: the fabric hands out each registered range
+                // exactly once; the receiver derived it from a live
+                // `&mut [T]` whose unique borrow its `WinRecv` guard
+                // holds raw for the window's whole lifetime, and the
+                // byte length (asserted by the fabric) fixes the element
+                // count. Alignment holds because the range starts at an
+                // element offset of a `&mut [T]` of the same `T`.
+                let out = unsafe {
+                    std::slice::from_raw_parts_mut(ptr as *mut T, len / std::mem::size_of::<T>())
+                };
+                f(out);
+            },
+        );
+    }
+
+    /// [`Self::alltoallv`] on the single-copy path: intra-node blocks
+    /// travel through pre-registered receive windows (one memcpy from the
+    /// sender's packed buffer straight into the receiver's buffer, where
+    /// the mailbox pays an insert *and* an extract), inter-node blocks
+    /// keep the mailbox verbatim. Same blocks into the same disjoint
+    /// destinations in a payload-independent order, so the result is
+    /// bit-identical to [`Self::alltoallv`] by construction.
+    pub fn alltoallv_windowed<T: Pod>(
+        &self,
+        send: &[T],
+        scounts: &[usize],
+        sdispls: &[usize],
+        recv: &mut [T],
+        rcounts: &[usize],
+        rdispls: &[usize],
+    ) {
+        let p = self.size();
+        assert!(scounts.len() == p && sdispls.len() == p, "alltoallv send meta");
+        assert!(rcounts.len() == p && rdispls.len() == p, "alltoallv recv meta");
+        let me = self.rank();
+        let tag = COLL_TAG_BASE + 2;
+        debug_assert_eq!(scounts[me], rcounts[me], "self block must be symmetric");
+        let elem = std::mem::size_of::<T>();
+        let mut win = WinRecv::new(self, recv);
+        // Register every intra peer's window before any blocking op — the
+        // no-deadlock invariant: fills wait only on registration.
+        for i in 0..p {
+            if i != me && self.peer_is_intra(i) {
+                win.register(i, 0, rdispls[i], rcounts[i]);
+            }
+        }
+        // Self block: one memcpy, exactly as on the mailbox path.
+        win.slice_mut(rdispls[me], rcounts[me])
+            .copy_from_slice(&send[sdispls[me]..sdispls[me] + scounts[me]]);
+        self.note_copied((rcounts[me] * elem) as u64);
+        // Buffered mailbox sends to inter peers first (never block), then
+        // the window fills, which collapse insert + extract to one copy.
+        for s in self.chunk_peer_offsets(false) {
+            let j = (me + s) % p;
+            if j != me && !self.peer_is_intra(j) {
+                self.send(j, tag, &send[sdispls[j]..sdispls[j] + scounts[j]]);
+            }
+        }
+        for s in self.chunk_peer_offsets(false) {
+            let j = (me + s) % p;
+            if j != me && self.peer_is_intra(j) {
+                self.fill_window_with(j, 0, scounts[j], |w: &mut [T]| {
+                    w.copy_from_slice(&send[sdispls[j]..sdispls[j] + scounts[j]]);
+                });
+                self.note_elided((scounts[j] * elem) as u64);
+            }
+        }
+        // Drain inter mailboxes, then wait out the intra fills.
+        for s in self.chunk_peer_offsets(true) {
+            let i = (me + p - s) % p;
+            if i != me && !self.peer_is_intra(i) {
+                win.recv_into(i, tag, rdispls[i], rcounts[i]);
+            }
+        }
+        for s in self.chunk_peer_offsets(true) {
+            let i = (me + p - s) % p;
+            if i != me && self.peer_is_intra(i) {
+                win.await_win(i, 0);
+            }
+        }
+        drop(win);
+        self.barrier();
+    }
+
+    /// [`Self::alltoall`] on the single-copy path (equal blocks).
+    pub fn alltoall_windowed<T: Pod>(&self, send: &[T], recv: &mut [T], block: usize) {
+        let p = self.size();
+        assert_eq!(send.len(), block * p, "alltoall send size");
+        assert_eq!(recv.len(), block * p, "alltoall recv size");
+        let counts = vec![block; p];
+        let displs: Vec<usize> = (0..p).map(|j| j * block).collect();
+        self.alltoallv_windowed(send, &counts, &displs, recv, &counts, &displs);
+    }
+
     /// Broadcast `data` from root to all ranks (in place).
     pub fn bcast<T: Pod>(&self, data: &mut [T], root: usize) {
         let p = self.size();
@@ -350,6 +567,95 @@ impl Comm {
             self.recv_into(root, tag, data);
         }
         self.barrier();
+    }
+}
+
+/// Receive-side guard for a windowed exchange: takes the receive buffer's
+/// unique borrow once and hands out only raw-derived views, so peer fills
+/// through registered raw pointers never alias a live safe reference —
+/// the provenance discipline the Miri CI job checks. All offsets are in
+/// elements of `T` and come from the exchange's disjoint displacement
+/// tables, so the guard's own views and every registered window cover
+/// pairwise-disjoint ranges. Holds the borrow raw (`*mut T`), which also
+/// makes the guard `!Send`: windows are retired on the thread that
+/// registered them. On drop, never-filled leftovers are removed from the
+/// registry so an unwinding receiver cannot leave peers a dangling window.
+pub(crate) struct WinRecv<'a, T: Pod> {
+    comm: &'a Comm,
+    base: *mut T,
+    len: usize,
+    /// (src world rank, full tag) registrations not yet awaited.
+    open: Vec<(usize, u64)>,
+    _buf: std::marker::PhantomData<&'a mut [T]>,
+}
+
+impl<'a, T: Pod> WinRecv<'a, T> {
+    pub(crate) fn new(comm: &'a Comm, buf: &'a mut [T]) -> Self {
+        WinRecv {
+            comm,
+            base: buf.as_mut_ptr(),
+            len: buf.len(),
+            open: Vec::new(),
+            _buf: std::marker::PhantomData,
+        }
+    }
+
+    /// Register `buf[offset..offset + count]` as the window local rank
+    /// `src` will fill under `salt`. Never blocks.
+    pub(crate) fn register(&mut self, src: usize, salt: u64, offset: usize, count: usize) {
+        assert!(offset + count <= self.len, "window out of bounds");
+        let tag = self.comm.tag(WIN_TAG_BASE + salt);
+        let src_world = self.comm.world_rank_of(src);
+        // Safety: the guard holds the buffer's unique borrow for 'a, every
+        // view it hands out is raw-derived and range-disjoint from the
+        // window, and drop retires unfilled leftovers.
+        unsafe {
+            self.comm.fabric().register_window(
+                src_world,
+                self.comm.world_rank(),
+                tag,
+                self.base.add(offset) as *mut u8,
+                count * std::mem::size_of::<T>(),
+            );
+        }
+        self.open.push((src_world, tag));
+    }
+
+    /// Mailbox receive (inter-node peers) landing directly in the guarded
+    /// buffer — raw-derived so it composes with outstanding windows.
+    pub(crate) fn recv_into(&mut self, src: usize, user_tag: u64, offset: usize, count: usize) {
+        assert!(offset + count <= self.len, "recv out of bounds");
+        let out = unsafe { std::slice::from_raw_parts_mut(self.base.add(offset), count) };
+        self.comm.recv_into(src, user_tag, out);
+    }
+
+    /// Block until `src`'s fill lands, retiring the registration; the
+    /// filled range may be read through [`WinRecv::slice`] afterwards.
+    pub(crate) fn await_win(&mut self, src: usize, salt: u64) {
+        let tag = self.comm.tag(WIN_TAG_BASE + salt);
+        let src_world = self.comm.world_rank_of(src);
+        self.comm.fabric().await_window(src_world, self.comm.world_rank(), tag);
+        self.open.retain(|&k| k != (src_world, tag));
+    }
+
+    /// Read view of a retired (or never-windowed) region.
+    pub(crate) fn slice(&self, offset: usize, count: usize) -> &[T] {
+        assert!(offset + count <= self.len, "slice out of bounds");
+        unsafe { std::slice::from_raw_parts(self.base.add(offset), count) }
+    }
+
+    /// Write view of a region no outstanding window covers (self block).
+    pub(crate) fn slice_mut(&mut self, offset: usize, count: usize) -> &mut [T] {
+        assert!(offset + count <= self.len, "slice out of bounds");
+        unsafe { std::slice::from_raw_parts_mut(self.base.add(offset), count) }
+    }
+}
+
+impl<T: Pod> Drop for WinRecv<'_, T> {
+    fn drop(&mut self) {
+        for &(src_world, tag) in &self.open {
+            self.comm.fabric().drop_window(src_world, self.comm.world_rank(), tag);
+        }
     }
 }
 
@@ -641,6 +947,129 @@ mod tests {
                 assert!(intra[..first_inter].iter().all(|&b| b), "rank {me}: {order:?}");
                 assert!(intra[first_inter..].iter().all(|&b| !b), "rank {me}: {order:?}");
             }
+        }
+    }
+
+    #[test]
+    fn windowed_alltoallv_matches_buffered() {
+        // Uneven counts, flat and 2-node fabrics: the windowed transport
+        // must deliver byte-for-byte what the mailbox path delivers.
+        use crate::mpi::{Hierarchy, PlacementPolicy, Universe};
+        let topos = [
+            Hierarchy::flat(4),
+            Hierarchy::two_level(4, 2, PlacementPolicy::Contiguous),
+            Hierarchy::two_level(4, 2, PlacementPolicy::RoundRobin),
+        ];
+        for topo in topos {
+            let u = Universe::with_topology(4, topo);
+            let got = u
+                .run(|c| {
+                    let p = c.size();
+                    let me = c.rank();
+                    let scounts: Vec<usize> = (0..p).map(|j| 1 + (me + j) % 3).collect();
+                    let sdispls: Vec<usize> = scounts
+                        .iter()
+                        .scan(0usize, |acc, &n| {
+                            let d = *acc;
+                            *acc += n;
+                            Some(d)
+                        })
+                        .collect();
+                    let send: Vec<u64> = (0..scounts.iter().sum::<usize>())
+                        .map(|k| (me * 1000 + k) as u64)
+                        .collect();
+                    let rcounts: Vec<usize> = (0..p).map(|i| 1 + (i + me) % 3).collect();
+                    let rdispls: Vec<usize> = rcounts
+                        .iter()
+                        .scan(0usize, |acc, &n| {
+                            let d = *acc;
+                            *acc += n;
+                            Some(d)
+                        })
+                        .collect();
+                    let total = rcounts.iter().sum::<usize>();
+                    let mut a = vec![0u64; total];
+                    let mut b = vec![0u64; total];
+                    c.alltoallv(&send, &scounts, &sdispls, &mut a, &rcounts, &rdispls);
+                    c.alltoallv_windowed(&send, &scounts, &sdispls, &mut b, &rcounts, &rdispls);
+                    Ok((a, b))
+                })
+                .unwrap();
+            for (me, (a, b)) in got.iter().enumerate() {
+                assert_eq!(a, b, "rank {me}");
+            }
+        }
+    }
+
+    #[test]
+    fn windowed_alltoall_matches_buffered() {
+        use crate::mpi::{Hierarchy, PlacementPolicy, Universe};
+        let u =
+            Universe::with_topology(4, Hierarchy::two_level(4, 2, PlacementPolicy::Contiguous));
+        let got = u
+            .run(|c| {
+                let p = c.size();
+                let me = c.rank();
+                let block = 3;
+                let send: Vec<u64> = (0..p * block).map(|k| (me * 1000 + k) as u64).collect();
+                let mut a = vec![0u64; p * block];
+                let mut b = vec![0u64; p * block];
+                c.alltoall(&send, &mut a, block);
+                c.alltoall_windowed(&send, &mut b, block);
+                Ok(a == b)
+            })
+            .unwrap();
+        assert!(got.into_iter().all(|x| x));
+    }
+
+    #[test]
+    fn windowed_elides_every_intra_copy_on_flat_fabric() {
+        // On a flat fabric every peer is "intra", so one windowed
+        // alltoall elides exactly the insert+extract bytes of the
+        // non-self blocks while the wire volume stays what the mailbox
+        // path would have sent.
+        use crate::mpi::{Hierarchy, Universe};
+        let p = 4;
+        let block = 8usize;
+        let u = Universe::with_topology(p, Hierarchy::flat(p));
+        u.run(move |c| {
+            let send: Vec<u64> = vec![c.rank() as u64; p * block];
+            let mut recv = vec![0u64; p * block];
+            c.alltoall_windowed(&send, &mut recv, block);
+            Ok(())
+        })
+        .unwrap();
+        let per_peer_bytes = (block * std::mem::size_of::<u64>()) as u64;
+        let offnode = (p * (p - 1)) as u64 * per_peer_bytes;
+        assert_eq!(u.fabric().copies_elided_total(), offnode);
+        assert_eq!(u.fabric().bytes_total(), offnode);
+        // self memcpy + one fill per non-self peer:
+        assert_eq!(u.fabric().bytes_copied_total(), offnode + p as u64 * per_peer_bytes);
+    }
+
+    #[test]
+    fn windowed_salt_reuse_round_trips() {
+        // Three back-to-back windowed exchanges on the same communicator
+        // reuse the same window keys; the claim/retire discipline must
+        // keep them FIFO-correct.
+        use crate::mpi::{Hierarchy, Universe};
+        let u = Universe::with_topology(2, Hierarchy::flat(2));
+        let got = u
+            .run(|c| {
+                let mut out = Vec::new();
+                for round in 0..3u64 {
+                    let send = vec![c.rank() as u64 * 100 + round, 7];
+                    let mut recv = vec![0u64; 2];
+                    c.alltoall_windowed(&send, &mut recv, 1);
+                    out.push(recv);
+                }
+                Ok(out)
+            })
+            .unwrap();
+        // Rank me receives block `me` of every sender's round-r buffer.
+        for round in 0..3u64 {
+            assert_eq!(got[0][round as usize], vec![round, 100 + round]);
+            assert_eq!(got[1][round as usize], vec![7, 7]);
         }
     }
 

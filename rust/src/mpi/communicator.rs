@@ -158,7 +158,7 @@ impl Comm {
     }
 
     #[inline]
-    fn tag(&self, user_tag: u64) -> u64 {
+    pub(crate) fn tag(&self, user_tag: u64) -> u64 {
         // Namespace user tags by communicator id (16 bits of comm id are
         // plenty for the library's usage).
         (self.id << 48) | (user_tag & 0xFFFF_FFFF_FFFF)

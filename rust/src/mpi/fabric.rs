@@ -1,7 +1,11 @@
 //! The shared-memory message fabric: a P×P matrix of tagged FIFO
 //! mailboxes plus the registries that back communicator split and
-//! barriers. All transfers are actual byte copies — the cost structure
-//! (pack, copy, unpack) mirrors an intra-node MPI implementation.
+//! barriers. Mailbox transfers are actual byte copies — the cost
+//! structure (pack, copy, unpack) mirrors an intra-node MPI
+//! implementation. The rendezvous **window registry** below is the
+//! single-copy alternative: a receiver pre-registers a destination byte
+//! range, the sender writes straight into it, and the mailbox copies
+//! never happen ([`CopyMode`] selects between the two paths).
 
 use std::collections::HashMap;
 use std::collections::VecDeque;
@@ -9,6 +13,66 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use super::hierarchy::Hierarchy;
+
+/// Which transport the transpose exchanges use for on-node peers.
+///
+/// Resolved from `P3DFFT_COPY` (or pinned via `Options::copy_path`):
+/// `mailbox` forces the original three-copy tagged-mailbox path for every
+/// peer; anything else (including unset) selects the rendezvous
+/// single-copy windows for intra-node peers. Inter-node peers always use
+/// the mailbox regardless of mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CopyMode {
+    /// Rendezvous windows: receivers pre-register destination slices and
+    /// intra-node senders pack straight into them (one copy on-node).
+    SingleCopy,
+    /// The tagged-mailbox path for every peer (pack → mailbox `Vec` →
+    /// receive buffer: three copies per message).
+    Mailbox,
+}
+
+impl CopyMode {
+    /// Environment variable selecting the copy path.
+    pub const ENV: &'static str = "P3DFFT_COPY";
+
+    /// Resolve from `P3DFFT_COPY` (`mailbox` forces the fallback;
+    /// `single` / `single-copy` / `window` / unset select windows).
+    pub fn from_env() -> Self {
+        Self::from_env_var(std::env::var(Self::ENV).ok().as_deref())
+    }
+
+    /// Pure core of [`CopyMode::from_env`] (tests pass the value directly
+    /// — mutating the process environment from parallel test threads is a
+    /// data race).
+    pub fn from_env_var(value: Option<&str>) -> Self {
+        match value.map(str::trim) {
+            Some(v) if v.eq_ignore_ascii_case("mailbox") => CopyMode::Mailbox,
+            _ => CopyMode::SingleCopy,
+        }
+    }
+}
+
+impl Default for CopyMode {
+    fn default() -> Self {
+        CopyMode::SingleCopy
+    }
+}
+
+/// A registered receive window: a raw destination range inside the
+/// receiver's unpack-side (or final pencil) buffer, exposed to exactly
+/// one sender named by the registry key.
+struct WindowState {
+    ptr: *mut u8,
+    len: usize,
+    filled: bool,
+}
+
+// SAFETY: the pointer is dereferenced by exactly one sender, between
+// registration and the receiver's await — the rendezvous protocol
+// (`register_window` → `fill_window_with` → `await_window`) hands the
+// range across threads like a channel payload, with the registry mutex
+// providing the happens-before edges.
+unsafe impl Send for WindowState {}
 
 /// Marker for plain-old-data element types that can be sent as raw bytes.
 ///
@@ -162,6 +226,24 @@ pub struct Fabric {
     /// Modeled inter-node link time accrued per world rank (send side),
     /// in nanoseconds. Zero on a flat topology.
     link_ns: Vec<AtomicU64>,
+    /// Single-copy rendezvous registry: (src, dst, tag) → destination
+    /// window. At most one registration per key may be outstanding.
+    windows: Mutex<HashMap<(usize, usize, u64), WindowState>>,
+    /// Signalled on every registry transition (register / fill / retire).
+    win_cv: Condvar,
+    /// When set (from `P3DFFT_POISON`), freshly registered windows are
+    /// 0xFF-filled — an all-ones mantissa/exponent pattern that decodes to
+    /// NaN for f32/f64 payloads — so a fill that writes short of the full
+    /// window turns into a loud NaN downstream instead of a silent stale
+    /// read.
+    window_poison: bool,
+    /// Bytes physically memcpy'd on the exchange path, per world rank:
+    /// pack writes, mailbox insert/extract copies, and window fills. The
+    /// quantity `fig_copy` tracks across copy modes.
+    bytes_copied: Vec<AtomicU64>,
+    /// Bytes of copying the single-copy path avoided relative to the
+    /// mailbox discipline (per world rank, noted by the window callers).
+    copies_elided: Vec<AtomicU64>,
 }
 
 impl Fabric {
@@ -171,8 +253,18 @@ impl Fabric {
         Self::with_topology(world_size, Hierarchy::from_env(world_size))
     }
 
-    /// Fabric with an explicit node topology.
+    /// Fabric with an explicit node topology. Window poison is resolved
+    /// from `P3DFFT_POISON` (any non-empty value but `0`).
     pub fn with_topology(world_size: usize, topo: Hierarchy) -> Arc<Self> {
+        let poison = std::env::var("P3DFFT_POISON")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false);
+        Self::with_options(world_size, topo, poison)
+    }
+
+    /// Fabric with an explicit topology and window-poison flag (tests use
+    /// this directly; env mutation from parallel tests is a data race).
+    pub fn with_options(world_size: usize, topo: Hierarchy, window_poison: bool) -> Arc<Self> {
         assert!(world_size >= 1);
         assert_eq!(topo.nodes.p, world_size, "topology rank count must match the fabric");
         let mut boxes = Vec::with_capacity(world_size * world_size);
@@ -190,6 +282,11 @@ impl Fabric {
             failed: failed.clone(),
             topo,
             link_ns: (0..world_size).map(|_| AtomicU64::new(0)).collect(),
+            windows: Mutex::new(HashMap::new()),
+            win_cv: Condvar::new(),
+            window_poison,
+            bytes_copied: (0..world_size).map(|_| AtomicU64::new(0)).collect(),
+            copies_elided: (0..world_size).map(|_| AtomicU64::new(0)).collect(),
         };
         f.barriers
             .lock()
@@ -214,6 +311,9 @@ impl Fabric {
     /// bit-for-bit the same as on a flat fabric.
     pub(crate) fn send(&self, src: usize, dst: usize, tag: u64, data: Vec<u8>) {
         self.bytes_sent[src].fetch_add(data.len() as u64, Ordering::Relaxed);
+        // The `Vec` handed in was itself materialised by a byte copy of
+        // the caller's slice (`as_bytes().to_vec()` in `Comm::send`).
+        self.bytes_copied[src].fetch_add(data.len() as u64, Ordering::Relaxed);
         if !self.topo.is_flat() {
             let cost = self.topo.link_cost(src, dst, data.len());
             if cost > 0.0 {
@@ -226,7 +326,173 @@ impl Fabric {
     /// Blocking receive of the message (src → dst) with `tag`. Panics if
     /// the fabric has been torn down by a failing peer.
     pub(crate) fn recv(&self, src: usize, dst: usize, tag: u64) -> Vec<u8> {
-        self.mbox(src, dst).pop(tag, &self.failed)
+        let data = self.mbox(src, dst).pop(tag, &self.failed);
+        // Every popped message is immediately `bytes_into`'d (or
+        // element-copied) into a typed destination — charge that extract
+        // copy to the receiver here, the one place all recvs funnel
+        // through.
+        self.bytes_copied[dst].fetch_add(data.len() as u64, Ordering::Relaxed);
+        data
+    }
+
+    // --- single-copy rendezvous windows -----------------------------------
+
+    /// Pre-register a receive window: `len` bytes at `ptr` inside `dst`'s
+    /// buffer, to be filled by `src` under `tag`. Never blocks. Under
+    /// poison mode the window is 0xFF-filled first, so the fill contract
+    /// (exactly one fill, covering the whole window) is load-bearing: a
+    /// short or missing fill surfaces as NaN payload downstream.
+    ///
+    /// # Safety
+    /// `ptr..ptr+len` must stay valid, and must not be read or written
+    /// through any safe reference, until [`Fabric::await_window`] returns
+    /// for the same key. At most one registration per key may be
+    /// outstanding (asserted).
+    pub(crate) unsafe fn register_window(
+        &self,
+        src: usize,
+        dst: usize,
+        tag: u64,
+        ptr: *mut u8,
+        len: usize,
+    ) {
+        if self.window_poison && len > 0 {
+            std::ptr::write_bytes(ptr, 0xFF, len);
+        }
+        let mut w = self.windows.lock().expect("window registry poisoned");
+        let prev = w.insert((src, dst, tag), WindowState { ptr, len, filled: false });
+        assert!(prev.is_none(), "window ({src} -> {dst}, tag {tag}) already registered");
+        drop(w);
+        self.win_cv.notify_all();
+    }
+
+    /// Rendezvous fill, called by `src`: block until `dst` registers the
+    /// matching window, then hand its raw range to `f` exactly once and
+    /// mark the window filled. The write runs outside the registry lock,
+    /// so fills to different receivers proceed in parallel; the
+    /// re-insert-under-lock afterwards is what sequences the written
+    /// bytes before the receiver's [`Fabric::await_window`] return.
+    ///
+    /// `len` is the sender-side byte count and must equal the registered
+    /// window length — a cheap cross-check of the exchange metadata.
+    pub(crate) fn fill_window_with(
+        &self,
+        src: usize,
+        dst: usize,
+        tag: u64,
+        len: usize,
+        f: impl FnOnce(*mut u8, usize),
+    ) {
+        let mut claimed = {
+            let mut w = self.windows.lock().expect("window registry poisoned");
+            loop {
+                let claimable = matches!(w.get(&(src, dst, tag)), Some(ws) if !ws.filled);
+                if claimable {
+                    break w.remove(&(src, dst, tag)).expect("entry just seen");
+                }
+                if self.failed.load(Ordering::Relaxed) != 0 {
+                    panic!("fabric torn down: a peer rank failed");
+                }
+                let (guard, _timeout) = self
+                    .win_cv
+                    .wait_timeout(w, std::time::Duration::from_millis(50))
+                    .expect("window registry poisoned");
+                w = guard;
+            }
+        };
+        assert_eq!(
+            claimed.len, len,
+            "window ({src} -> {dst}, tag {tag}) length mismatch: sender has {len} bytes"
+        );
+        f(claimed.ptr, claimed.len);
+        // Window traffic counts as sent bytes too: the wire volume is
+        // identical across copy modes (an invariant the tests pin); only
+        // the copy count differs. Intra-node transfers never accrue
+        // modeled link time, and windows are intra-node by construction.
+        self.bytes_sent[src].fetch_add(len as u64, Ordering::Relaxed);
+        self.bytes_copied[src].fetch_add(len as u64, Ordering::Relaxed);
+        claimed.filled = true;
+        let mut w = self.windows.lock().expect("window registry poisoned");
+        w.insert((src, dst, tag), claimed);
+        drop(w);
+        self.win_cv.notify_all();
+    }
+
+    /// Receiver-side completion wait: block until `src` has filled the
+    /// window, then retire the registration so the key can be reused by a
+    /// later exchange. After this returns, the bytes written by the fill
+    /// are visible to `dst` (mutex handoff) and the window range may be
+    /// touched through safe references again.
+    pub(crate) fn await_window(&self, src: usize, dst: usize, tag: u64) {
+        let mut w = self.windows.lock().expect("window registry poisoned");
+        loop {
+            if w.get(&(src, dst, tag)).is_some_and(|ws| ws.filled) {
+                w.remove(&(src, dst, tag));
+                return;
+            }
+            if self.failed.load(Ordering::Relaxed) != 0 {
+                panic!("fabric torn down: a peer rank failed");
+            }
+            let (guard, _timeout) = self
+                .win_cv
+                .wait_timeout(w, std::time::Duration::from_millis(50))
+                .expect("window registry poisoned");
+            w = guard;
+        }
+    }
+
+    /// Forget a registration that was never filled — guard teardown on an
+    /// abnormal exit, so an unwinding receiver does not leave peers a
+    /// window into freed memory. A window already claimed or filled is
+    /// left to its filler/awaiter.
+    pub(crate) fn drop_window(&self, src: usize, dst: usize, tag: u64) {
+        let mut w = self.windows.lock().expect("window registry poisoned");
+        if matches!(w.get(&(src, dst, tag)), Some(ws) if !ws.filled) {
+            w.remove(&(src, dst, tag));
+        }
+    }
+
+    /// Whether registered windows are poisoned (`P3DFFT_POISON`).
+    pub fn window_poison(&self) -> bool {
+        self.window_poison
+    }
+
+    /// Whether two world ranks share a node (window eligibility).
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.topo.nodes.same_node(a, b)
+    }
+
+    /// Charge `bytes` of exchange-path memcpy to `world_rank` (pack
+    /// writes and self-block copies are noted by the layers that do them;
+    /// mailbox insert/extract and window fills are noted internally).
+    pub(crate) fn note_copied(&self, world_rank: usize, bytes: u64) {
+        self.bytes_copied[world_rank].fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Record `bytes` of copying the single-copy path avoided relative to
+    /// the mailbox discipline.
+    pub(crate) fn note_elided(&self, world_rank: usize, bytes: u64) {
+        self.copies_elided[world_rank].fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Exchange-path bytes memcpy'd by `world_rank` so far.
+    pub fn bytes_copied_by(&self, world_rank: usize) -> u64 {
+        self.bytes_copied[world_rank].load(Ordering::Relaxed)
+    }
+
+    /// Exchange-path bytes memcpy'd across all ranks.
+    pub fn bytes_copied_total(&self) -> u64 {
+        self.bytes_copied.iter().map(|a| a.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Copy bytes elided by the single-copy path, per rank.
+    pub fn copies_elided_by(&self, world_rank: usize) -> u64 {
+        self.copies_elided[world_rank].load(Ordering::Relaxed)
+    }
+
+    /// Copy bytes elided by the single-copy path, all ranks.
+    pub fn copies_elided_total(&self) -> u64 {
+        self.copies_elided.iter().map(|a| a.load(Ordering::Relaxed)).sum()
     }
 
     /// Raise the failure flag: every blocked receive/barrier aborts within
@@ -433,5 +699,155 @@ mod tests {
         let mut out = [0.0f64; 3];
         bytes_into(&bytes, &mut out);
         assert_eq!(xs, out);
+    }
+
+    #[test]
+    fn copy_mode_env_parsing() {
+        assert_eq!(CopyMode::from_env_var(None), CopyMode::SingleCopy);
+        assert_eq!(CopyMode::from_env_var(Some("")), CopyMode::SingleCopy);
+        assert_eq!(CopyMode::from_env_var(Some("single")), CopyMode::SingleCopy);
+        assert_eq!(CopyMode::from_env_var(Some("single-copy")), CopyMode::SingleCopy);
+        assert_eq!(CopyMode::from_env_var(Some("window")), CopyMode::SingleCopy);
+        assert_eq!(CopyMode::from_env_var(Some("mailbox")), CopyMode::Mailbox);
+        assert_eq!(CopyMode::from_env_var(Some(" Mailbox ")), CopyMode::Mailbox);
+    }
+
+    #[test]
+    fn window_rendezvous_delivers_bytes_single_copy() {
+        let f = Fabric::new(2);
+        let f2 = f.clone();
+        // Receiver (rank 1): register a window over its buffer, await the
+        // fill, then read the landed payload.
+        let recv = thread::spawn(move || {
+            let mut buf = vec![0u8; 8];
+            unsafe { f2.register_window(0, 1, 7, buf.as_mut_ptr(), buf.len()) };
+            f2.await_window(0, 1, 7);
+            buf
+        });
+        // Sender (rank 0): pack straight into the peer's window.
+        f.fill_window_with(0, 1, 7, 8, |ptr, len| unsafe {
+            for i in 0..len {
+                *ptr.add(i) = i as u8 + 1;
+            }
+        });
+        assert_eq!(recv.join().unwrap(), vec![1, 2, 3, 4, 5, 6, 7, 8]);
+        // One copy charged to the sender, wire volume accounted as sent.
+        assert_eq!(f.bytes_copied_by(0), 8);
+        assert_eq!(f.bytes_copied_by(1), 0);
+        assert_eq!(f.bytes_sent_by(0), 8);
+    }
+
+    #[test]
+    fn fill_blocks_until_window_registered() {
+        let f = Fabric::new(2);
+        let f2 = f.clone();
+        let filled_at = Arc::new(AtomicUsize::new(0));
+        let flag = filled_at.clone();
+        let sender = thread::spawn(move || {
+            f2.fill_window_with(0, 1, 3, 4, |ptr, len| unsafe {
+                std::ptr::write_bytes(ptr, 0xAB, len);
+            });
+            flag.store(1, Ordering::SeqCst);
+        });
+        thread::sleep(std::time::Duration::from_millis(30));
+        assert_eq!(filled_at.load(Ordering::SeqCst), 0, "fill must wait for the rendezvous");
+        let mut buf = vec![0u8; 4];
+        unsafe { f.register_window(0, 1, 3, buf.as_mut_ptr(), buf.len()) };
+        f.await_window(0, 1, 3);
+        sender.join().unwrap();
+        assert_eq!(buf, vec![0xAB; 4]);
+    }
+
+    #[test]
+    fn window_key_is_reusable_after_await() {
+        let f = Fabric::new(2);
+        for round in 0..3u8 {
+            let f2 = f.clone();
+            let recv = thread::spawn(move || {
+                let mut buf = vec![0u8; 2];
+                unsafe { f2.register_window(0, 1, 9, buf.as_mut_ptr(), buf.len()) };
+                f2.await_window(0, 1, 9);
+                buf
+            });
+            f.fill_window_with(0, 1, 9, 2, |ptr, _| unsafe {
+                std::ptr::write_bytes(ptr, round, 2);
+            });
+            assert_eq!(recv.join().unwrap(), vec![round; 2]);
+        }
+    }
+
+    #[test]
+    fn poison_prefills_registered_windows() {
+        let f = Fabric::with_options(2, Hierarchy::flat(2), true);
+        assert!(f.window_poison());
+        let mut buf = vec![0u8; 6];
+        unsafe { f.register_window(0, 1, 1, buf.as_mut_ptr(), buf.len()) };
+        let f2 = f.clone();
+        let sender = thread::spawn(move || {
+            f2.fill_window_with(0, 1, 1, 6, |ptr, len| unsafe {
+                std::ptr::write_bytes(ptr, 0x11, len);
+            });
+        });
+        f.await_window(0, 1, 1);
+        sender.join().unwrap();
+        // The full-window fill overwrote every poisoned byte.
+        assert_eq!(buf, vec![0x11; 6]);
+        // An unfilled window keeps the poison pattern (NaN bytes for
+        // float payloads) — prove the prefill actually happened.
+        let mut stale = vec![0u8; 3];
+        unsafe { f.register_window(1, 0, 2, stale.as_mut_ptr(), stale.len()) };
+        // Retire the registration through the normal protocol so the raw
+        // range is handed back before the safe read below.
+        let f3 = f.clone();
+        let t = thread::spawn(move || {
+            f3.fill_window_with(1, 0, 2, 3, |_, _| {}) // claims, writes nothing
+        });
+        f.await_window(1, 0, 2);
+        t.join().unwrap();
+        assert_eq!(stale, vec![0xFF; 3], "poison must prefill the window");
+    }
+
+    #[test]
+    fn mailbox_path_counts_insert_and_extract_copies() {
+        let f = Fabric::new(2);
+        f.send(0, 1, 0, vec![0; 100]);
+        assert_eq!(f.bytes_copied_by(0), 100, "insert copy charged to sender");
+        let _ = f.recv(0, 1, 0);
+        assert_eq!(f.bytes_copied_by(1), 100, "extract copy charged to receiver");
+        assert_eq!(f.bytes_copied_total(), 200);
+        assert_eq!(f.copies_elided_total(), 0);
+        f.note_elided(1, 40);
+        assert_eq!(f.copies_elided_by(1), 40);
+    }
+
+    #[test]
+    fn double_register_panics() {
+        let f = Fabric::new(2);
+        let mut buf = vec![0u8; 4];
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            unsafe {
+                f.register_window(0, 1, 5, buf.as_mut_ptr(), 2);
+                f.register_window(0, 1, 5, buf.as_mut_ptr(), 2);
+            };
+        }));
+        assert!(r.is_err(), "one outstanding registration per key");
+    }
+
+    #[test]
+    fn mark_failed_aborts_blocked_fill_and_await() {
+        let f = Fabric::new(2);
+        let f2 = f.clone();
+        let h = thread::spawn(move || {
+            let fill = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                f2.fill_window_with(0, 1, 1, 4, |_, _| {});
+            }));
+            let aw = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                f2.await_window(1, 0, 1);
+            }));
+            fill.is_err() && aw.is_err()
+        });
+        thread::sleep(std::time::Duration::from_millis(30));
+        f.mark_failed();
+        assert!(h.join().unwrap(), "blocked window ops must abort after teardown");
     }
 }

@@ -20,6 +20,6 @@ pub mod topology;
 
 pub use collectives::AlltoallAlgo;
 pub use communicator::{Comm, Universe};
-pub use fabric::Pod;
+pub use fabric::{CopyMode, Pod};
 pub use hierarchy::{Hierarchy, LinkModel};
 pub use topology::{NodeMap, PlacementPolicy};

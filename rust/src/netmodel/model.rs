@@ -14,7 +14,7 @@
 
 use super::machine::Machine;
 use crate::grid::ProcGrid;
-use crate::mpi::NodeMap;
+use crate::mpi::{CopyMode, NodeMap};
 
 /// One scenario to price.
 #[derive(Debug, Clone)]
@@ -30,13 +30,31 @@ pub struct ModelInput {
     pub elem_bytes: f64,
     /// USEEVEN: padded `alltoall` instead of `alltoallv`.
     pub use_even: bool,
+    /// Exchange copy discipline. Only the two-level predictor prices it:
+    /// the mailbox path streams each intra-node block through memory
+    /// twice (sender insert + receiver extract), the single-copy path
+    /// once (the sender packs straight into the receiver's registered
+    /// window). Inter-node terms are bisection-bound either way.
+    pub copy: CopyMode,
     pub machine: Machine,
 }
 
 impl ModelInput {
-    /// Cubic-grid convenience with double-precision elements.
+    /// Cubic-grid convenience with double-precision elements and
+    /// mailbox-copy pricing (the legacy discipline, so historical model
+    /// numbers stay bit-identical).
     pub fn cubic(n: usize, m1: usize, m2: usize, machine: Machine) -> Self {
-        ModelInput { nx: n, ny: n, nz: n, m1, m2, elem_bytes: 16.0, use_even: false, machine }
+        ModelInput {
+            nx: n,
+            ny: n,
+            nz: n,
+            m1,
+            m2,
+            elem_bytes: 16.0,
+            use_even: false,
+            copy: CopyMode::Mailbox,
+            machine,
+        }
     }
 
     pub fn p(&self) -> usize {
@@ -231,12 +249,19 @@ pub fn predict_pruned_two_level(
     let v_row = (input.m1 as f64 - 1.0) / input.m1 as f64 * vol * row_keep;
     let v_col = (input.m2 as f64 - 1.0) / input.m2 as f64 * vol * col_keep;
 
-    // Intra-node share: both directions of the copy stream through node
-    // memory, per task. Inter-node share: halved across the bisection with
-    // the contention constant, like the single-level law at scale.
+    // Intra-node share: memory-bandwidth priced per task. The mailbox
+    // discipline streams each block through memory twice (sender insert +
+    // receiver extract); the single-copy discipline writes it once, into
+    // the receiver's pre-registered window. Inter-node share: halved
+    // across the bisection with the contention constant, like the
+    // single-level law at scale.
+    let copy_streams = match input.copy {
+        CopyMode::Mailbox => 2.0,
+        CopyMode::SingleCopy => 1.0,
+    };
     let intra_vol = v_row * row_intra + v_col * col_intra;
     let inter_vol = v_row * (1.0 - row_intra) + v_col * (1.0 - col_intra);
-    let e_intra = 2.0 * intra_vol / (p * m.mem_bw_per_task) * v_penalty;
+    let e_intra = copy_streams * intra_vol / (p * m.mem_bw_per_task) * v_penalty;
     let e_inter =
         m.c_contention * inter_vol / (2.0 * m.interconnect.bisection_bw(input.p())) * v_penalty;
 
@@ -304,6 +329,7 @@ pub fn weak_efficiency(n1: usize, p1: usize, t1: f64, n2: usize, p2: usize, t2: 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mpi::PlacementPolicy;
     use crate::netmodel::machine::Machine;
 
     #[test]
@@ -510,6 +536,32 @@ mod tests {
             assert!(aggressive.flat_s < mild.flat_s);
             assert!(aggressive.aware_s < mild.aware_s);
         }
+    }
+
+    #[test]
+    fn single_copy_prices_intra_streams_at_half_the_mailbox() {
+        // On a map with intra-node traffic, the single-copy discipline
+        // halves the memory-stream count of the intra share and nothing
+        // else, so both schedules get strictly cheaper — and on a map
+        // with no intra traffic at all (1 core per node) the disciplines
+        // price identically.
+        let nodes = NodeMap::new(64, 4, PlacementPolicy::Contiguous);
+        let mailbox = ModelInput::cubic(256, 8, 8, two_level_machine(4));
+        let mut single = mailbox.clone();
+        single.copy = CopyMode::SingleCopy;
+        for k in [1usize, 4] {
+            let tm = predict_two_level(&mailbox, k, &nodes);
+            let ts = predict_two_level(&single, k, &nodes);
+            assert!(ts.flat_s < tm.flat_s, "k={k}: {} !< {}", ts.flat_s, tm.flat_s);
+            assert!(ts.aware_s <= tm.aware_s);
+            // Placement fractions are a property of the grid, not the
+            // copy discipline.
+            assert_eq!((ts.row_intra, ts.col_intra), (tm.row_intra, tm.col_intra));
+        }
+        let scattered = NodeMap::new(64, 1, PlacementPolicy::Contiguous);
+        let tm = predict_two_level(&mailbox, 1, &scattered);
+        let ts = predict_two_level(&single, 1, &scattered);
+        assert_eq!(tm.flat_s, ts.flat_s, "no intra traffic: copy mode is free");
     }
 
     #[test]

@@ -22,7 +22,7 @@ use crate::coordinator::plan::{BufferPool, PoolLayout, SlotId, ThirdOp};
 use crate::coordinator::{PlanSpec, TransformKind};
 use crate::fft::{C2cPlan, Complex, Direction, R2cPlan, Real};
 use crate::grid::{Decomp, PruneRule};
-use crate::mpi::Comm;
+use crate::mpi::{Comm, CopyMode};
 use crate::transpose::{ExchangeOptions, TransposeXY, TransposeYZ};
 use crate::util::error::{Error, Result};
 use crate::util::timer::{Stage, StageTimer};
@@ -87,7 +87,10 @@ impl<T: Real> Coalescer<T> {
             tyz = tyz.with_prune(r, yp.offsets[1]);
         }
         let z_band = rule.as_ref().map(|r| r.z_prune_band());
-        let opts = ExchangeOptions { use_even: spec.opts.use_even };
+        let opts = ExchangeOptions {
+            use_even: spec.opts.use_even,
+            copy: spec.opts.copy_path.unwrap_or_else(CopyMode::from_env),
+        };
 
         let w = MAX_COALESCE;
         let buf_len = txy

@@ -19,18 +19,38 @@
 use crate::fft::{Complex, Real};
 use crate::grid::truncation::PruneRule;
 use crate::grid::{block_range, Decomp};
-use crate::mpi::Comm;
+use crate::mpi::collectives::WinRecv;
+use crate::mpi::{Comm, CopyMode};
 use crate::util::timer::{Stage, StageTimer};
 
 use super::pack;
 
 /// Exchange options (the paper's user-tunable knobs).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy)]
 pub struct ExchangeOptions {
     /// USEEVEN: pad blocks to a uniform size and use `alltoall` instead of
     /// `alltoallv` — the Cray XT workaround of §3.4 (Schulz).
     pub use_even: bool,
+    /// Copy discipline: `SingleCopy` packs intra-node blocks straight
+    /// into the peer's pre-registered receive window (one copy);
+    /// `Mailbox` keeps the classic pack → mailbox → receive-buffer
+    /// chain. Inter-node peers always use the mailbox.
+    pub copy: CopyMode,
 }
+
+impl Default for ExchangeOptions {
+    /// Defaults resolve the copy discipline from `P3DFFT_COPY` (single
+    /// copy unless overridden), so env-matrix CI legs flip every
+    /// exchange in the suite without per-test plumbing.
+    fn default() -> Self {
+        ExchangeOptions { use_even: false, copy: CopyMode::from_env() }
+    }
+}
+
+/// User tag for the inter-node point-to-point leg of the blocking
+/// single-copy exchanges (below the collectives' namespaces, above any
+/// small user tag).
+const XWIN_TAG: u64 = 1 << 39;
 
 /// Plan for the X↔Y transpose within one ROW sub-communicator.
 ///
@@ -158,25 +178,47 @@ impl TransposeXY {
         debug_assert_eq!(row.size(), self.m1);
         debug_assert_eq!(row.rank(), self.r1);
         let (scounts, sdispls, rcounts, rdispls) = self.meta_fwd(opts);
-        timer.time(Stage::Pack, || {
-            for j in 0..self.m1 {
-                // Clamped to the retained prefix when pruned (no-op
-                // clamp on the full-grid path).
-                let r = self.x_keep(j);
-                pack::pack_x_to_y(
-                    input,
-                    self.nz,
-                    self.ny_loc(),
-                    self.h,
-                    r.start,
-                    r.end,
-                    &mut sendbuf[sdispls[j]..sdispls[j] + self.scount_fwd(j)],
+        if opts.copy == CopyMode::SingleCopy {
+            exchange_windowed(
+                row,
+                sendbuf,
+                recvbuf,
+                &scounts,
+                &sdispls,
+                &rcounts,
+                &rdispls,
+                timer,
+                |j, dst| {
+                    // Clamped to the retained prefix when pruned (no-op
+                    // clamp on the full-grid path).
+                    let r = self.x_keep(j);
+                    pack::pack_x_to_y(input, self.nz, self.ny_loc(), self.h, r.start, r.end, dst);
+                },
+            );
+        } else {
+            timer.time(Stage::Pack, || {
+                for j in 0..self.m1 {
+                    // Clamped to the retained prefix when pruned (no-op
+                    // clamp on the full-grid path).
+                    let r = self.x_keep(j);
+                    pack::pack_x_to_y(
+                        input,
+                        self.nz,
+                        self.ny_loc(),
+                        self.h,
+                        r.start,
+                        r.end,
+                        &mut sendbuf[sdispls[j]..sdispls[j] + self.scount_fwd(j)],
+                    );
+                }
+                note_pack_copies::<T>(row, &scounts);
+            });
+            timer.time(Stage::Exchange, || {
+                self.do_exchange(
+                    row, sendbuf, recvbuf, &scounts, &sdispls, &rcounts, &rdispls, opts,
                 );
-            }
-        });
-        timer.time(Stage::Exchange, || {
-            self.do_exchange(row, sendbuf, recvbuf, &scounts, &sdispls, &rcounts, &rdispls, opts);
-        });
+            });
+        }
         timer.time(Stage::Unpack, || {
             for j in 0..self.m1 {
                 let r = &self.y_ranges[j];
@@ -214,28 +256,61 @@ impl TransposeXY {
         // Counts reverse: backward scount(j) == forward rcount(j).
         let (rc, rd, sc, sd) = self.meta_fwd(opts);
         let (scounts, sdispls, rcounts, rdispls) = (sc, sd, rc, rd);
-        timer.time(Stage::Pack, || {
-            for j in 0..self.m1 {
-                let r = &self.y_ranges[j];
-                // Only the retained prefix rows of the Y-pencil travel
-                // back (all rows when unpruned).
-                pack::pack_y_to_x_pruned_win(
-                    input,
-                    self.nz,
-                    self.hk_loc(),
-                    self.h_loc(),
-                    self.ny_glob,
-                    r.start,
-                    r.end,
-                    0,
-                    self.nz,
-                    &mut sendbuf[sdispls[j]..sdispls[j] + self.rcount_fwd(j)],
+        if opts.copy == CopyMode::SingleCopy {
+            exchange_windowed(
+                row,
+                sendbuf,
+                recvbuf,
+                &scounts,
+                &sdispls,
+                &rcounts,
+                &rdispls,
+                timer,
+                |j, dst| {
+                    let r = &self.y_ranges[j];
+                    // Only the retained prefix rows of the Y-pencil
+                    // travel back (all rows when unpruned).
+                    pack::pack_y_to_x_pruned_win(
+                        input,
+                        self.nz,
+                        self.hk_loc(),
+                        self.h_loc(),
+                        self.ny_glob,
+                        r.start,
+                        r.end,
+                        0,
+                        self.nz,
+                        dst,
+                    );
+                },
+            );
+        } else {
+            timer.time(Stage::Pack, || {
+                for j in 0..self.m1 {
+                    let r = &self.y_ranges[j];
+                    // Only the retained prefix rows of the Y-pencil travel
+                    // back (all rows when unpruned).
+                    pack::pack_y_to_x_pruned_win(
+                        input,
+                        self.nz,
+                        self.hk_loc(),
+                        self.h_loc(),
+                        self.ny_glob,
+                        r.start,
+                        r.end,
+                        0,
+                        self.nz,
+                        &mut sendbuf[sdispls[j]..sdispls[j] + self.rcount_fwd(j)],
+                    );
+                }
+                note_pack_copies::<T>(row, &scounts);
+            });
+            timer.time(Stage::Exchange, || {
+                self.do_exchange(
+                    row, sendbuf, recvbuf, &scounts, &sdispls, &rcounts, &rdispls, opts,
                 );
-            }
-        });
-        timer.time(Stage::Exchange, || {
-            self.do_exchange(row, sendbuf, recvbuf, &scounts, &sdispls, &rcounts, &rdispls, opts);
-        });
+            });
+        }
         timer.time(Stage::Unpack, || {
             // Pruned x slots are never written by the unpack below —
             // define them as zero so the X-pencil is fully specified.
@@ -275,23 +350,43 @@ impl TransposeXY {
         // Truncation is gated to the STRIDE1 layout at plan compile time.
         debug_assert!(!self.is_pruned(), "XYZ layout does not support truncation");
         let (scounts, sdispls, rcounts, rdispls) = self.meta_fwd(opts);
-        timer.time(Stage::Pack, || {
-            for j in 0..self.m1 {
-                let r = &self.x_ranges[j];
-                pack::pack_x_to_y_xyz(
-                    input,
-                    self.nz,
-                    self.ny_loc(),
-                    self.h,
-                    r.start,
-                    r.end,
-                    &mut sendbuf[sdispls[j]..sdispls[j] + self.scount_fwd(j)],
+        if opts.copy == CopyMode::SingleCopy {
+            exchange_windowed(
+                row,
+                sendbuf,
+                recvbuf,
+                &scounts,
+                &sdispls,
+                &rcounts,
+                &rdispls,
+                timer,
+                |j, dst| {
+                    let r = &self.x_ranges[j];
+                    pack::pack_x_to_y_xyz(input, self.nz, self.ny_loc(), self.h, r.start, r.end, dst);
+                },
+            );
+        } else {
+            timer.time(Stage::Pack, || {
+                for j in 0..self.m1 {
+                    let r = &self.x_ranges[j];
+                    pack::pack_x_to_y_xyz(
+                        input,
+                        self.nz,
+                        self.ny_loc(),
+                        self.h,
+                        r.start,
+                        r.end,
+                        &mut sendbuf[sdispls[j]..sdispls[j] + self.scount_fwd(j)],
+                    );
+                }
+                note_pack_copies::<T>(row, &scounts);
+            });
+            timer.time(Stage::Exchange, || {
+                self.do_exchange(
+                    row, sendbuf, recvbuf, &scounts, &sdispls, &rcounts, &rdispls, opts,
                 );
-            }
-        });
-        timer.time(Stage::Exchange, || {
-            self.do_exchange(row, sendbuf, recvbuf, &scounts, &sdispls, &rcounts, &rdispls, opts);
-        });
+            });
+        }
         timer.time(Stage::Unpack, || {
             for j in 0..self.m1 {
                 let r = &self.y_ranges[j];
@@ -324,23 +419,43 @@ impl TransposeXY {
         debug_assert!(!self.is_pruned(), "XYZ layout does not support truncation");
         let (rc, rd, sc, sd) = self.meta_fwd(opts);
         let (scounts, sdispls, rcounts, rdispls) = (sc, sd, rc, rd);
-        timer.time(Stage::Pack, || {
-            for j in 0..self.m1 {
-                let r = &self.y_ranges[j];
-                pack::pack_y_to_x_xyz(
-                    input,
-                    self.nz,
-                    self.h_loc(),
-                    self.ny_glob,
-                    r.start,
-                    r.end,
-                    &mut sendbuf[sdispls[j]..sdispls[j] + self.rcount_fwd(j)],
+        if opts.copy == CopyMode::SingleCopy {
+            exchange_windowed(
+                row,
+                sendbuf,
+                recvbuf,
+                &scounts,
+                &sdispls,
+                &rcounts,
+                &rdispls,
+                timer,
+                |j, dst| {
+                    let r = &self.y_ranges[j];
+                    pack::pack_y_to_x_xyz(input, self.nz, self.h_loc(), self.ny_glob, r.start, r.end, dst);
+                },
+            );
+        } else {
+            timer.time(Stage::Pack, || {
+                for j in 0..self.m1 {
+                    let r = &self.y_ranges[j];
+                    pack::pack_y_to_x_xyz(
+                        input,
+                        self.nz,
+                        self.h_loc(),
+                        self.ny_glob,
+                        r.start,
+                        r.end,
+                        &mut sendbuf[sdispls[j]..sdispls[j] + self.rcount_fwd(j)],
+                    );
+                }
+                note_pack_copies::<T>(row, &scounts);
+            });
+            timer.time(Stage::Exchange, || {
+                self.do_exchange(
+                    row, sendbuf, recvbuf, &scounts, &sdispls, &rcounts, &rdispls, opts,
                 );
-            }
-        });
-        timer.time(Stage::Exchange, || {
-            self.do_exchange(row, sendbuf, recvbuf, &scounts, &sdispls, &rcounts, &rdispls, opts);
-        });
+            });
+        }
         timer.time(Stage::Unpack, || {
             for j in 0..self.m1 {
                 let r = &self.x_ranges[j];
@@ -385,7 +500,7 @@ impl TransposeXY {
         opts: ExchangeOptions,
     ) {
         let even = opts.use_even.then(|| self.even_block());
-        exchange_v(comm, sendbuf, recvbuf, scounts, sdispls, rcounts, rdispls, even);
+        exchange_v(comm, sendbuf, recvbuf, scounts, sdispls, rcounts, rdispls, even, opts.copy);
     }
 }
 
@@ -545,38 +660,49 @@ impl TransposeYZ {
         debug_assert_eq!(col.size(), self.m2);
         debug_assert_eq!(col.rank(), self.r2);
         let (scounts, sdispls, rcounts, rdispls) = self.meta_fwd(opts);
-        timer.time(Stage::Pack, || {
-            for j in 0..self.m2 {
-                let r = &self.y_ranges[j];
-                let dst = &mut sendbuf[sdispls[j]..sdispls[j] + self.scount_fwd(j)];
-                match &self.prune {
-                    Some(pr) => pack::pack_y_to_z_pruned_win(
-                        input,
-                        self.nz_loc(),
-                        self.h_loc,
-                        self.ny_glob,
-                        r.start,
-                        r.end,
-                        0,
-                        self.h_loc,
-                        &pr.keep,
-                        dst,
-                    ),
-                    None => pack::pack_y_to_z(
-                        input,
-                        self.nz_loc(),
-                        self.h_loc,
-                        self.ny_glob,
-                        r.start,
-                        r.end,
-                        dst,
-                    ),
-                }
+        let pack_to = |j: usize, dst: &mut [Complex<T>]| {
+            let r = &self.y_ranges[j];
+            match &self.prune {
+                Some(pr) => pack::pack_y_to_z_pruned_win(
+                    input,
+                    self.nz_loc(),
+                    self.h_loc,
+                    self.ny_glob,
+                    r.start,
+                    r.end,
+                    0,
+                    self.h_loc,
+                    &pr.keep,
+                    dst,
+                ),
+                None => pack::pack_y_to_z(
+                    input,
+                    self.nz_loc(),
+                    self.h_loc,
+                    self.ny_glob,
+                    r.start,
+                    r.end,
+                    dst,
+                ),
             }
-        });
-        timer.time(Stage::Exchange, || {
-            self.do_exchange(col, sendbuf, recvbuf, &scounts, &sdispls, &rcounts, &rdispls, opts);
-        });
+        };
+        if opts.copy == CopyMode::SingleCopy {
+            exchange_windowed(
+                col, sendbuf, recvbuf, &scounts, &sdispls, &rcounts, &rdispls, timer, pack_to,
+            );
+        } else {
+            timer.time(Stage::Pack, || {
+                for j in 0..self.m2 {
+                    pack_to(j, &mut sendbuf[sdispls[j]..sdispls[j] + self.scount_fwd(j)]);
+                }
+                note_pack_copies::<T>(col, &scounts);
+            });
+            timer.time(Stage::Exchange, || {
+                self.do_exchange(
+                    col, sendbuf, recvbuf, &scounts, &sdispls, &rcounts, &rdispls, opts,
+                );
+            });
+        }
         timer.time(Stage::Unpack, || {
             // Pruned pairs are never written below — define the whole
             // Z-pencil so their slots hold exact zeros.
@@ -627,38 +753,49 @@ impl TransposeYZ {
     ) {
         let (rc, rd, sc, sd) = self.meta_fwd(opts);
         let (scounts, sdispls, rcounts, rdispls) = (sc, sd, rc, rd);
-        timer.time(Stage::Pack, || {
-            for j in 0..self.m2 {
-                let r = &self.z_ranges[j];
-                let dst = &mut sendbuf[sdispls[j]..sdispls[j] + self.rcount_fwd(j)];
-                match &self.prune {
-                    Some(pr) => pack::pack_z_to_y_pruned_win(
-                        input,
-                        self.h_loc,
-                        self.ny2_loc(),
-                        self.nz_glob,
-                        r.start,
-                        r.end,
-                        0,
-                        self.h_loc,
-                        &pr.keep_own,
-                        dst,
-                    ),
-                    None => pack::pack_z_to_y(
-                        input,
-                        self.h_loc,
-                        self.ny2_loc(),
-                        self.nz_glob,
-                        r.start,
-                        r.end,
-                        dst,
-                    ),
-                }
+        let pack_to = |j: usize, dst: &mut [Complex<T>]| {
+            let r = &self.z_ranges[j];
+            match &self.prune {
+                Some(pr) => pack::pack_z_to_y_pruned_win(
+                    input,
+                    self.h_loc,
+                    self.ny2_loc(),
+                    self.nz_glob,
+                    r.start,
+                    r.end,
+                    0,
+                    self.h_loc,
+                    &pr.keep_own,
+                    dst,
+                ),
+                None => pack::pack_z_to_y(
+                    input,
+                    self.h_loc,
+                    self.ny2_loc(),
+                    self.nz_glob,
+                    r.start,
+                    r.end,
+                    dst,
+                ),
             }
-        });
-        timer.time(Stage::Exchange, || {
-            self.do_exchange(col, sendbuf, recvbuf, &scounts, &sdispls, &rcounts, &rdispls, opts);
-        });
+        };
+        if opts.copy == CopyMode::SingleCopy {
+            exchange_windowed(
+                col, sendbuf, recvbuf, &scounts, &sdispls, &rcounts, &rdispls, timer, pack_to,
+            );
+        } else {
+            timer.time(Stage::Pack, || {
+                for j in 0..self.m2 {
+                    pack_to(j, &mut sendbuf[sdispls[j]..sdispls[j] + self.rcount_fwd(j)]);
+                }
+                note_pack_copies::<T>(col, &scounts);
+            });
+            timer.time(Stage::Exchange, || {
+                self.do_exchange(
+                    col, sendbuf, recvbuf, &scounts, &sdispls, &rcounts, &rdispls, opts,
+                );
+            });
+        }
         timer.time(Stage::Unpack, || {
             if self.is_pruned() {
                 output.fill(Complex::zero());
@@ -709,6 +846,39 @@ impl TransposeYZ {
     ) {
         debug_assert!(!self.is_pruned(), "XYZ layout does not support truncation");
         let (scounts, sdispls, rcounts, rdispls) = self.meta_fwd(opts);
+        if opts.copy == CopyMode::SingleCopy {
+            // Receive **in place**: the XYZ Z-pencil unpack is one
+            // contiguous z-slab copy per peer, so the windows are
+            // registered straight over `output` at the true slab offsets
+            // — the unpack stage disappears and `recvbuf` is never
+            // touched (callers may pass it empty on this path).
+            let plane = self.ny2_loc() * self.h_loc;
+            let odispls: Vec<usize> =
+                (0..self.m2).map(|j| self.z_ranges[j].start * plane).collect();
+            exchange_windowed(
+                col,
+                sendbuf,
+                output,
+                &scounts,
+                &sdispls,
+                &rcounts,
+                &odispls,
+                timer,
+                |j, dst| {
+                    let r = &self.y_ranges[j];
+                    pack::pack_y_to_z_xyz(
+                        input,
+                        self.nz_loc(),
+                        self.h_loc,
+                        self.ny_glob,
+                        r.start,
+                        r.end,
+                        dst,
+                    );
+                },
+            );
+            return;
+        }
         timer.time(Stage::Pack, || {
             for j in 0..self.m2 {
                 let r = &self.y_ranges[j];
@@ -722,6 +892,7 @@ impl TransposeYZ {
                     &mut sendbuf[sdispls[j]..sdispls[j] + self.scount_fwd(j)],
                 );
             }
+            note_pack_copies::<T>(col, &scounts);
         });
         timer.time(Stage::Exchange, || {
             self.do_exchange(col, sendbuf, recvbuf, &scounts, &sdispls, &rcounts, &rdispls, opts);
@@ -757,23 +928,51 @@ impl TransposeYZ {
         debug_assert!(!self.is_pruned(), "XYZ layout does not support truncation");
         let (rc, rd, sc, sd) = self.meta_fwd(opts);
         let (scounts, sdispls, rcounts, rdispls) = (sc, sd, rc, rd);
-        timer.time(Stage::Pack, || {
-            for j in 0..self.m2 {
-                let r = &self.z_ranges[j];
-                pack::pack_z_to_y_xyz(
-                    input,
-                    self.h_loc,
-                    self.ny2_loc(),
-                    self.nz_glob,
-                    r.start,
-                    r.end,
-                    &mut sendbuf[sdispls[j]..sdispls[j] + self.rcount_fwd(j)],
+        if opts.copy == CopyMode::SingleCopy {
+            exchange_windowed(
+                col,
+                sendbuf,
+                recvbuf,
+                &scounts,
+                &sdispls,
+                &rcounts,
+                &rdispls,
+                timer,
+                |j, dst| {
+                    let r = &self.z_ranges[j];
+                    pack::pack_z_to_y_xyz(
+                        input,
+                        self.h_loc,
+                        self.ny2_loc(),
+                        self.nz_glob,
+                        r.start,
+                        r.end,
+                        dst,
+                    );
+                },
+            );
+        } else {
+            timer.time(Stage::Pack, || {
+                for j in 0..self.m2 {
+                    let r = &self.z_ranges[j];
+                    pack::pack_z_to_y_xyz(
+                        input,
+                        self.h_loc,
+                        self.ny2_loc(),
+                        self.nz_glob,
+                        r.start,
+                        r.end,
+                        &mut sendbuf[sdispls[j]..sdispls[j] + self.rcount_fwd(j)],
+                    );
+                }
+                note_pack_copies::<T>(col, &scounts);
+            });
+            timer.time(Stage::Exchange, || {
+                self.do_exchange(
+                    col, sendbuf, recvbuf, &scounts, &sdispls, &rcounts, &rdispls, opts,
                 );
-            }
-        });
-        timer.time(Stage::Exchange, || {
-            self.do_exchange(col, sendbuf, recvbuf, &scounts, &sdispls, &rcounts, &rdispls, opts);
-        });
+            });
+        }
         timer.time(Stage::Unpack, || {
             for j in 0..self.m2 {
                 let r = &self.y_ranges[j];
@@ -816,15 +1015,99 @@ impl TransposeYZ {
         opts: ExchangeOptions,
     ) {
         let even = opts.use_even.then(|| self.even_block());
-        exchange_v(comm, sendbuf, recvbuf, scounts, sdispls, rcounts, rdispls, even);
+        exchange_v(comm, sendbuf, recvbuf, scounts, sdispls, rcounts, rdispls, even, opts.copy);
     }
+}
+
+/// Charge one full pack sweep (`sum(scounts)` elements) to this rank's
+/// copy counter — the mailbox path's first copy. The windowed path
+/// accounts per block inside [`exchange_windowed`] instead.
+fn note_pack_copies<T: Real>(comm: &Comm, scounts: &[usize]) {
+    let total: usize = scounts.iter().sum();
+    comm.note_copied((total * std::mem::size_of::<Complex<T>>()) as u64);
+}
+
+/// Shared body of the blocking single-copy exchanges: register the intra
+/// peers' receive windows, then pack every peer's block — *into the
+/// peer's window* for intra-node peers (the single copy; the mailbox
+/// discipline pays pack + insert + extract), straight into the own
+/// receive region for the self block, and into `sendbuf` for inter-node
+/// peers, whose mailbox leg is kept verbatim. `pack(j, dst)` must write
+/// peer `j`'s `scounts[j]`-element block; it runs against a window view
+/// exactly as it runs against a `sendbuf` slice, which is what makes the
+/// two copy modes bit-identical by construction.
+///
+/// Deadlock-freedom: registration never blocks and precedes every
+/// blocking call on every rank, fills wait only on registration, the
+/// mailbox sends are buffered, and awaits wait only on fills — so the
+/// wait graph is acyclic.
+#[allow(clippy::too_many_arguments)]
+fn exchange_windowed<T: Real>(
+    comm: &Comm,
+    sendbuf: &mut [Complex<T>],
+    recvbuf: &mut [Complex<T>],
+    scounts: &[usize],
+    sdispls: &[usize],
+    rcounts: &[usize],
+    rdispls: &[usize],
+    timer: &mut StageTimer,
+    mut pack: impl FnMut(usize, &mut [Complex<T>]),
+) {
+    let p = scounts.len();
+    let me = comm.rank();
+    let elem = std::mem::size_of::<Complex<T>>();
+    debug_assert_eq!(scounts[me], rcounts[me], "self block must be symmetric");
+    let mut win = WinRecv::new(comm, &mut *recvbuf);
+    for i in 0..p {
+        if i != me && comm.peer_is_intra(i) {
+            win.register(i, 0, rdispls[i], rcounts[i]);
+        }
+    }
+    timer.time(Stage::Pack, || {
+        for j in 0..p {
+            let n = scounts[j];
+            if j == me {
+                // One pack straight into my own receive region; the
+                // mailbox path pays pack + self memcpy.
+                pack(j, win.slice_mut(rdispls[me], n));
+                comm.note_copied((n * elem) as u64);
+                comm.note_elided((n * elem) as u64);
+            } else if comm.peer_is_intra(j) {
+                comm.fill_window_with(j, 0, n, |w: &mut [Complex<T>]| pack(j, w));
+                comm.note_elided((2 * n * elem) as u64);
+            } else {
+                pack(j, &mut sendbuf[sdispls[j]..sdispls[j] + n]);
+                comm.note_copied((n * elem) as u64);
+            }
+        }
+    });
+    timer.time(Stage::Exchange, || {
+        for j in 0..p {
+            if j != me && !comm.peer_is_intra(j) {
+                comm.send(j, XWIN_TAG, &sendbuf[sdispls[j]..sdispls[j] + scounts[j]]);
+            }
+        }
+        for i in 0..p {
+            if i != me && !comm.peer_is_intra(i) {
+                win.recv_into(i, XWIN_TAG, rdispls[i], rcounts[i]);
+            }
+        }
+        for i in 0..p {
+            if i != me && comm.peer_is_intra(i) {
+                win.await_win(i, 0);
+            }
+        }
+        comm.barrier();
+    });
+    drop(win);
 }
 
 /// One blocking all-to-all exchange leg over explicit counts and
 /// absolute displacements: the padded `alltoall` when `even_block` is
-/// `Some` (USEEVEN), `alltoallv` otherwise. This is the body both
-/// transposes share, exposed so stages that fuse two fields into one
-/// exchange (the convolve pair stages) can drive it with doubled
+/// `Some` (USEEVEN), `alltoallv` otherwise — each routed through the
+/// windowed collective when `copy` is `SingleCopy`. This is the body
+/// both transposes share, exposed so stages that fuse two fields into
+/// one exchange (the convolve pair stages) can drive it with doubled
 /// blocks.
 #[allow(clippy::too_many_arguments)]
 pub fn exchange_v<T: Real>(
@@ -836,24 +1119,40 @@ pub fn exchange_v<T: Real>(
     rcounts: &[usize],
     rdispls: &[usize],
     even_block: Option<usize>,
+    copy: CopyMode,
 ) {
     let p = scounts.len();
     match even_block {
         Some(b) => {
             let len = b * p;
-            comm.alltoall(&sendbuf[..len], &mut recvbuf[..len], b);
+            match copy {
+                CopyMode::SingleCopy => {
+                    comm.alltoall_windowed(&sendbuf[..len], &mut recvbuf[..len], b)
+                }
+                CopyMode::Mailbox => comm.alltoall(&sendbuf[..len], &mut recvbuf[..len], b),
+            }
         }
         None => {
             let slen = sdispls[p - 1] + scounts[p - 1];
             let rlen = rdispls[p - 1] + rcounts[p - 1];
-            comm.alltoallv(
-                &sendbuf[..slen],
-                scounts,
-                sdispls,
-                &mut recvbuf[..rlen],
-                rcounts,
-                rdispls,
-            );
+            match copy {
+                CopyMode::SingleCopy => comm.alltoallv_windowed(
+                    &sendbuf[..slen],
+                    scounts,
+                    sdispls,
+                    &mut recvbuf[..rlen],
+                    rcounts,
+                    rdispls,
+                ),
+                CopyMode::Mailbox => comm.alltoallv(
+                    &sendbuf[..slen],
+                    scounts,
+                    sdispls,
+                    &mut recvbuf[..rlen],
+                    rcounts,
+                    rdispls,
+                ),
+            }
         }
     }
 }
@@ -884,6 +1183,10 @@ pub struct EFieldMeta {
     pub r_off: Vec<usize>,
     /// E-field padded block for the USEEVEN `alltoall`.
     pub evene: Option<usize>,
+    /// Copy discipline the fused exchange runs under (from the options
+    /// it was compiled with), so coalesced E-field windows ride the
+    /// single-copy path too.
+    pub copy: CopyMode,
 }
 
 impl EFieldMeta {
@@ -906,7 +1209,7 @@ impl EFieldMeta {
             (sc.clone(), rc.clone())
         };
         let evene = opts.use_even.then(|| e * even_block);
-        EFieldMeta { e, sc, rc, sce, sde, rce, rde, s_off, r_off, evene }
+        EFieldMeta { e, sc, rc, sce, sde, rce, rde, s_off, r_off, evene, copy: opts.copy }
     }
 
     /// Send-buffer range of field `f`'s block for peer `j`.
@@ -935,14 +1238,23 @@ impl EFieldMeta {
         }
     }
 
-    /// Execute the fused exchange over `comm`.
+    /// Execute the fused exchange over `comm`. Callers pack the full
+    /// fused volume into `sendbuf` first, so the pack's copy cost is
+    /// charged here on their behalf (both copy modes pay it — the fused
+    /// layout interleaves fields per peer, so even the single-copy path
+    /// stages through the send buffer and elides only the mailbox hop).
     pub fn exchange<T: Real>(
         &self,
         comm: &Comm,
         sendbuf: &[Complex<T>],
         recvbuf: &mut [Complex<T>],
     ) {
-        exchange_v(comm, sendbuf, recvbuf, &self.sce, &self.sde, &self.rce, &self.rde, self.evene);
+        let total: usize = self.sce.iter().sum();
+        comm.note_copied((total * std::mem::size_of::<Complex<T>>()) as u64);
+        exchange_v(
+            comm, sendbuf, recvbuf, &self.sce, &self.sde, &self.rce, &self.rde, self.evene,
+            self.copy,
+        );
     }
 }
 
@@ -965,6 +1277,11 @@ impl TransposeYZ {
 /// displacements into the full-transpose send/recv buffers. Chunk windows
 /// are disjoint, so chunk `i+1` can be packed while chunk `i` is still in
 /// flight and chunk `i-1` is being unpacked.
+///
+/// On the single-copy path the absolute `rdispls` double as receive-window
+/// offsets: each chunk registers `(rdispls[j], rcounts[j])` slices of the
+/// recv-side buffer as fabric windows, so intra-node senders pack straight
+/// into them and the chunked path elides its mailbox copies too.
 #[derive(Debug, Clone)]
 pub struct ChunkMeta {
     /// The invariant-axis window this chunk covers (z for X↔Y, spectral x
@@ -1355,7 +1672,7 @@ mod tests {
     /// back — every element must land at its Table-1 location and return.
     fn roundtrip_case(nx: usize, ny: usize, nz: usize, m1: usize, m2: usize, use_even: bool) {
         let decomp = Decomp::new(nx, ny, nz, ProcGrid::new(m1, m2)).unwrap();
-        let opts = ExchangeOptions { use_even };
+        let opts = ExchangeOptions { use_even, ..Default::default() };
         let u = Universe::new(decomp.p());
         let results = u
             .run(move |c| {
@@ -1470,13 +1787,118 @@ mod tests {
         roundtrip_case(16, 12, 10, 2, 5, false);
     }
 
+    /// Full transpose chain under both copy disciplines on flat and
+    /// 2-node fabrics: every pencil byte must match the mailbox baseline
+    /// (USEEVEN leg included — windows carry true counts there).
+    fn copy_mode_case(use_even: bool) {
+        use crate::mpi::{Hierarchy, PlacementPolicy};
+        let decomp = Decomp::new(10, 9, 7, ProcGrid::new(2, 2)).unwrap();
+        let run = |copy: CopyMode, topo: Hierarchy| {
+            let decomp = decomp.clone();
+            let u = Universe::with_topology(decomp.p(), topo);
+            u.run(move |c| {
+                let rank = c.rank();
+                let opts = ExchangeOptions { use_even, copy };
+                let (row, col) = c.cart_2d(decomp.pgrid)?;
+                let txy = TransposeXY::new(&decomp, rank);
+                let tyz = TransposeYZ::new(&decomp, rank);
+                let xp = decomp.x_pencil_spec(rank);
+                let yp = decomp.y_pencil(rank);
+                let zp = decomp.z_pencil(rank);
+                let mut timer = StageTimer::new();
+                let mut xdata = vec![Complex::zero(); xp.len()];
+                for z in 0..xp.dims[0] {
+                    for y in 0..xp.dims[1] {
+                        for x in 0..decomp.h() {
+                            xdata[(z * xp.dims[1] + y) * decomp.h() + x] =
+                                enc(x, y + xp.offsets[1], z + xp.offsets[0]);
+                        }
+                    }
+                }
+                let blen = txy.buf_len(opts).max(tyz.buf_len(opts));
+                let mut sb = vec![Complex::zero(); blen];
+                let mut rb = vec![Complex::zero(); blen];
+                let mut ydata = vec![Complex::zero(); yp.len()];
+                txy.forward(&row, &xdata, &mut ydata, &mut sb, &mut rb, opts, &mut timer);
+                let mut zdata = vec![Complex::zero(); zp.len()];
+                tyz.forward(&col, &ydata, &mut zdata, &mut sb, &mut rb, opts, &mut timer);
+                let mut yback = vec![Complex::zero(); yp.len()];
+                tyz.backward(&col, &zdata, &mut yback, &mut sb, &mut rb, opts, &mut timer);
+                let mut xback = vec![Complex::zero(); xp.len()];
+                txy.backward(&row, &yback, &mut xback, &mut sb, &mut rb, opts, &mut timer);
+                Ok((ydata, zdata, yback, xback))
+            })
+            .unwrap()
+        };
+        let base = run(CopyMode::Mailbox, Hierarchy::flat(4));
+        for topo in [
+            Hierarchy::flat(4),
+            Hierarchy::two_level(4, 2, PlacementPolicy::Contiguous),
+            Hierarchy::two_level(4, 2, PlacementPolicy::RoundRobin),
+        ] {
+            assert_eq!(run(CopyMode::SingleCopy, topo), base);
+        }
+    }
+
+    #[test]
+    fn single_copy_matches_mailbox_bit_for_bit() {
+        copy_mode_case(false);
+    }
+
+    #[test]
+    fn single_copy_matches_mailbox_bit_for_bit_useeven() {
+        copy_mode_case(true);
+    }
+
+    #[test]
+    fn single_copy_xyz_receives_in_place_with_empty_recvbuf() {
+        // The XYZ Y→Z forward lands straight in the Z-pencil on the
+        // single-copy path; the scratch recv buffer may be empty. Payload
+        // must match the mailbox path with a real recv buffer.
+        let decomp = Decomp::new(8, 9, 10, ProcGrid::new(1, 4)).unwrap();
+        let run = |copy: CopyMode| {
+            let decomp = decomp.clone();
+            let u = Universe::new(decomp.p());
+            u.run(move |c| {
+                let rank = c.rank();
+                let opts = ExchangeOptions { use_even: false, copy };
+                let (_row, col) = c.cart_2d(decomp.pgrid)?;
+                let tyz = TransposeYZ::new(&decomp, rank);
+                let yp = decomp.y_pencil(rank);
+                let mut timer = StageTimer::new();
+                // XYZ-order Y-pencil [nz_loc][ny_glob][h_loc].
+                let (nzl, hl, ny) = (tyz.nz_loc(), tyz.h_loc, tyz.ny_glob);
+                let mut ydata = vec![Complex::zero(); nzl * ny * hl];
+                for z in 0..nzl {
+                    for y in 0..ny {
+                        for x in 0..hl {
+                            ydata[(z * ny + y) * hl + x] =
+                                enc(x, y, z + yp.offsets[0]);
+                        }
+                    }
+                }
+                let blen = tyz.buf_len(opts);
+                let mut sb = vec![Complex::zero(); blen];
+                let mut rb = match copy {
+                    CopyMode::SingleCopy => Vec::new(),
+                    CopyMode::Mailbox => vec![Complex::zero(); blen],
+                };
+                let mut zdata = vec![Complex::zero(); tyz.nz_glob * tyz.ny2_loc() * hl];
+                tyz.forward_xyz(&col, &ydata, &mut zdata, &mut sb, &mut rb, opts, &mut timer);
+                Ok(zdata)
+            })
+            .unwrap()
+        };
+        assert_eq!(run(CopyMode::SingleCopy), run(CopyMode::Mailbox));
+    }
+
     #[test]
     fn chunk_plans_partition_the_full_exchange() {
         // Sum of per-chunk counts must equal the blocking counts, chunk
         // windows must be disjoint, and everything must fit in buf_len —
         // for uneven grids and k not dividing the axis.
         let decomp = Decomp::new(10, 9, 7, ProcGrid::new(3, 2)).unwrap();
-        let opts = ExchangeOptions { use_even: false };
+        let opts = ExchangeOptions { use_even: false, ..Default::default() };
         for rank in 0..decomp.p() {
             let txy = TransposeXY::new(&decomp, rank);
             let tyz = TransposeYZ::new(&decomp, rank);
@@ -1532,7 +1954,7 @@ mod tests {
         // coordinates internally, so running it under both topologies
         // pins the schedule-invariance of the exchange.
         let decomp = Decomp::new(10, 9, 7, ProcGrid::new(3, 2)).unwrap();
-        let opts = ExchangeOptions { use_even: false };
+        let opts = ExchangeOptions { use_even: false, ..Default::default() };
         let run = |u: Universe| {
             u.run(move |c| {
                 let rank = c.rank();
@@ -1642,7 +2064,7 @@ mod tests {
         // blocking counts exactly, for every chunking.
         let decomp = Decomp::new(10, 12, 14, ProcGrid::new(2, 3)).unwrap();
         let rule = PruneRule::new([10, 12, 14], Truncation::Spherical23);
-        let opts = ExchangeOptions { use_even: false };
+        let opts = ExchangeOptions { use_even: false, ..Default::default() };
         fn check(
             cp: &ChunkPlan,
             m: usize,
@@ -1703,7 +2125,7 @@ mod tests {
         // retained modes (zero elsewhere).
         let decomp = Decomp::new(10, 12, 14, ProcGrid::new(2, 3)).unwrap();
         let rule = PruneRule::new([10, 12, 14], Truncation::Spherical23);
-        let opts = ExchangeOptions { use_even: false };
+        let opts = ExchangeOptions { use_even: false, ..Default::default() };
         let u = Universe::new(decomp.p());
         let checks = u
             .run(move |c| {
@@ -1816,7 +2238,7 @@ mod tests {
         let decomp = Decomp::new(12, 12, 12, ProcGrid::new(2, 2)).unwrap();
         let rule = PruneRule::new([12, 12, 12], Truncation::Spherical23);
         let run = |use_even: bool| {
-            let opts = ExchangeOptions { use_even };
+            let opts = ExchangeOptions { use_even, ..Default::default() };
             let u = Universe::new(decomp.p());
             u.run(move |c| {
                 let rank = c.rank();

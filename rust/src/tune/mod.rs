@@ -78,6 +78,13 @@ pub struct TuneOptions {
     /// grids. `None` (default) prices the full-grid transform and is
     /// bit-identical to the pre-truncation tuner.
     pub truncation: Option<crate::grid::Truncation>,
+    /// Exchange copy discipline the run will use. Only the two-level
+    /// (`cores_per_node`) scoring prices it: single-copy windows halve
+    /// the memory streams of each intra-node block, so on-node placement
+    /// pays off even more than under the mailbox. Defaults to the
+    /// runtime's own default (single-copy) without consulting the
+    /// environment, keeping model-only tuning deterministic.
+    pub copy: crate::mpi::CopyMode,
     /// Refine this many of the model's top candidates with short real
     /// pipeline runs (0 = model-only, fully deterministic).
     pub refine_top_k: usize,
@@ -98,6 +105,7 @@ impl Default for TuneOptions {
             pin_overlap_chunks: None,
             cores_per_node: None,
             truncation: None,
+            copy: crate::mpi::CopyMode::SingleCopy,
             refine_top_k: 0,
             refine_iters: 1,
             seed: 0x5EED_CAFE,
@@ -157,6 +165,7 @@ pub fn autotune(dims: [usize; 3], nprocs: usize, opts: &TuneOptions) -> Result<T
                     opts.elem_bytes,
                     nm,
                     keep,
+                    opts.copy,
                 );
                 TuneEntry {
                     cand,

@@ -1,7 +1,7 @@
 //! Model scoring: price one candidate with the Eq.-3 machine model.
 
 use crate::grid::{PruneRule, Truncation};
-use crate::mpi::NodeMap;
+use crate::mpi::{CopyMode, NodeMap};
 use crate::netmodel::{
     predict_pruned_overlapped, predict_pruned_two_level, ModelInput, TopoPrediction,
 };
@@ -28,6 +28,7 @@ fn input_of(
     cand: &Candidate,
     profile: &MachineProfile,
     elem_bytes: f64,
+    copy: CopyMode,
 ) -> ModelInput {
     ModelInput {
         nx: dims[0],
@@ -37,6 +38,7 @@ fn input_of(
         m2: cand.m2,
         elem_bytes,
         use_even: cand.use_even,
+        copy,
         machine: profile.machine.clone(),
     }
 }
@@ -66,7 +68,9 @@ pub fn model_seconds_pruned(
     elem_bytes: f64,
     keep: (f64, f64),
 ) -> f64 {
-    let input = input_of(dims, cand, profile, elem_bytes);
+    // The single-level law is copy-blind (it has no intra/inter split to
+    // discount), so the discipline passed here is immaterial.
+    let input = input_of(dims, cand, profile, elem_bytes, CopyMode::Mailbox);
     predict_pruned_overlapped(&input, cand.overlap_chunks, keep.0, keep.1)
 }
 
@@ -81,12 +85,18 @@ pub fn model_seconds_two_level(
     profile: &MachineProfile,
     elem_bytes: f64,
     nodes: &NodeMap,
+    copy: CopyMode,
 ) -> TopoPrediction {
-    model_seconds_pruned_two_level(dims, cand, profile, elem_bytes, nodes, (1.0, 1.0))
+    model_seconds_pruned_two_level(dims, cand, profile, elem_bytes, nodes, (1.0, 1.0), copy)
 }
 
 /// [`model_seconds_two_level`] with pruned-volume wire pricing (see
-/// [`model_seconds_pruned`]).
+/// [`model_seconds_pruned`]). `copy` is the exchange discipline the run
+/// will use: the two-level law prices intra-node traffic at two memory
+/// streams per block under the mailbox and one under single-copy windows,
+/// which shifts the placement optimum toward on-node rows even further
+/// when single-copy is active.
+#[allow(clippy::too_many_arguments)]
 pub fn model_seconds_pruned_two_level(
     dims: [usize; 3],
     cand: &Candidate,
@@ -94,8 +104,9 @@ pub fn model_seconds_pruned_two_level(
     elem_bytes: f64,
     nodes: &NodeMap,
     keep: (f64, f64),
+    copy: CopyMode,
 ) -> TopoPrediction {
-    let input = input_of(dims, cand, profile, elem_bytes);
+    let input = input_of(dims, cand, profile, elem_bytes, copy);
     predict_pruned_two_level(&input, cand.overlap_chunks, nodes, keep.0, keep.1)
 }
 
@@ -121,6 +132,7 @@ mod tests {
             m2: 8,
             elem_bytes: 16.0,
             use_even: false,
+            copy: CopyMode::Mailbox,
             machine: Machine::cray_xt5(),
         };
         let total = predict(&input).total();

@@ -1,0 +1,212 @@
+//! Copy-path bit-identity: the single-copy (windowed) exchange replaces
+//! the mailbox's pack + insert + extract with one pack straight into the
+//! receiver's pre-registered window for intra-node peers — an accounting
+//! and routing change that must never alter a payload bit. Covered:
+//! forward Z-pencil spectra, backward roundtrips, and the fused
+//! convolution across {mailbox, single-copy} × overlap chunks {1, 4} ×
+//! node maps {flat, 2-node} × {full grid, Spherical23 truncation}, plus
+//! the copy counters: wire volume identical across modes, intra-node
+//! copies dropping ~3× on a flat fabric, and exact conservation
+//! (copied + elided under single-copy == copied under the mailbox).
+
+use p3dfft::coordinator::{run_on_threads, PlanSpec};
+use p3dfft::fft::Complex;
+use p3dfft::grid::{ProcGrid, Truncation};
+use p3dfft::mpi::CopyMode;
+
+/// Deterministic test field with no special symmetry.
+fn field(x: usize, y: usize, z: usize) -> f64 {
+    ((x * 37 + y * 101 + z * 13) as f64 * 0.7133).sin() + 0.25 * x as f64 - 0.125 * z as f64
+}
+
+/// A second, independent field for the convolution.
+fn field_b(x: usize, y: usize, z: usize) -> f64 {
+    ((x * 11 + y * 29 + z * 53) as f64 * 0.3719).cos() - 0.0625 * y as f64
+}
+
+fn spec(
+    dims: [usize; 3],
+    k: usize,
+    cores: Option<usize>,
+    trunc: Option<Truncation>,
+    copy: CopyMode,
+) -> PlanSpec {
+    let mut s = PlanSpec::new(dims, ProcGrid::new(2, 2))
+        .unwrap()
+        .with_overlap_chunks(k)
+        .unwrap()
+        .with_cores_per_node(cores)
+        .unwrap()
+        .with_copy_path(Some(copy));
+    if let Some(t) = trunc {
+        s = s.with_truncation(t);
+    }
+    s
+}
+
+/// Forward-transform `spec` and return every rank's Z-pencil verbatim.
+fn z_pencils(spec: &PlanSpec) -> Vec<Vec<Complex<f64>>> {
+    run_on_threads(spec, move |ctx| {
+        let input = ctx.make_real_input(field);
+        let mut out = ctx.alloc_output();
+        ctx.forward(&input, &mut out)?;
+        Ok(out)
+    })
+    .unwrap()
+    .per_rank
+}
+
+/// Forward+backward `spec` and return every rank's (unnormalised) real
+/// roundtrip output.
+fn roundtrip_backs(spec: &PlanSpec) -> Vec<Vec<f64>> {
+    run_on_threads(spec, move |ctx| {
+        let input = ctx.make_real_input(field);
+        let mut out = ctx.alloc_output();
+        let mut back = ctx.alloc_input();
+        ctx.forward(&input, &mut out)?;
+        ctx.backward(&out, &mut back)?;
+        Ok(back)
+    })
+    .unwrap()
+    .per_rank
+}
+
+/// Fused convolution of two fields, every rank's real output verbatim.
+fn convolve_outs(spec: &PlanSpec) -> Vec<Vec<f64>> {
+    run_on_threads(spec, move |ctx| {
+        let a = ctx.make_real_input(field);
+        let b = ctx.make_real_input(field_b);
+        let mut out = ctx.alloc_input();
+        ctx.convolve(&a, &b, &mut out)?;
+        Ok(out)
+    })
+    .unwrap()
+    .per_rank
+}
+
+const DIMS: [usize; 3] = [10, 12, 14];
+
+#[test]
+fn forward_bit_identical_across_copy_matrix() {
+    for trunc in [None, Some(Truncation::Spherical23)] {
+        for k in [1usize, 4] {
+            let base = z_pencils(&spec(DIMS, k, None, trunc, CopyMode::Mailbox));
+            for copy in [CopyMode::Mailbox, CopyMode::SingleCopy] {
+                for cores in [None, Some(2usize)] {
+                    assert_eq!(
+                        base,
+                        z_pencils(&spec(DIMS, k, cores, trunc, copy)),
+                        "trunc={trunc:?} k={k} cores={cores:?} {copy:?}: \
+                         Z-pencils must match the flat mailbox baseline bit for bit"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn backward_bit_identical_across_copy_matrix() {
+    for trunc in [None, Some(Truncation::Spherical23)] {
+        for k in [1usize, 4] {
+            let base = roundtrip_backs(&spec(DIMS, k, None, trunc, CopyMode::Mailbox));
+            for copy in [CopyMode::Mailbox, CopyMode::SingleCopy] {
+                for cores in [None, Some(2usize)] {
+                    assert_eq!(
+                        base,
+                        roundtrip_backs(&spec(DIMS, k, cores, trunc, copy)),
+                        "trunc={trunc:?} k={k} cores={cores:?} {copy:?}: \
+                         roundtrip must match the flat mailbox baseline bit for bit"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn convolve_bit_identical_across_copy_modes() {
+    // The pair stages fuse both fields into one doubled-block exchange
+    // (EFieldMeta), which routes through the windowed alltoallv.
+    let base = convolve_outs(&spec(DIMS, 1, None, None, CopyMode::Mailbox));
+    for copy in [CopyMode::Mailbox, CopyMode::SingleCopy] {
+        for cores in [None, Some(2usize)] {
+            assert_eq!(
+                base,
+                convolve_outs(&spec(DIMS, 1, cores, None, copy)),
+                "cores={cores:?} {copy:?}: convolution must match the flat mailbox baseline"
+            );
+        }
+    }
+}
+
+#[test]
+fn single_copy_shrinks_intra_copies_and_keeps_wire_volume() {
+    // Flat fabric, 2x2 grid, blocking pipeline: each exchange runs on a
+    // size-2 sub-communicator, where per rank the mailbox pays pack(2B) +
+    // self-memcpy(1B) + insert/extract(2B) = 5 block-copies and the
+    // windowed path 2 (one pack per peer, straight into the destination
+    // window) — a 2.5x reduction.
+    let run = |copy| {
+        run_on_threads(&spec(DIMS, 1, None, None, copy), move |ctx| {
+            let input = ctx.make_real_input(field);
+            let mut out = ctx.alloc_output();
+            ctx.forward(&input, &mut out)?;
+            Ok(())
+        })
+        .unwrap()
+    };
+    let m = run(CopyMode::Mailbox);
+    let s = run(CopyMode::SingleCopy);
+
+    assert_eq!(m.bytes, s.bytes, "wire volume must be identical across copy modes");
+    assert_eq!(m.copies_elided, 0, "the mailbox path elides nothing");
+    assert!(s.copies_elided > 0, "the windowed path must elide intra copies");
+    assert!(s.bytes_copied > 0, "packs still count as copies");
+    let ratio = m.bytes_copied as f64 / s.bytes_copied as f64;
+    assert!(
+        ratio >= 2.3,
+        "flat-fabric copy reduction should be ~2.5x, got {ratio:.2} \
+         ({} vs {} bytes)",
+        m.bytes_copied,
+        s.bytes_copied
+    );
+    // Every elided byte is a byte the mailbox would have copied: the two
+    // disciplines account for exactly the same movement.
+    assert_eq!(
+        s.bytes_copied + s.copies_elided,
+        m.bytes_copied,
+        "copied + elided under single-copy must equal the mailbox's copies"
+    );
+}
+
+#[test]
+fn counters_conserved_on_two_node_map_with_chunks() {
+    // 2 nodes of 2: only intra-node blocks are elided; inter-node blocks
+    // ride the mailbox verbatim on both paths. The conservation identity
+    // still holds exactly, chunked or not.
+    for k in [1usize, 4] {
+        let run = |copy| {
+            run_on_threads(&spec(DIMS, k, Some(2), None, copy), move |ctx| {
+                let input = ctx.make_real_input(field);
+                let mut out = ctx.alloc_output();
+                ctx.forward(&input, &mut out)?;
+                Ok(())
+            })
+            .unwrap()
+        };
+        let m = run(CopyMode::Mailbox);
+        let s = run(CopyMode::SingleCopy);
+        assert_eq!(m.bytes, s.bytes, "k={k}: wire volume identical");
+        assert!(s.copies_elided > 0, "k={k}: intra-node blocks must be elided");
+        assert!(
+            s.bytes_copied < m.bytes_copied,
+            "k={k}: windowed path must copy strictly less"
+        );
+        assert_eq!(
+            s.bytes_copied + s.copies_elided,
+            m.bytes_copied,
+            "k={k}: conservation must hold on a two-level map"
+        );
+    }
+}
